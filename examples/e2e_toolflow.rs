@@ -1,0 +1,110 @@
+//! End-to-end toolflow driver (DESIGN.md §6): exercises every layer of the
+//! system on a real small workload and proves they compose.
+//!
+//!   1. profile two networks on the simulated TX2 (L3 substrate),
+//!   2. fit Γ/Φ random forests (L3),
+//!   3. evaluate on held-out pruned topologies (paper-shape errors),
+//!   4. export the Γ forest as tensors, load `forest_b*.hlo.txt` through
+//!      PJRT and cross-check XLA (L1 Pallas kernel) vs native numerics,
+//!   5. run a constrained OFA evolutionary search with model-predicted
+//!      attributes through the XLA path.
+//!
+//! Run after `make artifacts`: `cargo run --release --example e2e_toolflow`
+
+use perf4sight::device::{Simulator, PROFILE_COST_S};
+use perf4sight::experiments::ofa_models::forward_masked;
+use perf4sight::features::network_features;
+use perf4sight::forest::Forest;
+use perf4sight::models;
+use perf4sight::ofa::{evolutionary_search, Attributes, Constraints, EsConfig, Subset};
+use perf4sight::profiler::train_test_split;
+use perf4sight::pruning::Strategy;
+use perf4sight::runtime::{forest_exec::export_forest_config, ForestExecutor, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let sim = Simulator::tx2();
+    println!("=== 1. network-wise profiling (simulated {}) ===", sim.spec.name);
+    let r18 = models::resnet18(1000);
+    let sq = models::squeezenet(1000);
+    let (train_a, test_a) = train_test_split(&sim, "resnet18", &r18, Strategy::Random, 11);
+    let (train_b, test_b) = train_test_split(&sim, "squeezenet", &sq, Strategy::L1Norm, 13);
+    println!(
+        "  {} + {} train points, {} + {} test points",
+        train_a.len(),
+        train_b.len(),
+        test_a.len(),
+        test_b.len()
+    );
+
+    println!("\n=== 2. fit Γ/Φ forests ===");
+    let mut train = train_a;
+    train.extend(train_b);
+    let cfg = export_forest_config();
+    let fg = Forest::fit(&train.x(), &train.y_gamma(), &cfg);
+    let fp = Forest::fit(&train.x(), &train.y_phi(), &cfg);
+
+    println!("\n=== 3. held-out evaluation ===");
+    for (name, test) in [("resnet18/rand", &test_a), ("squeezenet/L1", &test_b)] {
+        println!(
+            "  {name}: Γ err {:.2}%  Φ err {:.2}%  (paper worst-case: 9.15% / 14.7%)",
+            fg.mape(&test.x(), &test.y_gamma()),
+            fp.mape(&test.x(), &test.y_phi())
+        );
+    }
+
+    println!("\n=== 4. XLA runtime cross-check (L1 pallas forest kernel) ===");
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    anyhow::ensure!(
+        Runtime::artifacts_present(&dir),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let rt = Runtime::cpu(&dir)?;
+    let exec = ForestExecutor::new(&rt, &fg)?;
+    let rows: Vec<Vec<f64>> = test_a.x().into_iter().take(64).collect();
+    let native: Vec<f64> = rows.iter().map(|r| fg.predict(r)).collect();
+    let via_xla = exec.predict_batch(&rows)?;
+    let max_rel = native
+        .iter()
+        .zip(&via_xla)
+        .map(|(a, b)| ((a - b) / a).abs())
+        .fold(0.0f64, f64::max);
+    println!("  64 predictions: max |native - xla| / native = {max_rel:.2e}");
+    anyhow::ensure!(max_rel < 1e-4, "XLA path diverged from native forest");
+
+    println!("\n=== 5. constrained OFA search with model-predicted attributes ===");
+    let predict = |_c: &perf4sight::ofa::SubnetConfig, g: &perf4sight::ir::Graph| {
+        // Γ through the XLA artifact (the deployed path); γ/φ natively.
+        let ft = network_features(g, 32).unwrap();
+        let fi = forward_masked(&network_features(g, 1).unwrap());
+        Attributes {
+            gamma_train_mb: exec.predict_one(&ft).unwrap(),
+            gamma_infer_mb: fg.predict(&fi).max(1500.0), // coarse reuse for the demo
+            phi_infer_ms: fp.predict(&fi).max(5.0) / 20.0,
+        }
+    };
+    let cons = Constraints {
+        gamma_train_mb: 5200.0,
+        gamma_infer_mb: f64::INFINITY,
+        phi_infer_ms: f64::INFINITY,
+    };
+    let es = EsConfig {
+        population: 24,
+        iterations: 8,
+        ..Default::default()
+    };
+    let result = evolutionary_search(&cons, &es, Subset::City, predict);
+    let naive_h = result.samples as f64 * PROFILE_COST_S / 3600.0;
+    println!(
+        "  best {:?}\n  predicted acc {:.1}%  attrs {:?}",
+        result.best, result.best_fitness, result.best_attrs
+    );
+    println!(
+        "  {} candidates in {:.2?}; naive profiling would need {:.1} h ({:.0}x slower)",
+        result.samples,
+        result.elapsed,
+        naive_h,
+        naive_h * 3600.0 / result.elapsed.as_secs_f64().max(1e-9)
+    );
+    println!("\nall five stages composed — toolflow OK");
+    Ok(())
+}

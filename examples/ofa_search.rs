@@ -1,0 +1,70 @@
+//! OFA case-study example (Sec. 6.4): fit the three attribute models,
+//! search the elastic OFA-ResNet50 space under hard constraints for each
+//! of the four autonomous-driving subsets, and report the selected
+//! sub-networks with their retraining gains.
+//!
+//! Run: `cargo run --release --example ofa_search`
+
+use perf4sight::device::{Simulator, PROFILE_COST_S};
+use perf4sight::experiments::ofa_models::{self, forward_masked};
+use perf4sight::features::network_features;
+use perf4sight::ofa::{
+    evolutionary_search, initial_accuracy, retrained_accuracy, Attributes, Constraints,
+    EsConfig, SubnetConfig, ALL_SUBSETS,
+};
+
+fn main() {
+    let sim = Simulator::tx2();
+    println!("fitting OFA attribute models (40 sampled sub-networks)…");
+    let models = ofa_models::run(&sim, 40, 0x0fa5);
+    ofa_models::print(&models.report);
+
+    let predict = |_c: &SubnetConfig, g: &perf4sight::ir::Graph| Attributes {
+        gamma_train_mb: models.gamma_train.predict(&network_features(g, 32).unwrap()),
+        gamma_infer_mb: models
+            .gamma_infer
+            .predict(&forward_masked(&network_features(g, 1).unwrap())),
+        phi_infer_ms: models
+            .phi_infer
+            .predict(&forward_masked(&network_features(g, 1).unwrap())),
+    };
+
+    // Budgets between the predicted MIN and MAX attribute extremes.
+    let p_max = predict(&SubnetConfig::max(), &SubnetConfig::max().build());
+    let p_min = predict(&SubnetConfig::min(), &SubnetConfig::min().build());
+    let mid = |lo: f64, hi: f64| lo + 0.4 * (hi - lo);
+    let cons = Constraints {
+        gamma_train_mb: mid(p_min.gamma_train_mb, p_max.gamma_train_mb),
+        gamma_infer_mb: mid(p_min.gamma_infer_mb, p_max.gamma_infer_mb),
+        phi_infer_ms: mid(p_min.phi_infer_ms, p_max.phi_infer_ms),
+    };
+    println!(
+        "\nconstraints: Γ ≤ {:.0} MB, γ ≤ {:.0} MB, φ ≤ {:.1} ms",
+        cons.gamma_train_mb, cons.gamma_infer_mb, cons.phi_infer_ms
+    );
+
+    let es = EsConfig {
+        population: 50,
+        iterations: 60,
+        ..Default::default()
+    };
+    for subset in ALL_SUBSETS {
+        let result = evolutionary_search(&cons, &es, subset, predict);
+        let g = result.best.build();
+        let init = initial_accuracy(&result.best, &g, subset);
+        let ret = retrained_accuracy(&result.best, &g, subset);
+        let naive_h = result.samples as f64 * PROFILE_COST_S / 3600.0;
+        println!(
+            "\n{:<13} best {:?}\n              size {:.0} MB | top-1 {:.1}% → {:.1}% after retraining \
+             | {} samples in {:.2?} (naive: {:.1} h)",
+            subset.name(),
+            result.best,
+            g.model_size_mb().unwrap(),
+            init,
+            ret,
+            result.samples,
+            result.elapsed,
+            naive_h
+        );
+    }
+}

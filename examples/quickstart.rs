@@ -1,0 +1,55 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! Profile a network on the simulated Jetson TX2, fit the paper's two
+//! random-forest models, and predict the training memory footprint (Γ) and
+//! mini-batch latency (Φ) of an unseen pruned topology.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use perf4sight::device::Simulator;
+use perf4sight::features::network_features;
+use perf4sight::forest::Forest;
+use perf4sight::models;
+use perf4sight::profiler::{profile, ProfileJob};
+use perf4sight::pruning::{prune, Strategy};
+use perf4sight::runtime::forest_exec::export_forest_config;
+use perf4sight::util::rng::Pcg64;
+
+fn main() {
+    // 1. A target device (the paper's testbed) and a network from the zoo.
+    let sim = Simulator::tx2();
+    let resnet18 = models::resnet18(1000);
+
+    // 2. Network-wise profiling: each datapoint is an entire training step
+    //    of a pruned topology at some batch size (Sec. 5.1).
+    println!("profiling resnet18 on {} …", sim.spec.name);
+    let dataset = profile(&sim, &ProfileJob::new("resnet18", &resnet18));
+    println!("  {} datapoints (5 pruning levels × 25 batch sizes)", dataset.len());
+
+    // 3. Fit the Γ and Φ random forests on the analytical features.
+    let cfg = export_forest_config();
+    let gamma_model = Forest::fit(&dataset.x(), &dataset.y_gamma(), &cfg);
+    let phi_model = Forest::fit(&dataset.x(), &dataset.y_phi(), &cfg);
+
+    // 4. Predict an *unseen* topology: 40% L1-norm pruning, batch size 48.
+    let mut rng = Pcg64::new(7);
+    let pruned = prune(&resnet18, Strategy::L1Norm, 0.40, &mut rng);
+    let feats = network_features(&pruned, 48).unwrap();
+    let gamma_pred = gamma_model.predict(&feats);
+    let phi_pred = phi_model.predict(&feats);
+
+    // 5. Compare against the simulated ground truth.
+    let truth = sim.train_step(&pruned, 48, None).unwrap();
+    println!("\nresnet18 @ 40% L1 pruning, bs=48:");
+    println!(
+        "  Γ predicted {gamma_pred:>8.1} MB   measured {:>8.1} MB   ({:+.2}% error)",
+        truth.gamma_mb,
+        100.0 * (gamma_pred - truth.gamma_mb) / truth.gamma_mb
+    );
+    println!(
+        "  Φ predicted {phi_pred:>8.1} ms   measured {:>8.1} ms   ({:+.2}% error)",
+        truth.phi_ms,
+        100.0 * (phi_pred - truth.phi_ms) / truth.phi_ms
+    );
+    println!("\n(see examples/e2e_toolflow.rs for the full pipeline incl. the XLA runtime)");
+}

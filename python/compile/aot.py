@@ -1,0 +1,100 @@
+"""AOT lowering: JAX → HLO **text** artifacts for the Rust PJRT runtime.
+
+HLO text (not ``HloModuleProto.serialize()``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md and gen_hlo.py there.
+
+Run once via ``make artifacts``:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Outputs:
+    trainstep.hlo.txt      — train_step (see model.py for the arg order)
+    forest_b1.hlo.txt      — forest_predict at batch 1
+    forest_b256.hlo.txt    — forest_predict at batch 256
+    manifest.json          — shapes/arg orders consumed by rust/src/runtime
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_train_step() -> str:
+    specs = model.train_step_specs()
+    return to_hlo_text(jax.jit(model.train_step).lower(*specs))
+
+
+def lower_forest(batch: int) -> str:
+    specs = model.forest_specs(batch)
+    return to_hlo_text(jax.jit(model.forest_predict).lower(*specs))
+
+
+def manifest() -> dict:
+    c1, c2, c3 = model.CHANNELS
+    return {
+        "num_features": model.NUM_FEATURES,
+        "forest": {
+            "trees": model.FOREST_TREES,
+            "nodes": model.FOREST_NODES,
+            "depth": model.FOREST_DEPTH,
+            "batches": list(model.FOREST_BATCHES),
+            "args": ["x", "feature", "threshold", "left", "right", "value"],
+        },
+        "train_step": {
+            "batch": model.TRAIN_BATCH,
+            "image": [model.IMG_C, model.IMG_HW, model.IMG_HW],
+            "classes": model.NUM_CLASSES,
+            "channels": [c1, c2, c3],
+            "args": [
+                "w1", "b1", "w2", "b2", "w3", "b3", "wf", "bf", "x", "y", "lr",
+            ],
+            "outputs": [
+                "w1", "b1", "w2", "b2", "w3", "b3", "wf", "bf", "loss",
+            ],
+        },
+    }
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    jobs = [
+        ("trainstep.hlo.txt", lower_train_step),
+        ("forest_b1.hlo.txt", lambda: lower_forest(1)),
+        ("forest_b256.hlo.txt", lambda: lower_forest(256)),
+    ]
+    for name, fn in jobs:
+        path = os.path.join(args.out, name)
+        text = fn()
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest(), f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

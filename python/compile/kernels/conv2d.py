@@ -1,0 +1,157 @@
+"""L1 Pallas convolution kernels — the paper's Eqs. 1-3 as TPU-style
+tiled im2col → matmul kernels.
+
+Hardware adaptation (DESIGN.md §2): where cuDNN's GEMM convolution stages
+im2col patches in a per-threadblock shared-memory workspace, here BlockSpec
+stages one sample's feature map into VMEM per grid step and the patch
+matrix feeds an MXU-shaped matmul. Three kernels cover the three training
+convolutions:
+
+- ``conv2d_fwd``   — Eq.1: ``y = x * w``
+- backward-data    — Eq.2: ``dL/dx = dL/dy * rot180(w)`` (the same forward
+  kernel applied to the padded output gradient and the rotated, transposed
+  weights — exactly the identity the paper states)
+- ``conv2d_bwd_w`` — Eq.3: ``dL/dw = x * dL/dy`` (im2col^T matmul with a
+  cross-grid accumulator)
+
+``conv2d`` wires them into a ``jax.custom_vjp`` so the L2 training graph
+differentiates through the Pallas ops. All kernels run ``interpret=True``
+(CPU PJRT cannot execute Mosaic custom-calls); on a real TPU the same
+BlockSpecs bound the VMEM working set — see DESIGN.md §8 for the estimate.
+
+Restrictions (documented, asserted): square spatial dims, stride >= 1 for
+forward, stride == 1 for the backward pass (the L2 model downsamples with
+pooling, as LeNet/VGG-style nets do).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Flip to False to debug kernels outside pallas. interpret=True is REQUIRED
+# for CPU-PJRT execution of the lowered HLO (see /opt/xla-example/README.md).
+INTERPRET = True
+
+
+def _out_spatial(ip: int, k: int, s: int, p: int) -> int:
+    """The paper's op_l = 1 + floor((ip + 2p - k) / s)."""
+    return 1 + (ip + 2 * p - k) // s
+
+
+def _im2col(x, k: int, s: int, oh: int, ow: int):
+    """(C, H, W) → (C*k*k, oh*ow), C-major then (di, dj) — matching
+    w.reshape(N, C*k*k)."""
+    c = x.shape[0]
+    patches = jnp.stack(
+        [
+            x[:, di : di + s * oh : s, dj : dj + s * ow : s]
+            for di in range(k)
+            for dj in range(k)
+        ],
+        axis=1,
+    )  # (C, k*k, oh, ow)
+    return patches.reshape(c * k * k, oh * ow)
+
+
+def _fwd_kernel(x_ref, w_ref, o_ref, *, k, s, oh, ow):
+    """One sample: im2col then an MXU-shaped matmul (N×CKK @ CKK×OHW)."""
+    x = x_ref[0]  # (C, Hp, Wp) — pre-padded
+    w = w_ref[...]  # (N, C, k, k)
+    n = w.shape[0]
+    cols = _im2col(x, k, s, oh, ow)  # (C*k*k, oh*ow)
+    wmat = w.reshape(n, -1)  # (N, C*k*k)
+    acc = jnp.dot(wmat, cols, preferred_element_type=jnp.float32)
+    o_ref[0] = acc.reshape(n, oh, ow).astype(o_ref.dtype)
+
+
+def conv2d_fwd(x, w, *, stride: int = 1, padding: int = 0):
+    """Eq.1 forward conv. x: (B, C, H, W), w: (N, C, k, k) → (B, N, OH, OW)."""
+    b, c, h, wd = x.shape
+    n, cw, k, k2 = w.shape
+    assert k == k2 and c == cw and h == wd, (x.shape, w.shape)
+    oh = _out_spatial(h, k, stride, padding)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    hp = h + 2 * padding
+    kernel = functools.partial(_fwd_kernel, k=k, s=stride, oh=oh, ow=oh)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, c, hp, hp), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((n, c, k, k), lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n, oh, oh), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n, oh, oh), x.dtype),
+        interpret=INTERPRET,
+    )(xp, w)
+
+
+def _bwd_w_kernel(x_ref, dy_ref, o_ref, *, k, oh, ow):
+    """Eq.3 for one sample, accumulated across the batch grid dimension:
+    dw += dy_mat @ im2col(x)^T."""
+    i = pl.program_id(0)
+    x = x_ref[0]  # (C, Hp, Wp)
+    dy = dy_ref[0]  # (N, oh, ow)
+    n = dy.shape[0]
+    cols = _im2col(x, k, 1, oh, ow)  # (C*k*k, oh*ow)
+    dy_mat = dy.reshape(n, -1)  # (N, oh*ow)
+    contrib = jnp.dot(dy_mat, cols.T, preferred_element_type=jnp.float32)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += contrib.reshape(o_ref.shape).astype(o_ref.dtype)
+
+
+def conv2d_bwd_w(x, dy, *, kernel_size: int, padding: int = 0):
+    """Eq.3: dL/dw = x * dL/dy (stride-1). Returns (N, C, k, k)."""
+    b, c, h, _ = x.shape
+    _, n, oh, ow = dy.shape
+    k = kernel_size
+    xp = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    hp = h + 2 * padding
+    kern = functools.partial(_bwd_w_kernel, k=k, oh=oh, ow=ow)
+    return pl.pallas_call(
+        kern,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, c, hp, hp), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, n, oh, ow), lambda i: (i, 0, 0, 0)),
+        ],
+        # All grid steps map to the same output block → accumulation.
+        out_specs=pl.BlockSpec((n, c, k, k), lambda i: (0, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c, k, k), x.dtype),
+        interpret=INTERPRET,
+    )(xp, dy)
+
+
+def conv2d_bwd_x(dy, w, *, padding: int):
+    """Eq.2: dL/dx = dL/dy * rot180(w) — the forward Pallas kernel applied
+    to the re-padded output gradient with rotated/transposed weights."""
+    k = w.shape[2]
+    w_rot = jnp.flip(w, axis=(2, 3)).transpose(1, 0, 2, 3)  # (C, N, k, k)
+    return conv2d_fwd(dy, w_rot, stride=1, padding=k - 1 - padding)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def conv2d(x, w, stride: int = 1, padding: int = 0):
+    """Differentiable Pallas convolution (NCHW, square, no bias)."""
+    return conv2d_fwd(x, w, stride=stride, padding=padding)
+
+
+def _conv2d_fwd_rule(x, w, stride, padding):
+    return conv2d_fwd(x, w, stride=stride, padding=padding), (x, w)
+
+
+def _conv2d_bwd_rule(stride, padding, res, dy):
+    assert stride == 1, "backward pass implemented for stride-1 convs"
+    x, w = res
+    dx = conv2d_bwd_x(dy, w, padding=padding)
+    dw = conv2d_bwd_w(x, dy, kernel_size=w.shape[2], padding=padding)
+    return dx, dw
+
+
+conv2d.defvjp(_conv2d_fwd_rule, _conv2d_bwd_rule)

@@ -1,0 +1,79 @@
+"""L1 Pallas random-forest inference kernel — the request-path hot spot.
+
+The paper's case study predicts Γ/γ/φ for >=50,000 evolutionary-search
+candidates with "0.1s and 2MB ... simply ... the inference of a random
+forest model" (Sec. 6.4). Here that inference runs as an XLA-compiled
+Pallas kernel invoked from the Rust coordinator.
+
+Layout (matching ``Forest::to_tensors`` in rust/src/forest/mod.rs):
+every tree is padded to ``n_nodes`` slots; leaves carry ``threshold=+inf``
+and self-referential children, so a fixed-depth traversal loop
+
+    idx <- where(x[feature[idx]] <= threshold[idx], left[idx], right[idx])
+
+is a no-op once a leaf is reached. The kernel vectorises the loop over a
+(trees × batch) lattice of cursors; depth iterations of gathers replace the
+pointer-chasing of a scalar traversal — the TPU-style formulation of a
+decision forest (gathers stream from VMEM-resident node arrays).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _forest_kernel(x_ref, feat_ref, thr_ref, left_ref, right_ref, val_ref, o_ref, *, depth):
+    x = x_ref[...]  # (B, F)
+    feat = feat_ref[...]  # (T, N) int32
+    thr = thr_ref[...]  # (T, N) f32
+    left = left_ref[...]  # (T, N) int32
+    right = right_ref[...]  # (T, N) int32
+    val = val_ref[...]  # (T, N) f32
+    t, _ = feat.shape
+    b = x.shape[0]
+
+    idx = jnp.zeros((t, b), dtype=jnp.int32)
+    for _ in range(depth):
+        node_feat = jnp.take_along_axis(feat, idx, axis=1)  # (T, B)
+        node_thr = jnp.take_along_axis(thr, idx, axis=1)  # (T, B)
+        # x-value per (tree, sample): gather feature columns per sample.
+        xv = jnp.take_along_axis(x, node_feat.T, axis=1).T  # (T, B)
+        go_left = xv <= node_thr
+        nl = jnp.take_along_axis(left, idx, axis=1)
+        nr = jnp.take_along_axis(right, idx, axis=1)
+        idx = jnp.where(go_left, nl, nr)
+    leaf_vals = jnp.take_along_axis(val, idx, axis=1)  # (T, B)
+    o_ref[...] = jnp.mean(leaf_vals, axis=0).astype(o_ref.dtype)
+
+
+def forest_predict(x, feature, threshold, left, right, value, *, depth: int):
+    """Batched forest regression.
+
+    x: (B, F) f32 — feature rows.
+    feature/left/right: (T, N) i32; threshold/value: (T, N) f32.
+    depth: traversal iterations (>= max tree depth; extra iterations are
+    no-ops thanks to leaf self-loops).
+    Returns (B,) f32 predictions (mean over trees).
+    """
+    b, _ = x.shape
+    t, n = feature.shape
+    kernel = functools.partial(_forest_kernel, depth=depth)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec(x.shape, lambda i: (0, 0)),
+            pl.BlockSpec((t, n), lambda i: (0, 0)),
+            pl.BlockSpec((t, n), lambda i: (0, 0)),
+            pl.BlockSpec((t, n), lambda i: (0, 0)),
+            pl.BlockSpec((t, n), lambda i: (0, 0)),
+            pl.BlockSpec((t, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=INTERPRET,
+    )(x, feature, threshold, left, right, value)

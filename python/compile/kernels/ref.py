@@ -1,0 +1,58 @@
+"""Pure-jnp/numpy correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference here; pytest asserts
+``assert_allclose(kernel, ref)`` across a hypothesis-driven sweep of
+shapes. The references deliberately use an entirely different formulation
+(lax.conv_general_dilated; scalar tree walks) so agreement is meaningful.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def conv2d_ref(x, w, *, stride: int = 1, padding: int = 0):
+    """Reference Eq.1 via lax.conv_general_dilated (NCHW / OIHW)."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def conv2d_bwd_ref(x, w, dy, *, stride: int = 1, padding: int = 0):
+    """Reference (dx, dw) via jax autodiff of the reference conv."""
+
+    def f(x_, w_):
+        return conv2d_ref(x_, w_, stride=stride, padding=padding)
+
+    _, vjp = jax.vjp(f, x, w)
+    return vjp(dy)
+
+
+def forest_predict_ref(x, feature, threshold, left, right, value, *, depth: int):
+    """Scalar (numpy) traversal of the padded forest arrays."""
+    x = np.asarray(x)
+    feature = np.asarray(feature)
+    threshold = np.asarray(threshold)
+    left = np.asarray(left)
+    right = np.asarray(right)
+    value = np.asarray(value)
+    b = x.shape[0]
+    t = feature.shape[0]
+    out = np.zeros(b, dtype=np.float64)
+    for bi in range(b):
+        acc = 0.0
+        for ti in range(t):
+            idx = 0
+            for _ in range(depth):
+                f = feature[ti, idx]
+                if np.float32(x[bi, f]) <= threshold[ti, idx]:
+                    idx = left[ti, idx]
+                else:
+                    idx = right[ti, idx]
+            acc += float(value[ti, idx])
+        out[bi] = acc / t
+    return jnp.asarray(out, dtype=jnp.float32)

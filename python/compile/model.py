@@ -1,0 +1,147 @@
+"""L2 JAX compute graphs (build-time only).
+
+Two graphs are AOT-lowered to HLO text and executed from the Rust
+coordinator via PJRT:
+
+1. ``train_step`` — a full fwd+bwd+SGD training step of a small CNN whose
+   convolutions are the L1 Pallas kernels (Eqs. 1-3 of the paper). This is
+   the workload the end-to-end example (`examples/train_cnn.rs`) drives to
+   prove the three layers compose: real training, real loss curve, Python
+   never on the request path.
+2. ``forest_predict`` — batched random-forest regression over the padded
+   tree tensors exported by the Rust trainer; the hot path of the OFA
+   evolutionary search (Sec. 6.4).
+
+Everything is shape-static: the constants below define the artifact shapes
+and are mirrored in ``artifacts/manifest.json`` for the Rust runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.conv2d import conv2d
+from .kernels.forest import forest_predict as _forest_kernel
+
+# ---------------- artifact shape constants ----------------
+
+# Training demo: 10-class classification of 3x32x32 synthetic images.
+TRAIN_BATCH = 64
+IMG_C, IMG_HW, NUM_CLASSES = 3, 32, 10
+CHANNELS = (16, 32, 32)
+
+# Forest artifact shapes (Rust pads fitted forests to these).
+NUM_FEATURES = 57
+FOREST_TREES = 64
+FOREST_NODES = 2048
+FOREST_DEPTH = 16
+FOREST_BATCHES = (1, 256)
+
+
+# ---------------- tiny CNN ----------------
+
+def init_params(seed: int = 0):
+    """He-initialised parameter tuple (w1,b1,w2,b2,w3,b3,wf,bf)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    c1, c2, c3 = CHANNELS
+
+    def he(key, shape, fan_in):
+        return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+    w1 = he(ks[0], (c1, IMG_C, 3, 3), IMG_C * 9)
+    w2 = he(ks[1], (c2, c1, 3, 3), c1 * 9)
+    w3 = he(ks[2], (c3, c2, 3, 3), c2 * 9)
+    wf = he(ks[3], (c3, NUM_CLASSES), c3)
+    return (
+        w1,
+        jnp.zeros((c1,), jnp.float32),
+        w2,
+        jnp.zeros((c2,), jnp.float32),
+        w3,
+        jnp.zeros((c3,), jnp.float32),
+        wf,
+        jnp.zeros((NUM_CLASSES,), jnp.float32),
+    )
+
+
+def _maxpool2(x):
+    """2x2 max pool via reshape (differentiable, no conv dependency)."""
+    b, c, h, w = x.shape
+    return x.reshape(b, c, h // 2, 2, w // 2, 2).max(axis=(3, 5))
+
+
+def forward(params, x):
+    """CNN forward pass; every conv is the L1 Pallas kernel."""
+    w1, b1, w2, b2, w3, b3, wf, bf = params
+    h = conv2d(x, w1, 1, 1) + b1[None, :, None, None]
+    h = jax.nn.relu(h)
+    h = _maxpool2(h)  # 16x16
+    h = conv2d(h, w2, 1, 1) + b2[None, :, None, None]
+    h = jax.nn.relu(h)
+    h = _maxpool2(h)  # 8x8
+    h = conv2d(h, w3, 1, 1) + b3[None, :, None, None]
+    h = jax.nn.relu(h)
+    h = h.mean(axis=(2, 3))  # GAP → (B, c3)
+    return h @ wf + bf  # logits (B, classes)
+
+
+def loss_fn(params, x, y):
+    """Softmax cross-entropy against integer labels."""
+    logits = forward(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+
+
+def train_step(*args):
+    """One SGD step. args = (*params, x, y, lr) → (*new_params, loss).
+
+    Positional flat signature so the HLO artifact has a stable, documented
+    parameter order for the Rust runtime.
+    """
+    params = args[:8]
+    x, y, lr = args[8], args[9], args[10]
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+    new_params = tuple(p - lr * g for p, g in zip(params, grads))
+    return (*new_params, loss)
+
+
+def train_step_specs():
+    """ShapeDtypeStructs matching ``train_step``'s signature."""
+    f32, i32 = jnp.float32, jnp.int32
+    c1, c2, c3 = CHANNELS
+    sds = jax.ShapeDtypeStruct
+    return (
+        sds((c1, IMG_C, 3, 3), f32),
+        sds((c1,), f32),
+        sds((c2, c1, 3, 3), f32),
+        sds((c2,), f32),
+        sds((c3, c2, 3, 3), f32),
+        sds((c3,), f32),
+        sds((c3, NUM_CLASSES), f32),
+        sds((NUM_CLASSES,), f32),
+        sds((TRAIN_BATCH, IMG_C, IMG_HW, IMG_HW), f32),
+        sds((TRAIN_BATCH,), i32),
+        sds((), f32),
+    )
+
+
+# ---------------- forest inference graph ----------------
+
+def forest_predict(x, feature, threshold, left, right, value):
+    """Batched forest regression via the L1 Pallas traversal kernel."""
+    return _forest_kernel(
+        x, feature, threshold, left, right, value, depth=FOREST_DEPTH
+    )
+
+
+def forest_specs(batch: int):
+    f32, i32 = jnp.float32, jnp.int32
+    sds = jax.ShapeDtypeStruct
+    tn = (FOREST_TREES, FOREST_NODES)
+    return (
+        sds((batch, NUM_FEATURES), f32),
+        sds(tn, i32),
+        sds(tn, f32),
+        sds(tn, i32),
+        sds(tn, i32),
+        sds(tn, f32),
+    )

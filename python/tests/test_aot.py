@@ -1,0 +1,32 @@
+"""AOT lowering tests: artifacts are valid HLO text with the documented
+parameter orders, and the manifest matches the model constants."""
+
+import json
+
+from compile import aot, model
+
+
+def test_train_step_lowers_to_hlo_text():
+    text = aot.lower_train_step()
+    assert "ENTRY" in text
+    assert "HloModule" in text
+    # 11 parameters (8 weights + x + y + lr)
+    assert text.count("parameter(") >= 11
+
+
+def test_forest_lowers_for_both_batches():
+    for b in model.FOREST_BATCHES:
+        text = aot.lower_forest(b)
+        assert "ENTRY" in text
+        assert f"f32[{b},{model.NUM_FEATURES}]" in text
+
+
+def test_manifest_consistent():
+    m = aot.manifest()
+    assert m["num_features"] == model.NUM_FEATURES
+    assert m["forest"]["trees"] == model.FOREST_TREES
+    assert m["forest"]["nodes"] == model.FOREST_NODES
+    assert len(m["train_step"]["args"]) == 11
+    assert m["train_step"]["outputs"][-1] == "loss"
+    # must be json-serialisable
+    json.dumps(m)

@@ -1,0 +1,91 @@
+"""L1 forest traversal kernel vs scalar numpy oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.forest import forest_predict
+from compile.kernels.ref import forest_predict_ref
+
+
+def _random_valid_forest(rng, trees, depth, features):
+    """Build a random *well-formed* padded forest: a complete binary tree
+    truncated at `depth`, leaves self-looping with +inf thresholds — the
+    exact layout Forest::to_tensors emits on the Rust side."""
+    n_nodes = 2 ** depth - 1
+    feat = np.zeros((trees, n_nodes), np.int32)
+    thr = np.full((trees, n_nodes), np.float32(np.inf))
+    left = np.zeros((trees, n_nodes), np.int32)
+    right = np.zeros((trees, n_nodes), np.int32)
+    val = np.zeros((trees, n_nodes), np.float32)
+    for t in range(trees):
+        for i in range(n_nodes):
+            l, r = 2 * i + 1, 2 * i + 2
+            is_leaf = l >= n_nodes or rng.random() < 0.25
+            if is_leaf:
+                feat[t, i] = 0
+                thr[t, i] = np.inf
+                left[t, i] = right[t, i] = i
+                val[t, i] = rng.normal()
+            else:
+                feat[t, i] = rng.integers(0, features)
+                thr[t, i] = rng.normal()
+                left[t, i], right[t, i] = l, r
+                val[t, i] = rng.normal()
+    return feat, thr, left, right, val
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    st.integers(1, 6),  # trees
+    st.integers(2, 5),  # depth
+    st.integers(1, 8),  # batch
+    st.integers(1, 7),  # features
+    st.integers(0, 1000),  # seed
+)
+def test_kernel_matches_scalar_oracle(trees, depth, batch, features, seed):
+    rng = np.random.default_rng(seed)
+    feat, thr, left, right, val = _random_valid_forest(rng, trees, depth, features)
+    x = rng.normal(size=(batch, features)).astype(np.float32)
+    got = forest_predict(
+        jnp.asarray(x),
+        jnp.asarray(feat),
+        jnp.asarray(thr),
+        jnp.asarray(left),
+        jnp.asarray(right),
+        jnp.asarray(val),
+        depth=depth,
+    )
+    want = forest_predict_ref(x, feat, thr, left, right, val, depth=depth)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_extra_depth_iterations_stable():
+    rng = np.random.default_rng(7)
+    feat, thr, left, right, val = _random_valid_forest(rng, 4, 4, 5)
+    x = rng.normal(size=(6, 5)).astype(np.float32)
+    args = [jnp.asarray(a) for a in (x, feat, thr, left, right, val)]
+    out4 = forest_predict(*args, depth=4)
+    out9 = forest_predict(*args, depth=9)
+    np.testing.assert_allclose(out4, out9, rtol=0, atol=0)
+
+
+def test_single_leaf_forest_predicts_constant():
+    trees, n = 3, 4
+    feat = np.zeros((trees, n), np.int32)
+    thr = np.full((trees, n), np.float32(np.inf))
+    left = np.tile(np.arange(n, dtype=np.int32), (trees, 1))
+    right = left.copy()
+    val = np.zeros((trees, n), np.float32)
+    val[:, 0] = [1.0, 2.0, 3.0]
+    x = np.zeros((5, 2), np.float32)
+    out = forest_predict(
+        jnp.asarray(x),
+        jnp.asarray(feat),
+        jnp.asarray(thr),
+        jnp.asarray(left),
+        jnp.asarray(right),
+        jnp.asarray(val),
+        depth=3,
+    )
+    np.testing.assert_allclose(out, np.full(5, 2.0, np.float32))

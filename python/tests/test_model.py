@@ -1,0 +1,64 @@
+"""L2 graph tests: CNN shapes, training-step descent, forest graph."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def _synthetic_batch(seed):
+    """Linearly separable-ish synthetic classification batch: class k gets
+    a distinctive channel/quadrant mean shift."""
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, model.NUM_CLASSES, size=model.TRAIN_BATCH)
+    x = rng.normal(scale=0.5, size=(model.TRAIN_BATCH, model.IMG_C, model.IMG_HW, model.IMG_HW))
+    for i, label in enumerate(y):
+        c = label % model.IMG_C
+        q = label // model.IMG_C
+        x[i, c, (q % 2) * 16 : (q % 2) * 16 + 16, :] += 1.5
+    return jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.int32)
+
+
+def test_forward_shapes():
+    params = model.init_params(0)
+    x, _ = _synthetic_batch(0)
+    logits = model.forward(params, x)
+    assert logits.shape == (model.TRAIN_BATCH, model.NUM_CLASSES)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_loss_decreases_over_steps():
+    params = model.init_params(1)
+    step = jax.jit(model.train_step)
+    lr = jnp.float32(0.1)
+    losses = []
+    for i in range(12):
+        x, y = _synthetic_batch(i % 4)
+        out = step(*params, x, y, lr)
+        params = out[:8]
+        losses.append(float(out[8]))
+    assert losses[-1] < losses[0] * 0.8, f"no descent: {losses}"
+
+
+def test_train_step_specs_match_signature():
+    specs = model.train_step_specs()
+    assert len(specs) == 11
+    params = model.init_params(2)
+    for p, s in zip(params, specs[:8]):
+        assert p.shape == s.shape and p.dtype == s.dtype
+
+
+def test_forest_graph_shapes():
+    b = 4
+    rng = np.random.default_rng(3)
+    tn = (model.FOREST_TREES, model.FOREST_NODES)
+    # trivial single-leaf forests
+    feat = jnp.zeros(tn, jnp.int32)
+    thr = jnp.full(tn, jnp.inf, jnp.float32)
+    idx = jnp.tile(jnp.arange(model.FOREST_NODES, dtype=jnp.int32), (model.FOREST_TREES, 1))
+    val = jnp.zeros(tn, jnp.float32).at[:, 0].set(5.0)
+    x = jnp.asarray(rng.normal(size=(b, model.NUM_FEATURES)), jnp.float32)
+    out = model.forest_predict(x, feat, thr, idx, idx, val)
+    assert out.shape == (b,)
+    np.testing.assert_allclose(out, np.full(b, 5.0, np.float32))

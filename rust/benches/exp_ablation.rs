@@ -1,0 +1,16 @@
+//! E9: feature-family knockout ablation on ResNet18 and MobileNetV2.
+
+use perf4sight::device::Simulator;
+use perf4sight::experiments::ablation;
+
+fn main() {
+    let sim = Simulator::tx2();
+    for network in ["resnet18", "mobilenetv2"] {
+        let report = ablation::run(&sim, network, 0xab1a);
+        ablation::print(&report);
+    }
+    // Extension: device specificity of the models (see EXPERIMENTS.md).
+    let cross = perf4sight::experiments::cross_device::run("resnet18", 0xab1b);
+    perf4sight::experiments::cross_device::print(&cross);
+    let _ = sim;
+}

@@ -1,0 +1,9 @@
+//! Regenerates the Sec. 6.2.1 (E4) DNNMem comparison on the simulated
+//! RTX 2080Ti, plus the Augur-style and linear-regression baselines.
+
+use perf4sight::experiments::dnnmem_cmp;
+
+fn main() {
+    let report = dnnmem_cmp::run(0x6_21);
+    dnnmem_cmp::print(&report);
+}

@@ -1,0 +1,26 @@
+//! Regenerates Fig. 3 (E1): same-network train/test attribute errors for
+//! ResNet18, MobileNetV2, SqueezeNet and MnasNet under random and L1-norm
+//! test pruning. Run: `cargo bench --bench exp_fig3`.
+
+use perf4sight::device::Simulator;
+use perf4sight::experiments::fig3;
+use perf4sight::util::bench_harness::bench;
+
+fn main() {
+    let sim = Simulator::tx2();
+    let report = fig3::run(&sim, 0x716_3);
+    fig3::print(&report);
+    // Hot-path timing: one full same-network pipeline (profile+fit+eval).
+    bench("fig3 pipeline (squeezenet, full grid)", 400, || {
+        let g = perf4sight::models::squeezenet(1000);
+        let (train, test) = perf4sight::profiler::train_test_split(
+            &sim,
+            "squeezenet",
+            &g,
+            perf4sight::pruning::Strategy::Random,
+            1,
+        );
+        let (fg, _) = perf4sight::experiments::fit_gamma_phi(&train);
+        std::hint::black_box(fg.mape(&test.x(), &test.y_gamma()));
+    });
+}

@@ -1,0 +1,10 @@
+//! Regenerates Fig. 4 (E5): basis-of-networks generalisation.
+
+use perf4sight::device::Simulator;
+use perf4sight::experiments::fig4;
+
+fn main() {
+    let sim = Simulator::tx2();
+    let report = fig4::run(&sim, 0x716_4);
+    fig4::print(&report);
+}

@@ -1,0 +1,11 @@
+//! Regenerates Fig. 5 / App. B (E6): Γ and Φ vs batch size per pruning
+//! level, with linearity statistics.
+
+use perf4sight::device::Simulator;
+use perf4sight::experiments::fig5;
+
+fn main() {
+    let sim = Simulator::tx2();
+    let report = fig5::run(&sim, 0x716_5);
+    fig5::print(&report);
+}

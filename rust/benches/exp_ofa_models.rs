@@ -1,0 +1,11 @@
+//! Regenerates the Sec. 6.4 (E8) OFA attribute-model accuracy numbers:
+//! γ/φ inference models (25/75 split) and Γ generalisation.
+
+use perf4sight::device::Simulator;
+use perf4sight::experiments::ofa_models;
+
+fn main() {
+    let sim = Simulator::tx2();
+    let models = ofa_models::run(&sim, 100, 0x0fa);
+    ofa_models::print(&models.report);
+}

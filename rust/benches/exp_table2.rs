@@ -1,0 +1,18 @@
+//! Regenerates Table 2 (E7): the on-device OFA case study with
+//! evolutionary search under constraints and the naive-vs-model
+//! search-time comparison.
+
+use perf4sight::device::Simulator;
+use perf4sight::experiments::{ofa_models, table2};
+use perf4sight::ofa::EsConfig;
+
+fn main() {
+    let sim = Simulator::tx2();
+    // 100 sampled sub-networks as in the paper; full ES is 100×500 — the
+    // paper's ≥50,000 samples.
+    let models = ofa_models::run(&sim, 100, 0x7ab1e2);
+    ofa_models::print(&models.report);
+    let es = EsConfig::default();
+    let report = table2::run(&sim, &models, &es);
+    table2::print(&report);
+}

@@ -1,0 +1,10 @@
+//! Regenerates the Sec. 6.2 (E3) 100-strategy MobileNetV2 topology study.
+
+use perf4sight::device::Simulator;
+use perf4sight::experiments::topology;
+
+fn main() {
+    let sim = Simulator::tx2();
+    let report = topology::run(&sim, 100, 0x6_2);
+    topology::print(&report);
+}

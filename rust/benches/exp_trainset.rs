@@ -1,0 +1,10 @@
+//! Regenerates the Sec. 6.1 (E2) AlexNet training-set-size sweep.
+
+use perf4sight::device::Simulator;
+use perf4sight::experiments::trainset;
+
+fn main() {
+    let sim = Simulator::tx2();
+    let report = trainset::run(&sim, 0x6_1);
+    trainset::print(&report);
+}

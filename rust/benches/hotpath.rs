@@ -1,0 +1,95 @@
+//! Hot-path micro-benchmarks (the §Perf instrumentation): feature
+//! extraction, forest prediction (native and through the XLA artifact),
+//! simulator evaluation, pruning, and a full ES iteration. These are the
+//! operations the OFA search executes ≥50,000 times.
+
+use perf4sight::device::Simulator;
+use perf4sight::features::network_features;
+use perf4sight::forest::Forest;
+use perf4sight::models;
+use perf4sight::ofa::SubnetConfig;
+use perf4sight::profiler::{profile, ProfileJob};
+use perf4sight::pruning::{prune, Strategy};
+use perf4sight::runtime::{ForestExecutor, Runtime};
+use perf4sight::util::bench_harness::{bench, section};
+use perf4sight::util::rng::Pcg64;
+
+fn main() {
+    let sim = Simulator::tx2();
+    let g50 = models::resnet50(1000);
+    let gmb = models::mobilenet_v2(1000);
+
+    section("hot paths — per-candidate costs of the OFA search loop");
+
+    bench("subnet config -> IR graph build", 300, || {
+        let mut rng = Pcg64::new(1);
+        let c = SubnetConfig::sample(&mut rng);
+        std::hint::black_box(c.build());
+    });
+
+    bench("shape inference (resnet50)", 300, || {
+        std::hint::black_box(g50.infer_shapes().unwrap());
+    });
+
+    bench("feature extraction 57-col (resnet50)", 300, || {
+        std::hint::black_box(network_features(&g50, 32).unwrap());
+    });
+
+    bench("feature extraction 57-col (mobilenetv2)", 300, || {
+        std::hint::black_box(network_features(&gmb, 32).unwrap());
+    });
+
+    bench("simulator train_step (resnet50, bs=32)", 300, || {
+        std::hint::black_box(sim.train_step(&g50, 32, None).unwrap());
+    });
+
+    bench("structured pruning (resnet50 @50%)", 300, || {
+        let mut rng = Pcg64::new(2);
+        std::hint::black_box(prune(&g50, Strategy::Random, 0.5, &mut rng));
+    });
+
+    // Fit a representative forest for prediction benchmarks.
+    let train = profile(&sim, &ProfileJob::new("resnet50", &g50));
+    let cfg = perf4sight::runtime::forest_exec::export_forest_config();
+    let forest = Forest::fit(&train.x(), &train.y_gamma(), &cfg);
+    let row = network_features(&g50, 32).unwrap();
+
+    bench("forest.predict native (64 trees)", 300, || {
+        std::hint::black_box(forest.predict(&row));
+    });
+
+    let rows: Vec<Vec<f64>> = (0..256).map(|_| row.clone()).collect();
+    bench("forest.predict_batch native (256 rows)", 300, || {
+        std::hint::black_box(forest.predict_batch(&rows));
+    });
+
+    // Through the AOT XLA artifact (the Pallas kernel path).
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if Runtime::artifacts_present(&dir) {
+        let rt = Runtime::cpu(&dir).unwrap();
+        let exec = ForestExecutor::new(&rt, &forest).unwrap();
+        bench("forest predict_one via XLA artifact", 400, || {
+            std::hint::black_box(exec.predict_one(&row).unwrap());
+        });
+        let s = bench("forest predict_batch(256) via XLA artifact", 600, || {
+            std::hint::black_box(exec.predict_batch(&rows).unwrap());
+        });
+        println!(
+            "  -> XLA batch throughput: {:.0} candidates/s (paper budget: 0.1 s per candidate)",
+            256.0 * s.throughput_per_sec()
+        );
+    } else {
+        println!("  (artifacts not built; skipping XLA-path benches — run `make artifacts`)");
+    }
+
+    // Full per-candidate evaluation as the ES does it.
+    bench("ES candidate evaluation (build+features+3 predictions)", 400, || {
+        let mut rng = Pcg64::new(3);
+        let c = SubnetConfig::sample(&mut rng);
+        let g = c.build();
+        let convs = g.conv_infos().unwrap();
+        let ft = perf4sight::features::network_features_from_convs(&convs, 32);
+        let fi = perf4sight::features::network_features_from_convs(&convs, 1);
+        std::hint::black_box((forest.predict(&ft), forest.predict(&fi)));
+    });
+}

@@ -1,0 +1,120 @@
+//! Augur-style layer-wise predictor (Lu et al., IEEE TMC 2021 — the
+//! paper's [14]). Approximates every convolution as a matrix
+//! multiplication, fits per-metric linear coefficients on profiled random
+//! matmul sizes, and sums layer estimates — the inference-era methodology
+//! the paper argues breaks down for training (Sec. 3.1): it ignores
+//! cuDNN's per-layer algorithm choices and the framework's whole-network
+//! memory behaviour.
+
+use crate::device::Simulator;
+use crate::ir::{ConvInfo, Graph, GraphError};
+use crate::util::rng::Pcg64;
+
+use super::linreg::LinearModel;
+
+/// Matmul proxy features of a conv layer at batch `bs`:
+/// [macs, im2col bytes, weight bytes, output bytes].
+fn matmul_features(c: &ConvInfo, bs: usize) -> Vec<f64> {
+    let bsf = bs as f64;
+    let macs = bsf * c.fwd_macs();
+    let i2c = bsf * (c.op * c.op * c.k * c.k * c.m) as f64;
+    let w = c.weight_params() as f64;
+    let out = bsf * (c.n * c.op * c.op) as f64;
+    vec![macs, i2c, w, out]
+}
+
+/// The fitted layer-wise model.
+#[derive(Clone, Debug)]
+pub struct LayerwiseModel {
+    latency: LinearModel,
+    memory: LinearModel,
+}
+
+impl LayerwiseModel {
+    /// Calibrate on random single-conv "networks" (the Augur methodology:
+    /// profile random matrix-multiplication sizes on the device).
+    pub fn calibrate(sim: &Simulator, samples: usize, seed: u64) -> LayerwiseModel {
+        use crate::ir::{Graph, GraphBuilder};
+        let mut rng = Pcg64::new(seed);
+        let mut x_lat = Vec::new();
+        let mut y_lat = Vec::new();
+        let mut x_mem = Vec::new();
+        let mut y_mem = Vec::new();
+        for _ in 0..samples {
+            let m = 1usize << rng.gen_range(7); // 1..64 in channels
+            let n = 8 * (1 + rng.gen_range(48)); // filters
+            let k = *rng.choose(&[1usize, 3, 5, 7]);
+            let ip = *rng.choose(&[7usize, 14, 28, 56, 112]);
+            let bs = *rng.choose(&[2usize, 8, 32, 96, 192]);
+            if ip + 2 * (k / 2) < k {
+                continue;
+            }
+            let mut g = Graph::new("probe");
+            let x = g.input(m, ip, ip);
+            g.conv("conv", x, n, k, 1, k / 2);
+            let Ok(info) = g.conv_infos() else { continue };
+            let c = info[0];
+            let feats = matmul_features(&c, bs);
+            // "Profile" the single layer on the device.
+            let meas = sim.train_step(&g, bs, None).expect("probe sim");
+            x_lat.push(feats.clone());
+            y_lat.push(meas.phi_ms);
+            x_mem.push(feats);
+            y_mem.push(meas.gamma_mb);
+        }
+        LayerwiseModel {
+            latency: LinearModel::fit(&x_lat, &y_lat, 1e-6),
+            memory: LinearModel::fit(&x_mem, &y_mem, 1e-6),
+        }
+    }
+
+    /// Layer-wise prediction: sum per-layer estimates (latency), or sum
+    /// per-layer memory minus the duplicated framework base (memory) — the
+    /// double-count correction Augur applies.
+    pub fn predict(&self, graph: &Graph, bs: usize) -> Result<(f64, f64), GraphError> {
+        let convs = graph.conv_infos()?;
+        let mut phi = 0.0;
+        let mut gamma = 0.0;
+        let n = convs.len().max(1) as f64;
+        // Every single-layer probe bakes in the per-step framework
+        // overhead (step dispatch / framework base); Augur keeps one copy
+        // and sums only the marginal per-layer contributions.
+        let base_mem = self.memory.predict(&[0.0, 0.0, 0.0, 0.0]);
+        let base_lat = self.latency.predict(&[0.0, 0.0, 0.0, 0.0]);
+        for c in &convs {
+            let f = matmul_features(c, bs);
+            phi += (self.latency.predict(&f) - base_lat).max(0.0);
+            gamma += (self.memory.predict(&f) - base_mem).max(0.0);
+        }
+        phi += base_lat.max(0.0);
+        gamma += base_mem.max(0.0);
+        let _ = n;
+        Ok((gamma, phi))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn calibrated_model_is_in_the_right_decade_but_imprecise() {
+        let sim = Simulator::tx2();
+        let model = LayerwiseModel::calibrate(&sim, 120, 42);
+        let g = models::resnet18(1000);
+        let truth = sim.train_step(&g, 32, None).unwrap();
+        let (gamma, phi) = model.predict(&g, 32).unwrap();
+        // Right order of magnitude…
+        assert!(gamma > truth.gamma_mb / 8.0 && gamma < truth.gamma_mb * 8.0);
+        assert!(phi > truth.phi_ms / 8.0 && phi < truth.phi_ms * 8.0);
+        // …but noticeably worse than the paper's single-digit targets
+        // (this is the [14] baseline the paper beats: 12–30% error).
+        let gerr = ((gamma - truth.gamma_mb) / truth.gamma_mb).abs() * 100.0;
+        let perr = ((phi - truth.phi_ms) / truth.phi_ms).abs() * 100.0;
+        assert!(
+            gerr > 3.0 || perr > 3.0,
+            "layer-wise baseline suspiciously exact: {gerr:.1}% / {perr:.1}%"
+        );
+    }
+}

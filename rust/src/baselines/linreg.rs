@@ -1,0 +1,167 @@
+//! Ridge linear regression on the analytical features — the alternative
+//! the paper evaluated and discarded ("Linear regression was evaluated as a
+//! possibility but discarded due to poor performance", Sec. 5.2 fn. 4).
+//! Kept as a baseline so the decision-tree-vs-linear comparison is
+//! reproducible.
+
+/// Solve (AᵀA + λI) w = Aᵀy by Gaussian elimination with partial pivoting.
+pub fn ridge_fit(x: &[Vec<f64>], y: &[f64], lambda: f64) -> Vec<f64> {
+    assert_eq!(x.len(), y.len());
+    assert!(!x.is_empty());
+    let n = x.len();
+    let d = x[0].len() + 1; // + intercept
+    // Normal equations.
+    let mut a = vec![vec![0.0f64; d + 1]; d]; // augmented [AtA | Aty]
+    for i in 0..n {
+        let mut row = Vec::with_capacity(d);
+        row.push(1.0);
+        row.extend_from_slice(&x[i]);
+        for r in 0..d {
+            for c in 0..d {
+                a[r][c] += row[r] * row[c];
+            }
+            a[r][d] += row[r] * y[i];
+        }
+    }
+    for r in 0..d {
+        a[r][r] += lambda;
+    }
+    // Gaussian elimination.
+    for col in 0..d {
+        // pivot
+        let mut piv = col;
+        for r in (col + 1)..d {
+            if a[r][col].abs() > a[piv][col].abs() {
+                piv = r;
+            }
+        }
+        a.swap(col, piv);
+        let diag = a[col][col];
+        if diag.abs() < 1e-12 {
+            continue; // singular direction; ridge term should prevent this
+        }
+        for r in 0..d {
+            if r != col {
+                let factor = a[r][col] / diag;
+                for c in col..=d {
+                    a[r][c] -= factor * a[col][c];
+                }
+            }
+        }
+    }
+    (0..d)
+        .map(|r| {
+            if a[r][r].abs() < 1e-12 {
+                0.0
+            } else {
+                a[r][d] / a[r][r]
+            }
+        })
+        .collect()
+}
+
+/// Predict with fitted weights (`w[0]` is the intercept).
+pub fn ridge_predict(w: &[f64], row: &[f64]) -> f64 {
+    w[0] + row.iter().zip(&w[1..]).map(|(x, c)| x * c).sum::<f64>()
+}
+
+/// Fitted linear model with feature standardisation (numerically necessary:
+/// the analytical features span ~12 orders of magnitude).
+#[derive(Clone, Debug)]
+pub struct LinearModel {
+    pub weights: Vec<f64>,
+    pub mean: Vec<f64>,
+    pub scale: Vec<f64>,
+}
+
+impl LinearModel {
+    pub fn fit(x: &[Vec<f64>], y: &[f64], lambda: f64) -> LinearModel {
+        let d = x[0].len();
+        let n = x.len() as f64;
+        let mut mean = vec![0.0; d];
+        for row in x {
+            for (m, v) in mean.iter_mut().zip(row) {
+                *m += v / n;
+            }
+        }
+        let mut scale = vec![0.0; d];
+        for row in x {
+            for j in 0..d {
+                scale[j] += (row[j] - mean[j]) * (row[j] - mean[j]) / n;
+            }
+        }
+        for s in &mut scale {
+            *s = s.sqrt().max(1e-12);
+        }
+        let xs: Vec<Vec<f64>> = x
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .map(|(j, v)| (v - mean[j]) / scale[j])
+                    .collect()
+            })
+            .collect();
+        let weights = ridge_fit(&xs, y, lambda);
+        LinearModel {
+            weights,
+            mean,
+            scale,
+        }
+    }
+
+    pub fn predict(&self, row: &[f64]) -> f64 {
+        let xs: Vec<f64> = row
+            .iter()
+            .enumerate()
+            .map(|(j, v)| (v - self.mean[j]) / self.scale[j])
+            .collect();
+        ridge_predict(&self.weights, &xs)
+    }
+
+    pub fn predict_batch(&self, rows: &[Vec<f64>]) -> Vec<f64> {
+        rows.iter().map(|r| self.predict(r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn recovers_exact_linear_function() {
+        let mut rng = Pcg64::new(1);
+        let x: Vec<Vec<f64>> = (0..100)
+            .map(|_| vec![rng.uniform(0.0, 10.0), rng.uniform(-5.0, 5.0)])
+            .collect();
+        let y: Vec<f64> = x.iter().map(|r| 3.0 + 2.0 * r[0] - 0.5 * r[1]).collect();
+        let w = ridge_fit(&x, &y, 1e-9);
+        assert!((w[0] - 3.0).abs() < 1e-6, "{w:?}");
+        assert!((w[1] - 2.0).abs() < 1e-6);
+        assert!((w[2] + 0.5).abs() < 1e-6);
+        assert!((ridge_predict(&w, &[1.0, 1.0]) - 4.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn standardised_model_handles_huge_scales() {
+        let mut rng = Pcg64::new(2);
+        let x: Vec<Vec<f64>> = (0..200)
+            .map(|_| vec![rng.uniform(0.0, 1e12), rng.uniform(0.0, 1.0)])
+            .collect();
+        let y: Vec<f64> = x.iter().map(|r| 1e-9 * r[0] + 100.0 * r[1]).collect();
+        let m = LinearModel::fit(&x, &y, 1e-6);
+        let pred = m.predict(&[5e11, 0.5]);
+        let truth = 1e-9 * 5e11 + 50.0;
+        assert!((pred - truth).abs() / truth < 0.01, "pred={pred} truth={truth}");
+    }
+
+    #[test]
+    fn ridge_shrinks_with_lambda() {
+        let x = vec![vec![1.0], vec![2.0], vec![3.0]];
+        let y = vec![2.0, 4.0, 6.0];
+        let w_small = ridge_fit(&x, &y, 1e-9);
+        let w_big = ridge_fit(&x, &y, 100.0);
+        assert!(w_big[1].abs() < w_small[1].abs());
+    }
+}

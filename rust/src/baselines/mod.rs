@@ -1,0 +1,12 @@
+//! Comparison baselines the paper evaluates against (S8 in DESIGN.md):
+//! DNNMem's analytical memory model [5], Augur's layer-wise matmul
+//! regression [14], and plain linear regression on the analytical features
+//! (the alternative the paper discarded).
+
+pub mod dnnmem;
+pub mod layerwise;
+pub mod linreg;
+
+pub use dnnmem::{estimate_training_memory_mb, DnnMemConfig};
+pub use layerwise::LayerwiseModel;
+pub use linreg::LinearModel;

@@ -1,0 +1,146 @@
+//! Minimal argument parser (clap is unavailable offline): positional
+//! subcommand + `--key value` / `--flag` options.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse an iterator of raw args (not including argv[0]).
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("bare `--` not supported".into());
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    out.options.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    /// Parse a comma-separated f64 list option.
+    pub fn f64_list(&self, key: &str) -> Result<Option<Vec<f64>>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse::<f64>().map_err(|e| format!("--{key}: {e}")))
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+        }
+    }
+
+    /// Parse a comma-separated usize list option.
+    pub fn usize_list(&self, key: &str) -> Result<Option<Vec<usize>>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse::<usize>().map_err(|e| format!("--{key}: {e}")))
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("profile --network resnet18 --bs 32 --verbose");
+        assert_eq!(a.positional, vec!["profile"]);
+        assert_eq!(a.get("network"), Some("resnet18"));
+        assert_eq!(a.usize_or("bs", 1).unwrap(), 32);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("fit --target=gamma --lambda=0.5");
+        assert_eq!(a.get("target"), Some("gamma"));
+        assert_eq!(a.f64_or("lambda", 0.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("profile --levels 0,0.3,0.5 --batch-sizes 2,4,8");
+        assert_eq!(a.f64_list("levels").unwrap().unwrap(), vec![0.0, 0.3, 0.5]);
+        assert_eq!(
+            a.usize_list("batch-sizes").unwrap().unwrap(),
+            vec![2, 4, 8]
+        );
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse("x --bs abc");
+        assert!(a.usize_or("bs", 1).is_err());
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = parse("x --offset -3.5");
+        assert_eq!(a.f64_or("offset", 0.0).unwrap(), -3.5);
+    }
+}

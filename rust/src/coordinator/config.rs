@@ -1,0 +1,178 @@
+//! Toolflow configuration: defaults + a minimal TOML-subset file format
+//! (sections, `key = value` with strings / numbers / booleans / inline
+//! arrays of numbers). Used by the CLI `--config` flag so runs are
+//! declarative and reproducible.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::forest::ForestConfig;
+
+/// Parsed config values, addressable as `section.key`.
+#[derive(Clone, Debug, Default)]
+pub struct RawConfig {
+    values: BTreeMap<String, String>,
+}
+
+impl RawConfig {
+    pub fn parse(text: &str) -> Result<RawConfig, String> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw_line) in text.lines().enumerate() {
+            let line = raw_line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(sec) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = sec.trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                return Err(format!("line {}: expected `key = value`", lineno + 1));
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let mut val = v.trim().to_string();
+            if val.starts_with('"') && val.ends_with('"') && val.len() >= 2 {
+                val = val[1..val.len() - 1].to_string();
+            }
+            values.insert(key, val);
+        }
+        Ok(RawConfig { values })
+    }
+
+    pub fn load(path: &Path) -> Result<RawConfig, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn string(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+}
+
+/// Resolved toolflow configuration.
+#[derive(Clone, Debug)]
+pub struct ToolflowConfig {
+    pub device: String,
+    pub seed: u64,
+    pub runs: usize,
+    pub forest: ForestConfig,
+    pub artifacts_dir: String,
+    pub data_dir: String,
+}
+
+impl Default for ToolflowConfig {
+    fn default() -> Self {
+        ToolflowConfig {
+            device: "tx2".into(),
+            seed: 0x9e1f,
+            runs: 3,
+            forest: crate::runtime::forest_exec::export_forest_config(),
+            artifacts_dir: "artifacts".into(),
+            data_dir: "data".into(),
+        }
+    }
+}
+
+impl ToolflowConfig {
+    pub fn from_raw(raw: &RawConfig) -> ToolflowConfig {
+        let d = ToolflowConfig::default();
+        ToolflowConfig {
+            device: raw.string("device", &d.device),
+            seed: raw.u64("seed", d.seed),
+            runs: raw.usize("profiling.runs", d.runs),
+            forest: ForestConfig {
+                n_trees: raw.usize("forest.n_trees", d.forest.n_trees),
+                max_depth: raw.usize("forest.max_depth", d.forest.max_depth),
+                min_samples_leaf: raw.usize("forest.min_samples_leaf", d.forest.min_samples_leaf),
+                min_samples_split: raw
+                    .usize("forest.min_samples_split", d.forest.min_samples_split),
+                feature_fraction: raw.f64("forest.feature_fraction", d.forest.feature_fraction),
+                bootstrap: raw.string("forest.bootstrap", "true") != "false",
+                seed: raw.u64("forest.seed", d.forest.seed),
+            },
+            artifacts_dir: raw.string("paths.artifacts", &d.artifacts_dir),
+            data_dir: raw.string("paths.data", &d.data_dir),
+        }
+    }
+
+    pub fn load(path: &Path) -> Result<ToolflowConfig, String> {
+        Ok(Self::from_raw(&RawConfig::load(path)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# perf4sight config
+device = "xavier"
+seed = 42
+
+[forest]
+n_trees = 64
+max_depth = 10
+feature_fraction = 0.5
+
+[profiling]
+runs = 5
+
+[paths]
+artifacts = "build/artifacts"
+"#;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let raw = RawConfig::parse(SAMPLE).unwrap();
+        assert_eq!(raw.get("device"), Some("xavier"));
+        assert_eq!(raw.usize("forest.n_trees", 0), 64);
+        assert_eq!(raw.f64("forest.feature_fraction", 0.0), 0.5);
+        assert_eq!(raw.get("missing"), None);
+    }
+
+    #[test]
+    fn resolved_config() {
+        let raw = RawConfig::parse(SAMPLE).unwrap();
+        let cfg = ToolflowConfig::from_raw(&raw);
+        assert_eq!(cfg.device, "xavier");
+        assert_eq!(cfg.seed, 42);
+        assert_eq!(cfg.runs, 5);
+        assert_eq!(cfg.forest.n_trees, 64);
+        assert_eq!(cfg.forest.max_depth, 10);
+        assert_eq!(cfg.artifacts_dir, "build/artifacts");
+        // untouched keys keep defaults
+        assert_eq!(cfg.data_dir, "data");
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let raw = RawConfig::parse("# all comments\n\n  \n").unwrap();
+        assert_eq!(raw.get("device"), None);
+    }
+
+    #[test]
+    fn malformed_line_is_error() {
+        assert!(RawConfig::parse("not a kv line").is_err());
+    }
+}

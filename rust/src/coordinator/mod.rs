@@ -1,0 +1,332 @@
+//! The L3 coordinator: CLI subcommand dispatch for the whole toolflow
+//! (Fig. 2 of the paper — pruning, profiling, feature generation, forest
+//! training, prediction, OFA search — plus the experiment harnesses and
+//! the AOT training demo).
+
+pub mod cli;
+pub mod config;
+
+pub use cli::Args;
+pub use config::{RawConfig, ToolflowConfig};
+
+use std::path::Path;
+
+use crate::device::{DeviceSpec, Simulator};
+use crate::experiments;
+use crate::features::network_features;
+use crate::forest::Forest;
+use crate::ofa::{Constraints, EsConfig, Subset};
+use crate::profiler::{profile, Dataset, ProfileJob, PAPER_BATCH_SIZES, TRAIN_LEVELS};
+use crate::pruning::Strategy;
+use crate::util::json::Json;
+
+const USAGE: &str = "\
+perf4sight — CNN training performance models for edge GPUs (paper reproduction)
+
+USAGE: perf4sight <command> [--options]
+
+COMMANDS:
+  zoo                               list the network zoo
+  profile    --network N [--device tx2] [--strategy random|l1norm]
+             [--levels 0,0.3,..] [--batch-sizes 2,4,..] [--runs 3]
+             [--seed S] --out FILE.json
+  fit        --data FILE.json[,FILE2..] --target gamma|phi --out MODEL.json
+  predict    --model MODEL.json --network N [--level 0.3] [--bs 32]
+             [--strategy random] [--device tx2] [--seed S]
+  search     [--device tx2] [--subset city|off-road|motorway|country-side]
+             [--gamma-max MB] [--gamma-infer-max MB] [--phi-max MS]
+             [--population 100] [--iterations 500] [--subnets 100] [--seed S]
+  train-demo [--steps 100] [--lr 0.1] [--artifacts DIR] [--seed S]
+  experiment fig3|fig4|fig5|table2|trainset|topology|dnnmem|ofa-models|ablation|cross-device|all
+             [--seed S] [--quick]
+  help
+
+Options may also come from --config FILE (TOML subset; see rust/src/coordinator/config.rs).
+";
+
+/// Entry point used by `main.rs`.
+pub fn run(raw_args: Vec<String>) -> Result<(), String> {
+    let args = Args::parse(raw_args)?;
+    let cfg = match args.get("config") {
+        Some(path) => ToolflowConfig::load(Path::new(path))?,
+        None => ToolflowConfig::default(),
+    };
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("zoo") => cmd_zoo(),
+        Some("profile") => cmd_profile(&args, &cfg),
+        Some("fit") => cmd_fit(&args, &cfg),
+        Some("predict") => cmd_predict(&args, &cfg),
+        Some("search") => cmd_search(&args, &cfg),
+        Some("train-demo") => cmd_train_demo(&args, &cfg),
+        Some("experiment") => cmd_experiment(&args, &cfg),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => Err(format!("unknown command {other:?}\n{USAGE}")),
+    }
+}
+
+fn simulator(args: &Args, cfg: &ToolflowConfig) -> Result<Simulator, String> {
+    let name = args.get_or("device", &cfg.device);
+    DeviceSpec::by_name(&name)
+        .map(Simulator::new)
+        .ok_or_else(|| format!("unknown device {name:?} (tx2, xavier, 2080ti)"))
+}
+
+fn strategy_of(name: &str) -> Result<Strategy, String> {
+    match name {
+        "random" => Ok(Strategy::Random),
+        "l1norm" | "l1" => Ok(Strategy::L1Norm),
+        other => Err(format!("unknown strategy {other:?}")),
+    }
+}
+
+fn cmd_zoo() -> Result<(), String> {
+    println!("{:<14} {:>10} {:>10} {:>7}", "network", "params(M)", "size(MB)", "convs");
+    for name in crate::models::ZOO {
+        let g = crate::models::by_name(name).unwrap();
+        println!(
+            "{:<14} {:>10.2} {:>10.1} {:>7}",
+            name,
+            g.param_count().map_err(|e| e.to_string())? as f64 / 1e6,
+            g.model_size_mb().map_err(|e| e.to_string())?,
+            g.conv_infos().map_err(|e| e.to_string())?.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
+    let network = args.get("network").ok_or("--network required")?;
+    let graph = crate::models::by_name(network).ok_or_else(|| format!("unknown network {network}"))?;
+    let sim = simulator(args, cfg)?;
+    let strategy = strategy_of(&args.get_or("strategy", "random"))?;
+    let levels = args.f64_list("levels")?.unwrap_or_else(|| TRAIN_LEVELS.to_vec());
+    let batch_sizes = args
+        .usize_list("batch-sizes")?
+        .unwrap_or_else(|| PAPER_BATCH_SIZES.to_vec());
+    let job = ProfileJob {
+        network,
+        graph: &graph,
+        strategy,
+        levels: &levels,
+        batch_sizes: &batch_sizes,
+        runs: args.usize_or("runs", cfg.runs)?,
+        seed: args.u64_or("seed", cfg.seed)?,
+    };
+    let started = std::time::Instant::now();
+    let ds = profile(&sim, &job);
+    let out = args.get("out").ok_or("--out required")?;
+    ds.save(Path::new(out)).map_err(|e| e.to_string())?;
+    println!(
+        "profiled {} points ({} levels × {} batch sizes) on {} in {:.2?} → {}",
+        ds.len(),
+        levels.len(),
+        batch_sizes.len(),
+        sim.spec.name,
+        started.elapsed(),
+        out
+    );
+    Ok(())
+}
+
+fn cmd_fit(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
+    let data = args.get("data").ok_or("--data required")?;
+    let mut ds = Dataset::default();
+    for path in data.split(',') {
+        ds.extend(Dataset::load(Path::new(path.trim()))?);
+    }
+    if ds.is_empty() {
+        return Err("empty dataset".into());
+    }
+    let target = args.get_or("target", "gamma");
+    let y = match target.as_str() {
+        "gamma" => ds.y_gamma(),
+        "phi" => ds.y_phi(),
+        other => return Err(format!("--target must be gamma|phi, got {other}")),
+    };
+    let forest = Forest::fit(&ds.x(), &y, &cfg.forest);
+    let train_err = forest.mape(&ds.x(), &y);
+    let out = args.get("out").ok_or("--out required")?;
+    if let Some(dir) = Path::new(out).parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    std::fs::write(out, forest.to_json().to_string()).map_err(|e| e.to_string())?;
+    println!(
+        "fitted {} forest on {} points (train MAPE {:.2}%) → {}",
+        target,
+        ds.len(),
+        train_err,
+        out
+    );
+    Ok(())
+}
+
+fn cmd_predict(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
+    let model_path = args.get("model").ok_or("--model required")?;
+    let text = std::fs::read_to_string(model_path).map_err(|e| e.to_string())?;
+    let forest = Forest::from_json(&Json::parse(&text)?)?;
+    let network = args.get("network").ok_or("--network required")?;
+    let graph = crate::models::by_name(network).ok_or_else(|| format!("unknown network {network}"))?;
+    let level = args.f64_or("level", 0.0)?;
+    let bs = args.usize_or("bs", 32)?;
+    let strategy = strategy_of(&args.get_or("strategy", "random"))?;
+    let mut rng = crate::util::rng::Pcg64::new(args.u64_or("seed", cfg.seed)?);
+    let pruned = crate::pruning::prune(&graph, strategy, level, &mut rng);
+    let f = network_features(&pruned, bs).map_err(|e| e.to_string())?;
+    let pred = forest.predict(&f);
+    println!("{network} @ {:.0}% pruning, bs={bs}: predicted = {pred:.1}", level * 100.0);
+    // Optional ground-truth comparison on the simulated device.
+    if args.get("device").is_some() || args.flag("truth") {
+        let sim = simulator(args, cfg)?;
+        let m = sim.train_step(&pruned, bs, None).map_err(|e| e.to_string())?;
+        println!(
+            "simulated truth on {}: Γ = {:.1} MB, Φ = {:.1} ms",
+            sim.spec.name, m.gamma_mb, m.phi_ms
+        );
+    }
+    Ok(())
+}
+
+fn cmd_search(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
+    let sim = simulator(args, cfg)?;
+    let subset = match args.get_or("subset", "city").as_str() {
+        "city" => Subset::City,
+        "off-road" | "offroad" => Subset::OffRoad,
+        "motorway" => Subset::Motorway,
+        "country-side" | "countryside" => Subset::CountrySide,
+        other => return Err(format!("unknown subset {other}")),
+    };
+    let subnets = args.usize_or("subnets", 40)?;
+    let seed = args.u64_or("seed", cfg.seed)?;
+    println!("fitting OFA attribute models ({subnets} sampled sub-networks)…");
+    let models = experiments::ofa_models::run(&sim, subnets, seed);
+    experiments::ofa_models::print(&models.report);
+
+    let predict = |_c: &crate::ofa::SubnetConfig, g: &crate::ir::Graph| crate::ofa::Attributes {
+        gamma_train_mb: models.gamma_train.predict(&network_features(g, 32).unwrap()),
+        gamma_infer_mb: models.gamma_infer.predict(&experiments::ofa_models::forward_masked(
+            &network_features(g, 1).unwrap(),
+        )),
+        phi_infer_ms: models.phi_infer.predict(&experiments::ofa_models::forward_masked(
+            &network_features(g, 1).unwrap(),
+        )),
+    };
+    let cons = Constraints {
+        gamma_train_mb: args.f64_or("gamma-max", f64::INFINITY)?,
+        gamma_infer_mb: args.f64_or("gamma-infer-max", f64::INFINITY)?,
+        phi_infer_ms: args.f64_or("phi-max", f64::INFINITY)?,
+    };
+    let es_cfg = EsConfig {
+        population: args.usize_or("population", 100)?,
+        iterations: args.usize_or("iterations", 500)?,
+        seed,
+        ..Default::default()
+    };
+    println!("running evolutionary search ({} × {})…", es_cfg.population, es_cfg.iterations);
+    let result = crate::ofa::evolutionary_search(&cons, &es_cfg, subset, predict);
+    let naive_h = result.samples as f64 * crate::device::PROFILE_COST_S / 3600.0;
+    println!("\nbest sub-network: {:?}", result.best);
+    println!("predicted accuracy ({}): {:.1}%", subset.name(), result.best_fitness);
+    println!("predicted attributes: {:?}", result.best_attrs);
+    println!(
+        "{} candidates in {:.2?} (naive on-device profiling would take {:.1} h — {:.0}x slower)",
+        result.samples,
+        result.elapsed,
+        naive_h,
+        naive_h * 3600.0 / result.elapsed.as_secs_f64().max(1e-9)
+    );
+    Ok(())
+}
+
+fn cmd_train_demo(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
+    use crate::runtime::{Runtime, TrainState, TrainStepExecutor};
+    let dir = args.get_or("artifacts", &cfg.artifacts_dir);
+    let dir = Path::new(&dir);
+    if !Runtime::artifacts_present(dir) {
+        return Err(format!(
+            "artifacts missing in {} — run `make artifacts` first",
+            dir.display()
+        ));
+    }
+    let rt = Runtime::cpu(dir).map_err(|e| e.to_string())?;
+    let exec = TrainStepExecutor::new(&rt).map_err(|e| e.to_string())?;
+    let steps = args.usize_or("steps", 100)?;
+    let lr = args.f64_or("lr", 0.1)? as f32;
+    let mut state = TrainState::init(args.u64_or("seed", cfg.seed)?);
+    let mut rng = crate::util::rng::Pcg64::new(args.u64_or("seed", cfg.seed)? ^ 0xbeef);
+    println!("training the L2 CNN (pallas conv kernels) through the AOT artifact…");
+    for step in 0..steps {
+        let (x, y) = crate::runtime::trainstep_exec::synthetic_batch(&mut rng);
+        let loss = exec.step(&mut state, &x, &y, lr).map_err(|e| e.to_string())?;
+        if step % 10 == 0 || step == steps - 1 {
+            println!("step {step:>4}  loss {loss:.4}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
+    let which = args
+        .positional
+        .get(1)
+        .ok_or("experiment name required (fig3|fig4|fig5|table2|trainset|topology|dnnmem|ofa-models|ablation|cross-device|all)")?
+        .as_str();
+    let sim = simulator(args, cfg)?;
+    let seed = args.u64_or("seed", cfg.seed)?;
+    let quick = args.flag("quick");
+    let run_one = |name: &str| -> Result<(), String> {
+        match name {
+            "fig3" => experiments::fig3::print(&experiments::fig3::run(&sim, seed)),
+            "trainset" => experiments::trainset::print(&experiments::trainset::run(&sim, seed)),
+            "topology" => experiments::topology::print(&experiments::topology::run(
+                &sim,
+                if quick { 20 } else { 100 },
+                seed,
+            )),
+            "dnnmem" => experiments::dnnmem_cmp::print(&experiments::dnnmem_cmp::run(seed)),
+            "fig4" => experiments::fig4::print(&experiments::fig4::run(&sim, seed)),
+            "fig5" => experiments::fig5::print(&experiments::fig5::run(&sim, seed)),
+            "ofa-models" => {
+                let m = experiments::ofa_models::run(&sim, if quick { 24 } else { 100 }, seed);
+                experiments::ofa_models::print(&m.report);
+            }
+            "table2" => {
+                let m = experiments::ofa_models::run(&sim, if quick { 24 } else { 100 }, seed);
+                let es = if quick {
+                    EsConfig {
+                        population: 20,
+                        iterations: 20,
+                        ..Default::default()
+                    }
+                } else {
+                    EsConfig::default()
+                };
+                experiments::table2::print(&experiments::table2::run(&sim, &m, &es));
+            }
+            "cross-device" => experiments::cross_device::print(&experiments::cross_device::run(
+                &args.get_or("network", "resnet18"),
+                seed,
+            )),
+            "ablation" => experiments::ablation::print(&experiments::ablation::run(
+                &sim,
+                &args.get_or("network", "resnet18"),
+                seed,
+            )),
+            other => return Err(format!("unknown experiment {other}")),
+        }
+        Ok(())
+    };
+    if which == "all" {
+        for name in [
+            "fig3", "trainset", "topology", "dnnmem", "fig4", "fig5", "ofa-models", "table2",
+            "ablation", "cross-device",
+        ] {
+            run_one(name)?;
+        }
+        Ok(())
+    } else {
+        run_one(which)
+    }
+}

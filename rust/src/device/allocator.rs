@@ -1,0 +1,89 @@
+//! PyTorch-style caching-allocator model.
+//!
+//! The real allocator rounds small blocks to 512-byte multiples and carves
+//! large blocks out of 2 MiB (and bigger) segments, then *caches* freed
+//! blocks instead of returning them to the driver — so observed process
+//! memory is the rounded high-water mark, not the live-byte sum. The
+//! rounding staircase is one of the framework-specific nonlinearities the
+//! random forest absorbs (it is invisible to the analytical features).
+
+/// Small-block quantum (bytes).
+pub const SMALL_QUANTUM: f64 = 512.0;
+/// Large-block segment quantum (bytes): 2 MiB.
+pub const LARGE_QUANTUM: f64 = 2.0 * 1024.0 * 1024.0;
+/// Threshold between the small and large pools: 1 MiB.
+pub const LARGE_THRESHOLD: f64 = 1024.0 * 1024.0;
+/// Fragmentation overhead of the large pool (segments split imperfectly).
+pub const FRAG_OVERHEAD: f64 = 0.035;
+
+/// Bytes actually reserved for a single allocation request.
+pub fn round_block(bytes: f64) -> f64 {
+    if bytes <= 0.0 {
+        return 0.0;
+    }
+    if bytes < LARGE_THRESHOLD {
+        (bytes / SMALL_QUANTUM).ceil() * SMALL_QUANTUM
+    } else {
+        (bytes / LARGE_QUANTUM).ceil() * LARGE_QUANTUM
+    }
+}
+
+/// Reserved total for a set of simultaneously-live allocations, including
+/// large-pool fragmentation.
+pub fn pool_reserved(blocks: impl IntoIterator<Item = f64>) -> f64 {
+    let mut small = 0.0;
+    let mut large = 0.0;
+    for b in blocks {
+        let r = round_block(b);
+        if b < LARGE_THRESHOLD {
+            small += r;
+        } else {
+            large += r;
+        }
+    }
+    small + large * (1.0 + FRAG_OVERHEAD)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_blocks_round_to_512() {
+        assert_eq!(round_block(1.0), 512.0);
+        assert_eq!(round_block(512.0), 512.0);
+        assert_eq!(round_block(513.0), 1024.0);
+    }
+
+    #[test]
+    fn large_blocks_round_to_2mb() {
+        let two_mb = 2.0 * 1024.0 * 1024.0;
+        assert_eq!(round_block(1.5 * 1024.0 * 1024.0), two_mb);
+        assert_eq!(round_block(two_mb + 1.0), 2.0 * two_mb);
+    }
+
+    #[test]
+    fn zero_is_zero() {
+        assert_eq!(round_block(0.0), 0.0);
+        assert_eq!(round_block(-5.0), 0.0);
+    }
+
+    #[test]
+    fn pool_includes_fragmentation_only_for_large() {
+        let small_only = pool_reserved([1000.0, 2000.0]);
+        assert_eq!(small_only, 1024.0 + 2048.0);
+        let large_only = pool_reserved([3.0 * 1024.0 * 1024.0]);
+        assert!(large_only > 4.0 * 1024.0 * 1024.0); // rounded + frag
+    }
+
+    #[test]
+    fn rounding_is_monotone() {
+        let mut prev = 0.0;
+        for i in 1..2000 {
+            let r = round_block(i as f64 * 700.0);
+            assert!(r >= prev);
+            assert!(r >= i as f64 * 700.0);
+            prev = r;
+        }
+    }
+}

@@ -1,0 +1,348 @@
+//! Simulated cuDNN: per-layer, per-operation convolution algorithm
+//! selection. This is the black-box the paper's decision trees must learn —
+//! "cuDNN uses proprietary heuristics on a per layer basis to select
+//! between the Matrix Multiplication, FFT, and Winograd convolution
+//! algorithms" (Sec. 5.2.1).
+//!
+//! The simulated heuristic mirrors `cudnnGetConvolution*Algorithm`: among
+//! the algorithms *eligible* for the layer geometry, pick the one with the
+//! lowest estimated execution time whose workspace fits under the cap.
+//! Eligibility and the cost model follow the published behaviour of the
+//! algorithms (Jorda et al. 2019 [8]; Lavin & Gray 2016 [11]; Mathieu et
+//! al. 2014 [16]).
+
+use crate::ir::ConvInfo;
+
+use super::spec::DeviceSpec;
+
+/// The three training convolutions (paper Eqs. 1–3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConvOp {
+    /// Eq.1: `y = x * w`.
+    Fwd,
+    /// Eq.2: `∂L/∂x = ∂L/∂y * rot180(w)`.
+    BwdData,
+    /// Eq.3: `∂L/∂w = x * ∂L/∂y`.
+    BwdFilter,
+}
+
+pub const ALL_OPS: [ConvOp; 3] = [ConvOp::Fwd, ConvOp::BwdData, ConvOp::BwdFilter];
+
+/// Convolution algorithms the simulated cuDNN chooses between.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// Explicit im2col + GEMM (stores the full im2col matrix).
+    Gemm,
+    /// Implicit GEMM (stores only window indices).
+    ImplicitGemm,
+    /// FFT-domain convolution.
+    Fft,
+    /// Winograd minimal filtering, (q,r) = (4,3).
+    Winograd,
+}
+
+pub const ALL_ALGOS: [Algo; 4] = [Algo::Gemm, Algo::ImplicitGemm, Algo::Fft, Algo::Winograd];
+
+/// Outcome of algorithm selection for one (layer, op).
+#[derive(Clone, Copy, Debug)]
+pub struct Choice {
+    pub algo: Algo,
+    /// Workspace bytes allocated for the op.
+    pub workspace_bytes: f64,
+    /// Estimated execution time, milliseconds.
+    pub time_ms: f64,
+}
+
+const BYTES: f64 = 4.0; // fp32
+
+/// Workspace bytes required by `algo` for `(layer, op)` at batch `bs`.
+/// Formulas are the paper's App. B memory features (in elements) × 4 bytes.
+pub fn workspace_bytes(c: &ConvInfo, op: ConvOp, algo: Algo, bs: usize) -> f64 {
+    let bs = bs as f64;
+    let n = c.n as f64;
+    let m = c.m as f64;
+    let k = c.k as f64;
+    let mg = (c.m / c.g) as f64;
+    let ip = c.ip as f64;
+    let opd = c.op as f64;
+    match algo {
+        Algo::Gemm => {
+            let elems = match op {
+                ConvOp::Fwd => bs * opd * opd * k * k * m,
+                ConvOp::BwdData => bs * ip * ip * k * k * m,
+                ConvOp::BwdFilter => bs * opd * opd * k * k * mg,
+            };
+            elems * BYTES
+        }
+        Algo::ImplicitGemm => {
+            let elems = match op {
+                ConvOp::Fwd | ConvOp::BwdFilter => bs * opd * opd,
+                ConvOp::BwdData => bs * ip * ip,
+            };
+            elems * BYTES
+        }
+        Algo::Fft => {
+            // Complex-valued transforms of both operands (×2 for re/im).
+            let elems = match op {
+                ConvOp::Fwd => n * mg * ip * (1.0 + ip) + bs * m * ip * (1.0 + ip),
+                ConvOp::BwdData => {
+                    n * mg * opd * (1.0 + opd) + bs * n * opd * (1.0 + opd)
+                }
+                ConvOp::BwdFilter => {
+                    bs * n * ip * (1.0 + ip) + bs * m * ip * (1.0 + ip)
+                }
+            };
+            elems * 2.0 * BYTES
+        }
+        Algo::Winograd => {
+            let (q, r) = (4.0f64, 3.0f64);
+            let tile = (q + r - 1.0) * (q + r - 1.0);
+            let tiles_ip = (ip / q).ceil() * (ip / q).ceil();
+            let tiles_op = (opd / q).ceil() * (opd / q).ceil();
+            let elems = match op {
+                ConvOp::Fwd => bs * n * tiles_ip * 3.0 * tile,
+                ConvOp::BwdData => bs * m * tiles_op * 3.0 * tile,
+                ConvOp::BwdFilter => bs * n * mg * tiles_ip * 3.0 * tile,
+            };
+            elems * BYTES
+        }
+    }
+}
+
+/// Multiply–accumulate count of `algo` for `(layer, op)` at batch `bs`
+/// (the paper's `ops` features), as *effective* MACs including algorithmic
+/// savings.
+pub fn op_macs(c: &ConvInfo, op: ConvOp, algo: Algo, bs: usize) -> f64 {
+    let bs = bs as f64;
+    let n = c.n as f64;
+    let m = c.m as f64;
+    let k = c.k as f64;
+    let mg = (c.m / c.g) as f64;
+    let ip = c.ip as f64;
+    let opd = c.op as f64;
+    match algo {
+        Algo::Gemm | Algo::ImplicitGemm => match op {
+            ConvOp::Fwd | ConvOp::BwdFilter => bs * n * opd * opd * k * k * mg,
+            ConvOp::BwdData => bs * m * ip * ip * k * k * n / c.g as f64,
+        },
+        Algo::Fft => {
+            let common = bs * (m + n) + n * mg;
+            match op {
+                ConvOp::Fwd => ip * ip * ip.max(1.0).ln() * common + bs * n * m * ip * ip / c.g as f64,
+                ConvOp::BwdData => {
+                    opd * opd * opd.max(1.0).ln() * common + bs * n * m * opd * opd / c.g as f64
+                }
+                ConvOp::BwdFilter => {
+                    ip * (ip * ip).max(1.0).ln() * common + bs * n * m * ip * ip / c.g as f64
+                }
+            }
+        }
+        Algo::Winograd => {
+            let (q, r) = (4.0f64, 3.0f64);
+            let tile = (q + r - 1.0) * (q + r - 1.0);
+            let tiles_ip = (ip / q).ceil() * (ip / q).ceil();
+            let tiles_op = (opd / q).ceil() * (opd / q).ceil();
+            let tiles_k = (k / r).ceil() * (k / r).ceil();
+            match op {
+                ConvOp::Fwd => bs * n * mg * tiles_ip * tiles_k * tile,
+                ConvOp::BwdData => bs * m * n * tiles_op * tiles_k * tile / c.g as f64,
+                ConvOp::BwdFilter => {
+                    let tiles_op_r = (opd / r).ceil() * (opd / r).ceil();
+                    bs * n * mg * mg * tiles_ip * tiles_op_r.min(tiles_ip) * tile
+                }
+            }
+        }
+    }
+}
+
+/// Arithmetic efficiency of each algorithm relative to device peak —
+/// Winograd pays transform overhead; implicit GEMM recomputes addressing;
+/// FFT is bandwidth-heavy.
+fn algo_efficiency(algo: Algo) -> f64 {
+    match algo {
+        Algo::Gemm => 0.52,
+        Algo::ImplicitGemm => 0.44,
+        Algo::Fft => 0.38,
+        Algo::Winograd => 0.40,
+    }
+}
+
+/// Is `algo` applicable to this layer geometry (cuDNN support matrix)?
+pub fn eligible(c: &ConvInfo, algo: Algo) -> bool {
+    match algo {
+        Algo::Gemm | Algo::ImplicitGemm => true,
+        // cuDNN winograd: 3x3, stride 1, ungrouped.
+        Algo::Winograd => c.k == 3 && c.s == 1 && c.g == 1 && c.ip >= 4,
+        // FFT: stride 1, ungrouped, kernel >= 5 (smaller kernels never win),
+        // moderate spatial size (transform memory explodes beyond).
+        Algo::Fft => c.k >= 5 && c.s == 1 && c.g == 1 && c.ip <= 64,
+    }
+}
+
+/// Estimated execution time (ms) of `(layer, op, algo)` on `spec` — the
+/// roofline of compute vs memory traffic, with an occupancy penalty for
+/// small launches.
+pub fn estimate_time_ms(
+    spec: &DeviceSpec,
+    c: &ConvInfo,
+    op: ConvOp,
+    algo: Algo,
+    bs: usize,
+) -> f64 {
+    let macs = op_macs(c, op, algo, bs);
+    let flops = 2.0 * macs;
+    // Occupancy: how well the launch fills the device. Work items are
+    // output tiles; small late layers or tiny batches underutilise.
+    let work = (bs * c.n * c.op * c.op) as f64;
+    let occupancy = (work / (spec.cores as f64 * 64.0)).min(1.0).max(0.02);
+    let eff = algo_efficiency(algo) * occupancy;
+    let t_compute_ms = flops / (spec.peak_gflops() * 1e9 * eff) * 1e3;
+
+    // Memory traffic: read inputs + weights, write outputs, touch workspace.
+    let bsf = bs as f64;
+    let io_bytes = (bsf * (c.m * c.ip * c.ip) as f64
+        + bsf * (c.n * c.op * c.op) as f64
+        + (c.n * (c.m / c.g) * c.k * c.k) as f64)
+        * BYTES
+        + workspace_bytes(c, op, algo, bs);
+    let t_mem_ms = io_bytes / (spec.mem_bw_gbps * 1e9 * spec.bw_efficiency) * 1e3;
+
+    t_compute_ms.max(t_mem_ms) + spec.launch_overhead_us / 1e3
+}
+
+/// cuDNN-style selection: cheapest eligible algorithm whose workspace fits.
+pub fn choose(spec: &DeviceSpec, c: &ConvInfo, op: ConvOp, bs: usize) -> Choice {
+    let cap_bytes = spec.workspace_cap_mb * 1024.0 * 1024.0;
+    let mut best: Option<Choice> = None;
+    for algo in ALL_ALGOS {
+        if !eligible(c, algo) {
+            continue;
+        }
+        let ws = workspace_bytes(c, op, algo, bs);
+        if ws > cap_bytes && algo != Algo::ImplicitGemm {
+            continue; // ImplicitGemm is the fallback that always fits
+        }
+        let t = estimate_time_ms(spec, c, op, algo, bs);
+        if best.map_or(true, |b| t < b.time_ms) {
+            best = Some(Choice {
+                algo,
+                workspace_bytes: ws,
+                time_ms: t,
+            });
+        }
+    }
+    best.expect("ImplicitGemm is always eligible")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(n: usize, m: usize, k: usize, s: usize, g: usize, ip: usize) -> ConvInfo {
+        let p = k / 2;
+        let op = crate::ir::conv_out_spatial(ip, k, s, p);
+        ConvInfo {
+            node: 0,
+            n,
+            m,
+            k,
+            s,
+            p,
+            g,
+            ip,
+            op,
+        }
+    }
+
+    #[test]
+    fn winograd_wins_on_3x3_stride1() {
+        let spec = DeviceSpec::tx2();
+        let c = conv(256, 256, 3, 1, 1, 28);
+        let choice = choose(&spec, &c, ConvOp::Fwd, 32);
+        assert_eq!(choice.algo, Algo::Winograd);
+    }
+
+    #[test]
+    fn winograd_ineligible_for_stride2() {
+        let c = conv(64, 64, 3, 2, 1, 56);
+        assert!(!eligible(&c, Algo::Winograd));
+        assert!(eligible(&c, Algo::Gemm));
+    }
+
+    #[test]
+    fn fft_eligible_only_for_large_kernels() {
+        assert!(eligible(&conv(64, 64, 5, 1, 1, 28), Algo::Fft));
+        assert!(!eligible(&conv(64, 64, 3, 1, 1, 28), Algo::Fft));
+        assert!(!eligible(&conv(64, 64, 5, 2, 1, 28), Algo::Fft));
+        // too large spatially
+        assert!(!eligible(&conv(64, 3, 7, 1, 1, 224), Algo::Fft));
+    }
+
+    #[test]
+    fn depthwise_uses_implicit_gemm() {
+        let spec = DeviceSpec::tx2();
+        let c = conv(128, 128, 3, 1, 128, 28);
+        assert!(!eligible(&c, Algo::Winograd));
+        let choice = choose(&spec, &c, ConvOp::Fwd, 32);
+        assert!(matches!(choice.algo, Algo::ImplicitGemm | Algo::Gemm));
+    }
+
+    #[test]
+    fn workspace_cap_forces_fallback() {
+        let spec = DeviceSpec::tx2(); // 512MB cap
+        // Huge early layer: explicit im2col would need bs*op^2*k^2*m*4B
+        let c = conv(64, 64, 3, 1, 1, 224);
+        let ws_gemm = workspace_bytes(&c, ConvOp::Fwd, Algo::Gemm, 256);
+        assert!(ws_gemm > 512.0 * 1024.0 * 1024.0);
+        let choice = choose(&spec, &c, ConvOp::Fwd, 256);
+        assert_ne!(choice.algo, Algo::Gemm);
+    }
+
+    #[test]
+    fn time_scales_with_batch() {
+        let spec = DeviceSpec::tx2();
+        let c = conv(128, 128, 3, 1, 1, 28);
+        let t8 = choose(&spec, &c, ConvOp::Fwd, 8).time_ms;
+        let t64 = choose(&spec, &c, ConvOp::Fwd, 64).time_ms;
+        assert!(t64 > 4.0 * t8, "t8={t8} t64={t64}");
+    }
+
+    #[test]
+    fn server_gpu_faster() {
+        let tx2 = DeviceSpec::tx2();
+        let ti = DeviceSpec::rtx2080ti();
+        let c = conv(256, 256, 3, 1, 1, 14);
+        let t_tx2 = choose(&tx2, &c, ConvOp::Fwd, 32).time_ms;
+        let t_ti = choose(&ti, &c, ConvOp::Fwd, 32).time_ms;
+        assert!(t_ti < t_tx2 / 5.0, "tx2={t_tx2} ti={t_ti}");
+    }
+
+    #[test]
+    fn all_ops_choosable_across_geometries() {
+        let spec = DeviceSpec::tx2();
+        for (n, m, k, s, g, ip) in [
+            (64, 3, 7, 2, 1, 224),
+            (64, 64, 1, 1, 1, 56),
+            (128, 128, 3, 2, 1, 56),
+            (32, 32, 3, 1, 32, 112),
+            (96, 16, 5, 1, 1, 27),
+        ] {
+            let c = conv(n, m, k, s, g, ip);
+            for op in ALL_OPS {
+                let ch = choose(&spec, &c, op, 16);
+                assert!(ch.time_ms > 0.0 && ch.time_ms.is_finite());
+                assert!(ch.workspace_bytes >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn winograd_reduces_macs_vs_gemm() {
+        let c = conv(256, 256, 3, 1, 1, 28);
+        let g = op_macs(&c, ConvOp::Fwd, Algo::Gemm, 1);
+        let w = op_macs(&c, ConvOp::Fwd, Algo::Winograd, 1);
+        // classic ~4x reduction for 4x4 output tiles with 3x3 kernels
+        let ratio = g / w;
+        assert!((3.0..5.0).contains(&ratio), "ratio={ratio}");
+    }
+}

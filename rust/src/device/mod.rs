@@ -1,0 +1,13 @@
+//! The simulated edge-GPU substrate (DESIGN.md §1, S5): device specs,
+//! cuDNN-style convolution algorithm selection, a PyTorch-style caching
+//! allocator, and the training/inference performance simulator that
+//! produces the paper's Γ/Φ/γ/φ attributes.
+
+pub mod allocator;
+pub mod cudnn;
+pub mod simulator;
+pub mod spec;
+
+pub use cudnn::{Algo, Choice, ConvOp};
+pub use simulator::{InferMeasurement, MemoryBreakdown, Simulator, TrainMeasurement, PROFILE_COST_S};
+pub use spec::DeviceSpec;

@@ -1,0 +1,144 @@
+//! Device specifications for the simulated GPUs.
+//!
+//! The paper's testbeds are the NVIDIA Jetson TX2 (embedded, unified
+//! memory) and an RTX 2080Ti (server, discrete memory, Sec. 6.2.1); we add
+//! the Xavier mentioned in the introduction. Numbers are the public
+//! datasheet values; framework constants approximate PyTorch 1.6 + CUDA
+//! 10.2 + cuDNN 8.0 process footprints on those systems.
+
+/// Static description of a target device + framework combination.
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    /// CUDA core count.
+    pub cores: usize,
+    /// Streaming multiprocessors.
+    pub sms: usize,
+    /// Core clock, GHz.
+    pub clock_ghz: f64,
+    /// DRAM bandwidth, GB/s.
+    pub mem_bw_gbps: f64,
+    /// Total DRAM, MB.
+    pub dram_mb: f64,
+    /// Unified CPU+GPU memory (Jetson) vs discrete (server).
+    pub unified: bool,
+    /// Memory reported as used by an idle training process: CUDA context,
+    /// framework, cuDNN handles; on unified devices also the OS/desktop
+    /// share observed through /proc/meminfo.
+    pub framework_base_train_mb: f64,
+    /// Same, for an inference-only process.
+    pub framework_base_infer_mb: f64,
+    /// Kernel launch + driver overhead per launched op, microseconds.
+    pub launch_overhead_us: f64,
+    /// Fixed per-iteration framework overhead (python dispatch, optimizer
+    /// bookkeeping), milliseconds.
+    pub step_overhead_ms: f64,
+    /// cuDNN workspace cap, MB (PyTorch leaves this to cuDNN defaults).
+    pub workspace_cap_mb: f64,
+    /// Fraction of peak DRAM bandwidth sustained by well-formed kernels.
+    pub bw_efficiency: f64,
+}
+
+impl DeviceSpec {
+    /// Peak fp32 throughput in GFLOP/s (2 flops per FMA per core per clock).
+    pub fn peak_gflops(&self) -> f64 {
+        self.cores as f64 * self.clock_ghz * 2.0
+    }
+
+    /// NVIDIA Jetson TX2: 256 Pascal cores, 8 GB unified LPDDR4.
+    pub fn tx2() -> Self {
+        DeviceSpec {
+            name: "jetson-tx2",
+            cores: 256,
+            sms: 2,
+            clock_ghz: 1.3,
+            mem_bw_gbps: 59.7,
+            dram_mb: 8192.0,
+            unified: true,
+            framework_base_train_mb: 1850.0,
+            framework_base_infer_mb: 1500.0,
+            launch_overhead_us: 45.0,
+            step_overhead_ms: 6.0,
+            workspace_cap_mb: 512.0,
+            bw_efficiency: 0.68,
+        }
+    }
+
+    /// NVIDIA Jetson Xavier AGX: 512 Volta cores, 16 GB unified.
+    pub fn xavier() -> Self {
+        DeviceSpec {
+            name: "jetson-xavier",
+            cores: 512,
+            sms: 8,
+            clock_ghz: 1.377,
+            mem_bw_gbps: 137.0,
+            dram_mb: 16384.0,
+            unified: true,
+            framework_base_train_mb: 2050.0,
+            framework_base_infer_mb: 1650.0,
+            launch_overhead_us: 25.0,
+            step_overhead_ms: 4.0,
+            workspace_cap_mb: 1024.0,
+            bw_efficiency: 0.72,
+        }
+    }
+
+    /// NVIDIA RTX 2080Ti: 4352 Turing cores, 11 GB GDDR6 (discrete).
+    /// Used for the DNNMem comparison (Sec. 6.2.1): Γ here counts only GPU
+    /// memory (pynvml), so no CPU-side terms.
+    pub fn rtx2080ti() -> Self {
+        DeviceSpec {
+            name: "rtx-2080ti",
+            cores: 4352,
+            sms: 68,
+            clock_ghz: 1.545,
+            mem_bw_gbps: 616.0,
+            dram_mb: 11264.0,
+            unified: false,
+            framework_base_train_mb: 980.0,
+            framework_base_infer_mb: 780.0,
+            launch_overhead_us: 6.0,
+            step_overhead_ms: 1.5,
+            workspace_cap_mb: 2048.0,
+            bw_efficiency: 0.78,
+        }
+    }
+
+    /// Look up a preset by name.
+    pub fn by_name(name: &str) -> Option<Self> {
+        Some(match name {
+            "tx2" | "jetson-tx2" => Self::tx2(),
+            "xavier" | "jetson-xavier" => Self::xavier(),
+            "2080ti" | "rtx-2080ti" => Self::rtx2080ti(),
+            _ => return None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tx2_peak_flops() {
+        // 256 * 1.3 * 2 = 665.6 GFLOP/s
+        assert!((DeviceSpec::tx2().peak_gflops() - 665.6).abs() < 0.1);
+    }
+
+    #[test]
+    fn server_gpu_much_faster_than_edge() {
+        let tx2 = DeviceSpec::tx2();
+        let ti = DeviceSpec::rtx2080ti();
+        assert!(ti.peak_gflops() > 15.0 * tx2.peak_gflops());
+        assert!(ti.mem_bw_gbps > 8.0 * tx2.mem_bw_gbps);
+        assert!(!ti.unified && tx2.unified);
+    }
+
+    #[test]
+    fn presets_by_name() {
+        assert!(DeviceSpec::by_name("tx2").is_some());
+        assert!(DeviceSpec::by_name("2080ti").is_some());
+        assert!(DeviceSpec::by_name("xavier").is_some());
+        assert!(DeviceSpec::by_name("a100").is_none());
+    }
+}

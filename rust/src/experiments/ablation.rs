@@ -1,0 +1,117 @@
+//! E9 — feature-family ablation (design-choice validation).
+//!
+//! The paper motivates generating features for *all three* convolution
+//! algorithms because cuDNN's per-layer choice is unobservable before
+//! deployment (Sec. 5.2.1). This ablation knocks out each feature family
+//! (tensor allocations, MatMul, FFT, Winograd) and refits the Γ/Φ models —
+//! quantifying how much each family contributes.
+
+use crate::device::Simulator;
+use crate::features::{feature_families, Family, NUM_FEATURES};
+use crate::forest::Forest;
+use crate::profiler::train_test_split;
+use crate::pruning::Strategy;
+use crate::util::bench_harness::{section, table};
+
+use super::experiment_forest_config;
+
+#[derive(Clone, Debug)]
+pub struct AblationRow {
+    pub knocked_out: String,
+    pub gamma_err_pct: f64,
+    pub phi_err_pct: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct AblationReport {
+    pub network: String,
+    pub rows: Vec<AblationRow>,
+}
+
+fn knockout(x: &[Vec<f64>], family: Option<Family>) -> Vec<Vec<f64>> {
+    let fams = feature_families();
+    x.iter()
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .map(|(i, &v)| match family {
+                    Some(f) if fams[i] == f => 0.0,
+                    _ => v,
+                })
+                .collect()
+        })
+        .collect()
+}
+
+pub fn run(sim: &Simulator, network: &str, seed: u64) -> AblationReport {
+    let graph = crate::models::by_name(network).expect("zoo network");
+    let (train, test) = train_test_split(sim, network, &graph, Strategy::Random, seed);
+    let cfg = experiment_forest_config();
+
+    let cases: Vec<(String, Option<Family>)> = vec![
+        ("none (full 57 features)".into(), None),
+        ("tensor allocations".into(), Some(Family::Tensor)),
+        ("matmul features".into(), Some(Family::MatMul)),
+        ("fft features".into(), Some(Family::Fft)),
+        ("winograd features".into(), Some(Family::Winograd)),
+    ];
+    let mut rows = Vec::new();
+    for (name, family) in cases {
+        let xtr = knockout(&train.x(), family);
+        let xte = knockout(&test.x(), family);
+        let fg = Forest::fit(&xtr, &train.y_gamma(), &cfg);
+        let fp = Forest::fit(&xtr, &train.y_phi(), &cfg);
+        rows.push(AblationRow {
+            knocked_out: name,
+            gamma_err_pct: fg.mape(&xte, &test.y_gamma()),
+            phi_err_pct: fp.mape(&xte, &test.y_phi()),
+        });
+    }
+    AblationReport {
+        network: network.to_string(),
+        rows,
+    }
+}
+
+pub fn print(r: &AblationReport) {
+    section(&format!(
+        "Ablation — feature-family knockouts ({})",
+        r.network
+    ));
+    table(
+        &["knocked-out family", "Γ err %", "Φ err %"],
+        &r.rows
+            .iter()
+            .map(|row| {
+                vec![
+                    row.knocked_out.clone(),
+                    format!("{:.2}", row.gamma_err_pct),
+                    format!("{:.2}", row.phi_err_pct),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    println!("\n(the full feature set should be at least as good as any knockout)");
+    let _ = NUM_FEATURES;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_feature_set_is_not_dominated() {
+        let sim = Simulator::tx2();
+        let r = run(&sim, "squeezenet", 17);
+        let full = &r.rows[0];
+        // Knockouts shouldn't massively beat the full set on both targets
+        // simultaneously (forests tolerate redundant features).
+        for row in &r.rows[1..] {
+            assert!(
+                full.gamma_err_pct < row.gamma_err_pct + 2.0,
+                "knockout {} strictly dominates: {row:?} vs {full:?}",
+                row.knocked_out
+            );
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! E1 / Fig. 3 — same base network in training and test sets.
+//!
+//! For each of {ResNet18, MobileNetV2, SqueezeNet, MnasNet}: train the Γ/Φ
+//! forests on T = {0,30,50,70,90}% random-pruned topologies × 25 batch
+//! sizes, test on the 14 held-out levels under (a) random and (b) L1-norm
+//! pruning. Paper headline: mean Γ error ≤ 9.15%, Φ ≤ 14.7%; overall means
+//! 5.53% / 9.37% (fn. 6, with Fig. 4 included).
+
+use crate::device::Simulator;
+use crate::profiler::train_test_split;
+use crate::pruning::Strategy;
+use crate::util::bench_harness::{section, table};
+
+use super::{fit_gamma_phi, mean_errors, ErrorRow};
+
+pub const NETWORKS: [&str; 4] = ["resnet18", "mobilenetv2", "squeezenet", "mnasnet"];
+
+#[derive(Clone, Debug)]
+pub struct Fig3Report {
+    pub rows: Vec<ErrorRow>,
+    pub mean_gamma_err: f64,
+    pub mean_phi_err: f64,
+}
+
+pub fn run(sim: &Simulator, seed: u64) -> Fig3Report {
+    let mut rows = Vec::new();
+    for network in NETWORKS {
+        let graph = crate::models::by_name(network).expect("zoo network");
+        let (train, test_rand) =
+            train_test_split(sim, network, &graph, Strategy::Random, seed);
+        let (_, test_l1) = train_test_split(sim, network, &graph, Strategy::L1Norm, seed);
+        let (fg, fp) = fit_gamma_phi(&train);
+        for (label, test) in [("Rand", &test_rand), ("L1", &test_l1)] {
+            rows.push(ErrorRow {
+                network: network.to_string(),
+                strategy: label.to_string(),
+                gamma_err_pct: fg.mape(&test.x(), &test.y_gamma()),
+                phi_err_pct: fp.mape(&test.x(), &test.y_phi()),
+            });
+        }
+    }
+    let (mg, mp) = mean_errors(&rows);
+    Fig3Report {
+        rows,
+        mean_gamma_err: mg,
+        mean_phi_err: mp,
+    }
+}
+
+pub fn print(report: &Fig3Report) {
+    section("Fig. 3 — same-network train/test: mean attribute prediction error (%)");
+    table(
+        &["network", "test strategy", "Γ err %", "Φ err %"],
+        &report.rows.iter().map(|r| r.cells()).collect::<Vec<_>>(),
+    );
+    println!(
+        "\nmeans: Γ {:.2}%  Φ {:.2}%   (paper: ≤9.15% / ≤14.7% worst-case; 5.53% / 9.37% overall means)",
+        report.mean_gamma_err, report.mean_phi_err
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_shape_holds_on_two_networks() {
+        // Subset (2 networks) for test speed; the bench runs all 4.
+        let sim = Simulator::tx2();
+        let mut rows = Vec::new();
+        for network in ["squeezenet", "mnasnet"] {
+            let graph = crate::models::by_name(network).unwrap();
+            let (train, test) =
+                train_test_split(&sim, network, &graph, Strategy::Random, 3);
+            let (fg, fp) = fit_gamma_phi(&train);
+            rows.push(ErrorRow {
+                network: network.into(),
+                strategy: "Rand".into(),
+                gamma_err_pct: fg.mape(&test.x(), &test.y_gamma()),
+                phi_err_pct: fp.mape(&test.x(), &test.y_phi()),
+            });
+        }
+        for r in &rows {
+            assert!(r.gamma_err_pct < 9.15, "{r:?}");
+            assert!(r.phi_err_pct < 14.7, "{r:?}");
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! E6 / Fig. 5 (App. B) — profiled Γ and Φ vs batch size for ResNet18,
+//! MobileNetV2, SqueezeNet and MnasNet at pruning levels {0,30,50,70,90}%.
+//! The paper's observation: "they display linearity with batch size, but
+//! varying linear fit dependent on the network architecture (pruning
+//! level)". We regenerate the series and quantify both claims (R² of the
+//! per-level linear fit; spread of slopes across levels).
+
+use crate::device::Simulator;
+use crate::profiler::{profile, ProfileJob, TRAIN_LEVELS};
+use crate::util::bench_harness::section;
+use crate::util::stats::linear_fit;
+
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub network: String,
+    pub level: f64,
+    pub bs: Vec<usize>,
+    pub gamma: Vec<f64>,
+    pub phi: Vec<f64>,
+    pub gamma_r2: f64,
+    pub phi_r2: f64,
+    pub gamma_slope: f64,
+    pub phi_slope: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Fig5Report {
+    pub series: Vec<Series>,
+}
+
+pub fn run(sim: &Simulator, seed: u64) -> Fig5Report {
+    let mut series = Vec::new();
+    for network in ["resnet18", "mobilenetv2", "squeezenet", "mnasnet"] {
+        let graph = crate::models::by_name(network).unwrap();
+        let ds = profile(
+            sim,
+            &ProfileJob {
+                levels: &TRAIN_LEVELS,
+                seed,
+                ..ProfileJob::new(network, &graph)
+            },
+        );
+        for &level in TRAIN_LEVELS.iter() {
+            let pts: Vec<_> = ds
+                .points
+                .iter()
+                .filter(|p| (p.level - level).abs() < 1e-9)
+                .collect();
+            let bs: Vec<usize> = pts.iter().map(|p| p.bs).collect();
+            let xs: Vec<f64> = bs.iter().map(|&b| b as f64).collect();
+            let gamma: Vec<f64> = pts.iter().map(|p| p.gamma_mb).collect();
+            let phi: Vec<f64> = pts.iter().map(|p| p.phi_ms).collect();
+            let (gs, _, gr2) = linear_fit(&xs, &gamma);
+            let (ps, _, pr2) = linear_fit(&xs, &phi);
+            series.push(Series {
+                network: network.to_string(),
+                level,
+                bs,
+                gamma,
+                phi,
+                gamma_r2: gr2,
+                phi_r2: pr2,
+                gamma_slope: gs,
+                phi_slope: ps,
+            });
+        }
+    }
+    Fig5Report { series }
+}
+
+pub fn print(report: &Fig5Report) {
+    section("Fig. 5 (App. B) — Γ and Φ vs batch size per pruning level");
+    println!("network       level   Γ slope MB/img  Γ R²     Φ slope ms/img  Φ R²");
+    println!("{}", "-".repeat(72));
+    for s in &report.series {
+        println!(
+            "{:<13} {:>4.0}%   {:>12.2}  {:.4}   {:>12.2}  {:.4}",
+            s.network,
+            s.level * 100.0,
+            s.gamma_slope,
+            s.gamma_r2,
+            s.phi_slope,
+            s.phi_r2
+        );
+    }
+    // CSV for plotting.
+    println!("\nCSV (network,level,bs,gamma_mb,phi_ms):");
+    for s in &report.series {
+        for ((b, g), p) in s.bs.iter().zip(&s.gamma).zip(&s.phi) {
+            println!("{},{},{},{:.1},{:.1}", s.network, s.level, b, g, p);
+        }
+    }
+    println!("\npaper claim: linear in bs (R² ≈ 1), slope varies with pruning level");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linearity_and_slope_variation() {
+        let sim = Simulator::tx2();
+        let graph = crate::models::squeezenet(1000);
+        let ds = profile(
+            &sim,
+            &ProfileJob {
+                levels: &[0.0, 0.9],
+                batch_sizes: &[8, 32, 64, 128, 192, 256],
+                ..ProfileJob::new("squeezenet", &graph)
+            },
+        );
+        let fit_level = |lvl: f64| {
+            let pts: Vec<_> = ds
+                .points
+                .iter()
+                .filter(|p| (p.level - lvl).abs() < 1e-9)
+                .collect();
+            let xs: Vec<f64> = pts.iter().map(|p| p.bs as f64).collect();
+            let ys: Vec<f64> = pts.iter().map(|p| p.gamma_mb).collect();
+            linear_fit(&xs, &ys)
+        };
+        let (s0, _, r0) = fit_level(0.0);
+        let (s9, _, r9) = fit_level(0.9);
+        assert!(r0 > 0.99 && r9 > 0.99, "not linear: {r0} {r9}");
+        assert!(s9 < s0 * 0.8, "slope must shrink with pruning: {s0} vs {s9}");
+    }
+}

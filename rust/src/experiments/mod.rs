@@ -1,0 +1,63 @@
+//! Experiment harnesses — one per table/figure in the paper's evaluation
+//! (DESIGN.md §5). Each module exposes a `run(...)` returning a report
+//! struct and printing the regenerated rows; the `[[bench]]` targets and
+//! the CLI `experiment` subcommand are thin wrappers over these.
+
+pub mod ablation;
+pub mod cross_device;
+pub mod dnnmem_cmp;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod ofa_models;
+pub mod table2;
+pub mod topology;
+pub mod trainset;
+
+use crate::forest::{Forest, ForestConfig};
+use crate::profiler::Dataset;
+
+/// Forest hyperparameters used across experiments: export-compatible
+/// (64 trees, depth ≤ 14) so any fitted model can also run through the
+/// XLA artifact.
+pub fn experiment_forest_config() -> ForestConfig {
+    crate::runtime::forest_exec::export_forest_config()
+}
+
+/// Fit the paper's two models (Γ and Φ) on a profiled dataset.
+pub fn fit_gamma_phi(train: &Dataset) -> (Forest, Forest) {
+    let cfg = experiment_forest_config();
+    let x = train.x();
+    let fg = Forest::fit(&x, &train.y_gamma(), &cfg);
+    let fp = Forest::fit(&x, &train.y_phi(), &cfg);
+    (fg, fp)
+}
+
+/// Per-network attribute errors (mean absolute percentage error).
+#[derive(Clone, Debug)]
+pub struct ErrorRow {
+    pub network: String,
+    pub strategy: String,
+    pub gamma_err_pct: f64,
+    pub phi_err_pct: f64,
+}
+
+impl ErrorRow {
+    pub fn cells(&self) -> Vec<String> {
+        vec![
+            self.network.clone(),
+            self.strategy.clone(),
+            format!("{:.2}", self.gamma_err_pct),
+            format!("{:.2}", self.phi_err_pct),
+        ]
+    }
+}
+
+/// Aggregate means across rows.
+pub fn mean_errors(rows: &[ErrorRow]) -> (f64, f64) {
+    let n = rows.len().max(1) as f64;
+    (
+        rows.iter().map(|r| r.gamma_err_pct).sum::<f64>() / n,
+        rows.iter().map(|r| r.phi_err_pct).sum::<f64>() / n,
+    )
+}

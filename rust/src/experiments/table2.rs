@@ -1,0 +1,220 @@
+//! E7 / Table 2 — the on-device OFA case study.
+//!
+//! Rows MAX and MIN are the extreme sub-networks; A and B come from
+//! evolutionary search under progressively stricter (Γ, γ, φ) constraints,
+//! with per-candidate attributes predicted by the random-forest models.
+//! Search time compares the naive approach (on-device profiling at the
+//! paper's measured 20 s/datapoint) against model inference (measured wall
+//! clock here) — the paper's ~200× headline.
+
+
+use crate::device::{Simulator, PROFILE_COST_S};
+use crate::ofa::{
+    evolutionary_search, initial_accuracy, retrained_accuracy, Attributes, Constraints,
+    EsConfig, SubnetConfig, ALL_SUBSETS,
+};
+use crate::util::bench_harness::{section, table};
+
+use super::ofa_models::{forward_masked, OfaModels};
+
+#[derive(Clone, Debug)]
+pub struct Table2Row {
+    pub name: String,
+    /// (naive hours, model hours); None for MAX/MIN (no search needed).
+    pub search_time_h: Option<(f64, f64)>,
+    pub size_mb: f64,
+    pub gamma_mb: f64,
+    pub gamma_infer_mb: f64,
+    pub phi_ms: f64,
+    /// Per subset: (initial, retrained) top-1 %.
+    pub accuracy: Vec<(f64, f64)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Table2Report {
+    pub rows: Vec<Table2Row>,
+    pub search_speedup: f64,
+}
+
+/// Ground-truth attributes of a sub-network (what the paper profiles for
+/// the final table).
+fn true_attrs(sim: &Simulator, g: &crate::ir::Graph) -> (f64, f64, f64) {
+    let t = sim.train_step(g, 32, None).unwrap();
+    let i = sim.inference(g, 1, None).unwrap();
+    (t.gamma_mb, i.gamma_mb, i.phi_ms)
+}
+
+fn row_for(
+    sim: &Simulator,
+    name: &str,
+    config: &SubnetConfig,
+    search_time_h: Option<(f64, f64)>,
+) -> Table2Row {
+    let g = config.build();
+    let (gamma, gamma_i, phi) = true_attrs(sim, &g);
+    Table2Row {
+        name: name.to_string(),
+        search_time_h,
+        size_mb: g.model_size_mb().unwrap(),
+        gamma_mb: gamma,
+        gamma_infer_mb: gamma_i,
+        phi_ms: phi,
+        accuracy: ALL_SUBSETS
+            .iter()
+            .map(|&s| {
+                (
+                    initial_accuracy(config, &g, s),
+                    retrained_accuracy(config, &g, s),
+                )
+            })
+            .collect(),
+    }
+}
+
+pub fn run(sim: &Simulator, models: &OfaModels, es_cfg: &EsConfig) -> Table2Report {
+    // Model-based attribute predictor — the fast path the paper proposes.
+    let predict = |_c: &SubnetConfig, g: &crate::ir::Graph| -> Attributes {
+        // One shape-inference pass serves both batch sizes (§Perf).
+        let convs = g.conv_infos().unwrap();
+        let f_train = crate::features::network_features_from_convs(&convs, 32);
+        let f_infer = forward_masked(&crate::features::network_features_from_convs(&convs, 1));
+        Attributes {
+            gamma_train_mb: models.gamma_train.predict(&f_train),
+            gamma_infer_mb: models.gamma_infer.predict(&f_infer),
+            phi_infer_ms: models.phi_infer.predict(&f_infer),
+        }
+    };
+
+    // Constraint sets placed between the MIN and MAX attribute extremes —
+    // "progressively stricter constraints on Γ, γ and φ" (Sec. 6.4). The
+    // search sees only *predicted* attributes (that is the whole point of
+    // the models), so the constraints are anchored in predicted space too —
+    // exactly what an operator calibrating budgets with these models would
+    // do. Fractions are chosen so the achieved improvement ratios land near
+    // the paper's (A: 1.6×/1.05×/1.8×, B: 1.9×/1.1×/2.8× vs MAX).
+    let max_c = SubnetConfig::max();
+    let min_c = SubnetConfig::min();
+    let pa_max = predict(&max_c, &max_c.build());
+    let pa_min = predict(&min_c, &min_c.build());
+    let between = |lo: f64, hi: f64, frac: f64| lo + frac * (hi - lo);
+    let cons_a = Constraints {
+        gamma_train_mb: between(pa_min.gamma_train_mb, pa_max.gamma_train_mb, 0.45),
+        gamma_infer_mb: between(pa_min.gamma_infer_mb, pa_max.gamma_infer_mb, 0.80),
+        phi_infer_ms: between(pa_min.phi_infer_ms, pa_max.phi_infer_ms, 0.45),
+    };
+    let cons_b = Constraints {
+        gamma_train_mb: between(pa_min.gamma_train_mb, pa_max.gamma_train_mb, 0.28),
+        gamma_infer_mb: between(pa_min.gamma_infer_mb, pa_max.gamma_infer_mb, 0.55),
+        phi_infer_ms: between(pa_min.phi_infer_ms, pa_max.phi_infer_ms, 0.22),
+    };
+
+    let search = |cons: &Constraints, seed: u64, subset| {
+        let cfg = EsConfig {
+            seed,
+            ..es_cfg.clone()
+        };
+        let result = evolutionary_search(cons, &cfg, subset, predict);
+        let naive_h = result.samples as f64 * PROFILE_COST_S / 3600.0;
+        let model_h = result.elapsed.as_secs_f64() / 3600.0;
+        (result, naive_h, model_h)
+    };
+
+    let (res_a, naive_a, model_a) = search(&cons_a, es_cfg.seed, crate::ofa::Subset::City);
+    let (res_b, naive_b, model_b) = search(&cons_b, es_cfg.seed ^ 1, crate::ofa::Subset::City);
+
+    let rows = vec![
+        row_for(sim, "MAX", &SubnetConfig::max(), None),
+        row_for(sim, "A", &res_a.best, Some((naive_a, model_a))),
+        row_for(sim, "B", &res_b.best, Some((naive_b, model_b))),
+        row_for(sim, "MIN", &SubnetConfig::min(), None),
+    ];
+    let speedup = (naive_a + naive_b) / (model_a + model_b).max(1e-12);
+    Table2Report {
+        rows,
+        search_speedup: speedup,
+    }
+}
+
+pub fn print(report: &Table2Report) {
+    section("Table 2 — on-device OFA model selection and retraining");
+    let max = &report.rows[0];
+    let ratio = |v: f64, m: f64| format!("{:.2}x", m / v);
+    let mut body = Vec::new();
+    for r in &report.rows {
+        let mut cells = vec![
+            r.name.clone(),
+            r.search_time_h
+                .map(|(n, m)| format!("{:.0}h / {:.2}h", n, m.max(0.01)))
+                .unwrap_or_else(|| "-".into()),
+            format!("{:.0} ({})", r.size_mb, ratio(r.size_mb, max.size_mb)),
+            format!("{:.0} ({})", r.gamma_mb, ratio(r.gamma_mb, max.gamma_mb)),
+            format!(
+                "{:.0} ({})",
+                r.gamma_infer_mb,
+                ratio(r.gamma_infer_mb, max.gamma_infer_mb)
+            ),
+            format!("{:.1} ({})", r.phi_ms, ratio(r.phi_ms, max.phi_ms)),
+        ];
+        for (init, ret) in &r.accuracy {
+            cells.push(format!("{init:.1} → {ret:.1}"));
+        }
+        body.push(cells);
+    }
+    table(
+        &[
+            "subnet",
+            "search (naive/model)",
+            "size MB",
+            "Γ MB (bs32)",
+            "γ MB (bs1)",
+            "φ ms (bs1)",
+            "city",
+            "off-road",
+            "motorway",
+            "country",
+        ],
+        &body,
+    );
+    println!(
+        "\nsearch speed-up model vs naive profiling: {:.0}x  (paper: ~200x; 11 days → 1.4 h)",
+        report.search_speedup
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::ofa_models;
+
+    #[test]
+    fn table2_orderings_hold() {
+        let sim = Simulator::tx2();
+        let models = ofa_models::run(&sim, 24, 9);
+        let cfg = EsConfig {
+            population: 16,
+            iterations: 8,
+            ..Default::default()
+        };
+        let r = run(&sim, &models, &cfg);
+        let by = |n: &str| r.rows.iter().find(|x| x.name == n).unwrap();
+        let (max, a, b, min) = (by("MAX"), by("A"), by("B"), by("MIN"));
+        // Size/attribute ordering MAX ≥ A ≥ B ≥ MIN (allowing small slack
+        // from search stochasticity on attributes).
+        assert!(max.size_mb > min.size_mb * 3.0);
+        assert!(a.gamma_mb <= max.gamma_mb);
+        assert!(b.phi_ms <= a.phi_ms * 1.15);
+        assert!(min.gamma_mb <= b.gamma_mb * 1.05);
+        // Initial accuracy: MAX beats MIN on every subset.
+        for (i, _) in ALL_SUBSETS.iter().enumerate() {
+            assert!(max.accuracy[i].0 > min.accuracy[i].0);
+            // retraining never hurts much and often helps
+            assert!(min.accuracy[i].1 > min.accuracy[i].0);
+        }
+        // Retrained A beats un-retrained MAX in most subsets (paper's
+        // central claim).
+        let wins = (0..4).filter(|&i| a.accuracy[i].1 > max.accuracy[i].0).count();
+        assert!(wins >= 3, "A retrained beats MAX initial in only {wins}/4");
+        // Search with models is dramatically faster than naive profiling.
+        assert!(r.search_speedup > 50.0, "speedup {:.0}x", r.search_speedup);
+    }
+}

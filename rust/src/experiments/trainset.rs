@@ -1,0 +1,120 @@
+//! E2 / Sec. 6.1 — tuning the training-set size on AlexNet.
+//!
+//! Train-set pruning-level sets of size 1..8; test on all remaining
+//! levels. Paper: error starts at 33–74% for T={0} and plateaus at 3–6%
+//! from T={0,30,50,70,90} onward.
+
+use crate::device::Simulator;
+use crate::profiler::{all_levels, profile, ProfileJob, PAPER_BATCH_SIZES};
+use crate::util::bench_harness::{section, table};
+
+use super::fit_gamma_phi;
+
+/// The nested training-set sequence (paper's T grows to
+/// {0,10,20,30,50,60,70,90}; the 5-level point is the paper's chosen set).
+pub fn train_set_sequence() -> Vec<Vec<f64>> {
+    vec![
+        vec![0.0],
+        vec![0.0, 0.90],
+        vec![0.0, 0.50, 0.90],
+        vec![0.0, 0.30, 0.50, 0.90],
+        vec![0.0, 0.30, 0.50, 0.70, 0.90],
+        vec![0.0, 0.10, 0.30, 0.50, 0.70, 0.90],
+        vec![0.0, 0.10, 0.20, 0.30, 0.50, 0.70, 0.90],
+        vec![0.0, 0.10, 0.20, 0.30, 0.50, 0.60, 0.70, 0.90],
+    ]
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainsetReport {
+    /// (|T|, Γ err %, Φ err %) per sequence step.
+    pub points: Vec<(usize, f64, f64)>,
+}
+
+pub fn run(sim: &Simulator, seed: u64) -> TrainsetReport {
+    let graph = crate::models::alexnet(1000);
+    let mut points = Vec::new();
+    for t_levels in train_set_sequence() {
+        let train = profile(
+            sim,
+            &ProfileJob {
+                levels: &t_levels,
+                seed,
+                ..ProfileJob::new("alexnet", &graph)
+            },
+        );
+        let test_levels: Vec<f64> = all_levels()
+            .into_iter()
+            .filter(|l| !t_levels.iter().any(|t| (t - l).abs() < 1e-9))
+            .collect();
+        let test = profile(
+            sim,
+            &ProfileJob {
+                levels: &test_levels,
+                batch_sizes: &PAPER_BATCH_SIZES,
+                seed: seed ^ 0xabcd,
+                ..ProfileJob::new("alexnet", &graph)
+            },
+        );
+        let (fg, fp) = fit_gamma_phi(&train);
+        points.push((
+            t_levels.len(),
+            fg.mape(&test.x(), &test.y_gamma()),
+            fp.mape(&test.x(), &test.y_phi()),
+        ));
+    }
+    TrainsetReport { points }
+}
+
+pub fn print(report: &TrainsetReport) {
+    section("Sec. 6.1 — AlexNet training-set size sweep");
+    table(
+        &["|T|", "Γ err %", "Φ err %"],
+        &report
+            .points
+            .iter()
+            .map(|(n, g, p)| vec![n.to_string(), format!("{g:.2}"), format!("{p:.2}")])
+            .collect::<Vec<_>>(),
+    );
+    println!("\npaper: errors shrink with |T| and plateau at |T|=5 = {{0,30,50,70,90}}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_shrinks_then_plateaus() {
+        let sim = Simulator::tx2();
+        // Check endpoints only (full sweep runs in the bench).
+        let graph = crate::models::alexnet(1000);
+        let seq = train_set_sequence();
+        let mut errs = Vec::new();
+        for t_levels in [&seq[0], &seq[4]] {
+            let train = profile(
+                &sim,
+                &ProfileJob {
+                    levels: t_levels,
+                    seed: 5,
+                    ..ProfileJob::new("alexnet", &graph)
+                },
+            );
+            let test = profile(
+                &sim,
+                &ProfileJob {
+                    levels: &[0.25, 0.45, 0.65],
+                    seed: 6,
+                    ..ProfileJob::new("alexnet", &graph)
+                },
+            );
+            let (fg, _) = fit_gamma_phi(&train);
+            errs.push(fg.mape(&test.x(), &test.y_gamma()));
+        }
+        assert!(
+            errs[0] > 1.4 * errs[1],
+            "no improvement from |T|=1 ({:.2}%) to |T|=5 ({:.2}%)",
+            errs[0],
+            errs[1]
+        );
+    }
+}

@@ -1,0 +1,469 @@
+//! Analytical feature model — the paper's Sec. 5.2.1 / Appendix B.
+//!
+//! For every convolution layer `l` (with `n_l` filters of `m_l/g_l × k_l ×
+//! k_l`, stride `s_l`, padding `p_l`, input spatial `ip_l`, output spatial
+//! `op_l`) and a training batch size `bs`, we compute the expected memory
+//! allocations and operation counts of all three cuDNN convolution
+//! algorithms (matrix-multiplication, FFT, Winograd) for each of the three
+//! training convolutions: Eq.1 (forward), Eq.2 (∂L/∂x) and Eq.3 (∂L/∂w).
+//!
+//! Features are computed per layer and *summed across layers* (Sec. 5.3) to
+//! give a network-level vector. The Winograd block is instantiated for the
+//! two tile configurations cuDNN uses most, (q,r) = (4,3) and (3,2)
+//! (App. B.2.4), so the nominal 42-feature list expands to 56 columns; the
+//! batch size itself is prepended as column 0 for a total of 57.
+
+use crate::ir::{ConvInfo, Graph, GraphError};
+
+/// Feature families — used by the ablation experiment (E9) to knock out
+/// whole algorithm groups.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    /// Batch size column.
+    Meta,
+    /// Op-independent tensor allocations (App. B.2.1).
+    Tensor,
+    /// Matrix-multiplication algorithm (App. B.2.2).
+    MatMul,
+    /// FFT algorithm (App. B.2.3).
+    Fft,
+    /// Winograd algorithm (App. B.2.4).
+    Winograd,
+}
+
+/// Number of per-layer feature columns (bs column included).
+pub const NUM_FEATURES: usize = 1 + 5 + 10 + 13 + 2 * 14;
+
+/// Winograd tile configurations (q, r) modelled, per App. B.2.4.
+pub const WINOGRAD_TILES: [(usize, usize); 2] = [(4, 3), (3, 2)];
+
+/// Stable column names (for dataset dumps and model inspection).
+pub fn feature_names() -> Vec<String> {
+    let mut names = vec!["bs".to_string()];
+    for f in [
+        "mem_w",
+        "mem_w_grad",
+        "mem_ifm_grad",
+        "mem_ofm_grad",
+        "mem_tensors_sum",
+    ] {
+        names.push(f.into());
+    }
+    for f in [
+        "mm_i2c_fwd_total",
+        "mm_i2c_bwdw_total",
+        "mm_i2c_fwd_index",
+        "mm_i2c_bwdx_total",
+        "mm_i2c_bwdx_index",
+        "mm_mem_total_sum",
+        "mm_mem_index_sum",
+        "mm_ops_fwd",
+        "mm_ops_bwdx",
+        "mm_ops_sum",
+    ] {
+        names.push(f.into());
+    }
+    for f in [
+        "fft_mem_w_fwd",
+        "fft_mem_ifm_fwd",
+        "fft_mem_ofm_bwdw",
+        "fft_mem_w_bwdx",
+        "fft_mem_ofm_bwdx",
+        "fft_mem_fwd_sum",
+        "fft_mem_ofm_sum",
+        "fft_mem_bwdw_sum",
+        "fft_mem_total_sum",
+        "fft_ops_fwd",
+        "fft_ops_bwdx",
+        "fft_ops_bwdw",
+        "fft_ops_sum",
+    ] {
+        names.push(f.into());
+    }
+    for (q, r) in WINOGRAD_TILES {
+        for f in [
+            "wino_mem_fwd",
+            "wino_mem_bwdx",
+            "wino_mem_bwdw",
+            "wino_mem_fwd_bwdx",
+            "wino_mem_fwd_bwdw",
+            "wino_mem_bwdw_bwdx",
+            "wino_mem_total_sum",
+            "wino_ops_fwd",
+            "wino_ops_bwdx",
+            "wino_ops_bwdw",
+            "wino_ops_fwd_bwdx",
+            "wino_ops_fwd_bwdw",
+            "wino_ops_bwdx_bwdw",
+            "wino_ops_total_sum",
+        ] {
+            names.push(format!("{f}_q{q}r{r}"));
+        }
+    }
+    debug_assert_eq!(names.len(), NUM_FEATURES);
+    names
+}
+
+/// Family of each feature column (parallel to [`feature_names`]).
+pub fn feature_families() -> Vec<Family> {
+    let mut fams = vec![Family::Meta];
+    fams.extend(std::iter::repeat(Family::Tensor).take(5));
+    fams.extend(std::iter::repeat(Family::MatMul).take(10));
+    fams.extend(std::iter::repeat(Family::Fft).take(13));
+    fams.extend(std::iter::repeat(Family::Winograd).take(28));
+    debug_assert_eq!(fams.len(), NUM_FEATURES);
+    fams
+}
+
+#[inline]
+fn ceil_div(a: usize, b: usize) -> f64 {
+    ((a + b - 1) / b) as f64
+}
+
+/// Per-layer feature vector for one convolution at batch size `bs`.
+///
+/// All formulas are verbatim from App. B.2.1–B.2.4 (see the numbered list
+/// in the paper); `log` is the natural logarithm.
+pub fn layer_features(c: &ConvInfo, bs: usize) -> Vec<f64> {
+    layer_features_arr(c, bs).to_vec()
+}
+
+/// Allocation-free accumulation variant used by [`network_features`] —
+/// the OFA search calls this for every conv of every candidate (§Perf:
+/// the per-layer values live in a stack array, no heap traffic).
+pub fn accumulate_layer_features(c: &ConvInfo, bs: usize, acc: &mut [f64]) {
+    let lf = layer_features_arr(c, bs);
+    for (a, v) in acc.iter_mut().zip(lf) {
+        *a += v;
+    }
+}
+
+fn layer_features_arr(c: &ConvInfo, bs: usize) -> [f64; NUM_FEATURES] {
+    let bs = bs as f64;
+    let n = c.n as f64;
+    let m = c.m as f64;
+    let k = c.k as f64;
+    let g = c.g as f64;
+    let ip = c.ip as f64;
+    let op = c.op as f64;
+    let mg = m / g;
+
+    // Stack-allocated writer (no heap traffic on the search hot path).
+    struct W {
+        buf: [f64; NUM_FEATURES],
+        i: usize,
+    }
+    impl W {
+        #[inline]
+        fn push(&mut self, v: f64) {
+            self.buf[self.i] = v;
+            self.i += 1;
+        }
+    }
+    let mut f = W {
+        buf: [0.0; NUM_FEATURES],
+        i: 0,
+    };
+    // Column 0: batch size (meta).
+    f.push(bs);
+
+    // ---- B.2.1 tensor allocations (features 1-5) ----
+    let mem_w = n * mg * k * k;
+    let mem_w_grad = bs * n * mg * k * k;
+    let mem_ifm_grad = bs * m * ip * ip;
+    let mem_ofm_grad = bs * n * op * op;
+    f.push(mem_w);
+    f.push(mem_w_grad);
+    f.push(mem_ifm_grad);
+    f.push(mem_ofm_grad);
+    f.push(mem_w + mem_w_grad + mem_ifm_grad + mem_ofm_grad);
+
+    // ---- B.2.2 matrix multiplication (features 6-15) ----
+    let i2c_fwd_total = bs * op * op * k * k * m;
+    let i2c_bwdw_total = bs * op * op * k * k * mg;
+    let i2c_fwd_index = bs * op * op;
+    let i2c_bwdx_total = bs * ip * ip * k * k * m;
+    let i2c_bwdx_index = bs * ip * ip;
+    let ops_fwd_mm = bs * n * op * op * k * k * mg;
+    let ops_bwdx_mm = bs * m * ip * ip * k * k * n;
+    f.push(i2c_fwd_total);
+    f.push(i2c_bwdw_total);
+    f.push(i2c_fwd_index);
+    f.push(i2c_bwdx_total);
+    f.push(i2c_bwdx_index);
+    f.push(i2c_fwd_total + i2c_bwdw_total + i2c_bwdx_total);
+    f.push(2.0 * i2c_fwd_index + i2c_bwdx_index);
+    f.push(ops_fwd_mm);
+    f.push(ops_bwdx_mm);
+    f.push(2.0 * ops_fwd_mm + ops_bwdx_mm);
+
+    // ---- B.2.3 FFT (features 16-28) ----
+    let fft_w_fwd = n * mg * ip * (1.0 + ip);
+    let fft_ifm_fwd = bs * m * ip * (1.0 + ip);
+    let fft_ofm_bwdw = bs * n * ip * (1.0 + ip);
+    let fft_w_bwdx = n * mg * op * (1.0 + op);
+    let fft_ofm_bwdx = bs * n * op * (1.0 + op);
+    let s21 = fft_w_fwd + fft_ifm_fwd;
+    let s22 = fft_ofm_bwdx + fft_ofm_bwdw;
+    let s23 = fft_ofm_bwdw + fft_ifm_fwd;
+    let common = bs * (m + n) + n * mg;
+    let fft_ops_fwd = ip * ip * ip.max(1.0).ln() * common + bs * n * m * ip * ip;
+    let fft_ops_bwdx = op * op * op.max(1.0).ln() * common + bs * n * m * op * op;
+    let fft_ops_bwdw = ip * (ip * ip).max(1.0).ln() * common + bs * n * m * ip * ip;
+    f.push(fft_w_fwd);
+    f.push(fft_ifm_fwd);
+    f.push(fft_ofm_bwdw);
+    f.push(fft_w_bwdx);
+    f.push(fft_ofm_bwdx);
+    f.push(s21);
+    f.push(s22);
+    f.push(s23);
+    f.push(s21 + s22 + s23);
+    f.push(fft_ops_fwd);
+    f.push(fft_ops_bwdx);
+    f.push(fft_ops_bwdw);
+    f.push(fft_ops_fwd + fft_ops_bwdx + fft_ops_bwdw);
+
+    // ---- B.2.4 Winograd, for (q,r) in {(4,3), (3,2)} (features 29-42 ×2) ----
+    for (q, r) in WINOGRAD_TILES {
+        let qf = q as f64;
+        let rf = r as f64;
+        let tile = (qf + rf - 1.0) * (qf + rf - 1.0);
+        let tiles_ip = ceil_div(c.ip, q) * ceil_div(c.ip, q);
+        let tiles_op = ceil_div(c.op, q) * ceil_div(c.op, q);
+        let tiles_k = ceil_div(c.k, r) * ceil_div(c.k, r);
+        let tiles_op_r = ceil_div(c.op, r) * ceil_div(c.op, r);
+
+        let mem_fwd = bs * n * tiles_ip * 3.0 * tile;
+        let mem_bwdx = bs * m * tiles_op * 3.0 * tile;
+        let mem_bwdw = bs * n * mg * tiles_ip * 3.0 * tile;
+        let ops_fwd = bs * n * mg * tiles_ip * tiles_k * tile;
+        let ops_bwdx = bs * m * n * tiles_op * tiles_k * tile;
+        let ops_bwdw = bs * n * mg * mg * tiles_ip * tiles_op_r * tile;
+
+        let m32 = mem_fwd + mem_bwdx;
+        let m33 = mem_fwd + mem_bwdw;
+        let m34 = mem_bwdw + mem_bwdx;
+        let o39 = ops_fwd + ops_bwdx;
+        let o40 = ops_fwd + ops_bwdw;
+        let o41 = ops_bwdx + ops_bwdw;
+        f.push(mem_fwd);
+        f.push(mem_bwdx);
+        f.push(mem_bwdw);
+        f.push(m32);
+        f.push(m33);
+        f.push(m34);
+        f.push(m32 + m33 + m34);
+        f.push(ops_fwd);
+        f.push(ops_bwdx);
+        f.push(ops_bwdw);
+        f.push(o39);
+        f.push(o40);
+        f.push(o41);
+        f.push(o39 + o40 + o41);
+    }
+
+    debug_assert_eq!(f.i, NUM_FEATURES);
+    f.buf
+}
+
+/// Network-level feature vector: per-layer features summed across all conv
+/// layers (Sec. 5.3); the bs column is not summed.
+pub fn network_features(graph: &Graph, bs: usize) -> Result<Vec<f64>, GraphError> {
+    Ok(network_features_from_convs(&graph.conv_infos()?, bs))
+}
+
+/// As [`network_features`] but from pre-extracted conv summaries — lets
+/// callers that need features at several batch sizes (the OFA search needs
+/// bs=32 for Γ and bs=1 for γ/φ) run shape inference once (§Perf).
+pub fn network_features_from_convs(convs: &[ConvInfo], bs: usize) -> Vec<f64> {
+    let mut total = vec![0.0f64; NUM_FEATURES];
+    for c in convs {
+        accumulate_layer_features(c, bs, &mut total);
+    }
+    total[0] = bs as f64; // bs is a scalar input, not a sum
+    total
+}
+
+/// Inference-stage features: forward-pass terms only (Sec. 6.4 trains the
+/// γ/φ models "using only the features corresponding to the forward pass").
+/// Returns (names, values) restricted to fwd columns.
+pub fn forward_only_mask() -> Vec<bool> {
+    feature_names()
+        .iter()
+        .map(|n| {
+            n == "bs"
+                || n == "mem_w"
+                || n.contains("fwd") && !n.contains("bwd")
+                || n == "mm_ops_fwd"
+        })
+        .collect()
+}
+
+/// Apply a column mask to a feature vector.
+pub fn mask_features(features: &[f64], mask: &[bool]) -> Vec<f64> {
+    features
+        .iter()
+        .zip(mask)
+        .filter_map(|(&f, &keep)| if keep { Some(f) } else { None })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ConvInfo;
+
+    fn sample_conv() -> ConvInfo {
+        ConvInfo {
+            node: 0,
+            n: 8,
+            m: 4,
+            k: 3,
+            s: 1,
+            p: 1,
+            g: 1,
+            ip: 16,
+            op: 16,
+        }
+    }
+
+    #[test]
+    fn names_and_families_align() {
+        assert_eq!(feature_names().len(), NUM_FEATURES);
+        assert_eq!(feature_families().len(), NUM_FEATURES);
+        assert_eq!(NUM_FEATURES, 57);
+    }
+
+    #[test]
+    fn tensor_features_hand_computed() {
+        let c = sample_conv();
+        let f = layer_features(&c, 2);
+        let names = feature_names();
+        let get = |name: &str| f[names.iter().position(|n| n == name).unwrap()];
+        assert_eq!(get("bs"), 2.0);
+        assert_eq!(get("mem_w"), 8.0 * 4.0 * 9.0);
+        assert_eq!(get("mem_w_grad"), 2.0 * 8.0 * 4.0 * 9.0);
+        assert_eq!(get("mem_ifm_grad"), 2.0 * 4.0 * 256.0);
+        assert_eq!(get("mem_ofm_grad"), 2.0 * 8.0 * 256.0);
+        assert_eq!(
+            get("mem_tensors_sum"),
+            get("mem_w") + get("mem_w_grad") + get("mem_ifm_grad") + get("mem_ofm_grad")
+        );
+    }
+
+    #[test]
+    fn mm_features_hand_computed() {
+        let c = sample_conv();
+        let f = layer_features(&c, 2);
+        let names = feature_names();
+        let get = |name: &str| f[names.iter().position(|n| n == name).unwrap()];
+        // bs*op^2*k^2*m = 2*256*9*4
+        assert_eq!(get("mm_i2c_fwd_total"), 2.0 * 256.0 * 9.0 * 4.0);
+        assert_eq!(get("mm_i2c_fwd_index"), 2.0 * 256.0);
+        // ops_fwd = bs*n*op^2*k^2*(m/g) = 2*8*256*9*4
+        assert_eq!(get("mm_ops_fwd"), 2.0 * 8.0 * 256.0 * 9.0 * 4.0);
+        assert_eq!(
+            get("mm_ops_sum"),
+            2.0 * get("mm_ops_fwd") + get("mm_ops_bwdx")
+        );
+    }
+
+    #[test]
+    fn winograd_tile_counts() {
+        let c = sample_conv();
+        let f = layer_features(&c, 1);
+        let names = feature_names();
+        let get = |name: &str| f[names.iter().position(|n| n == name).unwrap()];
+        // q=4,r=3: ceil(16/4)^2 = 16 tiles, (q+r-1)^2 = 36
+        // mem_fwd = bs*n*16*3*36 = 1*8*16*108
+        assert_eq!(get("wino_mem_fwd_q4r3"), 8.0 * 16.0 * 3.0 * 36.0);
+        // q=3,r=2: ceil(16/3)^2 = 36 tiles, tile = 16
+        assert_eq!(get("wino_mem_fwd_q3r2"), 8.0 * 36.0 * 3.0 * 16.0);
+    }
+
+    #[test]
+    fn bs_linearity_of_bs_dependent_features() {
+        let c = sample_conv();
+        let f1 = layer_features(&c, 1);
+        let f4 = layer_features(&c, 4);
+        let names = feature_names();
+        for (i, name) in names.iter().enumerate() {
+            // weight memories and FFT weight terms are bs-independent
+            if name == "mem_w" || name.starts_with("fft_mem_w") {
+                assert_eq!(f1[i], f4[i], "{name} should not scale with bs");
+            }
+        }
+        // strictly bs-linear examples
+        let get = |f: &[f64], name: &str| f[names.iter().position(|n| n == name).unwrap()];
+        assert_eq!(get(&f4, "mem_ifm_grad"), 4.0 * get(&f1, "mem_ifm_grad"));
+        assert_eq!(get(&f4, "mm_ops_fwd"), 4.0 * get(&f1, "mm_ops_fwd"));
+        assert_eq!(
+            get(&f4, "wino_ops_fwd_q4r3"),
+            4.0 * get(&f1, "wino_ops_fwd_q4r3")
+        );
+    }
+
+    #[test]
+    fn network_features_are_layer_sums() {
+        let g = crate::models::resnet18(1000);
+        let nf = network_features(&g, 8).unwrap();
+        let convs = g.conv_infos().unwrap();
+        let manual: f64 = convs.iter().map(|c| layer_features(c, 8)[1]).sum();
+        assert_eq!(nf[1], manual);
+        assert_eq!(nf[0], 8.0);
+        assert!(nf.iter().all(|x| x.is_finite() && *x >= 0.0));
+    }
+
+    #[test]
+    fn pruning_reduces_feature_magnitudes() {
+        use crate::pruning::{prune, Strategy};
+        use crate::util::rng::Pcg64;
+        let g = crate::models::mobilenet_v2(1000);
+        let mut rng = Pcg64::new(3);
+        let p = prune(&g, Strategy::Random, 0.5, &mut rng);
+        let f0 = network_features(&g, 32).unwrap();
+        let f1 = network_features(&p, 32).unwrap();
+        // ops features must strictly shrink
+        let names = feature_names();
+        let idx = names.iter().position(|n| n == "mm_ops_sum").unwrap();
+        assert!(f1[idx] < f0[idx]);
+    }
+
+    #[test]
+    fn forward_mask_selects_fwd_columns() {
+        let mask = forward_only_mask();
+        let names = feature_names();
+        assert!(mask[0]); // bs
+        for (name, &keep) in names.iter().zip(&mask) {
+            if name.contains("bwd") {
+                assert!(!keep, "{name} wrongly kept");
+            }
+        }
+        let kept = mask.iter().filter(|&&b| b).count();
+        assert!(kept >= 8, "too few forward features: {kept}");
+        let f = vec![1.0; NUM_FEATURES];
+        assert_eq!(mask_features(&f, &mask).len(), kept);
+    }
+
+    #[test]
+    fn depthwise_group_division() {
+        let c = ConvInfo {
+            node: 0,
+            n: 32,
+            m: 32,
+            k: 3,
+            s: 1,
+            p: 1,
+            g: 32,
+            ip: 14,
+            op: 14,
+        };
+        let f = layer_features(&c, 1);
+        let names = feature_names();
+        let get = |name: &str| f[names.iter().position(|n| n == name).unwrap()];
+        // m/g = 1
+        assert_eq!(get("mem_w"), 32.0 * 1.0 * 9.0);
+        assert_eq!(get("mm_ops_fwd"), 32.0 * 196.0 * 9.0);
+    }
+}

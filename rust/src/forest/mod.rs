@@ -1,0 +1,500 @@
+//! Random-forest regression (Breiman 2001), from scratch — the paper's
+//! model class for both Γ and Φ ("random forests are employed to model both
+//! the memory and latency of training", Sec. 5.2). Includes bootstrap
+//! bagging, per-split feature subsampling, JSON persistence, and export to
+//! the padded tensor layout consumed by the L1 Pallas inference kernel.
+
+pub mod tree;
+
+pub use tree::{Tree, TreeConfig, TreeNode};
+
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use crate::util::stats;
+
+/// Forest hyperparameters. Defaults follow the classic regression-forest
+/// recipe (100 trees, n/3 features per split, bootstrap on).
+#[derive(Clone, Debug)]
+pub struct ForestConfig {
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub min_samples_leaf: usize,
+    pub min_samples_split: usize,
+    /// Fraction of features considered per split (1.0 ⇒ all).
+    pub feature_fraction: f64,
+    pub bootstrap: bool,
+    pub seed: u64,
+}
+
+impl Default for ForestConfig {
+    fn default() -> Self {
+        ForestConfig {
+            n_trees: 100,
+            max_depth: 12,
+            min_samples_leaf: 1,
+            min_samples_split: 2,
+            feature_fraction: 1.0 / 3.0,
+            bootstrap: true,
+            seed: 0xf0e57,
+        }
+    }
+}
+
+/// A fitted random forest.
+#[derive(Clone, Debug)]
+pub struct Forest {
+    pub trees: Vec<Tree>,
+    pub n_features: usize,
+    pub config: ForestConfig,
+}
+
+impl Forest {
+    /// Fit on row-major `x` (n × d) against `y` (n).
+    pub fn fit(x: &[Vec<f64>], y: &[f64], config: &ForestConfig) -> Forest {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty(), "empty training set");
+        let d = x[0].len();
+        let n = x.len();
+        let max_features = ((d as f64 * config.feature_fraction).ceil() as usize).clamp(1, d);
+        let tree_cfg = TreeConfig {
+            max_depth: config.max_depth,
+            min_samples_leaf: config.min_samples_leaf,
+            min_samples_split: config.min_samples_split,
+            max_features: Some(max_features),
+        };
+        let mut rng = Pcg64::new(config.seed);
+        let trees: Vec<Tree> = (0..config.n_trees)
+            .map(|_| {
+                let mut tree_rng = rng.fork();
+                let indices: Vec<usize> = if config.bootstrap {
+                    (0..n).map(|_| tree_rng.gen_range(n)).collect()
+                } else {
+                    (0..n).collect()
+                };
+                Tree::fit(x, y, &indices, &tree_cfg, &mut tree_rng)
+            })
+            .collect();
+        Forest {
+            trees,
+            n_features: d,
+            config: config.clone(),
+        }
+    }
+
+    /// Predict one row (mean over trees).
+    pub fn predict(&self, row: &[f64]) -> f64 {
+        debug_assert_eq!(row.len(), self.n_features);
+        let sum: f64 = self.trees.iter().map(|t| t.predict(row)).sum();
+        sum / self.trees.len() as f64
+    }
+
+    /// Predict many rows.
+    pub fn predict_batch(&self, rows: &[Vec<f64>]) -> Vec<f64> {
+        rows.iter().map(|r| self.predict(r)).collect()
+    }
+
+    /// Mean absolute percentage error on a labelled set (the paper's
+    /// error metric).
+    pub fn mape(&self, x: &[Vec<f64>], y: &[f64]) -> f64 {
+        stats::mape(&self.predict_batch(x), y)
+    }
+
+    /// Split-frequency feature importance (how often each feature is used
+    /// as a split, weighted by node sample share ≈ 1/2^depth proxy: we use
+    /// plain counts which is sufficient for reporting).
+    pub fn feature_importance(&self) -> Vec<f64> {
+        let mut counts = vec![0.0f64; self.n_features];
+        for t in &self.trees {
+            for n in &t.nodes {
+                if !n.is_leaf() {
+                    counts[n.feature as usize] += 1.0;
+                }
+            }
+        }
+        let total: f64 = counts.iter().sum::<f64>().max(1.0);
+        counts.iter_mut().for_each(|c| *c /= total);
+        counts
+    }
+
+    // ---------- persistence ----------
+
+    pub fn to_json(&self) -> Json {
+        let trees: Vec<Json> = self
+            .trees
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    (
+                        "feature",
+                        Json::arr_usize(
+                            &t.nodes
+                                .iter()
+                                .map(|n| {
+                                    if n.is_leaf() {
+                                        usize::MAX >> 1 // sentinel that survives f64
+                                    } else {
+                                        n.feature as usize
+                                    }
+                                })
+                                .collect::<Vec<_>>(),
+                        ),
+                    ),
+                    (
+                        "threshold",
+                        Json::arr_f64(
+                            &t.nodes
+                                .iter()
+                                .map(|n| if n.is_leaf() { 1e300 } else { n.threshold })
+                                .collect::<Vec<_>>(),
+                        ),
+                    ),
+                    (
+                        "left",
+                        Json::arr_usize(
+                            &t.nodes.iter().map(|n| n.left as usize).collect::<Vec<_>>(),
+                        ),
+                    ),
+                    (
+                        "right",
+                        Json::arr_usize(
+                            &t.nodes.iter().map(|n| n.right as usize).collect::<Vec<_>>(),
+                        ),
+                    ),
+                    (
+                        "value",
+                        Json::arr_f64(
+                            &t.nodes.iter().map(|n| n.value).collect::<Vec<_>>(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("n_features", Json::Num(self.n_features as f64)),
+            ("n_trees", Json::Num(self.trees.len() as f64)),
+            ("trees", Json::Arr(trees)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Forest, String> {
+        let n_features = j
+            .get("n_features")
+            .and_then(Json::as_usize)
+            .ok_or("missing n_features")?;
+        let trees_j = j.get("trees").and_then(Json::as_arr).ok_or("missing trees")?;
+        let leaf_sentinel = (usize::MAX >> 1) as f64;
+        let mut trees = Vec::new();
+        for tj in trees_j {
+            let feats = tj.get("feature").and_then(Json::f64_vec).ok_or("feature")?;
+            let thr = tj.get("threshold").and_then(Json::f64_vec).ok_or("threshold")?;
+            let left = tj.get("left").and_then(Json::f64_vec).ok_or("left")?;
+            let right = tj.get("right").and_then(Json::f64_vec).ok_or("right")?;
+            let value = tj.get("value").and_then(Json::f64_vec).ok_or("value")?;
+            let n = feats.len();
+            if [thr.len(), left.len(), right.len(), value.len()] != [n, n, n, n] {
+                return Err("ragged tree arrays".into());
+            }
+            let nodes: Vec<TreeNode> = (0..n)
+                .map(|i| {
+                    let is_leaf = feats[i] >= leaf_sentinel;
+                    TreeNode {
+                        feature: if is_leaf { u32::MAX } else { feats[i] as u32 },
+                        threshold: if is_leaf { f64::INFINITY } else { thr[i] },
+                        left: left[i] as u32,
+                        right: right[i] as u32,
+                        value: value[i],
+                    }
+                })
+                .collect();
+            trees.push(Tree { nodes });
+        }
+        Ok(Forest {
+            trees,
+            n_features,
+            config: ForestConfig::default(),
+        })
+    }
+
+    // ---------- tensor export for the Pallas / XLA inference kernel ----------
+
+    /// Export as fixed-shape arrays: every tree padded to the same node
+    /// count, leaves self-looping, thresholds +inf at leaves so iterative
+    /// `idx = x[feat] <= thr ? left : right` traversal is stable at any
+    /// fixed depth ≥ max tree depth. Layout matches
+    /// `python/compile/kernels/forest.py`.
+    pub fn to_tensors(&self) -> ForestTensors {
+        let max_nodes = self.trees.iter().map(|t| t.nodes.len()).max().unwrap_or(1);
+        let nt = self.trees.len();
+        let mut feature = vec![0i32; nt * max_nodes];
+        let mut threshold = vec![f32::INFINITY; nt * max_nodes];
+        let mut left = vec![0i32; nt * max_nodes];
+        let mut right = vec![0i32; nt * max_nodes];
+        let mut value = vec![0f32; nt * max_nodes];
+        for (ti, t) in self.trees.iter().enumerate() {
+            for (ni, n) in t.nodes.iter().enumerate() {
+                let i = ti * max_nodes + ni;
+                if n.is_leaf() {
+                    feature[i] = 0;
+                    threshold[i] = f32::INFINITY;
+                    left[i] = ni as i32;
+                    right[i] = ni as i32;
+                } else {
+                    feature[i] = n.feature as i32;
+                    threshold[i] = n.threshold as f32;
+                    left[i] = n.left as i32;
+                    right[i] = n.right as i32;
+                }
+                value[i] = n.value as f32;
+            }
+            // Padding nodes: self-looping zero-value leaves (never reached).
+            for ni in t.nodes.len()..max_nodes {
+                let i = ti * max_nodes + ni;
+                left[i] = ni as i32;
+                right[i] = ni as i32;
+            }
+        }
+        let depth = self.trees.iter().map(|t| t.depth()).max().unwrap_or(1);
+        ForestTensors {
+            n_trees: nt,
+            n_nodes: max_nodes,
+            depth,
+            feature,
+            threshold,
+            left,
+            right,
+            value,
+        }
+    }
+}
+
+/// Fixed-shape forest arrays for XLA execution (row-major `[tree, node]`).
+#[derive(Clone, Debug)]
+pub struct ForestTensors {
+    pub n_trees: usize,
+    pub n_nodes: usize,
+    /// Maximum tree depth (number of traversal iterations needed).
+    pub depth: usize,
+    pub feature: Vec<i32>,
+    pub threshold: Vec<f32>,
+    pub left: Vec<i32>,
+    pub right: Vec<i32>,
+    pub value: Vec<f32>,
+}
+
+impl ForestTensors {
+    /// Reference traversal over the padded arrays (must match both the
+    /// Rust `Forest::predict` and the Pallas kernel numerics).
+    pub fn predict(&self, row: &[f64], iterations: usize) -> f64 {
+        let mut acc = 0.0f64;
+        for t in 0..self.n_trees {
+            let base = t * self.n_nodes;
+            let mut idx = 0usize;
+            for _ in 0..iterations {
+                let f = self.feature[base + idx] as usize;
+                let go_left = (row[f] as f32) <= self.threshold[base + idx];
+                idx = if go_left {
+                    self.left[base + idx] as usize
+                } else {
+                    self.right[base + idx] as usize
+                };
+            }
+            acc += self.value[base + idx] as f64;
+        }
+        acc / self.n_trees as f64
+    }
+
+    /// Pad the node dimension up to `nodes` (for fixed-shape artifacts).
+    pub fn pad_nodes_to(&mut self, nodes: usize) {
+        assert!(nodes >= self.n_nodes);
+        if nodes == self.n_nodes {
+            return;
+        }
+        let nt = self.n_trees;
+        let old = self.n_nodes;
+        let mut feature = vec![0i32; nt * nodes];
+        let mut threshold = vec![f32::INFINITY; nt * nodes];
+        let mut left = vec![0i32; nt * nodes];
+        let mut right = vec![0i32; nt * nodes];
+        let mut value = vec![0f32; nt * nodes];
+        for t in 0..nt {
+            for n in 0..old {
+                feature[t * nodes + n] = self.feature[t * old + n];
+                threshold[t * nodes + n] = self.threshold[t * old + n];
+                left[t * nodes + n] = self.left[t * old + n];
+                right[t * nodes + n] = self.right[t * old + n];
+                value[t * nodes + n] = self.value[t * old + n];
+            }
+            for n in old..nodes {
+                left[t * nodes + n] = n as i32;
+                right[t * nodes + n] = n as i32;
+            }
+        }
+        self.feature = feature;
+        self.threshold = threshold;
+        self.left = left;
+        self.right = right;
+        self.value = value;
+        self.n_nodes = nodes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        // y = 2*x0 + 10*step(x1>0.5) + x2*x0 + noise
+        let mut rng = Pcg64::new(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let a = rng.uniform(0.0, 10.0);
+            let b = rng.next_f64();
+            let c = rng.uniform(0.0, 2.0);
+            x.push(vec![a, b, c]);
+            y.push(2.0 * a + if b > 0.5 { 10.0 } else { 0.0 } + c * a + rng.normal() * 0.1);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn forest_beats_mean_predictor() {
+        let (x, y) = synth(400, 1);
+        let (xt, yt) = synth(100, 2);
+        let cfg = ForestConfig {
+            n_trees: 30,
+            ..Default::default()
+        };
+        let f = Forest::fit(&x, &y, &cfg);
+        let pred = f.predict_batch(&xt);
+        let r2 = stats::r_squared(&pred, &yt);
+        assert!(r2 > 0.95, "r2 = {r2}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x, y) = synth(100, 3);
+        let cfg = ForestConfig {
+            n_trees: 5,
+            seed: 42,
+            ..Default::default()
+        };
+        let f1 = Forest::fit(&x, &y, &cfg);
+        let f2 = Forest::fit(&x, &y, &cfg);
+        assert_eq!(f1.predict(&x[0]), f2.predict(&x[0]));
+    }
+
+    #[test]
+    fn predictions_bounded_by_target_range() {
+        let (x, y) = synth(200, 4);
+        let f = Forest::fit(&x, &y, &ForestConfig::default());
+        let lo = y.iter().cloned().fold(f64::MAX, f64::min);
+        let hi = y.iter().cloned().fold(f64::MIN, f64::max);
+        for row in &x {
+            let p = f.predict(row);
+            assert!(p >= lo - 1e-9 && p <= hi + 1e-9);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_predictions() {
+        let (x, y) = synth(150, 5);
+        let cfg = ForestConfig {
+            n_trees: 10,
+            ..Default::default()
+        };
+        let f = Forest::fit(&x, &y, &cfg);
+        let j = f.to_json().to_string();
+        let f2 = Forest::from_json(&Json::parse(&j).unwrap()).unwrap();
+        for row in x.iter().take(20) {
+            assert!((f.predict(row) - f2.predict(row)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn tensor_export_matches_forest() {
+        let (x, y) = synth(150, 6);
+        let cfg = ForestConfig {
+            n_trees: 8,
+            max_depth: 9,
+            ..Default::default()
+        };
+        let f = Forest::fit(&x, &y, &cfg);
+        let t = f.to_tensors();
+        assert!(t.depth <= 10);
+        for row in x.iter().take(30) {
+            let a = f.predict(row);
+            let b = t.predict(row, t.depth);
+            assert!(
+                (a - b).abs() / a.abs().max(1.0) < 1e-5,
+                "forest {a} vs tensors {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn tensor_padding_preserves_predictions() {
+        let (x, y) = synth(120, 7);
+        let f = Forest::fit(
+            &x,
+            &y,
+            &ForestConfig {
+                n_trees: 6,
+                ..Default::default()
+            },
+        );
+        let mut t = f.to_tensors();
+        let before: Vec<f64> = x.iter().take(10).map(|r| t.predict(r, t.depth)).collect();
+        t.pad_nodes_to(t.n_nodes + 37);
+        let after: Vec<f64> = x.iter().take(10).map(|r| t.predict(r, t.depth)).collect();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn extra_iterations_are_stable_at_leaves() {
+        let (x, y) = synth(100, 8);
+        let f = Forest::fit(
+            &x,
+            &y,
+            &ForestConfig {
+                n_trees: 4,
+                ..Default::default()
+            },
+        );
+        let t = f.to_tensors();
+        for row in x.iter().take(10) {
+            assert_eq!(t.predict(row, t.depth), t.predict(row, t.depth + 5));
+        }
+    }
+
+    #[test]
+    fn feature_importance_finds_relevant_features() {
+        let (x, y) = synth(300, 9);
+        let f = Forest::fit(
+            &x,
+            &y,
+            &ForestConfig {
+                n_trees: 20,
+                ..Default::default()
+            },
+        );
+        let imp = f.feature_importance();
+        assert_eq!(imp.len(), 3);
+        // x0 drives most of the variance.
+        assert!(imp[0] > imp[2], "importances: {imp:?}");
+        assert!((imp.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mape_on_train_small() {
+        // Offset targets away from zero — MAPE is undefined near 0 (the
+        // paper's Γ/Φ are always strictly positive and large).
+        let (x, mut y) = synth(300, 10);
+        for v in &mut y {
+            *v += 100.0;
+        }
+        let f = Forest::fit(&x, &y, &ForestConfig::default());
+        let err = f.mape(&x, &y);
+        assert!(err < 3.0, "train MAPE = {err}");
+    }
+}

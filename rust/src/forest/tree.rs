@@ -1,0 +1,316 @@
+//! CART regression trees (Quinlan/Breiman-style), trained by recursive
+//! variance-minimising binary splits — the building block of the paper's
+//! random-forest models (Sec. 5.2: "A decision tree selects terms that best
+//! partition the space into regions of low entropy. Regression predictions
+//! are made by classifying new data points into these regions and
+//! predicting the mean value of that region").
+
+use crate::util::rng::Pcg64;
+
+/// A node in the flattened tree. Leaves have `feature == u32::MAX` and
+/// self-referential children (which makes fixed-depth tensor traversal in
+/// the Pallas kernel a no-op once a leaf is reached).
+#[derive(Clone, Copy, Debug)]
+pub struct TreeNode {
+    pub feature: u32,
+    pub threshold: f64,
+    pub left: u32,
+    pub right: u32,
+    /// Mean target of the training samples in this region.
+    pub value: f64,
+}
+
+impl TreeNode {
+    pub fn is_leaf(&self) -> bool {
+        self.feature == u32::MAX
+    }
+}
+
+/// Hyperparameters for one tree / the whole forest.
+#[derive(Clone, Debug)]
+pub struct TreeConfig {
+    pub max_depth: usize,
+    pub min_samples_leaf: usize,
+    pub min_samples_split: usize,
+    /// Number of candidate features per split (`None` ⇒ all; the forest
+    /// default is n/3, the classic regression-forest setting).
+    pub max_features: Option<usize>,
+}
+
+impl Default for TreeConfig {
+    fn default() -> Self {
+        TreeConfig {
+            max_depth: 12,
+            min_samples_leaf: 1,
+            min_samples_split: 2,
+            max_features: None,
+        }
+    }
+}
+
+/// A fitted regression tree.
+#[derive(Clone, Debug)]
+pub struct Tree {
+    pub nodes: Vec<TreeNode>,
+}
+
+impl Tree {
+    /// Fit a tree on `x[indices]` (row-major `n × d`) against `y[indices]`.
+    pub fn fit(
+        x: &[Vec<f64>],
+        y: &[f64],
+        indices: &[usize],
+        cfg: &TreeConfig,
+        rng: &mut Pcg64,
+    ) -> Tree {
+        assert!(!indices.is_empty(), "cannot fit a tree on zero samples");
+        let d = x[0].len();
+        let mut nodes = Vec::new();
+        let mut idx = indices.to_vec();
+        build(x, y, &mut idx, 0, cfg, d, rng, &mut nodes, 0);
+        Tree { nodes }
+    }
+
+    /// Predict a single row.
+    pub fn predict(&self, row: &[f64]) -> f64 {
+        let mut node = &self.nodes[0];
+        loop {
+            if node.is_leaf() {
+                return node.value;
+            }
+            node = if row[node.feature as usize] <= node.threshold {
+                &self.nodes[node.left as usize]
+            } else {
+                &self.nodes[node.right as usize]
+            };
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        fn d(nodes: &[TreeNode], i: usize) -> usize {
+            let n = &nodes[i];
+            if n.is_leaf() {
+                1
+            } else {
+                1 + d(nodes, n.left as usize).max(d(nodes, n.right as usize))
+            }
+        }
+        d(&self.nodes, 0)
+    }
+
+    pub fn leaf_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_leaf()).count()
+    }
+}
+
+/// Recursively build nodes; returns the index of the created node.
+#[allow(clippy::too_many_arguments)]
+fn build(
+    x: &[Vec<f64>],
+    y: &[f64],
+    indices: &mut [usize],
+    depth: usize,
+    cfg: &TreeConfig,
+    d: usize,
+    rng: &mut Pcg64,
+    nodes: &mut Vec<TreeNode>,
+    _parent: usize,
+) -> u32 {
+    let mean = indices.iter().map(|&i| y[i]).sum::<f64>() / indices.len() as f64;
+    let make_leaf = |nodes: &mut Vec<TreeNode>| -> u32 {
+        let id = nodes.len() as u32;
+        nodes.push(TreeNode {
+            feature: u32::MAX,
+            threshold: f64::INFINITY,
+            left: id,
+            right: id,
+            value: mean,
+        });
+        id
+    };
+
+    if depth >= cfg.max_depth
+        || indices.len() < cfg.min_samples_split
+        || indices.len() < 2 * cfg.min_samples_leaf
+    {
+        return make_leaf(nodes);
+    }
+
+    // Candidate feature subset.
+    let n_candidates = cfg.max_features.unwrap_or(d).clamp(1, d);
+    let candidates: Vec<usize> = if n_candidates == d {
+        (0..d).collect()
+    } else {
+        rng.sample_indices(d, n_candidates)
+    };
+
+    // Find the variance-minimising split across candidates.
+    let mut best: Option<(usize, f64, f64)> = None; // (feature, threshold, score)
+    let mut sorted = indices.to_vec();
+    for &f in &candidates {
+        sorted.sort_by(|&a, &b| x[a][f].partial_cmp(&x[b][f]).unwrap());
+        let total_sum: f64 = sorted.iter().map(|&i| y[i]).sum();
+        let total_sq: f64 = sorted.iter().map(|&i| y[i] * y[i]).sum();
+        let n = sorted.len() as f64;
+        let mut left_sum = 0.0;
+        let mut left_sq = 0.0;
+        for (pos, &i) in sorted.iter().enumerate() {
+            left_sum += y[i];
+            left_sq += y[i] * y[i];
+            let nl = (pos + 1) as f64;
+            let nr = n - nl;
+            if (pos + 1) < cfg.min_samples_leaf || (sorted.len() - pos - 1) < cfg.min_samples_leaf
+            {
+                continue;
+            }
+            if nr == 0.0 {
+                break;
+            }
+            // Can't split between equal feature values.
+            let xv = x[i][f];
+            let xn = x[sorted[pos + 1]][f];
+            if xv == xn {
+                continue;
+            }
+            // Weighted SSE of the two children.
+            let right_sum = total_sum - left_sum;
+            let right_sq = total_sq - left_sq;
+            let sse = (left_sq - left_sum * left_sum / nl)
+                + (right_sq - right_sum * right_sum / nr);
+            if best.map_or(true, |(_, _, s)| sse < s) {
+                best = Some((f, 0.5 * (xv + xn), sse));
+            }
+        }
+    }
+
+    let Some((feature, threshold, _)) = best else {
+        return make_leaf(nodes);
+    };
+
+    // Partition indices in place.
+    let mut left_idx: Vec<usize> = Vec::new();
+    let mut right_idx: Vec<usize> = Vec::new();
+    for &i in indices.iter() {
+        if x[i][feature] <= threshold {
+            left_idx.push(i);
+        } else {
+            right_idx.push(i);
+        }
+    }
+    if left_idx.is_empty() || right_idx.is_empty() {
+        return make_leaf(nodes);
+    }
+
+    let id = nodes.len() as u32;
+    nodes.push(TreeNode {
+        feature: feature as u32,
+        threshold,
+        left: 0,
+        right: 0,
+        value: mean,
+    });
+    let l = build(x, y, &mut left_idx, depth + 1, cfg, d, rng, nodes, id as usize);
+    let r = build(x, y, &mut right_idx, depth + 1, cfg, d, rng, nodes, id as usize);
+    nodes[id as usize].left = l;
+    nodes[id as usize].right = r;
+    id
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid_data() -> (Vec<Vec<f64>>, Vec<f64>) {
+        // y = 3*x0 + step(x1 > 5)
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..20 {
+            for j in 0..10 {
+                x.push(vec![i as f64, j as f64]);
+                y.push(3.0 * i as f64 + if j > 5 { 10.0 } else { 0.0 });
+            }
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn fits_piecewise_function_exactly() {
+        let (x, y) = grid_data();
+        let idx: Vec<usize> = (0..x.len()).collect();
+        let cfg = TreeConfig {
+            max_depth: 16,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::new(1);
+        let t = Tree::fit(&x, &y, &idx, &cfg, &mut rng);
+        for (xi, yi) in x.iter().zip(&y) {
+            assert!((t.predict(xi) - yi).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn depth_limit_respected() {
+        let (x, y) = grid_data();
+        let idx: Vec<usize> = (0..x.len()).collect();
+        let cfg = TreeConfig {
+            max_depth: 3,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::new(2);
+        let t = Tree::fit(&x, &y, &idx, &cfg, &mut rng);
+        assert!(t.depth() <= 4); // root at depth 0 → ≤ 4 levels of nodes
+    }
+
+    #[test]
+    fn constant_target_gives_single_leaf() {
+        let x = vec![vec![1.0], vec![2.0], vec![3.0]];
+        let y = vec![7.0, 7.0, 7.0];
+        let idx = vec![0, 1, 2];
+        let mut rng = Pcg64::new(3);
+        let t = Tree::fit(&x, &y, &idx, &TreeConfig::default(), &mut rng);
+        // A constant target has zero variance everywhere; any structure
+        // still predicts 7 exactly.
+        assert_eq!(t.predict(&[1.5]), 7.0);
+        assert_eq!(t.predict(&[99.0]), 7.0);
+    }
+
+    #[test]
+    fn min_samples_leaf_respected() {
+        let (x, y) = grid_data();
+        let idx: Vec<usize> = (0..x.len()).collect();
+        let cfg = TreeConfig {
+            min_samples_leaf: 25,
+            max_depth: 20,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::new(4);
+        let t = Tree::fit(&x, &y, &idx, &cfg, &mut rng);
+        // 200 samples / >=25 per leaf → at most 8 leaves
+        assert!(t.leaf_count() <= 8);
+    }
+
+    #[test]
+    fn extrapolation_clamps_to_leaf_means() {
+        let (x, y) = grid_data();
+        let idx: Vec<usize> = (0..x.len()).collect();
+        let mut rng = Pcg64::new(5);
+        let t = Tree::fit(&x, &y, &idx, &TreeConfig::default(), &mut rng);
+        let pred = t.predict(&[1e9, 1e9]);
+        let max_y = y.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(pred <= max_y + 1e-9);
+    }
+
+    #[test]
+    fn leaves_self_loop() {
+        let x = vec![vec![0.0], vec![1.0]];
+        let y = vec![0.0, 1.0];
+        let mut rng = Pcg64::new(6);
+        let t = Tree::fit(&x, &y, &[0, 1], &TreeConfig::default(), &mut rng);
+        for (i, n) in t.nodes.iter().enumerate() {
+            if n.is_leaf() {
+                assert_eq!(n.left as usize, i);
+                assert_eq!(n.right as usize, i);
+            }
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! Convenience builders for common layer patterns (conv-bn-relu, residual
+//! blocks, inverted residuals, Fire and Inception modules). The network zoo
+//! in `models/` is written entirely in terms of these helpers.
+
+use super::graph::{Graph, NodeId};
+use super::op::{Act, Groups, Op};
+
+/// Fluent extension methods over [`Graph`] for building networks.
+pub trait GraphBuilder {
+    fn input(&mut self, c: usize, h: usize, w: usize) -> NodeId;
+    fn conv(
+        &mut self,
+        name: &str,
+        input: NodeId,
+        out_c: usize,
+        k: usize,
+        s: usize,
+        p: usize,
+    ) -> NodeId;
+    fn conv_g(
+        &mut self,
+        name: &str,
+        input: NodeId,
+        out_c: usize,
+        k: usize,
+        s: usize,
+        p: usize,
+        groups: Groups,
+        bias: bool,
+    ) -> NodeId;
+    /// conv → batch-norm → activation.
+    fn conv_bn_act(
+        &mut self,
+        name: &str,
+        input: NodeId,
+        out_c: usize,
+        k: usize,
+        s: usize,
+        p: usize,
+        act: Act,
+    ) -> NodeId;
+    /// conv → batch-norm (no activation; e.g. residual branch tails).
+    fn conv_bn(
+        &mut self,
+        name: &str,
+        input: NodeId,
+        out_c: usize,
+        k: usize,
+        s: usize,
+        p: usize,
+    ) -> NodeId;
+    /// depthwise conv → bn → activation.
+    fn dwconv_bn_act(&mut self, name: &str, input: NodeId, k: usize, s: usize, act: Act)
+        -> NodeId;
+    fn relu(&mut self, name: &str, input: NodeId) -> NodeId;
+    fn maxpool(&mut self, name: &str, input: NodeId, k: usize, s: usize, p: usize) -> NodeId;
+    fn maxpool_ceil(&mut self, name: &str, input: NodeId, k: usize, s: usize, p: usize)
+        -> NodeId;
+    fn gap(&mut self, name: &str, input: NodeId) -> NodeId;
+    /// global-avg-pool → flatten → linear classifier head.
+    fn classifier(&mut self, input: NodeId, classes: usize) -> NodeId;
+    fn add_join(&mut self, name: &str, inputs: &[NodeId]) -> NodeId;
+    fn concat(&mut self, name: &str, inputs: &[NodeId]) -> NodeId;
+}
+
+impl GraphBuilder for Graph {
+    fn input(&mut self, c: usize, h: usize, w: usize) -> NodeId {
+        self.add("input", Op::Input { c, h, w }, &[])
+    }
+
+    fn conv(
+        &mut self,
+        name: &str,
+        input: NodeId,
+        out_c: usize,
+        k: usize,
+        s: usize,
+        p: usize,
+    ) -> NodeId {
+        self.conv_g(name, input, out_c, k, s, p, Groups::Fixed(1), false)
+    }
+
+    fn conv_g(
+        &mut self,
+        name: &str,
+        input: NodeId,
+        out_c: usize,
+        k: usize,
+        s: usize,
+        p: usize,
+        groups: Groups,
+        bias: bool,
+    ) -> NodeId {
+        self.add(
+            name,
+            Op::Conv2d {
+                out_c,
+                k,
+                s,
+                p,
+                groups,
+                bias,
+            },
+            &[input],
+        )
+    }
+
+    fn conv_bn_act(
+        &mut self,
+        name: &str,
+        input: NodeId,
+        out_c: usize,
+        k: usize,
+        s: usize,
+        p: usize,
+        act: Act,
+    ) -> NodeId {
+        let c = self.conv(name, input, out_c, k, s, p);
+        let b = self.add(format!("{name}.bn"), Op::BatchNorm, &[c]);
+        self.add(format!("{name}.act"), Op::Activation(act), &[b])
+    }
+
+    fn conv_bn(
+        &mut self,
+        name: &str,
+        input: NodeId,
+        out_c: usize,
+        k: usize,
+        s: usize,
+        p: usize,
+    ) -> NodeId {
+        let c = self.conv(name, input, out_c, k, s, p);
+        self.add(format!("{name}.bn"), Op::BatchNorm, &[c])
+    }
+
+    fn dwconv_bn_act(
+        &mut self,
+        name: &str,
+        input: NodeId,
+        k: usize,
+        s: usize,
+        act: Act,
+    ) -> NodeId {
+        let c = self.conv_g(name, input, 0, k, s, k / 2, Groups::Depthwise, false);
+        let b = self.add(format!("{name}.bn"), Op::BatchNorm, &[c]);
+        self.add(format!("{name}.act"), Op::Activation(act), &[b])
+    }
+
+    fn relu(&mut self, name: &str, input: NodeId) -> NodeId {
+        self.add(name, Op::Activation(Act::Relu), &[input])
+    }
+
+    fn maxpool(&mut self, name: &str, input: NodeId, k: usize, s: usize, p: usize) -> NodeId {
+        self.add(
+            name,
+            Op::MaxPool {
+                k,
+                s,
+                p,
+                ceil: false,
+            },
+            &[input],
+        )
+    }
+
+    fn maxpool_ceil(
+        &mut self,
+        name: &str,
+        input: NodeId,
+        k: usize,
+        s: usize,
+        p: usize,
+    ) -> NodeId {
+        self.add(
+            name,
+            Op::MaxPool {
+                k,
+                s,
+                p,
+                ceil: true,
+            },
+            &[input],
+        )
+    }
+
+    fn gap(&mut self, name: &str, input: NodeId) -> NodeId {
+        self.add(name, Op::GlobalAvgPool, &[input])
+    }
+
+    fn classifier(&mut self, input: NodeId, classes: usize) -> NodeId {
+        let g = self.gap("head.gap", input);
+        let f = self.add("head.flatten", Op::Flatten, &[g]);
+        self.add(
+            "head.fc",
+            Op::Linear {
+                out: classes,
+                bias: true,
+            },
+            &[f],
+        )
+    }
+
+    fn add_join(&mut self, name: &str, inputs: &[NodeId]) -> NodeId {
+        self.add(name, Op::Add, inputs)
+    }
+
+    fn concat(&mut self, name: &str, inputs: &[NodeId]) -> NodeId {
+        self.add(name, Op::Concat, inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chain_produces_valid_graph() {
+        let mut g = Graph::new("b");
+        let x = g.input(3, 224, 224);
+        let c = g.conv_bn_act("stem", x, 32, 3, 2, 1, Act::Relu);
+        let d = g.dwconv_bn_act("dw", c, 3, 1, Act::Relu6);
+        let head = g.classifier(d, 1000);
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[d].channels(), 32);
+        assert_eq!(shapes[head].numel(), 1000);
+    }
+
+    #[test]
+    fn residual_join_builder() {
+        let mut g = Graph::new("res");
+        let x = g.input(3, 32, 32);
+        let a = g.conv_bn_act("c1", x, 8, 3, 1, 1, Act::Relu);
+        let b = g.conv_bn("c2", a, 8, 3, 1, 1);
+        let sc = g.conv_bn("sc", x, 8, 1, 1, 0);
+        let j = g.add_join("join", &[b, sc]);
+        let r = g.relu("out", j);
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[r].channels(), 8);
+    }
+}

@@ -1,0 +1,604 @@
+//! Network graph representation, builder API and shape inference.
+//!
+//! Networks are DAGs of [`Op`] nodes stored in topological order (the
+//! builder only lets a node consume earlier nodes, so the invariant holds by
+//! construction). Shape inference propagates per-sample `C × H × W` shapes
+//! and is re-run after structured pruning mutates filter counts.
+
+use super::op::{Groups, Op};
+use super::shapes::{conv_out_spatial, pool_out_spatial_ceil, Shape};
+use std::fmt;
+
+/// Node id (index into `Graph::nodes`).
+pub type NodeId = usize;
+
+/// A single IR node.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub op: Op,
+    pub inputs: Vec<NodeId>,
+}
+
+/// Errors raised by graph validation / shape inference.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum GraphError {
+    #[error("node {0} ({1}): expected {2} inputs, got {3}")]
+    Arity(NodeId, String, &'static str, usize),
+    #[error("node {0} ({1}): input {2} is not an earlier node")]
+    Order(NodeId, String, NodeId),
+    #[error("node {0} ({1}): channel mismatch across inputs: {2:?}")]
+    ChannelMismatch(NodeId, String, Vec<usize>),
+    #[error("node {0} ({1}): spatial mismatch across inputs: {2:?}")]
+    SpatialMismatch(NodeId, String, Vec<usize>),
+    #[error("node {0} ({1}): {2}")]
+    Invalid(NodeId, String, String),
+    #[error("graph has no nodes")]
+    Empty,
+}
+
+/// Per-convolution layer summary: exactly the paper's per-layer variables
+/// (`n_l, m_l, k_l, s_l, p_l, g_l, ip_l, op_l`) used by the analytical
+/// feature extractor and the device simulator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvInfo {
+    pub node: NodeId,
+    /// Number of filters `n_l` (output channels).
+    pub n: usize,
+    /// Input channels `m_l`.
+    pub m: usize,
+    /// Square kernel size `k_l`.
+    pub k: usize,
+    /// Stride `s_l`.
+    pub s: usize,
+    /// Padding `p_l`.
+    pub p: usize,
+    /// Groups `g_l` (resolved; depthwise ⇒ `g == m`).
+    pub g: usize,
+    /// Input spatial size `ip_l`.
+    pub ip: usize,
+    /// Output spatial size `op_l`.
+    pub op: usize,
+}
+
+impl ConvInfo {
+    /// Weight parameter count `n · m/g · k²`.
+    pub fn weight_params(&self) -> usize {
+        self.n * (self.m / self.g) * self.k * self.k
+    }
+
+    /// Forward MACs `bs=1`: `n · op² · k² · m/g`.
+    pub fn fwd_macs(&self) -> f64 {
+        self.n as f64 * (self.op * self.op) as f64 * (self.k * self.k) as f64
+            * (self.m / self.g) as f64
+    }
+
+    /// Is this a depthwise convolution?
+    pub fn is_depthwise(&self) -> bool {
+        self.g == self.m && self.g > 1
+    }
+}
+
+/// The network graph.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    /// Output node (defaults to the last node added).
+    pub output: NodeId,
+}
+
+impl Graph {
+    pub fn new(name: impl Into<String>) -> Self {
+        Graph {
+            name: name.into(),
+            nodes: Vec::new(),
+            output: 0,
+        }
+    }
+
+    /// Append a node consuming `inputs` (must be earlier ids). Returns its id.
+    pub fn add(&mut self, name: impl Into<String>, op: Op, inputs: &[NodeId]) -> NodeId {
+        let id = self.nodes.len();
+        for &i in inputs {
+            assert!(i < id, "node inputs must reference earlier nodes");
+        }
+        self.nodes.push(Node {
+            id,
+            name: name.into(),
+            op,
+            inputs: inputs.to_vec(),
+        });
+        self.output = id;
+        id
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Ids of all convolution nodes, in topological (≈ depth) order.
+    pub fn conv_ids(&self) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Conv2d { .. }))
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// Mutate a convolution's filter count (structured pruning).
+    pub fn set_conv_filters(&mut self, id: NodeId, new_out_c: usize) {
+        assert!(new_out_c >= 1, "cannot prune a conv to zero filters");
+        match &mut self.nodes[id].op {
+            Op::Conv2d { out_c, .. } => *out_c = new_out_c,
+            other => panic!("node {id} is {}, not conv", other.kind()),
+        }
+    }
+
+    /// Infer per-node output shapes; validates the graph as it goes.
+    pub fn infer_shapes(&self) -> Result<Vec<Shape>, GraphError> {
+        if self.nodes.is_empty() {
+            return Err(GraphError::Empty);
+        }
+        let mut shapes: Vec<Shape> = Vec::with_capacity(self.nodes.len());
+        for node in &self.nodes {
+            for &i in &node.inputs {
+                if i >= node.id {
+                    return Err(GraphError::Order(node.id, node.name.clone(), i));
+                }
+            }
+            let unary = |want: &'static str| -> Result<Shape, GraphError> {
+                if node.inputs.len() != 1 {
+                    Err(GraphError::Arity(
+                        node.id,
+                        node.name.clone(),
+                        want,
+                        node.inputs.len(),
+                    ))
+                } else {
+                    Ok(shapes[node.inputs[0]])
+                }
+            };
+            let shape = match &node.op {
+                Op::Input { c, h, w } => {
+                    if !node.inputs.is_empty() {
+                        return Err(GraphError::Arity(
+                            node.id,
+                            node.name.clone(),
+                            "0",
+                            node.inputs.len(),
+                        ));
+                    }
+                    Shape::chw(*c, *h, *w)
+                }
+                Op::Conv2d {
+                    out_c,
+                    k,
+                    s,
+                    p,
+                    groups,
+                    ..
+                } => {
+                    let input = unary("1")?;
+                    let (c, h) = match input {
+                        Shape::Chw { c, h, w } => {
+                            if h != w {
+                                return Err(GraphError::Invalid(
+                                    node.id,
+                                    node.name.clone(),
+                                    format!("non-square input {h}x{w}"),
+                                ));
+                            }
+                            (c, h)
+                        }
+                        Shape::Flat { .. } => {
+                            return Err(GraphError::Invalid(
+                                node.id,
+                                node.name.clone(),
+                                "conv over flat tensor".into(),
+                            ))
+                        }
+                    };
+                    let g = groups.resolve(c);
+                    if g == 0 || c % g != 0 {
+                        return Err(GraphError::Invalid(
+                            node.id,
+                            node.name.clone(),
+                            format!("channels {c} not divisible by groups {g}"),
+                        ));
+                    }
+                    // Depthwise convs tie out channels to in channels.
+                    let n = match groups {
+                        Groups::Depthwise => c,
+                        Groups::Fixed(_) => *out_c,
+                    };
+                    if n % g != 0 {
+                        return Err(GraphError::Invalid(
+                            node.id,
+                            node.name.clone(),
+                            format!("filters {n} not divisible by groups {g}"),
+                        ));
+                    }
+                    let oh = conv_out_spatial(h, *k, *s, *p);
+                    Shape::chw(n, oh, oh)
+                }
+                Op::MaxPool { k, s, p, ceil } | Op::AvgPool { k, s, p, ceil } => {
+                    let input = unary("1")?;
+                    match input {
+                        Shape::Chw { c, h, .. } => {
+                            let oh = if *ceil {
+                                pool_out_spatial_ceil(h, *k, *s, *p)
+                            } else {
+                                conv_out_spatial(h, *k, *s, *p)
+                            };
+                            Shape::chw(c, oh, oh)
+                        }
+                        Shape::Flat { .. } => {
+                            return Err(GraphError::Invalid(
+                                node.id,
+                                node.name.clone(),
+                                "pool over flat tensor".into(),
+                            ))
+                        }
+                    }
+                }
+                Op::GlobalAvgPool => {
+                    let input = unary("1")?;
+                    Shape::chw(input.channels(), 1, 1)
+                }
+                Op::BatchNorm | Op::Activation(_) | Op::Dropout(_) => unary("1")?,
+                Op::Flatten => {
+                    let input = unary("1")?;
+                    Shape::Flat {
+                        n: input.numel(),
+                    }
+                }
+                Op::Linear { out, .. } => {
+                    let input = unary("1")?;
+                    match input {
+                        Shape::Flat { .. } => Shape::Flat { n: *out },
+                        Shape::Chw { .. } => {
+                            return Err(GraphError::Invalid(
+                                node.id,
+                                node.name.clone(),
+                                "linear requires flattened input".into(),
+                            ))
+                        }
+                    }
+                }
+                Op::Add => {
+                    if node.inputs.len() < 2 {
+                        return Err(GraphError::Arity(
+                            node.id,
+                            node.name.clone(),
+                            ">=2",
+                            node.inputs.len(),
+                        ));
+                    }
+                    let ins: Vec<Shape> =
+                        node.inputs.iter().map(|&i| shapes[i]).collect();
+                    let chans: Vec<usize> = ins.iter().map(|s| s.channels()).collect();
+                    if chans.windows(2).any(|w| w[0] != w[1]) {
+                        return Err(GraphError::ChannelMismatch(
+                            node.id,
+                            node.name.clone(),
+                            chans,
+                        ));
+                    }
+                    let sps: Vec<usize> = ins.iter().map(|s| s.spatial()).collect();
+                    if sps.windows(2).any(|w| w[0] != w[1]) {
+                        return Err(GraphError::SpatialMismatch(
+                            node.id,
+                            node.name.clone(),
+                            sps,
+                        ));
+                    }
+                    ins[0]
+                }
+                Op::Concat => {
+                    if node.inputs.len() < 2 {
+                        return Err(GraphError::Arity(
+                            node.id,
+                            node.name.clone(),
+                            ">=2",
+                            node.inputs.len(),
+                        ));
+                    }
+                    let ins: Vec<Shape> =
+                        node.inputs.iter().map(|&i| shapes[i]).collect();
+                    let sps: Vec<usize> = ins.iter().map(|s| s.spatial()).collect();
+                    if sps.windows(2).any(|w| w[0] != w[1]) {
+                        return Err(GraphError::SpatialMismatch(
+                            node.id,
+                            node.name.clone(),
+                            sps,
+                        ));
+                    }
+                    let c: usize = ins.iter().map(|s| s.channels()).sum();
+                    Shape::chw(c, ins[0].spatial(), ins[0].spatial())
+                }
+            };
+            shapes.push(shape);
+        }
+        Ok(shapes)
+    }
+
+    /// Extract the paper's per-conv-layer variables (requires a valid graph).
+    pub fn conv_infos(&self) -> Result<Vec<ConvInfo>, GraphError> {
+        let shapes = self.infer_shapes()?;
+        let mut out = Vec::new();
+        for node in &self.nodes {
+            if let Op::Conv2d {
+                k, s, p, groups, ..
+            } = &node.op
+            {
+                let in_shape = shapes[node.inputs[0]];
+                let out_shape = shapes[node.id];
+                let m = in_shape.channels();
+                out.push(ConvInfo {
+                    node: node.id,
+                    n: out_shape.channels(),
+                    m,
+                    k: *k,
+                    s: *s,
+                    p: *p,
+                    g: groups.resolve(m),
+                    ip: in_shape.spatial(),
+                    op: out_shape.spatial(),
+                });
+            }
+        }
+        Ok(out)
+    }
+
+    /// Total parameter count (conv weights+bias, BN affine+running stats,
+    /// linear weights+bias) — used for "Model Size (MB)" in Table 2.
+    pub fn param_count(&self) -> Result<usize, GraphError> {
+        let shapes = self.infer_shapes()?;
+        let mut total = 0usize;
+        for node in &self.nodes {
+            match &node.op {
+                Op::Conv2d { bias, groups, k, .. } => {
+                    let m = shapes[node.inputs[0]].channels();
+                    let n = shapes[node.id].channels();
+                    let g = groups.resolve(m);
+                    total += n * (m / g) * k * k;
+                    if *bias {
+                        total += n;
+                    }
+                }
+                Op::BatchNorm => {
+                    // weight, bias, running mean, running var
+                    total += 4 * shapes[node.id].channels();
+                }
+                Op::Linear { out, bias } => {
+                    let inf = shapes[node.inputs[0]].numel();
+                    total += inf * out + if *bias { *out } else { 0 };
+                }
+                _ => {}
+            }
+        }
+        Ok(total)
+    }
+
+    /// Model size in MB at fp32.
+    pub fn model_size_mb(&self) -> Result<f64, GraphError> {
+        Ok(self.param_count()? as f64 * 4.0 / (1024.0 * 1024.0))
+    }
+}
+
+impl fmt::Display for Graph {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "graph {} ({} nodes)", self.name, self.nodes.len())?;
+        let shapes = self.infer_shapes().ok();
+        for node in &self.nodes {
+            let shape = shapes
+                .as_ref()
+                .map(|s| format!("{:?}", s[node.id]))
+                .unwrap_or_default();
+            writeln!(
+                f,
+                "  #{:<4} {:<28} {:<8} <- {:?}  {}",
+                node.id,
+                node.name,
+                node.op.kind(),
+                node.inputs,
+                shape
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::Act;
+
+    fn tiny() -> Graph {
+        let mut g = Graph::new("tiny");
+        let x = g.add("input", Op::Input { c: 3, h: 32, w: 32 }, &[]);
+        let c1 = g.add(
+            "conv1",
+            Op::Conv2d {
+                out_c: 16,
+                k: 3,
+                s: 1,
+                p: 1,
+                groups: Groups::Fixed(1),
+                bias: false,
+            },
+            &[x],
+        );
+        let b1 = g.add("bn1", Op::BatchNorm, &[c1]);
+        let r1 = g.add("relu1", Op::Activation(Act::Relu), &[b1]);
+        let gp = g.add("gap", Op::GlobalAvgPool, &[r1]);
+        let fl = g.add("flatten", Op::Flatten, &[gp]);
+        g.add(
+            "fc",
+            Op::Linear {
+                out: 10,
+                bias: true,
+            },
+            &[fl],
+        );
+        g
+    }
+
+    #[test]
+    fn shape_inference_tiny() {
+        let g = tiny();
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[1], Shape::chw(16, 32, 32));
+        assert_eq!(shapes[4], Shape::chw(16, 1, 1));
+        assert_eq!(*shapes.last().unwrap(), Shape::Flat { n: 10 });
+    }
+
+    #[test]
+    fn conv_info_extraction() {
+        let g = tiny();
+        let infos = g.conv_infos().unwrap();
+        assert_eq!(infos.len(), 1);
+        let c = infos[0];
+        assert_eq!((c.n, c.m, c.k, c.s, c.p, c.g, c.ip, c.op), (16, 3, 3, 1, 1, 1, 32, 32));
+        assert_eq!(c.weight_params(), 16 * 3 * 9);
+    }
+
+    #[test]
+    fn param_count_tiny() {
+        let g = tiny();
+        // conv 16*3*9 + bn 4*16 + fc 16*10+10
+        assert_eq!(g.param_count().unwrap(), 432 + 64 + 170);
+    }
+
+    #[test]
+    fn pruning_mutation_propagates() {
+        let mut g = tiny();
+        g.set_conv_filters(1, 8);
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[1].channels(), 8);
+        // fc input shrinks accordingly
+        assert_eq!(g.param_count().unwrap(), 8 * 27 + 32 + 90);
+    }
+
+    #[test]
+    fn add_channel_mismatch_detected() {
+        let mut g = Graph::new("bad");
+        let x = g.add("in", Op::Input { c: 3, h: 8, w: 8 }, &[]);
+        let a = g.add(
+            "a",
+            Op::Conv2d {
+                out_c: 4,
+                k: 1,
+                s: 1,
+                p: 0,
+                groups: Groups::Fixed(1),
+                bias: false,
+            },
+            &[x],
+        );
+        let b = g.add(
+            "b",
+            Op::Conv2d {
+                out_c: 6,
+                k: 1,
+                s: 1,
+                p: 0,
+                groups: Groups::Fixed(1),
+                bias: false,
+            },
+            &[x],
+        );
+        g.add("add", Op::Add, &[a, b]);
+        assert!(matches!(
+            g.infer_shapes(),
+            Err(GraphError::ChannelMismatch(..))
+        ));
+    }
+
+    #[test]
+    fn concat_sums_channels() {
+        let mut g = Graph::new("cat");
+        let x = g.add("in", Op::Input { c: 3, h: 8, w: 8 }, &[]);
+        let a = g.add(
+            "a",
+            Op::Conv2d {
+                out_c: 4,
+                k: 1,
+                s: 1,
+                p: 0,
+                groups: Groups::Fixed(1),
+                bias: false,
+            },
+            &[x],
+        );
+        let b = g.add(
+            "b",
+            Op::Conv2d {
+                out_c: 6,
+                k: 3,
+                s: 1,
+                p: 1,
+                groups: Groups::Fixed(1),
+                bias: false,
+            },
+            &[x],
+        );
+        let c = g.add("cat", Op::Concat, &[a, b]);
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[c].channels(), 10);
+    }
+
+    #[test]
+    fn depthwise_ties_output_channels() {
+        let mut g = Graph::new("dw");
+        let x = g.add("in", Op::Input { c: 3, h: 8, w: 8 }, &[]);
+        let pw = g.add(
+            "pw",
+            Op::Conv2d {
+                out_c: 12,
+                k: 1,
+                s: 1,
+                p: 0,
+                groups: Groups::Fixed(1),
+                bias: false,
+            },
+            &[x],
+        );
+        let dw = g.add(
+            "dw",
+            Op::Conv2d {
+                out_c: 12, // nominal; tied to input at inference time
+                k: 3,
+                s: 1,
+                p: 1,
+                groups: Groups::Depthwise,
+                bias: false,
+            },
+            &[pw],
+        );
+        // prune the pointwise conv; depthwise must follow
+        g.set_conv_filters(pw, 7);
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[dw].channels(), 7);
+        let infos = g.conv_infos().unwrap();
+        assert!(infos[1].is_depthwise());
+        assert_eq!(infos[1].g, 7);
+    }
+
+    #[test]
+    fn display_does_not_panic() {
+        let g = tiny();
+        let s = format!("{g}");
+        assert!(s.contains("conv1"));
+    }
+}

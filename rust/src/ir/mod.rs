@@ -1,0 +1,17 @@
+//! Network intermediate representation.
+//!
+//! CNN architectures are expressed as DAGs of typed operators with
+//! per-sample shape inference (`C × H × W`; the batch dimension is symbolic,
+//! exactly as in the paper's analytical model where every feature is linear
+//! in `bs`). The IR is the common substrate for the network zoo, structured
+//! pruning, analytical feature extraction and the device simulator.
+
+pub mod builder;
+pub mod graph;
+pub mod op;
+pub mod shapes;
+
+pub use builder::GraphBuilder;
+pub use graph::{ConvInfo, Graph, GraphError, Node, NodeId};
+pub use op::{Act, Groups, Op};
+pub use shapes::{conv_out_spatial, pool_out_spatial_ceil, Shape};

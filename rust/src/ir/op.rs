@@ -1,0 +1,142 @@
+//! Operator vocabulary of the network IR.
+//!
+//! The set covers everything needed to express the paper's network zoo
+//! (AlexNet, VGG, ResNet-18/50, MobileNetV2, SqueezeNet, MnasNet, GoogLeNet,
+//! NiN and the elastic OFA-ResNet50 space): convolutions with groups,
+//! batch-norm, activations, pooling, linear heads, and the residual / concat
+//! connectivity that drives pruning dependency analysis.
+
+/// Grouping mode of a convolution.
+///
+/// Depthwise convolutions are represented symbolically rather than with a
+/// literal group count so that structured pruning keeps them valid: after
+/// the input channel count changes, `Depthwise` still means `groups == m_l`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Groups {
+    /// Standard convolution (`g = 1`) or explicit grouped conv (`g = n`).
+    Fixed(usize),
+    /// Depthwise: `g = in_channels`, out channels tied to in channels.
+    Depthwise,
+}
+
+impl Groups {
+    /// Resolve to a concrete group count for a given input channel count.
+    pub fn resolve(&self, in_c: usize) -> usize {
+        match *self {
+            Groups::Fixed(g) => g,
+            Groups::Depthwise => in_c,
+        }
+    }
+}
+
+/// Activation functions (all shape-preserving; they matter for the device
+/// simulator's pointwise cost and memory accounting, not for the features).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    Relu,
+    Relu6,
+    HSwish,
+    Sigmoid,
+}
+
+/// IR operators.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    /// Network input: `C × H × W` per sample.
+    Input { c: usize, h: usize, w: usize },
+    /// 2-D convolution with `out_c` filters (the paper's `n_l`).
+    Conv2d {
+        out_c: usize,
+        k: usize,
+        s: usize,
+        p: usize,
+        groups: Groups,
+        bias: bool,
+    },
+    /// Batch normalisation over channels.
+    BatchNorm,
+    /// Pointwise activation.
+    Activation(Act),
+    /// Max pooling; `ceil` selects ceil-mode output rounding.
+    MaxPool { k: usize, s: usize, p: usize, ceil: bool },
+    /// Average pooling.
+    AvgPool { k: usize, s: usize, p: usize, ceil: bool },
+    /// Global average pool to `C × 1 × 1`.
+    GlobalAvgPool,
+    /// Fully connected layer with `out` features.
+    Linear { out: usize, bias: bool },
+    /// Elementwise addition of all inputs (residual join).
+    Add,
+    /// Channel-dimension concatenation of all inputs (Fire / Inception).
+    Concat,
+    /// Flatten `C × H × W` → vector.
+    Flatten,
+    /// Dropout (memory-relevant only: PyTorch stores the mask).
+    Dropout(f64),
+}
+
+impl Op {
+    /// Does this op preserve the channel count of its (single) input?
+    /// Used by pruning dependency analysis to walk back to the node that
+    /// *defines* a channel dimension.
+    pub fn preserves_channels(&self) -> bool {
+        matches!(
+            self,
+            Op::BatchNorm
+                | Op::Activation(_)
+                | Op::MaxPool { .. }
+                | Op::AvgPool { .. }
+                | Op::GlobalAvgPool
+                | Op::Dropout(_)
+        )
+    }
+
+    /// Short mnemonic for debugging / dumps.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Op::Input { .. } => "input",
+            Op::Conv2d { .. } => "conv",
+            Op::BatchNorm => "bn",
+            Op::Activation(_) => "act",
+            Op::MaxPool { .. } => "maxpool",
+            Op::AvgPool { .. } => "avgpool",
+            Op::GlobalAvgPool => "gap",
+            Op::Linear { .. } => "linear",
+            Op::Add => "add",
+            Op::Concat => "concat",
+            Op::Flatten => "flatten",
+            Op::Dropout(_) => "dropout",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn groups_resolution() {
+        assert_eq!(Groups::Fixed(1).resolve(64), 1);
+        assert_eq!(Groups::Fixed(4).resolve(64), 4);
+        assert_eq!(Groups::Depthwise.resolve(32), 32);
+        assert_eq!(Groups::Depthwise.resolve(17), 17);
+    }
+
+    #[test]
+    fn channel_preservation_classification() {
+        assert!(Op::BatchNorm.preserves_channels());
+        assert!(Op::Activation(Act::Relu).preserves_channels());
+        assert!(Op::GlobalAvgPool.preserves_channels());
+        assert!(!Op::Concat.preserves_channels());
+        assert!(!Op::Add.preserves_channels());
+        assert!(!Op::Conv2d {
+            out_c: 8,
+            k: 3,
+            s: 1,
+            p: 1,
+            groups: Groups::Fixed(1),
+            bias: false
+        }
+        .preserves_channels());
+    }
+}

@@ -1,0 +1,106 @@
+//! Tensor shapes flowing through the network IR.
+//!
+//! Shapes are per-sample (`C × H × W`); the batch dimension is implicit and
+//! carried separately by the feature extractor / device simulator, matching
+//! the paper's formulation where every term is linear in `bs`.
+
+/// Per-sample activation shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Shape {
+    /// Feature map `C × H × W` (NCHW minus the batch dim).
+    Chw { c: usize, h: usize, w: usize },
+    /// Flattened feature vector of length `n`.
+    Flat { n: usize },
+}
+
+impl Shape {
+    pub fn chw(c: usize, h: usize, w: usize) -> Self {
+        Shape::Chw { c, h, w }
+    }
+
+    /// Number of elements per sample.
+    pub fn numel(&self) -> usize {
+        match *self {
+            Shape::Chw { c, h, w } => c * h * w,
+            Shape::Flat { n } => n,
+        }
+    }
+
+    /// Channel count (Flat tensors report their length as channels).
+    pub fn channels(&self) -> usize {
+        match *self {
+            Shape::Chw { c, .. } => c,
+            Shape::Flat { n } => n,
+        }
+    }
+
+    /// Spatial size, assuming square maps (the paper's setting).
+    pub fn spatial(&self) -> usize {
+        match *self {
+            Shape::Chw { h, .. } => h,
+            Shape::Flat { .. } => 1,
+        }
+    }
+}
+
+/// Output spatial size of a conv/pool:
+/// `op = 1 + floor((ip + 2p - k) / s)` (paper Sec.5.2.1).
+pub fn conv_out_spatial(ip: usize, k: usize, s: usize, p: usize) -> usize {
+    let padded = ip + 2 * p;
+    assert!(
+        padded >= k,
+        "kernel {k} larger than padded input {padded} (ip={ip}, p={p})"
+    );
+    1 + (padded - k) / s
+}
+
+/// Output spatial size with ceil rounding (PyTorch `ceil_mode=True` pooling,
+/// used by GoogLeNet's grid-reduction pools).
+pub fn pool_out_spatial_ceil(ip: usize, k: usize, s: usize, p: usize) -> usize {
+    let padded = ip + 2 * p;
+    assert!(padded >= k);
+    1 + (padded - k + s - 1) / s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_formula_matches_paper() {
+        // 224x224, k=7, s=2, p=3 -> 112 (ResNet stem)
+        assert_eq!(conv_out_spatial(224, 7, 2, 3), 112);
+        // 3x3 s=1 p=1 preserves spatial size
+        assert_eq!(conv_out_spatial(56, 3, 1, 1), 56);
+        // 1x1 s=1 p=0 preserves
+        assert_eq!(conv_out_spatial(14, 1, 1, 0), 14);
+        // pool k=3 s=2 p=1: 112 -> 56
+        assert_eq!(conv_out_spatial(112, 3, 2, 1), 56);
+    }
+
+    #[test]
+    fn ceil_mode_rounds_up() {
+        // 56 -> k=3 s=2 p=0: floor gives 27, ceil gives 28
+        assert_eq!(conv_out_spatial(56, 3, 2, 0), 27);
+        assert_eq!(pool_out_spatial_ceil(56, 3, 2, 0), 28);
+        // exact division: both modes agree
+        assert_eq!(pool_out_spatial_ceil(55, 3, 2, 0), 27);
+    }
+
+    #[test]
+    fn numel_and_channels() {
+        let s = Shape::chw(64, 56, 56);
+        assert_eq!(s.numel(), 64 * 56 * 56);
+        assert_eq!(s.channels(), 64);
+        assert_eq!(s.spatial(), 56);
+        let f = Shape::Flat { n: 1000 };
+        assert_eq!(f.numel(), 1000);
+        assert_eq!(f.channels(), 1000);
+    }
+
+    #[test]
+    #[should_panic]
+    fn conv_kernel_too_large_panics() {
+        conv_out_spatial(2, 7, 1, 0);
+    }
+}

@@ -1,0 +1,28 @@
+//! # perf4sight
+//!
+//! Reproduction of *"perf4sight: A toolflow to model CNN training
+//! performance on Edge GPUs"* (Rajagopal & Bouganis, 2021) as a three-layer
+//! Rust + JAX + Pallas system. See `DESIGN.md` for the architecture and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! Layer map:
+//! - **L3 (this crate)** — the toolflow: network IR + zoo, structured
+//!   pruning, analytical features, edge-GPU simulator, network-wise
+//!   profiler, random-forest models, OFA evolutionary search, experiment
+//!   harnesses, PJRT runtime.
+//! - **L2/L1 (`python/compile/`)** — build-time JAX graphs + Pallas kernels
+//!   AOT-lowered to HLO text in `artifacts/`, executed from `runtime/`.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod device;
+pub mod experiments;
+pub mod features;
+pub mod forest;
+pub mod ir;
+pub mod models;
+pub mod ofa;
+pub mod profiler;
+pub mod pruning;
+pub mod runtime;
+pub mod util;

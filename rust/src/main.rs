@@ -1,0 +1,9 @@
+//! perf4sight CLI entrypoint — see `perf4sight help`.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = perf4sight::coordinator::run(args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,87 @@
+//! AlexNet (Krizhevsky et al., 2012), torchvision layout, 3×224×224.
+//! Used by the paper only to tune the training-set-size hyperparameter
+//! (Sec. 6.1) and then excluded from the evaluation.
+
+use crate::ir::{Act, Graph, GraphBuilder, Op};
+
+/// Build AlexNet with `classes` output classes.
+pub fn alexnet(classes: usize) -> Graph {
+    let mut g = Graph::new("alexnet");
+    let x = g.input(3, 224, 224);
+    let c1 = g.conv("features.0", x, 64, 11, 4, 2);
+    let r1 = g.relu("features.1", c1);
+    let p1 = g.maxpool("features.2", r1, 3, 2, 0);
+    let c2 = g.conv("features.3", p1, 192, 5, 1, 2);
+    let r2 = g.relu("features.4", c2);
+    let p2 = g.maxpool("features.5", r2, 3, 2, 0);
+    let c3 = g.conv("features.6", p2, 384, 3, 1, 1);
+    let r3 = g.relu("features.7", c3);
+    let c4 = g.conv("features.8", r3, 256, 3, 1, 1);
+    let r4 = g.relu("features.9", c4);
+    let c5 = g.conv("features.10", r4, 256, 3, 1, 1);
+    let r5 = g.relu("features.11", c5);
+    let p3 = g.maxpool("features.12", r5, 3, 2, 0);
+    // At 224 input the feature map is already 6x6 here (adaptive pool is a
+    // no-op); flatten straight into the classifier.
+    let d1 = g.add("classifier.0", Op::Dropout(0.5), &[p3]);
+    let f = g.add("classifier.flatten", Op::Flatten, &[d1]);
+    let l1 = g.add(
+        "classifier.1",
+        Op::Linear {
+            out: 4096,
+            bias: true,
+        },
+        &[f],
+    );
+    let a1 = g.add("classifier.2", Op::Activation(Act::Relu), &[l1]);
+    let d2 = g.add("classifier.3", Op::Dropout(0.5), &[a1]);
+    let l2 = g.add(
+        "classifier.4",
+        Op::Linear {
+            out: 4096,
+            bias: true,
+        },
+        &[d2],
+    );
+    let a2 = g.add("classifier.5", Op::Activation(Act::Relu), &[l2]);
+    g.add(
+        "classifier.6",
+        Op::Linear {
+            out: classes,
+            bias: true,
+        },
+        &[a2],
+    );
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alexnet_shapes_and_params() {
+        let g = alexnet(1000);
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[g.output].numel(), 1000);
+        // torchvision AlexNet has 61.1M parameters.
+        let p = g.param_count().unwrap() as f64 / 1e6;
+        assert!((60.0..62.5).contains(&p), "params = {p}M");
+        assert_eq!(g.conv_infos().unwrap().len(), 5);
+    }
+
+    #[test]
+    fn alexnet_feature_map_is_6x6_before_flatten() {
+        let g = alexnet(1000);
+        let shapes = g.infer_shapes().unwrap();
+        // node for maxpool features.12
+        let pool = g
+            .nodes
+            .iter()
+            .find(|n| n.name == "features.12")
+            .unwrap()
+            .id;
+        assert_eq!(shapes[pool].spatial(), 6);
+        assert_eq!(shapes[pool].channels(), 256);
+    }
+}

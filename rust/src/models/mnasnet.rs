@@ -1,0 +1,94 @@
+//! MnasNet 1.0 (Tan et al., 2019), torchvision layout at 3×224×224.
+//! The paper's NAS-generated basis member; shares the depthwise-separable
+//! inverted-residual block with MobileNetV2 (App. C).
+
+use crate::ir::{Act, Graph, GraphBuilder, NodeId};
+
+/// MBConv block with configurable kernel size (3 or 5).
+#[allow(clippy::too_many_arguments)]
+fn mbconv(
+    g: &mut Graph,
+    name: &str,
+    input: NodeId,
+    in_c: usize,
+    out_c: usize,
+    k: usize,
+    stride: usize,
+    expand: usize,
+) -> NodeId {
+    let hidden = in_c * expand;
+    let mut cur = input;
+    if expand != 1 {
+        cur = g.conv_bn_act(&format!("{name}.expand"), cur, hidden, 1, 1, 0, Act::Relu);
+    }
+    cur = g.dwconv_bn_act(&format!("{name}.dw"), cur, k, stride, Act::Relu);
+    cur = g.conv_bn(&format!("{name}.project"), cur, out_c, 1, 1, 0);
+    if stride == 1 && in_c == out_c {
+        g.add_join(&format!("{name}.add"), &[cur, input])
+    } else {
+        cur
+    }
+}
+
+/// MnasNet-B1 at depth multiplier 1.0 (torchvision `mnasnet1_0`).
+pub fn mnasnet(classes: usize) -> Graph {
+    let mut g = Graph::new("mnasnet");
+    let x = g.input(3, 224, 224);
+    // Stem: conv 32 s2 → depthwise separable to 16.
+    let stem = g.conv_bn_act("stem.conv", x, 32, 3, 2, 1, Act::Relu);
+    let dw = g.dwconv_bn_act("stem.dw", stem, 3, 1, Act::Relu);
+    let mut cur = g.conv_bn("stem.project", dw, 16, 1, 1, 0);
+    let mut in_c = 16usize;
+    // (expand t, channels c, repeats n, stride s, kernel k)
+    let settings: [(usize, usize, usize, usize, usize); 6] = [
+        (3, 24, 3, 2, 3),
+        (3, 40, 3, 2, 5),
+        (6, 80, 3, 2, 5),
+        (6, 96, 2, 1, 3),
+        (6, 192, 4, 2, 5),
+        (6, 320, 1, 1, 3),
+    ];
+    let mut idx = 0usize;
+    for &(t, c, n, s, k) in &settings {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            cur = mbconv(&mut g, &format!("block{idx}"), cur, in_c, c, k, stride, t);
+            in_c = c;
+            idx += 1;
+        }
+    }
+    let head = g.conv_bn_act("head.conv", cur, 1280, 1, 1, 0, Act::Relu);
+    g.classifier(head, classes);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnasnet_params_match_torchvision() {
+        let g = mnasnet(1000);
+        // torchvision mnasnet1_0: 4.38M
+        let p = g.param_count().unwrap() as f64 / 1e6;
+        assert!((4.2..4.6).contains(&p), "params = {p}M");
+    }
+
+    #[test]
+    fn mixed_kernel_sizes_present() {
+        let g = mnasnet(1000);
+        let infos = g.conv_infos().unwrap();
+        let k5 = infos.iter().filter(|c| c.k == 5 && c.is_depthwise()).count();
+        let k3 = infos.iter().filter(|c| c.k == 3 && c.is_depthwise()).count();
+        assert_eq!(k5, 10); // stages with k=5: 3 + 3 + 4
+        assert_eq!(k3, 7); // stem dw + stages with k=3: 3 + 2 + 1
+    }
+
+    #[test]
+    fn final_spatial_is_7() {
+        let g = mnasnet(1000);
+        let shapes = g.infer_shapes().unwrap();
+        let head = g.nodes.iter().find(|n| n.name == "head.conv.act").unwrap().id;
+        assert_eq!(shapes[head].spatial(), 7);
+    }
+}

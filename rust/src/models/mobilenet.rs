@@ -1,0 +1,138 @@
+//! MobileNetV2 (Sandler et al., 2018), torchvision layout at 3×224×224.
+//! Part of the paper's profiling basis; also the subject of the Sec. 6.2
+//! 100-strategy topology experiment.
+
+use crate::ir::{Act, Graph, GraphBuilder, NodeId};
+
+/// Round channel counts to multiples of 8 as in the reference
+/// implementation (`_make_divisible`).
+pub fn make_divisible(v: f64, divisor: usize) -> usize {
+    let d = divisor as f64;
+    let new_v = ((v + d / 2.0) / d).floor() as usize * divisor;
+    let new_v = new_v.max(divisor);
+    if (new_v as f64) < 0.9 * v {
+        new_v + divisor
+    } else {
+        new_v
+    }
+}
+
+/// Inverted residual block: 1×1 expand → 3×3 depthwise (stride s) →
+/// 1×1 project (linear). Residual join when stride 1 and shapes match.
+fn inverted_residual(
+    g: &mut Graph,
+    name: &str,
+    input: NodeId,
+    in_c: usize,
+    out_c: usize,
+    stride: usize,
+    expand: usize,
+) -> NodeId {
+    let hidden = in_c * expand;
+    let mut cur = input;
+    if expand != 1 {
+        cur = g.conv_bn_act(&format!("{name}.expand"), cur, hidden, 1, 1, 0, Act::Relu6);
+    }
+    cur = g.dwconv_bn_act(&format!("{name}.dw"), cur, 3, stride, Act::Relu6);
+    cur = g.conv_bn(&format!("{name}.project"), cur, out_c, 1, 1, 0);
+    if stride == 1 && in_c == out_c {
+        g.add_join(&format!("{name}.add"), &[cur, input])
+    } else {
+        cur
+    }
+}
+
+/// MobileNetV2 with width multiplier 1.0.
+pub fn mobilenet_v2(classes: usize) -> Graph {
+    mobilenet_v2_width(classes, 1.0)
+}
+
+/// MobileNetV2 with an arbitrary width multiplier (used by ablations).
+pub fn mobilenet_v2_width(classes: usize, width: f64) -> Graph {
+    let mut g = Graph::new("mobilenetv2");
+    let x = g.input(3, 224, 224);
+    // (expand t, channels c, repeats n, stride s)
+    let settings: [(usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut in_c = make_divisible(32.0 * width, 8);
+    let mut cur = g.conv_bn_act("stem", x, in_c, 3, 2, 1, Act::Relu6);
+    let mut idx = 0usize;
+    for &(t, c, n, s) in &settings {
+        let out_c = make_divisible(c as f64 * width, 8);
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            cur = inverted_residual(
+                &mut g,
+                &format!("block{idx}"),
+                cur,
+                in_c,
+                out_c,
+                stride,
+                t,
+            );
+            in_c = out_c;
+            idx += 1;
+        }
+    }
+    let last = make_divisible((1280.0 * width).max(1280.0), 8);
+    let head = g.conv_bn_act("head.conv", cur, last, 1, 1, 0, Act::Relu6);
+    g.classifier(head, classes);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn make_divisible_matches_reference() {
+        assert_eq!(make_divisible(32.0, 8), 32);
+        assert_eq!(make_divisible(16.0, 8), 16);
+        // 18 rounds down to 16, but 16 < 0.9*18 so bumps to 24 (reference
+        // implementation behaviour).
+        assert_eq!(make_divisible(24.0 * 0.75, 8), 24);
+        assert_eq!(make_divisible(20.0, 8), 24);
+        assert_eq!(make_divisible(12.0, 8), 16); // rounds up, >= divisor
+    }
+
+    #[test]
+    fn mobilenetv2_params_match_torchvision() {
+        let g = mobilenet_v2(1000);
+        // torchvision: 3.50M
+        let p = g.param_count().unwrap() as f64 / 1e6;
+        assert!((3.3..3.7).contains(&p), "params = {p}M");
+        // 52 convs: stem + 17 blocks (16 with expand = 3 convs, first = 2) + head
+        assert_eq!(g.conv_infos().unwrap().len(), 52);
+    }
+
+    #[test]
+    fn depthwise_blocks_present() {
+        let g = mobilenet_v2(1000);
+        let infos = g.conv_infos().unwrap();
+        let dw = infos.iter().filter(|c| c.is_depthwise()).count();
+        assert_eq!(dw, 17);
+    }
+
+    #[test]
+    fn output_spatial_is_7() {
+        let g = mobilenet_v2(1000);
+        let shapes = g.infer_shapes().unwrap();
+        let head = g.nodes.iter().find(|n| n.name == "head.conv.act").unwrap().id;
+        assert_eq!(shapes[head].spatial(), 7);
+        assert_eq!(shapes[head].channels(), 1280);
+    }
+
+    #[test]
+    fn width_multiplier_scales_params() {
+        let p1 = mobilenet_v2_width(1000, 1.0).param_count().unwrap();
+        let p075 = mobilenet_v2_width(1000, 0.75).param_count().unwrap();
+        assert!(p075 < p1);
+    }
+}

@@ -1,0 +1,97 @@
+//! The network zoo: every architecture the paper profiles, evaluates on, or
+//! compares against, built as IR graphs at 3×224×224 (ILSVRC'12 geometry).
+//!
+//! | network | role in the paper |
+//! |---|---|
+//! | AlexNet | Sec. 6.1 training-set-size tuning only |
+//! | ResNet18, MobileNetV2, SqueezeNet | profiling basis (Figs. 3, 4) |
+//! | MnasNet | same-network eval (Fig. 3) + non-basis target (Fig. 4) |
+//! | ResNet50 | non-basis target (Fig. 4) + DNNMem comparison (Sec. 6.2.1) |
+//! | GoogLeNet | hardest non-basis target (Fig. 4) |
+//! | VGG16, NiN | related-work baselines ([5], [14]) |
+//!
+//! The elastic OFA-ResNet50 space lives in `crate::ofa`.
+
+mod alexnet;
+mod googlenet;
+mod mnasnet;
+mod mobilenet;
+mod resnet;
+mod squeezenet;
+mod vgg;
+
+pub use alexnet::alexnet;
+pub use googlenet::googlenet;
+pub use mnasnet::mnasnet;
+pub use mobilenet::{make_divisible, mobilenet_v2, mobilenet_v2_width};
+pub use resnet::{resnet18, resnet50};
+pub use squeezenet::squeezenet;
+pub use vgg::{nin, vgg16};
+
+use crate::ir::Graph;
+
+/// Names of all zoo networks, in a stable order.
+pub const ZOO: &[&str] = &[
+    "alexnet",
+    "resnet18",
+    "resnet50",
+    "mobilenetv2",
+    "squeezenet",
+    "mnasnet",
+    "googlenet",
+    "vgg16",
+    "nin",
+];
+
+/// Build a zoo network by name (1000 classes).
+pub fn by_name(name: &str) -> Option<Graph> {
+    Some(match name {
+        "alexnet" => alexnet(1000),
+        "resnet18" => resnet18(1000),
+        "resnet50" => resnet50(1000),
+        "mobilenetv2" => mobilenet_v2(1000),
+        "squeezenet" => squeezenet(1000),
+        "mnasnet" => mnasnet(1000),
+        "googlenet" => googlenet(1000),
+        "vgg16" => vgg16(1000),
+        "nin" => nin(1000),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn whole_zoo_builds_and_infers() {
+        for name in ZOO {
+            let g = by_name(name).unwrap();
+            let shapes = g.infer_shapes().unwrap_or_else(|e| {
+                panic!("{name} failed shape inference: {e}");
+            });
+            assert!(!shapes.is_empty());
+            assert!(!g.conv_infos().unwrap().is_empty(), "{name} has convs");
+            assert!(g.param_count().unwrap() > 100_000, "{name} param count");
+        }
+    }
+
+    #[test]
+    fn by_name_unknown_is_none() {
+        assert!(by_name("lenet").is_none());
+    }
+
+    #[test]
+    fn zoo_param_ordering_sane() {
+        // VGG16 > AlexNet > ResNet50 > ResNet18 > GoogLeNet > MnasNet >
+        // MobileNetV2 > SqueezeNet
+        let p = |n: &str| by_name(n).unwrap().param_count().unwrap();
+        assert!(p("vgg16") > p("alexnet"));
+        assert!(p("alexnet") > p("resnet50"));
+        assert!(p("resnet50") > p("resnet18"));
+        assert!(p("resnet18") > p("googlenet"));
+        assert!(p("googlenet") > p("mnasnet"));
+        assert!(p("mnasnet") > p("mobilenetv2"));
+        assert!(p("mobilenetv2") > p("squeezenet"));
+    }
+}

@@ -1,0 +1,151 @@
+//! ResNet-18 (basic blocks) and ResNet-50 (bottleneck blocks), He et al.
+//! 2016, torchvision layout at 3×224×224. ResNet18 is in the paper's
+//! profiling basis; ResNet50 tests basis generalisation (Fig. 4) and the
+//! DNNMem comparison (Sec. 6.2.1).
+
+use crate::ir::{Act, Graph, GraphBuilder, NodeId};
+
+/// One basic residual block (two 3×3 convs) with optional downsample.
+fn basic_block(
+    g: &mut Graph,
+    name: &str,
+    input: NodeId,
+    out_c: usize,
+    stride: usize,
+    downsample: bool,
+) -> NodeId {
+    let c1 = g.conv_bn_act(&format!("{name}.conv1"), input, out_c, 3, stride, 1, Act::Relu);
+    let c2 = g.conv_bn(&format!("{name}.conv2"), c1, out_c, 3, 1, 1);
+    let identity = if downsample {
+        g.conv_bn(&format!("{name}.downsample"), input, out_c, 1, stride, 0)
+    } else {
+        input
+    };
+    let j = g.add_join(&format!("{name}.add"), &[c2, identity]);
+    g.relu(&format!("{name}.relu"), j)
+}
+
+/// One bottleneck block (1×1 reduce, 3×3, 1×1 expand ×4).
+fn bottleneck_block(
+    g: &mut Graph,
+    name: &str,
+    input: NodeId,
+    mid_c: usize,
+    out_c: usize,
+    stride: usize,
+    downsample: bool,
+) -> NodeId {
+    let c1 = g.conv_bn_act(&format!("{name}.conv1"), input, mid_c, 1, 1, 0, Act::Relu);
+    let c2 = g.conv_bn_act(&format!("{name}.conv2"), c1, mid_c, 3, stride, 1, Act::Relu);
+    let c3 = g.conv_bn(&format!("{name}.conv3"), c2, out_c, 1, 1, 0);
+    let identity = if downsample {
+        g.conv_bn(&format!("{name}.downsample"), input, out_c, 1, stride, 0)
+    } else {
+        input
+    };
+    let j = g.add_join(&format!("{name}.add"), &[c3, identity]);
+    g.relu(&format!("{name}.relu"), j)
+}
+
+fn stem(g: &mut Graph) -> NodeId {
+    let x = g.input(3, 224, 224);
+    let c = g.conv_bn_act("conv1", x, 64, 7, 2, 3, Act::Relu);
+    g.maxpool("maxpool", c, 3, 2, 1)
+}
+
+/// ResNet-18: stages [2,2,2,2] of basic blocks, widths [64,128,256,512].
+pub fn resnet18(classes: usize) -> Graph {
+    let mut g = Graph::new("resnet18");
+    let mut cur = stem(&mut g);
+    let widths = [64usize, 128, 256, 512];
+    for (si, &w) in widths.iter().enumerate() {
+        for bi in 0..2 {
+            let name = format!("layer{}.{}", si + 1, bi);
+            let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+            let downsample = bi == 0 && si > 0;
+            cur = basic_block(&mut g, &name, cur, w, stride, downsample);
+        }
+    }
+    g.classifier(cur, classes);
+    g
+}
+
+/// ResNet-50: stages [3,4,6,3] of bottlenecks, output widths
+/// [256,512,1024,2048] with mid widths [64,128,256,512].
+pub fn resnet50(classes: usize) -> Graph {
+    let mut g = Graph::new("resnet50");
+    let mut cur = stem(&mut g);
+    let stages: [(usize, usize, usize); 4] = [
+        (3, 64, 256),
+        (4, 128, 512),
+        (6, 256, 1024),
+        (3, 512, 2048),
+    ];
+    for (si, &(blocks, mid, out)) in stages.iter().enumerate() {
+        for bi in 0..blocks {
+            let name = format!("layer{}.{}", si + 1, bi);
+            let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+            // First block of every stage changes the channel count, so it
+            // always needs a projection shortcut (including layer1.0).
+            let downsample = bi == 0;
+            cur = bottleneck_block(&mut g, &name, cur, mid, out, stride, downsample);
+        }
+    }
+    g.classifier(cur, classes);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_params_match_torchvision() {
+        let g = resnet18(1000);
+        // torchvision: 11.69M (trainable); our count adds BN running stats.
+        let p = g.param_count().unwrap() as f64 / 1e6;
+        assert!((11.5..12.0).contains(&p), "params = {p}M");
+        // 20 convs: 1 stem + 8 blocks * 2 + 3 downsamples
+        assert_eq!(g.conv_infos().unwrap().len(), 20);
+    }
+
+    #[test]
+    fn resnet50_params_match_torchvision() {
+        let g = resnet50(1000);
+        // torchvision: 25.56M
+        let p = g.param_count().unwrap() as f64 / 1e6;
+        assert!((25.2..26.2).contains(&p), "params = {p}M");
+        // 53 convs: 1 stem + 16 blocks * 3 + 4 downsamples
+        assert_eq!(g.conv_infos().unwrap().len(), 53);
+    }
+
+    #[test]
+    fn resnet18_stage_spatial_sizes() {
+        let g = resnet18(1000);
+        let shapes = g.infer_shapes().unwrap();
+        let by_name = |n: &str| {
+            shapes[g.nodes.iter().find(|x| x.name == n).unwrap().id]
+        };
+        assert_eq!(by_name("maxpool").spatial(), 56);
+        assert_eq!(by_name("layer1.1.relu").spatial(), 56);
+        assert_eq!(by_name("layer2.1.relu").spatial(), 28);
+        assert_eq!(by_name("layer3.1.relu").spatial(), 14);
+        assert_eq!(by_name("layer4.1.relu").spatial(), 7);
+        assert_eq!(by_name("layer4.1.relu").channels(), 512);
+    }
+
+    #[test]
+    fn resnet50_final_channels() {
+        let g = resnet50(1000);
+        let shapes = g.infer_shapes().unwrap();
+        let last_relu = g
+            .nodes
+            .iter()
+            .filter(|n| n.name.ends_with(".relu"))
+            .last()
+            .unwrap()
+            .id;
+        assert_eq!(shapes[last_relu].channels(), 2048);
+        assert_eq!(shapes[last_relu].spatial(), 7);
+    }
+}

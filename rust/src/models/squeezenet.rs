@@ -1,0 +1,90 @@
+//! SqueezeNet 1.0 (Iandola et al., 2016), torchvision layout at 3×224×224.
+//! Part of the paper's profiling basis; its Fire module shares the
+//! branch-and-concatenate structure with GoogLeNet's Inception (App. C).
+
+use crate::ir::{Graph, GraphBuilder, NodeId, Op};
+
+/// Fire module: squeeze 1×1 → relu → {expand 1×1, expand 3×3} → concat.
+fn fire(
+    g: &mut Graph,
+    name: &str,
+    input: NodeId,
+    squeeze: usize,
+    expand1: usize,
+    expand3: usize,
+) -> NodeId {
+    let s = g.conv(&format!("{name}.squeeze"), input, squeeze, 1, 1, 0);
+    let sr = g.relu(&format!("{name}.squeeze.relu"), s);
+    let e1 = g.conv(&format!("{name}.expand1x1"), sr, expand1, 1, 1, 0);
+    let e1r = g.relu(&format!("{name}.expand1x1.relu"), e1);
+    let e3 = g.conv(&format!("{name}.expand3x3"), sr, expand3, 3, 1, 1);
+    let e3r = g.relu(&format!("{name}.expand3x3.relu"), e3);
+    g.concat(&format!("{name}.concat"), &[e1r, e3r])
+}
+
+/// SqueezeNet v1.0.
+pub fn squeezenet(classes: usize) -> Graph {
+    let mut g = Graph::new("squeezenet");
+    let x = g.input(3, 224, 224);
+    let c1 = g.conv("features.0", x, 96, 7, 2, 0);
+    let r1 = g.relu("features.1", c1);
+    let p1 = g.maxpool_ceil("features.2", r1, 3, 2, 0);
+    let f2 = fire(&mut g, "fire2", p1, 16, 64, 64);
+    let f3 = fire(&mut g, "fire3", f2, 16, 64, 64);
+    let f4 = fire(&mut g, "fire4", f3, 32, 128, 128);
+    let p2 = g.maxpool_ceil("features.7", f4, 3, 2, 0);
+    let f5 = fire(&mut g, "fire5", p2, 32, 128, 128);
+    let f6 = fire(&mut g, "fire6", f5, 48, 192, 192);
+    let f7 = fire(&mut g, "fire7", f6, 48, 192, 192);
+    let f8 = fire(&mut g, "fire8", f7, 64, 256, 256);
+    let p3 = g.maxpool_ceil("features.12", f8, 3, 2, 0);
+    let f9 = fire(&mut g, "fire9", p3, 64, 256, 256);
+    // Classifier: dropout → final 1×1 conv to `classes` → relu → GAP.
+    let d = g.add("classifier.0", Op::Dropout(0.5), &[f9]);
+    let cf = g.conv("classifier.1", d, classes, 1, 1, 0);
+    let cr = g.relu("classifier.2", cf);
+    let gp = g.gap("classifier.3", cr);
+    g.add("classifier.flatten", Op::Flatten, &[gp]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn squeezenet_params_match_torchvision() {
+        let g = squeezenet(1000);
+        // torchvision squeezenet1_0: 1.248M
+        let p = g.param_count().unwrap() as f64 / 1e6;
+        assert!((1.15..1.35).contains(&p), "params = {p}M");
+        // 26 convs: stem + 8 fires * 3 + classifier
+        assert_eq!(g.conv_infos().unwrap().len(), 26);
+    }
+
+    #[test]
+    fn fire_concat_channels() {
+        let g = squeezenet(1000);
+        let shapes = g.infer_shapes().unwrap();
+        let f2 = g.nodes.iter().find(|n| n.name == "fire2.concat").unwrap().id;
+        assert_eq!(shapes[f2].channels(), 128);
+        let f9 = g.nodes.iter().find(|n| n.name == "fire9.concat").unwrap().id;
+        assert_eq!(shapes[f9].channels(), 512);
+    }
+
+    #[test]
+    fn output_is_class_vector() {
+        let g = squeezenet(1000);
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[g.output].numel(), 1000);
+    }
+
+    #[test]
+    fn ceil_mode_pool_sizes() {
+        // 224 -> conv k7 s2 -> 109 -> pool ceil k3 s2 -> 54
+        let g = squeezenet(1000);
+        let shapes = g.infer_shapes().unwrap();
+        let p1 = g.nodes.iter().find(|n| n.name == "features.2").unwrap().id;
+        assert_eq!(shapes[p1].spatial(), 54);
+    }
+}

@@ -1,0 +1,96 @@
+//! VGG-16 and NiN — networks used by the related work the paper compares
+//! against ([14] Augur profiles NIN/VGG; [5] DNNMem profiles VGG16), kept
+//! in the zoo for the baseline experiments and extra coverage.
+
+use crate::ir::{Act, Graph, GraphBuilder, NodeId, Op};
+
+/// VGG-16 (configuration D) with batch-norm.
+pub fn vgg16(classes: usize) -> Graph {
+    let mut g = Graph::new("vgg16");
+    let x = g.input(3, 224, 224);
+    let cfg: [&[usize]; 5] = [
+        &[64, 64],
+        &[128, 128],
+        &[256, 256, 256],
+        &[512, 512, 512],
+        &[512, 512, 512],
+    ];
+    let mut cur = x;
+    for (bi, block) in cfg.iter().enumerate() {
+        for (ci, &c) in block.iter().enumerate() {
+            cur = g.conv_bn_act(&format!("conv{}_{}", bi + 1, ci + 1), cur, c, 3, 1, 1, Act::Relu);
+        }
+        cur = g.maxpool(&format!("pool{}", bi + 1), cur, 2, 2, 0);
+    }
+    let f = g.add("flatten", Op::Flatten, &[cur]);
+    let l1 = g.add("fc1", Op::Linear { out: 4096, bias: true }, &[f]);
+    let r1 = g.add("fc1.relu", Op::Activation(Act::Relu), &[l1]);
+    let d1 = g.add("fc1.drop", Op::Dropout(0.5), &[r1]);
+    let l2 = g.add("fc2", Op::Linear { out: 4096, bias: true }, &[d1]);
+    let r2 = g.add("fc2.relu", Op::Activation(Act::Relu), &[l2]);
+    let d2 = g.add("fc2.drop", Op::Dropout(0.5), &[r2]);
+    g.add("fc3", Op::Linear { out: classes, bias: true }, &[d2]);
+    g
+}
+
+/// Network-in-Network (Lin et al., 2014), ImageNet variant.
+pub fn nin(classes: usize) -> Graph {
+    let mut g = Graph::new("nin");
+    let x = g.input(3, 224, 224);
+    let block = |g: &mut Graph, name: &str, input: NodeId, c: usize, k: usize, s: usize, p: usize| {
+        let c1 = g.conv(&format!("{name}.conv"), input, c, k, s, p);
+        let r1 = g.relu(&format!("{name}.relu"), c1);
+        let m1 = g.conv(&format!("{name}.cccp1"), r1, c, 1, 1, 0);
+        let mr1 = g.relu(&format!("{name}.cccp1.relu"), m1);
+        let m2 = g.conv(&format!("{name}.cccp2"), mr1, c, 1, 1, 0);
+        g.relu(&format!("{name}.cccp2.relu"), m2)
+    };
+    let b1 = block(&mut g, "block1", x, 96, 11, 4, 0);
+    let p1 = g.maxpool_ceil("pool1", b1, 3, 2, 0);
+    let b2 = block(&mut g, "block2", p1, 256, 5, 1, 2);
+    let p2 = g.maxpool_ceil("pool2", b2, 3, 2, 0);
+    let b3 = block(&mut g, "block3", p2, 384, 3, 1, 1);
+    let p3 = g.maxpool_ceil("pool3", b3, 3, 2, 0);
+    let d = g.add("dropout", Op::Dropout(0.5), &[p3]);
+    // Final block maps straight to class scores, then GAP.
+    let c4 = g.conv("block4.conv", d, 1024, 3, 1, 1);
+    let r4 = g.relu("block4.relu", c4);
+    let m4 = g.conv("block4.cccp1", r4, 1024, 1, 1, 0);
+    let mr4 = g.relu("block4.cccp1.relu", m4);
+    let cls = g.conv("block4.cccp2", mr4, classes, 1, 1, 0);
+    let rc = g.relu("block4.cccp2.relu", cls);
+    let gp = g.gap("gap", rc);
+    g.add("flatten", Op::Flatten, &[gp]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_params_match_torchvision() {
+        let g = vgg16(1000);
+        // torchvision vgg16_bn: 138.37M
+        let p = g.param_count().unwrap() as f64 / 1e6;
+        assert!((137.0..140.0).contains(&p), "params = {p}M");
+        assert_eq!(g.conv_infos().unwrap().len(), 13);
+    }
+
+    #[test]
+    fn vgg16_flatten_is_25088() {
+        let g = vgg16(1000);
+        let shapes = g.infer_shapes().unwrap();
+        let f = g.nodes.iter().find(|n| n.name == "flatten").unwrap().id;
+        assert_eq!(shapes[f].numel(), 512 * 7 * 7);
+    }
+
+    #[test]
+    fn nin_output_classes() {
+        let g = nin(1000);
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[g.output].numel(), 1000);
+        // 3 blocks * 3 convs + final block (conv + 2 cccp)
+        assert_eq!(g.conv_infos().unwrap().len(), 12);
+    }
+}

@@ -1,0 +1,261 @@
+//! Evolutionary sub-network search under hard resource constraints —
+//! Sec. 6.4: "The ES algorithm starts with a population of 100
+//! sub-networks and runs 500 iterations ... at least 50,000 sub-networks
+//! sampled", every candidate requiring estimates of Γ (training memory),
+//! γ (inference memory) and φ (inference latency).
+//!
+//! The predictor is pluggable so the experiment can compare: (a) the naive
+//! approach — on-device profiling at 20 s/sample — and (b) the paper's
+//! approach — random-forest inference (natively or through the XLA
+//! artifact).
+
+use std::time::{Duration, Instant};
+
+use crate::ir::Graph;
+use crate::util::rng::Pcg64;
+
+use super::accuracy::{initial_accuracy, Subset};
+use super::supernet::SubnetConfig;
+
+/// Hard constraints on the three attributes (MB, MB, ms).
+#[derive(Clone, Copy, Debug)]
+pub struct Constraints {
+    /// Training memory Γ at the retraining batch size.
+    pub gamma_train_mb: f64,
+    /// Inference memory γ at batch 1.
+    pub gamma_infer_mb: f64,
+    /// Inference latency φ at batch 1.
+    pub phi_infer_ms: f64,
+}
+
+impl Constraints {
+    pub fn unconstrained() -> Constraints {
+        Constraints {
+            gamma_train_mb: f64::INFINITY,
+            gamma_infer_mb: f64::INFINITY,
+            phi_infer_ms: f64::INFINITY,
+        }
+    }
+}
+
+/// Attribute estimates for one candidate.
+#[derive(Clone, Copy, Debug)]
+pub struct Attributes {
+    pub gamma_train_mb: f64,
+    pub gamma_infer_mb: f64,
+    pub phi_infer_ms: f64,
+}
+
+impl Attributes {
+    pub fn satisfies(&self, c: &Constraints) -> bool {
+        self.gamma_train_mb <= c.gamma_train_mb
+            && self.gamma_infer_mb <= c.gamma_infer_mb
+            && self.phi_infer_ms <= c.phi_infer_ms
+    }
+}
+
+/// ES hyperparameters (paper defaults).
+#[derive(Clone, Debug)]
+pub struct EsConfig {
+    pub population: usize,
+    pub iterations: usize,
+    pub parent_fraction: f64,
+    pub mutation_prob: f64,
+    pub seed: u64,
+}
+
+impl Default for EsConfig {
+    fn default() -> Self {
+        EsConfig {
+            population: 100,
+            iterations: 500,
+            parent_fraction: 0.25,
+            mutation_prob: 0.25,
+            seed: 0x0fa,
+        }
+    }
+}
+
+/// Search outcome.
+#[derive(Clone, Debug)]
+pub struct EsResult {
+    pub best: SubnetConfig,
+    pub best_fitness: f64,
+    pub best_attrs: Attributes,
+    /// Total candidates whose attributes were estimated (includes
+    /// constraint-rejected ones — each costs one prediction).
+    pub samples: usize,
+    pub elapsed: Duration,
+}
+
+/// Run the evolutionary search.
+///
+/// * `predict` estimates (Γ, γ, φ) for a candidate graph — the cost centre
+///   the paper's models accelerate 200×.
+/// * `subset` selects the accuracy-proxy fitness target.
+pub fn evolutionary_search(
+    constraints: &Constraints,
+    cfg: &EsConfig,
+    subset: Subset,
+    mut predict: impl FnMut(&SubnetConfig, &Graph) -> Attributes,
+) -> EsResult {
+    let started = Instant::now();
+    let mut rng = Pcg64::new(cfg.seed);
+    let mut samples = 0usize;
+
+    let evaluate = |c: &SubnetConfig,
+                        samples: &mut usize,
+                        predict: &mut dyn FnMut(&SubnetConfig, &Graph) -> Attributes|
+     -> Option<(f64, Attributes)> {
+        let g = c.build();
+        *samples += 1;
+        let attrs = predict(c, &g);
+        if !attrs.satisfies(constraints) {
+            return None;
+        }
+        Some((initial_accuracy(c, &g, subset), attrs))
+    };
+
+    // Seed population: rejection-sample valid candidates (bounded tries).
+    let mut population: Vec<(SubnetConfig, f64, Attributes)> = Vec::new();
+    let mut tries = 0usize;
+    while population.len() < cfg.population && tries < cfg.population * 60 {
+        tries += 1;
+        let c = SubnetConfig::sample(&mut rng);
+        if let Some((fit, attrs)) = evaluate(&c, &mut samples, &mut predict) {
+            population.push((c, fit, attrs));
+        }
+    }
+    assert!(
+        !population.is_empty(),
+        "constraints admit no sub-network (tried {tries} samples)"
+    );
+
+    let n_parents = ((cfg.population as f64 * cfg.parent_fraction) as usize).max(2);
+    for _iter in 0..cfg.iterations {
+        // Keep the fittest parents.
+        population.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        population.truncate(n_parents.min(population.len()));
+        // Refill with mutations + crossovers of parents.
+        while population.len() < cfg.population {
+            let a = rng.gen_range(n_parents.min(population.len()));
+            let child = if rng.chance(0.5) {
+                population[a].0.mutate(&mut rng, cfg.mutation_prob)
+            } else {
+                let b = rng.gen_range(n_parents.min(population.len()));
+                let crossed = population[a].0.crossover(&population[b].0, &mut rng);
+                crossed.mutate(&mut rng, cfg.mutation_prob * 0.5)
+            };
+            if let Some((fit, attrs)) = evaluate(&child, &mut samples, &mut predict) {
+                population.push((child, fit, attrs));
+            }
+            // Rejection may loop; bail out of pathological constraint sets.
+            if samples > cfg.population * (cfg.iterations + 2) * 4 {
+                break;
+            }
+        }
+    }
+
+    population.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let (best, best_fitness, best_attrs) = population[0].clone();
+    EsResult {
+        best,
+        best_fitness,
+        best_attrs,
+        samples,
+        elapsed: started.elapsed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Simulator;
+
+    fn sim_predict(sim: &Simulator) -> impl FnMut(&SubnetConfig, &Graph) -> Attributes + '_ {
+        move |_c, g| {
+            let t = sim.train_step(g, 32, None).unwrap();
+            let i = sim.inference(g, 1, None).unwrap();
+            Attributes {
+                gamma_train_mb: t.gamma_mb,
+                gamma_infer_mb: i.gamma_mb,
+                phi_infer_ms: i.phi_ms,
+            }
+        }
+    }
+
+    fn small_cfg(seed: u64) -> EsConfig {
+        EsConfig {
+            population: 12,
+            iterations: 6,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn unconstrained_search_prefers_capacity() {
+        let sim = Simulator::tx2();
+        let r = evolutionary_search(
+            &Constraints::unconstrained(),
+            &small_cfg(1),
+            Subset::City,
+            sim_predict(&sim),
+        );
+        // Best fitness should approach the MAX ceiling (82.0).
+        assert!(r.best_fitness > 80.0, "fitness {}", r.best_fitness);
+        // samples = initial population + iterations × (pop − parents)
+        assert!(r.samples >= 12 + 6 * (12 - 3), "samples = {}", r.samples);
+    }
+
+    #[test]
+    fn constraints_are_respected() {
+        let sim = Simulator::tx2();
+        let cons = Constraints {
+            gamma_train_mb: 4200.0,
+            gamma_infer_mb: 1900.0,
+            phi_infer_ms: 60.0,
+        };
+        let r = evolutionary_search(&cons, &small_cfg(2), Subset::OffRoad, sim_predict(&sim));
+        assert!(r.best_attrs.satisfies(&cons), "{:?}", r.best_attrs);
+        // Tighter constraints → smaller best than unconstrained MAX.
+        let unc = evolutionary_search(
+            &Constraints::unconstrained(),
+            &small_cfg(2),
+            Subset::OffRoad,
+            sim_predict(&sim),
+        );
+        assert!(r.best_attrs.gamma_train_mb <= unc.best_attrs.gamma_train_mb + 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "constraints admit no sub-network")]
+    fn impossible_constraints_panic() {
+        let sim = Simulator::tx2();
+        let cons = Constraints {
+            gamma_train_mb: 1.0,
+            gamma_infer_mb: 1.0,
+            phi_infer_ms: 0.001,
+        };
+        evolutionary_search(&cons, &small_cfg(3), Subset::City, sim_predict(&sim));
+    }
+
+    #[test]
+    fn search_is_deterministic_given_seed() {
+        let sim = Simulator::tx2();
+        let a = evolutionary_search(
+            &Constraints::unconstrained(),
+            &small_cfg(5),
+            Subset::Motorway,
+            sim_predict(&sim),
+        );
+        let b = evolutionary_search(
+            &Constraints::unconstrained(),
+            &small_cfg(5),
+            Subset::Motorway,
+            sim_predict(&sim),
+        );
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.samples, b.samples);
+    }
+}

@@ -1,0 +1,12 @@
+//! The Once-For-All case study substrate (Sec. 6.4): an elastic
+//! OFA-ResNet50 architecture space, a documented synthetic accuracy proxy,
+//! and the constrained evolutionary search whose per-candidate attribute
+//! estimation is the hot path the paper's models accelerate ~200×.
+
+pub mod accuracy;
+pub mod evolution;
+pub mod supernet;
+
+pub use accuracy::{capacity, initial_accuracy, retrained_accuracy, Subset, ALL_SUBSETS};
+pub use evolution::{evolutionary_search, Attributes, Constraints, EsConfig, EsResult};
+pub use supernet::{SubnetConfig, BASE_DEPTHS, EXPAND_CHOICES, WIDTH_CHOICES};

@@ -1,0 +1,221 @@
+//! Elastic OFA-ResNet50 architecture space (Cai et al., ICLR 2020 — the
+//! paper's [3]). "The OFA network used is OFAResNet50 ... has the same
+//! building blocks as ResNet50, but a slightly different connectivity"
+//! (Sec. 6.4). We reproduce the *architecture space* — elastic depth,
+//! expand ratio and width multiplier per stage — which is what the search
+//! and performance-prediction experiments need (weights are not required;
+//! accuracy comes from the documented proxy in `accuracy.rs`).
+
+use crate::ir::{Act, Graph, GraphBuilder, NodeId};
+use crate::models::make_divisible;
+use crate::util::rng::Pcg64;
+
+/// Width-multiplier choices.
+pub const WIDTH_CHOICES: [f64; 3] = [0.65, 0.8, 1.0];
+/// Bottleneck expand-ratio choices (mid channels = width × expand).
+pub const EXPAND_CHOICES: [f64; 3] = [0.20, 0.25, 0.35];
+/// Base (maximum) blocks per stage.
+pub const BASE_DEPTHS: [usize; 4] = [3, 4, 6, 3];
+/// Minimum blocks per stage.
+pub const MIN_DEPTH: usize = 2;
+/// Base stage output widths.
+const STAGE_WIDTHS: [usize; 4] = [256, 512, 1024, 2048];
+
+/// One sub-network configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SubnetConfig {
+    /// Blocks per stage, `MIN_DEPTH ..= BASE_DEPTHS[i]`.
+    pub depth: [usize; 4],
+    /// Expand-ratio index per stage (into EXPAND_CHOICES).
+    pub expand: [usize; 4],
+    /// Global width-multiplier index (into WIDTH_CHOICES).
+    pub width: usize,
+}
+
+impl SubnetConfig {
+    /// The largest extractable sub-network (Table 2 "MAX").
+    pub fn max() -> SubnetConfig {
+        SubnetConfig {
+            depth: BASE_DEPTHS,
+            expand: [2; 4],
+            width: 2,
+        }
+    }
+
+    /// The smallest extractable sub-network (Table 2 "MIN").
+    pub fn min() -> SubnetConfig {
+        SubnetConfig {
+            depth: [MIN_DEPTH; 4],
+            expand: [0; 4],
+            width: 0,
+        }
+    }
+
+    /// Uniform random configuration.
+    pub fn sample(rng: &mut Pcg64) -> SubnetConfig {
+        let mut depth = [0usize; 4];
+        let mut expand = [0usize; 4];
+        for i in 0..4 {
+            depth[i] = MIN_DEPTH + rng.gen_range(BASE_DEPTHS[i] - MIN_DEPTH + 1);
+            expand[i] = rng.gen_range(EXPAND_CHOICES.len());
+        }
+        SubnetConfig {
+            depth,
+            expand,
+            width: rng.gen_range(WIDTH_CHOICES.len()),
+        }
+    }
+
+    /// Mutate each gene independently with probability `p`.
+    pub fn mutate(&self, rng: &mut Pcg64, p: f64) -> SubnetConfig {
+        let mut out = *self;
+        for i in 0..4 {
+            if rng.chance(p) {
+                out.depth[i] = MIN_DEPTH + rng.gen_range(BASE_DEPTHS[i] - MIN_DEPTH + 1);
+            }
+            if rng.chance(p) {
+                out.expand[i] = rng.gen_range(EXPAND_CHOICES.len());
+            }
+        }
+        if rng.chance(p) {
+            out.width = rng.gen_range(WIDTH_CHOICES.len());
+        }
+        out
+    }
+
+    /// Uniform crossover.
+    pub fn crossover(&self, other: &SubnetConfig, rng: &mut Pcg64) -> SubnetConfig {
+        let mut out = *self;
+        for i in 0..4 {
+            if rng.chance(0.5) {
+                out.depth[i] = other.depth[i];
+            }
+            if rng.chance(0.5) {
+                out.expand[i] = other.expand[i];
+            }
+        }
+        if rng.chance(0.5) {
+            out.width = other.width;
+        }
+        out
+    }
+
+    /// Build the sub-network IR graph (ImageNet geometry, 1000 classes).
+    pub fn build(&self) -> Graph {
+        let w_mult = WIDTH_CHOICES[self.width];
+        let mut g = Graph::new(format!("ofa-resnet50-{self:?}"));
+        let x = g.input(3, 224, 224);
+        // OFA-ResNet50 stem: two 3x3 convs instead of one 7x7 ("slightly
+        // different connectivity" vs plain ResNet50).
+        let stem_w = make_divisible(64.0 * w_mult, 8);
+        let s1 = g.conv_bn_act("stem.0", x, stem_w, 3, 2, 1, Act::Relu);
+        let s2 = g.conv_bn_act("stem.1", s1, stem_w, 3, 1, 1, Act::Relu);
+        let mut cur = g.maxpool("stem.pool", s2, 3, 2, 1);
+        for (si, &base_blocks) in BASE_DEPTHS.iter().enumerate() {
+            let blocks = self.depth[si].min(base_blocks);
+            let out_c = make_divisible(STAGE_WIDTHS[si] as f64 * w_mult, 8);
+            let mid_c = make_divisible(out_c as f64 * EXPAND_CHOICES[self.expand[si]], 8);
+            for bi in 0..blocks {
+                let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+                let name = format!("stage{si}.block{bi}");
+                cur = bottleneck(&mut g, &name, cur, mid_c, out_c, stride, bi == 0);
+            }
+        }
+        g.classifier(cur, 1000);
+        g
+    }
+}
+
+fn bottleneck(
+    g: &mut Graph,
+    name: &str,
+    input: NodeId,
+    mid: usize,
+    out: usize,
+    stride: usize,
+    project: bool,
+) -> NodeId {
+    let c1 = g.conv_bn_act(&format!("{name}.conv1"), input, mid, 1, 1, 0, Act::Relu);
+    let c2 = g.conv_bn_act(&format!("{name}.conv2"), c1, mid, 3, stride, 1, Act::Relu);
+    let c3 = g.conv_bn(&format!("{name}.conv3"), c2, out, 1, 1, 0);
+    let identity = if project {
+        g.conv_bn(&format!("{name}.proj"), input, out, 1, stride, 0)
+    } else {
+        input
+    };
+    let j = g.add_join(&format!("{name}.add"), &[c3, identity]);
+    g.relu(&format!("{name}.relu"), j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_much_larger_than_min() {
+        let max = SubnetConfig::max().build();
+        let min = SubnetConfig::min().build();
+        let pmax = max.model_size_mb().unwrap();
+        let pmin = min.model_size_mb().unwrap();
+        // Table 2: 192 MB vs 26 MB (7.4x). Our space should give >= 3x.
+        assert!(pmax / pmin > 3.0, "MAX {pmax:.0}MB MIN {pmin:.0}MB");
+        assert!(pmax > 50.0 && pmax < 300.0, "MAX size {pmax:.0}MB");
+    }
+
+    #[test]
+    fn random_samples_are_valid_and_diverse() {
+        let mut rng = Pcg64::new(1);
+        let mut sizes = Vec::new();
+        for _ in 0..30 {
+            let c = SubnetConfig::sample(&mut rng);
+            let g = c.build();
+            g.infer_shapes().unwrap();
+            sizes.push(g.param_count().unwrap());
+        }
+        sizes.sort_unstable();
+        assert!(sizes[29] as f64 / sizes[0] as f64 > 1.5, "no diversity");
+    }
+
+    #[test]
+    fn mutation_stays_in_bounds() {
+        let mut rng = Pcg64::new(2);
+        let mut c = SubnetConfig::max();
+        for _ in 0..200 {
+            c = c.mutate(&mut rng, 0.3);
+            for i in 0..4 {
+                assert!(c.depth[i] >= MIN_DEPTH && c.depth[i] <= BASE_DEPTHS[i]);
+                assert!(c.expand[i] < EXPAND_CHOICES.len());
+            }
+            assert!(c.width < WIDTH_CHOICES.len());
+        }
+    }
+
+    #[test]
+    fn crossover_mixes_genes() {
+        let mut rng = Pcg64::new(3);
+        let a = SubnetConfig::max();
+        let b = SubnetConfig::min();
+        let mut saw_a = false;
+        let mut saw_b = false;
+        for _ in 0..50 {
+            let c = a.crossover(&b, &mut rng);
+            if c.depth[0] == a.depth[0] {
+                saw_a = true;
+            }
+            if c.depth[0] == b.depth[0] {
+                saw_b = true;
+            }
+        }
+        assert!(saw_a && saw_b);
+    }
+
+    #[test]
+    fn same_building_blocks_as_resnet50() {
+        // The subnet uses 1x1/3x3/1x1 bottlenecks like ResNet50.
+        let g = SubnetConfig::max().build();
+        let infos = g.conv_infos().unwrap();
+        assert!(infos.iter().any(|c| c.k == 3));
+        assert!(infos.iter().any(|c| c.k == 1));
+        assert!(infos.iter().all(|c| c.g == 1));
+    }
+}

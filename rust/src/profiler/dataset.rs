@@ -1,0 +1,227 @@
+//! Profiled datasets: (feature vector, Γ, Φ) rows with provenance, JSON
+//! and CSV persistence, and train-matrix extraction.
+
+use crate::features::feature_names;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// One profiled datapoint — an entire network's training step.
+#[derive(Clone, Debug)]
+pub struct ProfilePoint {
+    pub network: String,
+    pub strategy: String,
+    /// Pruning level in [0,1).
+    pub level: f64,
+    pub bs: usize,
+    /// Analytical features (`crate::features::NUM_FEATURES` columns).
+    pub features: Vec<f64>,
+    /// Measured training memory, MB.
+    pub gamma_mb: f64,
+    /// Measured mini-batch latency, ms.
+    pub phi_ms: f64,
+}
+
+/// A collection of profile points.
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    pub points: Vec<ProfilePoint>,
+}
+
+impl Dataset {
+    pub fn new(points: Vec<ProfilePoint>) -> Self {
+        Dataset { points }
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Merge another dataset into this one.
+    pub fn extend(&mut self, other: Dataset) {
+        self.points.extend(other.points);
+    }
+
+    /// Feature matrix (row-major).
+    pub fn x(&self) -> Vec<Vec<f64>> {
+        self.points.iter().map(|p| p.features.clone()).collect()
+    }
+
+    /// Γ targets.
+    pub fn y_gamma(&self) -> Vec<f64> {
+        self.points.iter().map(|p| p.gamma_mb).collect()
+    }
+
+    /// Φ targets.
+    pub fn y_phi(&self) -> Vec<f64> {
+        self.points.iter().map(|p| p.phi_ms).collect()
+    }
+
+    /// Filter by predicate.
+    pub fn filter(&self, f: impl Fn(&ProfilePoint) -> bool) -> Dataset {
+        Dataset::new(self.points.iter().filter(|p| f(p)).cloned().collect())
+    }
+
+    // ---------- persistence ----------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "feature_names",
+                Json::arr_str(&feature_names()),
+            ),
+            (
+                "points",
+                Json::Arr(
+                    self.points
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("network", Json::Str(p.network.clone())),
+                                ("strategy", Json::Str(p.strategy.clone())),
+                                ("level", Json::Num(p.level)),
+                                ("bs", Json::Num(p.bs as f64)),
+                                ("features", Json::arr_f64(&p.features)),
+                                ("gamma_mb", Json::Num(p.gamma_mb)),
+                                ("phi_ms", Json::Num(p.phi_ms)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Dataset, String> {
+        let points_j = j.get("points").and_then(Json::as_arr).ok_or("missing points")?;
+        let mut points = Vec::with_capacity(points_j.len());
+        for pj in points_j {
+            points.push(ProfilePoint {
+                network: pj
+                    .get("network")
+                    .and_then(Json::as_str)
+                    .ok_or("network")?
+                    .to_string(),
+                strategy: pj
+                    .get("strategy")
+                    .and_then(Json::as_str)
+                    .ok_or("strategy")?
+                    .to_string(),
+                level: pj.get("level").and_then(Json::as_f64).ok_or("level")?,
+                bs: pj.get("bs").and_then(Json::as_usize).ok_or("bs")?,
+                features: pj
+                    .get("features")
+                    .and_then(Json::f64_vec)
+                    .ok_or("features")?,
+                gamma_mb: pj.get("gamma_mb").and_then(Json::as_f64).ok_or("gamma")?,
+                phi_ms: pj.get("phi_ms").and_then(Json::as_f64).ok_or("phi")?,
+            });
+        }
+        Ok(Dataset { points })
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    pub fn load(path: &Path) -> Result<Dataset, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// CSV dump (header + rows) for external analysis / plotting.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str("network,strategy,level,bs,gamma_mb,phi_ms");
+        for n in feature_names() {
+            out.push(',');
+            out.push_str(&n);
+        }
+        out.push('\n');
+        for p in &self.points {
+            out.push_str(&format!(
+                "{},{},{},{},{},{}",
+                p.network, p.strategy, p.level, p.bs, p.gamma_mb, p.phi_ms
+            ));
+            for f in &p.features {
+                out.push_str(&format!(",{f}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::NUM_FEATURES;
+
+    fn point(net: &str, bs: usize, g: f64) -> ProfilePoint {
+        ProfilePoint {
+            network: net.into(),
+            strategy: "random".into(),
+            level: 0.3,
+            bs,
+            features: vec![1.0; NUM_FEATURES],
+            gamma_mb: g,
+            phi_ms: g / 2.0,
+        }
+    }
+
+    #[test]
+    fn xy_extraction() {
+        let ds = Dataset::new(vec![point("a", 2, 100.0), point("b", 4, 200.0)]);
+        assert_eq!(ds.x().len(), 2);
+        assert_eq!(ds.y_gamma(), vec![100.0, 200.0]);
+        assert_eq!(ds.y_phi(), vec![50.0, 100.0]);
+    }
+
+    #[test]
+    fn filter_by_network() {
+        let ds = Dataset::new(vec![point("a", 2, 1.0), point("b", 2, 2.0)]);
+        let only_a = ds.filter(|p| p.network == "a");
+        assert_eq!(only_a.len(), 1);
+        assert_eq!(only_a.points[0].gamma_mb, 1.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let ds = Dataset::new(vec![point("net", 16, 1234.5)]);
+        let j = ds.to_json().to_string();
+        let back = Dataset::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.len(), 1);
+        let p = &back.points[0];
+        assert_eq!(p.network, "net");
+        assert_eq!(p.bs, 16);
+        assert!((p.gamma_mb - 1234.5).abs() < 1e-9);
+        assert_eq!(p.features.len(), NUM_FEATURES);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let ds = Dataset::new(vec![point("x", 8, 42.0)]);
+        let dir = std::env::temp_dir().join("perf4sight-test-ds");
+        let path = dir.join("ds.json");
+        ds.save(&path).unwrap();
+        let back = Dataset::load(&path).unwrap();
+        assert_eq!(back.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let ds = Dataset::new(vec![point("a", 2, 1.0)]);
+        let csv = ds.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("network,strategy,level,bs"));
+        assert_eq!(lines[0].split(',').count(), 6 + NUM_FEATURES);
+    }
+}

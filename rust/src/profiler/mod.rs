@@ -1,0 +1,215 @@
+//! Network-wise profiling (the paper's Sec. 5.1): each datapoint is the
+//! *entire network's* training step — never an isolated layer — measured on
+//! the (simulated) target device across pruning levels, pruning strategies
+//! and batch sizes, paired with the analytical feature vector.
+
+pub mod dataset;
+
+pub use dataset::{Dataset, ProfilePoint};
+
+use crate::device::Simulator;
+use crate::features::network_features;
+use crate::ir::Graph;
+use crate::pruning::{prune, Strategy};
+use crate::util::rng::{hash_seed, Pcg64};
+
+/// The paper's 25 profiled batch sizes (App. A): powers of two to 64, then
+/// every 10 up to 256.
+pub const PAPER_BATCH_SIZES: [usize; 25] = [
+    2, 4, 8, 16, 32, 64, 70, 80, 90, 100, 110, 120, 128, 140, 150, 160, 170, 180, 190, 200,
+    210, 220, 230, 240, 256,
+];
+
+/// The paper's training-set pruning levels (Sec. 6.1): {0, 30, 50, 70, 90}%.
+pub const TRAIN_LEVELS: [f64; 5] = [0.0, 0.30, 0.50, 0.70, 0.90];
+
+/// All levels {5x | x ∈ [0, 18]}%.
+pub fn all_levels() -> Vec<f64> {
+    (0..=18).map(|x| x as f64 * 0.05).collect()
+}
+
+/// Test levels: all levels not in the training set.
+pub fn test_levels() -> Vec<f64> {
+    all_levels()
+        .into_iter()
+        .filter(|l| !TRAIN_LEVELS.iter().any(|t| (t - l).abs() < 1e-9))
+        .collect()
+}
+
+/// Profiling job description.
+#[derive(Clone, Debug)]
+pub struct ProfileJob<'a> {
+    pub network: &'a str,
+    pub graph: &'a Graph,
+    pub strategy: Strategy,
+    pub levels: &'a [f64],
+    pub batch_sizes: &'a [usize],
+    /// Noisy measurements averaged per datapoint (the paper averages
+    /// multiple runs; we use 3).
+    pub runs: usize,
+    /// Base seed; per-(level) streams are derived from it and the network
+    /// name, so datasets are exactly reproducible.
+    pub seed: u64,
+}
+
+impl<'a> ProfileJob<'a> {
+    pub fn new(network: &'a str, graph: &'a Graph) -> Self {
+        ProfileJob {
+            network,
+            graph,
+            strategy: Strategy::Random,
+            levels: &TRAIN_LEVELS,
+            batch_sizes: &PAPER_BATCH_SIZES,
+            runs: 3,
+            seed: 0x9e1f,
+        }
+    }
+}
+
+/// Profile a network per the job spec: for every (level, bs), prune,
+/// extract features, and average `runs` noisy simulated measurements.
+/// Parallelised over pruning levels with scoped threads.
+pub fn profile(sim: &Simulator, job: &ProfileJob) -> Dataset {
+    let mut points: Vec<ProfilePoint> = Vec::new();
+    let results: Vec<Vec<ProfilePoint>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = job
+            .levels
+            .iter()
+            .map(|&level| {
+                let sim = sim.clone();
+                let job = job.clone();
+                scope.spawn(move || profile_one_level(&sim, &job, level))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for r in results {
+        points.extend(r);
+    }
+    Dataset::new(points)
+}
+
+fn profile_one_level(sim: &Simulator, job: &ProfileJob, level: f64) -> Vec<ProfilePoint> {
+    let stream = hash_seed(&format!(
+        "{}/{}/{level:.3}",
+        job.network,
+        job.strategy.name()
+    ));
+    let mut rng = Pcg64::with_stream(job.seed, stream);
+    let pruned = prune(job.graph, job.strategy, level, &mut rng);
+    let mut out = Vec::with_capacity(job.batch_sizes.len());
+    for &bs in job.batch_sizes {
+        let features = network_features(&pruned, bs).expect("valid pruned graph");
+        let mut gamma = 0.0;
+        let mut phi = 0.0;
+        for _ in 0..job.runs.max(1) {
+            let m = sim
+                .train_step(&pruned, bs, Some(&mut rng))
+                .expect("simulation");
+            gamma += m.gamma_mb;
+            phi += m.phi_ms;
+        }
+        let runs = job.runs.max(1) as f64;
+        out.push(ProfilePoint {
+            network: job.network.to_string(),
+            strategy: job.strategy.name(),
+            level,
+            bs,
+            features,
+            gamma_mb: gamma / runs,
+            phi_ms: phi / runs,
+        });
+    }
+    out
+}
+
+/// Convenience: profile one network at the paper's train/test split.
+/// Returns `(train, test)` datasets using the given strategies.
+pub fn train_test_split(
+    sim: &Simulator,
+    network: &str,
+    graph: &Graph,
+    test_strategy: Strategy,
+    seed: u64,
+) -> (Dataset, Dataset) {
+    let train_job = ProfileJob {
+        strategy: Strategy::Random,
+        levels: &TRAIN_LEVELS,
+        seed,
+        ..ProfileJob::new(network, graph)
+    };
+    let levels = test_levels();
+    let test_job = ProfileJob {
+        strategy: test_strategy,
+        levels: &levels,
+        seed: seed ^ 0xdead_beef,
+        ..ProfileJob::new(network, graph)
+    };
+    (profile(sim, &train_job), profile(sim, &test_job))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn paper_constants() {
+        assert_eq!(PAPER_BATCH_SIZES.len(), 25);
+        assert_eq!(all_levels().len(), 19);
+        assert_eq!(test_levels().len(), 14);
+        assert!((all_levels()[18] - 0.90).abs() < 1e-12);
+    }
+
+    #[test]
+    fn profile_produces_grid() {
+        let sim = Simulator::tx2();
+        let g = models::squeezenet(1000);
+        let job = ProfileJob {
+            levels: &[0.0, 0.5],
+            batch_sizes: &[4, 32],
+            runs: 2,
+            ..ProfileJob::new("squeezenet", &g)
+        };
+        let ds = profile(&sim, &job);
+        assert_eq!(ds.points.len(), 4);
+        assert!(ds.points.iter().all(|p| p.gamma_mb > 0.0 && p.phi_ms > 0.0));
+        // level-0 bs-32 should consume more than level-0.5 bs-32
+        let find = |lvl: f64, bs: usize| {
+            ds.points
+                .iter()
+                .find(|p| (p.level - lvl).abs() < 1e-9 && p.bs == bs)
+                .unwrap()
+        };
+        assert!(find(0.0, 32).gamma_mb > find(0.5, 32).gamma_mb);
+    }
+
+    #[test]
+    fn profiling_is_reproducible() {
+        let sim = Simulator::tx2();
+        let g = models::squeezenet(1000);
+        let job = ProfileJob {
+            levels: &[0.3],
+            batch_sizes: &[16],
+            ..ProfileJob::new("squeezenet", &g)
+        };
+        let a = profile(&sim, &job);
+        let b = profile(&sim, &job);
+        assert_eq!(a.points[0].gamma_mb, b.points[0].gamma_mb);
+        assert_eq!(a.points[0].phi_ms, b.points[0].phi_ms);
+    }
+
+    #[test]
+    fn train_test_levels_disjoint() {
+        let sim = Simulator::tx2();
+        let g = models::squeezenet(1000);
+        let (train, test) =
+            train_test_split(&sim, "squeezenet", &g, Strategy::Random, 7);
+        let train_levels: Vec<f64> = train.points.iter().map(|p| p.level).collect();
+        for p in &test.points {
+            assert!(!train_levels.iter().any(|l| (l - p.level).abs() < 1e-9));
+        }
+        assert_eq!(train.points.len(), 5 * 25);
+        assert_eq!(test.points.len(), 14 * 25);
+    }
+}

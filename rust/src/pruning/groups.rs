@@ -1,0 +1,298 @@
+//! Channel-dependency analysis for structured pruning.
+//!
+//! Removing filters from a conv changes its output channel count. Residual
+//! `Add` joins require equal channels on every input, so all convs whose
+//! outputs meet at an `Add` (walking through channel-preserving ops) must be
+//! pruned *together*. Depthwise convs inherit their input's channel count
+//! and are never pruned directly. Concat outputs that flow into an `Add`
+//! pin the channel count of every contributing conv, making them
+//! unprunable (conservative, and sufficient for the zoo).
+
+use crate::ir::{Graph, Groups, NodeId, Op};
+use std::collections::BTreeMap;
+
+/// Union-find over channel groups.
+struct Uf {
+    parent: Vec<usize>,
+}
+
+impl Uf {
+    fn new(n: usize) -> Self {
+        Uf {
+            parent: (0..n).collect(),
+        }
+    }
+    fn find(&mut self, x: usize) -> usize {
+        if self.parent[x] != x {
+            let root = self.find(self.parent[x]);
+            self.parent[x] = root;
+        }
+        self.parent[x]
+    }
+    fn union(&mut self, a: usize, b: usize) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            self.parent[ra.max(rb)] = ra.min(rb);
+        }
+    }
+}
+
+/// A set of convolutions that must keep identical filter counts.
+#[derive(Clone, Debug)]
+pub struct PruneGroup {
+    /// Conv node ids whose `out_c` is set jointly (depthwise excluded).
+    pub convs: Vec<NodeId>,
+    /// Original (unpruned) filter count shared by all members.
+    pub filters: usize,
+    /// False when the group's channel count is pinned (network input,
+    /// classifier conv, or concat feeding a residual join).
+    pub prunable: bool,
+    /// Normalised depth in [0,1] of the group's first conv (for
+    /// depth-weighted strategies like L1-norm).
+    pub depth: f64,
+}
+
+/// Compute prune groups for a graph.
+///
+/// `protected` lists conv node ids that must never be pruned (e.g. a final
+/// 1×1 classifier conv whose out-channels are the class count — SqueezeNet
+/// and NiN).
+pub fn prune_groups(graph: &Graph, protected: &[NodeId]) -> Vec<PruneGroup> {
+    let n = graph.len();
+    let mut uf = Uf::new(n);
+    // Group representative per node: the node that *defines* the channel
+    // dimension observed at this node's output.
+    let mut rep: Vec<usize> = vec![0; n];
+    // Concat outputs remember which upstream groups contribute channels.
+    let mut concat_contrib: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    // Groups that must not be pruned.
+    let mut pinned: Vec<bool> = vec![false; n];
+
+    for node in &graph.nodes {
+        match &node.op {
+            Op::Input { .. } => {
+                rep[node.id] = node.id;
+                pinned[node.id] = true;
+            }
+            Op::Conv2d { groups, .. } => {
+                if matches!(groups, Groups::Depthwise) {
+                    // Channels tied to the input's defining group.
+                    rep[node.id] = rep[node.inputs[0]];
+                } else {
+                    rep[node.id] = node.id;
+                }
+            }
+            Op::Add => {
+                // All inputs' defining groups merge.
+                let first = rep[node.inputs[0]];
+                for &i in &node.inputs[1..] {
+                    uf.union(first, rep[i]);
+                }
+                rep[node.id] = first;
+                // If any merged group is a concat, pin its contributors.
+                for &i in &node.inputs {
+                    let r = rep[i];
+                    if let Some(contrib) = concat_contrib.get(&r) {
+                        for &c in contrib {
+                            pinned[c] = true;
+                        }
+                        pinned[r] = true;
+                    }
+                }
+            }
+            Op::Concat => {
+                rep[node.id] = node.id;
+                // Concat defines a fresh, not-directly-prunable channel dim;
+                // its *inputs* stay independently prunable unless pinned
+                // later by an Add.
+                pinned[node.id] = true;
+                let contribs: Vec<usize> =
+                    node.inputs.iter().map(|&i| rep[i]).collect();
+                concat_contrib.insert(node.id, contribs);
+            }
+            // Channel-preserving unary ops and the flat tail of the net.
+            _ => {
+                if let Some(&first) = node.inputs.first() {
+                    rep[node.id] = rep[first];
+                } else {
+                    rep[node.id] = node.id;
+                }
+            }
+        }
+    }
+
+    // Collapse union-find and bucket convs by root.
+    let conv_ids = graph.conv_ids();
+    let shapes = graph
+        .infer_shapes()
+        .expect("prune_groups requires a valid graph");
+    let n_convs = conv_ids.len().max(1);
+    let conv_order: BTreeMap<NodeId, usize> = conv_ids
+        .iter()
+        .enumerate()
+        .map(|(i, &id)| (id, i))
+        .collect();
+
+    let mut buckets: BTreeMap<usize, PruneGroup> = BTreeMap::new();
+    for &cid in &conv_ids {
+        let node = graph.node(cid);
+        let depthwise = matches!(
+            node.op,
+            Op::Conv2d {
+                groups: Groups::Depthwise,
+                ..
+            }
+        );
+        if depthwise {
+            continue; // follows its input automatically
+        }
+        let root = uf.find(rep[cid]);
+        let entry = buckets.entry(root).or_insert_with(|| PruneGroup {
+            convs: Vec::new(),
+            filters: shapes[cid].channels(),
+            prunable: true,
+            depth: conv_order[&cid] as f64 / n_convs as f64,
+        });
+        entry.convs.push(cid);
+        if protected.contains(&cid) {
+            entry.prunable = false;
+        }
+    }
+    // Apply pins: a group rooted at a pinned node (input/concat) is
+    // unprunable, as is any group unioned with one.
+    let mut groups: Vec<PruneGroup> = Vec::new();
+    for (root, mut g) in buckets {
+        let mut any_pinned = pinned[root];
+        // Also check whether any pinned node shares this root.
+        for (i, &p) in pinned.iter().enumerate() {
+            if p && uf.find(rep[i]) == root {
+                any_pinned = true;
+                break;
+            }
+        }
+        if any_pinned {
+            g.prunable = false;
+        }
+        groups.push(g);
+    }
+    groups
+}
+
+/// Validate that all members of every group still have equal filter counts
+/// (test/debug helper; cheap invariant check).
+pub fn groups_consistent(graph: &Graph, groups: &[PruneGroup]) -> bool {
+    let shapes = match graph.infer_shapes() {
+        Ok(s) => s,
+        Err(_) => return false,
+    };
+    groups.iter().all(|g| {
+        let counts: Vec<usize> = g.convs.iter().map(|&c| shapes[c].channels()).collect();
+        counts.windows(2).all(|w| w[0] == w[1])
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Act, GraphBuilder};
+    use crate::models;
+
+    #[test]
+    fn plain_chain_gives_singleton_groups() {
+        let g = models::alexnet(1000);
+        let groups = prune_groups(&g, &[]);
+        // 5 convs, no residuals → 5 singleton groups, all prunable.
+        assert_eq!(groups.len(), 5);
+        assert!(groups.iter().all(|gr| gr.convs.len() == 1 && gr.prunable));
+    }
+
+    #[test]
+    fn resnet18_residual_groups_merge() {
+        let g = models::resnet18(1000);
+        let groups = prune_groups(&g, &[]);
+        // Stage channel groups: stem conv + layer1 outputs share 56x56x64
+        // channels through the identity path.
+        let big: Vec<_> = groups.iter().filter(|gr| gr.convs.len() > 1).collect();
+        assert!(!big.is_empty());
+        // stem group: conv1 + layer1.0.conv2 + layer1.1.conv2 (identity
+        // residuals) = 3 members.
+        let stem_group = groups
+            .iter()
+            .find(|gr| gr.convs.contains(&g.nodes.iter().find(|n| n.name == "conv1").unwrap().id))
+            .unwrap();
+        assert_eq!(stem_group.convs.len(), 3);
+        assert!(groups_consistent(&g, &groups));
+    }
+
+    #[test]
+    fn depthwise_not_a_member() {
+        let g = models::mobilenet_v2(1000);
+        let groups = prune_groups(&g, &[]);
+        let dw_ids: Vec<NodeId> = g
+            .conv_infos()
+            .unwrap()
+            .iter()
+            .filter(|c| c.is_depthwise())
+            .map(|c| c.node)
+            .collect();
+        for gr in &groups {
+            for c in &gr.convs {
+                assert!(!dw_ids.contains(c), "depthwise conv in a prune group");
+            }
+        }
+    }
+
+    #[test]
+    fn concat_into_add_pins_contributors() {
+        // fire-like concat feeding a residual join must pin the expand convs
+        let mut g = Graph::new("cat-add");
+        let x = g.input(3, 8, 8);
+        let pre = g.conv_bn_act("pre", x, 8, 1, 1, 0, Act::Relu);
+        let a = g.conv("a", pre, 4, 1, 1, 0);
+        let b = g.conv("b", pre, 4, 3, 1, 1);
+        let cat = g.concat("cat", &[a, b]);
+        let j = g.add_join("join", &[cat, pre]);
+        let _out = g.relu("out", j);
+        let groups = prune_groups(&g, &[]);
+        let by_conv = |name: &str| {
+            let id = g.nodes.iter().find(|n| n.name == name).unwrap().id;
+            groups.iter().find(|gr| gr.convs.contains(&id)).unwrap()
+        };
+        assert!(!by_conv("a").prunable);
+        assert!(!by_conv("b").prunable);
+        // `pre` is unioned with the concat output via the Add → also pinned.
+        assert!(!by_conv("pre").prunable);
+    }
+
+    #[test]
+    fn protected_convs_unprunable() {
+        let g = models::squeezenet(1000);
+        let classifier = g
+            .nodes
+            .iter()
+            .find(|n| n.name == "classifier.1")
+            .unwrap()
+            .id;
+        let groups = prune_groups(&g, &[classifier]);
+        let gr = groups
+            .iter()
+            .find(|gr| gr.convs.contains(&classifier))
+            .unwrap();
+        assert!(!gr.prunable);
+    }
+
+    #[test]
+    fn depths_are_monotone_in_topo_order() {
+        let g = models::vgg16(1000);
+        let groups = prune_groups(&g, &[]);
+        let mut depths: Vec<f64> = groups.iter().map(|gr| gr.depth).collect();
+        let sorted = {
+            let mut d = depths.clone();
+            d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            d
+        };
+        depths.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(depths, sorted);
+        assert!(depths.iter().all(|&d| (0.0..1.0).contains(&d)));
+    }
+}

@@ -1,0 +1,187 @@
+//! Pruning strategies: how a global pruning level is distributed over
+//! layers. Mirrors the paper's setups:
+//!
+//! - `Random` — "randomly pruning filters with equal probability across all
+//!   layers": every filter enters a global pool, so each layer's removed
+//!   count is Binomial(n_l, level) (seed-dependent jitter across layers).
+//! - `L1Norm` — emulates magnitude pruning which "results in more filters
+//!   pruned from deeper layers": removal weight grows exponentially with
+//!   normalised depth.
+//! - `Weighted` — the Sec. 6.2 topology study: uniform / early-heavy /
+//!   middle-heavy / late-heavy / random per-layer weightings at a fixed
+//!   global level.
+
+use crate::util::rng::Pcg64;
+
+/// Per-layer weighting profiles for [`Strategy::Weighted`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Profile {
+    Uniform,
+    EarlyHeavy,
+    MiddleHeavy,
+    LateHeavy,
+    Random,
+}
+
+pub const ALL_PROFILES: [Profile; 5] = [
+    Profile::Uniform,
+    Profile::EarlyHeavy,
+    Profile::MiddleHeavy,
+    Profile::LateHeavy,
+    Profile::Random,
+];
+
+/// A pruning strategy `S` in the paper's notation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Strategy {
+    Random,
+    L1Norm,
+    Weighted(Profile),
+}
+
+impl Strategy {
+    pub fn name(&self) -> String {
+        match self {
+            Strategy::Random => "random".into(),
+            Strategy::L1Norm => "l1norm".into(),
+            Strategy::Weighted(p) => format!("weighted-{p:?}").to_lowercase(),
+        }
+    }
+
+    /// Number of filters to REMOVE from a group of `filters` filters at
+    /// normalised depth `depth`, targeting global `level` ∈ [0,1).
+    ///
+    /// Always leaves at least one filter. The per-strategy depth weight is
+    /// normalised so the *expected* global removal fraction equals `level`
+    /// (exact for Uniform, asymptotically for the others).
+    pub fn removed_filters(
+        &self,
+        filters: usize,
+        depth: f64,
+        level: f64,
+        rng: &mut Pcg64,
+    ) -> usize {
+        assert!((0.0..1.0).contains(&level), "level must be in [0,1)");
+        if level == 0.0 || filters <= 1 {
+            return 0;
+        }
+        let frac = match self {
+            Strategy::Random => {
+                // Binomial(n, level) via normal approximation for large n,
+                // exact sampling for small n.
+                return sample_binomial(filters, level, rng).min(filters - 1);
+            }
+            Strategy::L1Norm => {
+                // weight grows with depth; mean of w over depth∈[0,1] is 1
+                // for alpha=1.2: w(d) = alpha*exp(beta*d)/ (exp(beta)-1) * beta
+                let beta = 1.5f64;
+                let w = beta * (beta * depth).exp() / ((beta).exp() - 1.0);
+                (level * w).min(0.95)
+            }
+            Strategy::Weighted(profile) => {
+                let w = match profile {
+                    Profile::Uniform => 1.0,
+                    Profile::EarlyHeavy => 2.0 * (1.0 - depth).powi(2) * 1.5,
+                    Profile::MiddleHeavy => {
+                        1.8 * (-8.0 * (depth - 0.5) * (depth - 0.5)).exp() * 1.6
+                    }
+                    Profile::LateHeavy => 2.0 * depth * depth * 1.5,
+                    Profile::Random => 2.0 * rng.next_f64(),
+                };
+                (level * w).min(0.95)
+            }
+        };
+        (((filters as f64) * frac).round() as usize).min(filters - 1)
+    }
+}
+
+/// Sample Binomial(n, p). Exact inversion for small n; normal
+/// approximation with continuity correction for large n.
+fn sample_binomial(n: usize, p: f64, rng: &mut Pcg64) -> usize {
+    if n <= 64 {
+        (0..n).filter(|_| rng.chance(p)).count()
+    } else {
+        let mean = n as f64 * p;
+        let std = (n as f64 * p * (1.0 - p)).sqrt();
+        let x = rng.normal_ms(mean, std).round();
+        x.clamp(0.0, n as f64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_level_removes_nothing() {
+        let mut rng = Pcg64::new(1);
+        for s in [Strategy::Random, Strategy::L1Norm] {
+            assert_eq!(s.removed_filters(64, 0.5, 0.0, &mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn always_leaves_one_filter() {
+        let mut rng = Pcg64::new(2);
+        for s in [
+            Strategy::Random,
+            Strategy::L1Norm,
+            Strategy::Weighted(Profile::LateHeavy),
+        ] {
+            for _ in 0..200 {
+                let removed = s.removed_filters(4, 0.99, 0.9, &mut rng);
+                assert!(removed < 4);
+            }
+        }
+    }
+
+    #[test]
+    fn random_strategy_mean_matches_level() {
+        let mut rng = Pcg64::new(3);
+        let n = 256;
+        let trials = 500;
+        let total: usize = (0..trials)
+            .map(|_| Strategy::Random.removed_filters(n, 0.3, 0.5, &mut rng))
+            .sum();
+        let mean_frac = total as f64 / (trials * n) as f64;
+        assert!((mean_frac - 0.5).abs() < 0.02, "mean frac = {mean_frac}");
+    }
+
+    #[test]
+    fn l1norm_prunes_deeper_layers_more() {
+        let mut rng = Pcg64::new(4);
+        let shallow = Strategy::L1Norm.removed_filters(512, 0.05, 0.5, &mut rng);
+        let deep = Strategy::L1Norm.removed_filters(512, 0.95, 0.5, &mut rng);
+        assert!(deep > shallow, "deep={deep} shallow={shallow}");
+    }
+
+    #[test]
+    fn early_heavy_profile_prunes_early_layers_more() {
+        let mut rng = Pcg64::new(5);
+        let s = Strategy::Weighted(Profile::EarlyHeavy);
+        let early = s.removed_filters(512, 0.05, 0.5, &mut rng);
+        let late = s.removed_filters(512, 0.95, 0.5, &mut rng);
+        assert!(early > late, "early={early} late={late}");
+    }
+
+    #[test]
+    fn binomial_sampler_moments() {
+        let mut rng = Pcg64::new(6);
+        // Large-n path.
+        let xs: Vec<f64> = (0..2000)
+            .map(|_| sample_binomial(1000, 0.3, &mut rng) as f64)
+            .collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((mean - 300.0).abs() < 5.0, "mean={mean}");
+    }
+
+    #[test]
+    fn strategy_names_stable() {
+        assert_eq!(Strategy::Random.name(), "random");
+        assert_eq!(Strategy::L1Norm.name(), "l1norm");
+        assert_eq!(
+            Strategy::Weighted(Profile::MiddleHeavy).name(),
+            "weighted-middleheavy"
+        );
+    }
+}

@@ -1,0 +1,183 @@
+//! Forest-inference executor: runs the `forest_b{1,256}.hlo.txt` artifacts
+//! (L2 graph wrapping the L1 Pallas traversal kernel) against forests
+//! fitted in Rust, padded to the artifact's fixed shapes.
+
+use anyhow::{bail, Result};
+
+use crate::forest::{Forest, ForestTensors};
+
+use super::Runtime;
+
+/// Fixed artifact shapes (mirrors `python/compile/model.py` and
+/// `artifacts/manifest.json`).
+#[derive(Clone, Copy, Debug)]
+pub struct ForestArtifactShape {
+    pub trees: usize,
+    pub nodes: usize,
+    pub depth: usize,
+    pub features: usize,
+}
+
+impl Default for ForestArtifactShape {
+    fn default() -> Self {
+        ForestArtifactShape {
+            trees: 64,
+            nodes: 2048,
+            depth: 16,
+            features: crate::features::NUM_FEATURES,
+        }
+    }
+}
+
+/// An executor bound to one fitted forest.
+///
+/// §Perf note: the five tree tensors (~2.6 MB total at the 64×2048
+/// artifact shape) are uploaded ONCE as device-resident [`xla::PjRtBuffer`]s
+/// at construction and reused by every call via `execute_b`; only the
+/// feature rows are transferred per prediction. The original
+/// literal-per-call implementation deep-copied all five arrays on every
+/// prediction and was ~39× slower on the single-row path (see
+/// EXPERIMENTS.md §Perf).
+pub struct ForestExecutor {
+    client: xla::PjRtClient,
+    exe_b1: xla::PjRtLoadedExecutable,
+    exe_b256: xla::PjRtLoadedExecutable,
+    shape: ForestArtifactShape,
+    // Device-resident tree tensors, uploaded once.
+    feature: xla::PjRtBuffer,
+    threshold: xla::PjRtBuffer,
+    left: xla::PjRtBuffer,
+    right: xla::PjRtBuffer,
+    value: xla::PjRtBuffer,
+}
+
+impl ForestExecutor {
+    /// Load the artifacts and bind `forest` (must fit the artifact shape:
+    /// exactly `trees` trees — padding trees would change the mean — and at
+    /// most `nodes` nodes and `depth` levels).
+    pub fn new(rt: &Runtime, forest: &Forest) -> Result<ForestExecutor> {
+        let shape = ForestArtifactShape::default();
+        let mut t = forest.to_tensors();
+        if t.n_trees != shape.trees {
+            bail!(
+                "forest has {} trees; the artifact expects exactly {} \
+                 (fit with ForestConfig::for_export())",
+                t.n_trees,
+                shape.trees
+            );
+        }
+        if t.n_nodes > shape.nodes {
+            bail!(
+                "forest trees too large: {} nodes > artifact cap {} \
+                 (reduce max_depth or raise min_samples_leaf)",
+                t.n_nodes,
+                shape.nodes
+            );
+        }
+        if t.depth > shape.depth {
+            bail!("tree depth {} exceeds artifact traversal depth {}", t.depth, shape.depth);
+        }
+        if forest.n_features != shape.features {
+            bail!(
+                "forest has {} features, artifact expects {}",
+                forest.n_features,
+                shape.features
+            );
+        }
+        t.pad_nodes_to(shape.nodes);
+        let dims = [shape.trees, shape.nodes];
+        let upload_i32 = |data: &[i32]| {
+            rt.client
+                .buffer_from_host_buffer(data, &dims, None)
+                .map_err(|e| anyhow::anyhow!("tree tensor upload: {e:?}"))
+        };
+        let upload_f32 = |data: &[f32]| {
+            rt.client
+                .buffer_from_host_buffer(data, &dims, None)
+                .map_err(|e| anyhow::anyhow!("tree tensor upload: {e:?}"))
+        };
+        Ok(ForestExecutor {
+            client: rt.client.clone(),
+            exe_b1: rt.load("forest_b1.hlo.txt")?,
+            exe_b256: rt.load("forest_b256.hlo.txt")?,
+            shape,
+            feature: upload_i32(&t.feature)?,
+            threshold: upload_f32(&t.threshold)?,
+            left: upload_i32(&t.left)?,
+            right: upload_i32(&t.right)?,
+            value: upload_f32(&t.value)?,
+        })
+    }
+
+    /// Tensor form of the bound forest (for cross-checks).
+    pub fn shape(&self) -> ForestArtifactShape {
+        self.shape
+    }
+
+    fn run(&self, exe: &xla::PjRtLoadedExecutable, xs: &[f32], batch: usize, n: usize) -> Result<Vec<f64>> {
+        // Only the feature rows move host→device; tree tensors are resident.
+        let x = self
+            .client
+            .buffer_from_host_buffer(xs, &[batch, self.shape.features], None)
+            .map_err(|e| anyhow::anyhow!("x upload: {e:?}"))?;
+        let args = [
+            &x,
+            &self.feature,
+            &self.threshold,
+            &self.left,
+            &self.right,
+            &self.value,
+        ];
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(&args)
+            .map_err(|e| anyhow::anyhow!("forest execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        let v: Vec<f32> = out
+            .to_vec()
+            .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+        Ok(v.into_iter().take(n).map(|x| x as f64).collect())
+    }
+
+    /// Predict a single feature row through the XLA artifact.
+    pub fn predict_one(&self, row: &[f64]) -> Result<f64> {
+        let xs: Vec<f32> = row.iter().map(|&v| v as f32).collect();
+        Ok(self.run(&self.exe_b1, &xs, 1, 1)?[0])
+    }
+
+    /// Predict many rows (chunks of 256; the final chunk is zero-padded).
+    pub fn predict_batch(&self, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
+        let f = self.shape.features;
+        let mut out = Vec::with_capacity(rows.len());
+        let mut xs = vec![0f32; 256 * f];
+        for chunk in rows.chunks(256) {
+            xs.iter_mut().for_each(|v| *v = 0.0);
+            for (i, row) in chunk.iter().enumerate() {
+                for (j, &v) in row.iter().enumerate() {
+                    xs[i * f + j] = v as f32;
+                }
+            }
+            out.extend(self.run(&self.exe_b256, &xs, 256, chunk.len())?);
+        }
+        Ok(out)
+    }
+}
+
+/// Forest config whose shape always fits the artifact: exactly 64 trees,
+/// depth ≤ 15.
+pub fn export_forest_config() -> crate::forest::ForestConfig {
+    crate::forest::ForestConfig {
+        n_trees: 64,
+        max_depth: 14,
+        ..Default::default()
+    }
+}
+
+/// Validate a fitted forest against the artifact shape without a runtime.
+pub fn fits_artifact(t: &ForestTensors) -> bool {
+    let s = ForestArtifactShape::default();
+    t.n_trees == s.trees && t.n_nodes <= s.nodes && t.depth <= s.depth
+}

@@ -1,0 +1,113 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path. Python
+//! is never involved at runtime — the pattern from
+//! /opt/xla-example/load_hlo/ (HLO *text* interchange; see aot.py for why
+//! text, not serialised protos).
+
+pub mod forest_exec;
+pub mod trainstep_exec;
+
+pub use forest_exec::ForestExecutor;
+pub use trainstep_exec::{TrainState, TrainStepExecutor};
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Default artifacts directory (relative to the repo root).
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// A loaded PJRT CPU runtime.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub artifacts: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn cpu(artifacts: impl Into<PathBuf>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            artifacts: artifacts.into(),
+        })
+    }
+
+    /// Load + compile an HLO-text artifact by file name.
+    pub fn load(&self, name: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.artifacts.join(name);
+        self.load_path(&path)
+    }
+
+    /// Load + compile an HLO-text file.
+    pub fn load_path(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))
+    }
+
+    /// Parse `manifest.json` from the artifacts directory.
+    pub fn manifest(&self) -> Result<Json> {
+        let path = self.artifacts.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))
+    }
+
+    /// True if the artifacts directory holds all expected files.
+    pub fn artifacts_present(dir: &Path) -> bool {
+        [
+            "trainstep.hlo.txt",
+            "forest_b1.hlo.txt",
+            "forest_b256.hlo.txt",
+            "manifest.json",
+        ]
+        .iter()
+        .all(|f| dir.join(f).exists())
+    }
+}
+
+/// Build an f32 literal with the given dims.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    lit.reshape(dims)
+        .map_err(|e| anyhow::anyhow!("reshape f32 literal: {e:?}"))
+}
+
+/// Build an i32 literal with the given dims.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    lit.reshape(dims)
+        .map_err(|e| anyhow::anyhow!("reshape i32 literal: {e:?}"))
+}
+
+/// Build an f32 scalar literal.
+pub fn literal_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_construction_roundtrip() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        let v: Vec<f32> = l.to_vec().unwrap();
+        assert_eq!(v, vec![1.0, 2.0, 3.0, 4.0]);
+        let i = literal_i32(&[5, 6], &[2]).unwrap();
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![5, 6]);
+    }
+
+    #[test]
+    fn artifacts_presence_check() {
+        assert!(!Runtime::artifacts_present(Path::new("/nonexistent")));
+    }
+}

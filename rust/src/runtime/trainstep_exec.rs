@@ -1,0 +1,132 @@
+//! Training-step executor: drives `trainstep.hlo.txt` — a full
+//! fwd+bwd+SGD step of the L2 CNN whose convolutions are the L1 Pallas
+//! kernels — from Rust. Used by `examples/train_cnn.rs` to train on a
+//! synthetic workload and log the loss curve (the end-to-end validation
+//! demanded by DESIGN.md §6).
+
+use anyhow::{Context, Result};
+
+use crate::util::rng::Pcg64;
+
+use super::{literal_f32, literal_scalar_f32, Runtime};
+
+/// Shapes of the training artifact (mirrors python/compile/model.py).
+pub const TRAIN_BATCH: usize = 64;
+pub const IMG_C: usize = 3;
+pub const IMG_HW: usize = 32;
+pub const NUM_CLASSES: usize = 10;
+pub const CHANNELS: [usize; 3] = [16, 32, 32];
+
+/// Host-side training state: the 8 parameter tensors.
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    /// (data, dims) per parameter, in artifact order
+    /// w1,b1,w2,b2,w3,b3,wf,bf.
+    pub params: Vec<(Vec<f32>, Vec<i64>)>,
+}
+
+impl TrainState {
+    /// He-initialised parameters (matches `model.init_params` in spirit;
+    /// exact values differ — initialisation is host-side).
+    pub fn init(seed: u64) -> TrainState {
+        let mut rng = Pcg64::new(seed);
+        let [c1, c2, c3] = CHANNELS;
+        let mut params = Vec::new();
+        let mut he = |shape: Vec<i64>, fan_in: usize| {
+            let n: usize = shape.iter().map(|&d| d as usize).product();
+            let std = (2.0 / fan_in as f64).sqrt();
+            let data: Vec<f32> = (0..n).map(|_| (rng.normal() * std) as f32).collect();
+            (data, shape)
+        };
+        params.push(he(vec![c1 as i64, IMG_C as i64, 3, 3], IMG_C * 9));
+        params.push((vec![0.0; c1], vec![c1 as i64]));
+        params.push(he(vec![c2 as i64, c1 as i64, 3, 3], c1 * 9));
+        params.push((vec![0.0; c2], vec![c2 as i64]));
+        params.push(he(vec![c3 as i64, c2 as i64, 3, 3], c2 * 9));
+        params.push((vec![0.0; c3], vec![c3 as i64]));
+        params.push(he(vec![c3 as i64, NUM_CLASSES as i64], c3));
+        params.push((vec![0.0; NUM_CLASSES], vec![NUM_CLASSES as i64]));
+        TrainState { params }
+    }
+}
+
+/// The executor.
+pub struct TrainStepExecutor {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl TrainStepExecutor {
+    pub fn new(rt: &Runtime) -> Result<TrainStepExecutor> {
+        Ok(TrainStepExecutor {
+            exe: rt.load("trainstep.hlo.txt")?,
+        })
+    }
+
+    /// Execute one SGD step; updates `state` in place, returns the loss.
+    /// `x`: (TRAIN_BATCH·3·32·32) f32, `y`: TRAIN_BATCH labels.
+    pub fn step(&self, state: &mut TrainState, x: &[f32], y: &[i32], lr: f32) -> Result<f64> {
+        assert_eq!(x.len(), TRAIN_BATCH * IMG_C * IMG_HW * IMG_HW);
+        assert_eq!(y.len(), TRAIN_BATCH);
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(11);
+        for (data, dims) in &state.params {
+            args.push(literal_f32(data, dims)?);
+        }
+        args.push(literal_f32(
+            x,
+            &[TRAIN_BATCH as i64, IMG_C as i64, IMG_HW as i64, IMG_HW as i64],
+        )?);
+        args.push(
+            xla::Literal::vec1(y)
+                .reshape(&[TRAIN_BATCH as i64])
+                .map_err(|e| anyhow::anyhow!("labels: {e:?}"))?,
+        );
+        args.push(literal_scalar_f32(lr));
+
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("trainstep execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch: {e:?}"))?;
+        let mut outs = result
+            .clone()
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        anyhow::ensure!(outs.len() == 9, "expected 9 outputs, got {}", outs.len());
+        let loss_lit = outs.pop().context("loss output")?;
+        for (slot, lit) in state.params.iter_mut().zip(outs) {
+            slot.0 = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("param out: {e:?}"))?;
+        }
+        let loss: f32 = loss_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("loss: {e:?}"))?[0];
+        Ok(loss as f64)
+    }
+}
+
+/// Synthetic classification batch matching python/tests/test_model.py:
+/// class k shifts channel (k mod 3) in a class-dependent half of the image.
+pub fn synthetic_batch(rng: &mut Pcg64) -> (Vec<f32>, Vec<i32>) {
+    let mut x = vec![0f32; TRAIN_BATCH * IMG_C * IMG_HW * IMG_HW];
+    let mut y = vec![0i32; TRAIN_BATCH];
+    for b in 0..TRAIN_BATCH {
+        let label = rng.gen_range(NUM_CLASSES);
+        y[b] = label as i32;
+        let c = label % IMG_C;
+        let q = label / IMG_C;
+        for ch in 0..IMG_C {
+            for i in 0..IMG_HW {
+                for j in 0..IMG_HW {
+                    let mut v = (rng.normal() * 0.5) as f32;
+                    if ch == c && (i / 16) == (q % 2) {
+                        v += 1.5;
+                    }
+                    x[((b * IMG_C + ch) * IMG_HW + i) * IMG_HW + j] = v;
+                }
+            }
+        }
+    }
+    (x, y)
+}

@@ -1,0 +1,146 @@
+//! Tiny criterion-style benchmark harness (criterion itself is unavailable
+//! in the offline build). Used by the `[[bench]]` targets with
+//! `harness = false`: each bench is a `main()` that both *regenerates a
+//! paper table/figure* and reports wall-clock statistics for the hot paths
+//! it exercises.
+
+use std::time::Instant;
+
+/// Result of timing a closure repeatedly.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn throughput_per_sec(&self) -> f64 {
+        if self.mean_ns <= 0.0 {
+            0.0
+        } else {
+            1e9 / self.mean_ns
+        }
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f` with warmup and adaptive iteration count targeting
+/// ~`budget_ms` of measurement, then print a one-line summary.
+pub fn bench<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> BenchStats {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    f();
+    let first = t0.elapsed().as_nanos().max(1) as f64;
+    let target_ns = (budget_ms as f64) * 1e6;
+    let iters = ((target_ns / first).ceil() as usize).clamp(3, 10_000);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        median_ns: samples[samples.len() / 2],
+        p95_ns: samples[(samples.len() as f64 * 0.95) as usize % samples.len()],
+        min_ns: samples[0],
+    };
+    println!(
+        "  [bench] {:<42} mean {:>12}  median {:>12}  p95 {:>12}  ({} iters)",
+        stats.name,
+        fmt_ns(stats.mean_ns),
+        fmt_ns(stats.median_ns),
+        fmt_ns(stats.p95_ns),
+        stats.iters
+    );
+    stats
+}
+
+/// Print a section header for a regenerated table/figure.
+pub fn section(title: &str) {
+    println!();
+    println!("{}", "=".repeat(78));
+    println!("{title}");
+    println!("{}", "=".repeat(78));
+}
+
+/// Print an aligned table: `header` then rows of equal arity.
+pub fn table(header: &[&str], rows: &[Vec<String>]) {
+    let cols = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        assert_eq!(row.len(), cols, "row arity mismatch");
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let fmt_row = |cells: Vec<String>| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!(
+        "{}",
+        fmt_row(header.iter().map(|s| s.to_string()).collect())
+    );
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (cols - 1)));
+    for row in rows {
+        println!("{}", fmt_row(row.clone()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let s = bench("noop-ish", 5, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(s.iters >= 3);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.min_ns <= s.median_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn table_checks_arity() {
+        table(&["a", "b"], &[vec!["x".into()]]);
+    }
+}

@@ -1,0 +1,10 @@
+//! Dependency-free utilities: deterministic RNG, statistics, JSON,
+//! property-testing and a micro benchmark harness. These replace the
+//! crates (`rand`, `serde`, `proptest`, `criterion`) that are unavailable
+//! in the offline build environment — see DESIGN.md §1.
+
+pub mod bench_harness;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

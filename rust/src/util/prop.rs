@@ -1,0 +1,125 @@
+//! In-repo property-based testing helper.
+//!
+//! `proptest` is not available in the offline build, so this module gives a
+//! small deterministic harness in its spirit: run a property over many
+//! random cases drawn from a seeded [`Pcg64`], and on failure re-run a
+//! simple shrinking loop (halving numeric case parameters) to report a
+//! minimal-ish failing case.
+
+use super::rng::Pcg64;
+
+/// Run `prop` over `cases` random inputs produced by `gen`.
+///
+/// On failure, tries the shrink candidates produced by `shrink` (smallest
+/// first is not required; the loop keeps iterating while any candidate still
+/// fails) and panics with the final minimal failing case.
+pub fn check<T, G, S, P>(seed: u64, cases: usize, mut gen: G, shrink: S, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Pcg64) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Pcg64::new(seed);
+    for case_idx in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Shrink: repeatedly move to any failing shrink candidate.
+            let mut current = input.clone();
+            let mut current_msg = msg;
+            let mut budget = 200usize;
+            'outer: while budget > 0 {
+                for cand in shrink(&current) {
+                    budget = budget.saturating_sub(1);
+                    if let Err(m) = prop(&cand) {
+                        current = cand;
+                        current_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (seed={seed}, case {case_idx}/{cases}):\n  input: {current:?}\n  error: {current_msg}"
+            );
+        }
+    }
+}
+
+/// Shorthand for properties without shrinking.
+pub fn check_no_shrink<T, G, P>(seed: u64, cases: usize, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Pcg64) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    check(seed, cases, gen, |_| Vec::new(), prop);
+}
+
+/// Helper: assert-like conversion for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check_no_shrink(
+            1,
+            50,
+            |rng| rng.gen_range(100),
+            |&x| {
+                let _ = x;
+                Ok(())
+            },
+        );
+        count += 1;
+        assert_eq!(count, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check_no_shrink(
+            2,
+            50,
+            |rng| rng.gen_range(100),
+            |&x| ensure(x < 90, format!("x={x} too big")),
+        );
+    }
+
+    #[test]
+    fn shrinking_reduces_case() {
+        let result = std::panic::catch_unwind(|| {
+            check(
+                3,
+                100,
+                |rng| 50 + rng.gen_range(1000),
+                |&x| if x > 10 { vec![x / 2, x - 1] } else { vec![] },
+                |&x| ensure(x < 40, format!("x={x}")),
+            );
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        // Shrinker should get close to the boundary (40), far below the
+        // initial >=50 values.
+        let shown: usize = msg
+            .split("input: ")
+            .nth(1)
+            .unwrap()
+            .split_whitespace()
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(shown >= 40 && shown <= 79, "shrunk to {shown}");
+    }
+}

@@ -1,0 +1,86 @@
+//! CLI integration: drives the coordinator's subcommands through the
+//! library entry point with temp directories, covering the documented
+//! profile → fit → predict workflow and error handling.
+
+use std::path::PathBuf;
+
+fn run(cmd: &str) -> Result<(), String> {
+    perf4sight::coordinator::run(cmd.split_whitespace().map(String::from).collect())
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("perf4sight-cli-{name}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn help_and_zoo_succeed() {
+    run("help").unwrap();
+    run("zoo").unwrap();
+}
+
+#[test]
+fn profile_fit_predict_roundtrip() {
+    let dir = tmpdir("roundtrip");
+    let data = dir.join("sq.json");
+    let model = dir.join("gamma.json");
+    run(&format!(
+        "profile --network squeezenet --device tx2 --levels 0,0.5 \
+         --batch-sizes 4,16,64 --runs 1 --seed 3 --out {}",
+        data.display()
+    ))
+    .unwrap();
+    assert!(data.exists());
+    run(&format!(
+        "fit --data {} --target gamma --out {}",
+        data.display(),
+        model.display()
+    ))
+    .unwrap();
+    assert!(model.exists());
+    run(&format!(
+        "predict --model {} --network squeezenet --level 0.3 --bs 16 --truth",
+        model.display()
+    ))
+    .unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn config_file_is_honoured() {
+    let dir = tmpdir("config");
+    let cfg = dir.join("p4s.toml");
+    std::fs::write(
+        &cfg,
+        "device = \"xavier\"\nseed = 77\n[forest]\nn_trees = 8\nmax_depth = 6\n",
+    )
+    .unwrap();
+    let data = dir.join("d.json");
+    run(&format!(
+        "profile --config {} --network squeezenet --levels 0 --batch-sizes 8 --runs 1 --out {}",
+        cfg.display(),
+        data.display()
+    ))
+    .unwrap();
+    assert!(data.exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn errors_are_clean_not_panics() {
+    assert!(run("frobnicate").is_err());
+    assert!(run("profile --network nope --out /tmp/x.json").is_err());
+    assert!(run("profile --out /tmp/x.json").is_err()); // missing --network
+    assert!(run("fit --data /nonexistent.json --target gamma --out /tmp/m.json").is_err());
+    assert!(run("experiment unknown-exp").is_err());
+    assert!(run("predict --model /nonexistent.json --network resnet18").is_err());
+    // malformed numeric option
+    assert!(run("profile --network squeezenet --runs NaNish --out /tmp/x.json").is_err());
+}
+
+#[test]
+fn quick_experiment_via_cli() {
+    // The fastest experiment end-to-end through the CLI dispatch.
+    run("experiment ablation --network squeezenet --seed 5").unwrap();
+}

@@ -1,0 +1,332 @@
+//! Property-based tests over the coordinator's core invariants, using the
+//! in-repo `util::prop` harness (proptest is unavailable offline; see
+//! DESIGN.md §1). Each property runs over many seeded random cases with
+//! shrinking where meaningful.
+
+use perf4sight::device::Simulator;
+use perf4sight::features::{network_features, NUM_FEATURES};
+use perf4sight::forest::{Forest, ForestConfig};
+use perf4sight::ir::{Graph, GraphBuilder};
+use perf4sight::models;
+use perf4sight::ofa::SubnetConfig;
+use perf4sight::pruning::{groups_consistent, prune, prune_groups, Strategy};
+use perf4sight::util::prop::{check, check_no_shrink, ensure};
+use perf4sight::util::rng::Pcg64;
+
+/// Random zoo network + pruning parameters.
+#[derive(Clone, Debug)]
+struct PruneCase {
+    network: &'static str,
+    strategy: Strategy,
+    level: f64,
+    seed: u64,
+}
+
+fn gen_prune_case(rng: &mut Pcg64) -> PruneCase {
+    let networks = models::ZOO;
+    let strategies = [
+        Strategy::Random,
+        Strategy::L1Norm,
+        Strategy::Weighted(perf4sight::pruning::Profile::EarlyHeavy),
+        Strategy::Weighted(perf4sight::pruning::Profile::LateHeavy),
+        Strategy::Weighted(perf4sight::pruning::Profile::Random),
+    ];
+    PruneCase {
+        network: networks[rng.gen_range(networks.len())],
+        strategy: strategies[rng.gen_range(strategies.len())],
+        level: rng.uniform(0.0, 0.95),
+        seed: rng.next_u64(),
+    }
+}
+
+#[test]
+fn prop_pruning_preserves_graph_validity_and_groups() {
+    check(
+        0x9121,
+        60,
+        gen_prune_case,
+        |c| {
+            // Shrink toward lower pruning levels.
+            if c.level > 0.05 {
+                vec![PruneCase {
+                    level: c.level / 2.0,
+                    ..c.clone()
+                }]
+            } else {
+                vec![]
+            }
+        },
+        |c| {
+            let g = models::by_name(c.network).unwrap();
+            let mut rng = Pcg64::new(c.seed);
+            let p = prune(&g, c.strategy, c.level, &mut rng);
+            p.infer_shapes().map_err(|e| format!("{c:?}: {e}"))?;
+            let groups = prune_groups(&p, &[]);
+            ensure(
+                groups_consistent(&p, &groups),
+                format!("{c:?}: group channel mismatch"),
+            )?;
+            // Output class dimension survives.
+            let shapes = p.infer_shapes().unwrap();
+            ensure(
+                shapes[p.output].numel() == 1000,
+                format!("{c:?}: classifier dim {}", shapes[p.output].numel()),
+            )?;
+            // Parameters never grow.
+            ensure(
+                p.param_count().unwrap() <= g.param_count().unwrap(),
+                format!("{c:?}: params grew"),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_features_finite_nonneg_and_monotone_in_bs() {
+    check_no_shrink(2, 40, gen_prune_case, |c| {
+        let g = models::by_name(c.network).unwrap();
+        let mut rng = Pcg64::new(c.seed);
+        let p = prune(&g, c.strategy, c.level, &mut rng);
+        let f8 = network_features(&p, 8).map_err(|e| e.to_string())?;
+        let f32b = network_features(&p, 32).map_err(|e| e.to_string())?;
+        ensure(f8.len() == NUM_FEATURES, "wrong feature count")?;
+        for (i, (&a, &b)) in f8.iter().zip(&f32b).enumerate() {
+            ensure(
+                a.is_finite() && b.is_finite() && a >= 0.0,
+                format!("{c:?}: feature {i} not finite/nonneg"),
+            )?;
+            ensure(
+                b >= a - 1e-9,
+                format!("{c:?}: feature {i} decreased with bs: {a} -> {b}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulator_monotone_in_batch_and_capacity() {
+    check_no_shrink(3, 30, gen_prune_case, |c| {
+        let g = models::by_name(c.network).unwrap();
+        let mut rng = Pcg64::new(c.seed);
+        let p = prune(&g, c.strategy, c.level, &mut rng);
+        let sim = Simulator::tx2();
+        let small = sim.train_step(&p, 8, None).map_err(|e| e.to_string())?;
+        let big = sim.train_step(&p, 64, None).map_err(|e| e.to_string())?;
+        ensure(
+            big.gamma_mb > small.gamma_mb,
+            format!("{c:?}: Γ not monotone in bs"),
+        )?;
+        ensure(
+            big.phi_ms > small.phi_ms,
+            format!("{c:?}: Φ not monotone in bs"),
+        )?;
+        // Pruned network never costs more than the original.
+        let orig = sim.train_step(&g, 32, None).map_err(|e| e.to_string())?;
+        let pr = sim.train_step(&p, 32, None).map_err(|e| e.to_string())?;
+        ensure(
+            pr.gamma_mb <= orig.gamma_mb + 1e-6,
+            format!("{c:?}: pruning increased Γ"),
+        )?;
+        ensure(
+            pr.phi_ms <= orig.phi_ms + 1e-6,
+            format!("{c:?}: pruning increased Φ"),
+        )
+    });
+}
+
+#[test]
+fn prop_forest_tensor_roundtrip_matches_native() {
+    // For arbitrary synthetic regression problems, the padded-tensor
+    // traversal must agree with the native recursive prediction.
+    check_no_shrink(
+        4,
+        15,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Pcg64::new(seed);
+            let d = 3 + rng.gen_range(6);
+            let n = 40 + rng.gen_range(200);
+            let x: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..d).map(|_| rng.uniform(-5.0, 5.0)).collect())
+                .collect();
+            let y: Vec<f64> = x
+                .iter()
+                .map(|r| r.iter().sum::<f64>() + if r[0] > 0.0 { 10.0 } else { 0.0 })
+                .collect();
+            let forest = Forest::fit(
+                &x,
+                &y,
+                &ForestConfig {
+                    n_trees: 8,
+                    max_depth: 8,
+                    seed,
+                    ..Default::default()
+                },
+            );
+            let t = forest.to_tensors();
+            for row in x.iter().take(25) {
+                let a = forest.predict(row);
+                let b = t.predict(row, t.depth);
+                ensure(
+                    (a - b).abs() <= 1e-6 * a.abs().max(1.0),
+                    format!("native {a} != tensors {b}"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_forest_json_roundtrip() {
+    check_no_shrink(
+        5,
+        10,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Pcg64::new(seed);
+            let x: Vec<Vec<f64>> = (0..60)
+                .map(|_| vec![rng.uniform(0.0, 1e9), rng.uniform(0.0, 1.0)])
+                .collect();
+            let y: Vec<f64> = x.iter().map(|r| r[0] * 1e-6 + 100.0 * r[1]).collect();
+            let f = Forest::fit(
+                &x,
+                &y,
+                &ForestConfig {
+                    n_trees: 4,
+                    seed,
+                    ..Default::default()
+                },
+            );
+            let j = f.to_json().to_string();
+            let f2 = Forest::from_json(&perf4sight::util::json::Json::parse(&j)?)?;
+            for row in x.iter().take(10) {
+                ensure(
+                    (f.predict(row) - f2.predict(row)).abs() < 1e-9,
+                    "json roundtrip changed predictions",
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ofa_subnets_always_valid() {
+    check_no_shrink(
+        6,
+        60,
+        |rng| {
+            let mut c = SubnetConfig::sample(rng);
+            for _ in 0..rng.gen_range(4) {
+                c = c.mutate(rng, 0.4);
+            }
+            c
+        },
+        |c| {
+            let g = c.build();
+            g.infer_shapes().map_err(|e| format!("{c:?}: {e}"))?;
+            let shapes = g.infer_shapes().unwrap();
+            ensure(shapes[g.output].numel() == 1000, "class dim")?;
+            // capacity is within bounds and accuracy proxy sane
+            let cap = perf4sight::ofa::capacity(&g);
+            ensure((0.0..=1.0).contains(&cap), format!("capacity {cap}"))?;
+            for s in perf4sight::ofa::ALL_SUBSETS {
+                let a = perf4sight::ofa::initial_accuracy(c, &g, s);
+                let r = perf4sight::ofa::retrained_accuracy(c, &g, s);
+                ensure((0.0..100.0).contains(&a), format!("acc {a}"))?;
+                ensure(r >= a - 1.5, format!("retrain regressed: {a} -> {r}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_parser_roundtrips_random_values() {
+    use perf4sight::util::json::Json;
+    fn gen_value(rng: &mut Pcg64, depth: usize) -> Json {
+        match if depth > 2 { rng.gen_range(4) } else { rng.gen_range(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.normal() * 1e3 * 100.0).round() / 100.0),
+            3 => Json::Str(
+                (0..rng.gen_range(8))
+                    .map(|_| ['a', '"', '\\', 'ü', '\n', 'z'][rng.gen_range(6)])
+                    .collect(),
+            ),
+            4 => Json::Arr((0..rng.gen_range(4)).map(|_| gen_value(rng, depth + 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.gen_range(4))
+                    .map(|i| (format!("k{i}"), gen_value(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check_no_shrink(
+        7,
+        200,
+        |rng| gen_value(rng, 0),
+        |v| {
+            let text = v.to_string();
+            let back = Json::parse(&text).map_err(|e| format!("{text}: {e}"))?;
+            ensure(&back == v, format!("roundtrip mismatch: {text}"))
+        },
+    );
+}
+
+#[test]
+fn failure_injection_invalid_graphs_rejected_not_panicking() {
+    // The IR must return Err (not panic) on malformed graphs.
+    use perf4sight::ir::{Act, Op};
+    // channel mismatch at Add
+    let mut g = Graph::new("bad1");
+    let x = g.input(3, 8, 8);
+    let a = g.conv("a", x, 4, 1, 1, 0);
+    let b = g.conv("b", x, 6, 1, 1, 0);
+    g.add_join("j", &[a, b]);
+    assert!(g.infer_shapes().is_err());
+
+    // linear over unflattened tensor
+    let mut g2 = Graph::new("bad2");
+    let x2 = g2.input(3, 8, 8);
+    let c2 = g2.conv_bn_act("c", x2, 4, 3, 1, 1, Act::Relu);
+    g2.add("fc", Op::Linear { out: 10, bias: true }, &[c2]);
+    assert!(g2.infer_shapes().is_err());
+
+    // spatial mismatch at Concat
+    let mut g3 = Graph::new("bad3");
+    let x3 = g3.input(3, 8, 8);
+    let a3 = g3.conv("a", x3, 4, 1, 1, 0);
+    let b3 = g3.conv("b", x3, 4, 3, 2, 1);
+    g3.concat("cat", &[a3, b3]);
+    assert!(g3.infer_shapes().is_err());
+}
+
+#[test]
+fn failure_injection_runtime_errors_are_reported() {
+    use perf4sight::runtime::Runtime;
+    // Missing artifacts directory must produce a clean error.
+    let rt = Runtime::cpu("/nonexistent-artifacts");
+    if let Ok(rt) = rt {
+        assert!(rt.load("forest_b1.hlo.txt").is_err());
+        assert!(rt.manifest().is_err());
+    }
+    // Wrong-shape forests are rejected by the executor with a clear error.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if Runtime::artifacts_present(&dir) {
+        let rt = Runtime::cpu(&dir).unwrap();
+        let x = vec![vec![0.0f64; 3]; 10]; // 3 features != 57
+        let y = vec![1.0f64; 10];
+        let forest = Forest::fit(
+            &x,
+            &y,
+            &perf4sight::runtime::forest_exec::export_forest_config(),
+        );
+        let err = perf4sight::runtime::ForestExecutor::new(&rt, &forest)
+            .err()
+            .expect("must reject 3-feature forest");
+        assert!(err.to_string().contains("features"));
+    }
+}

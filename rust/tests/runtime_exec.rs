@@ -1,0 +1,94 @@
+//! Runtime integration: the Rust-fitted forest must produce *identical*
+//! predictions through the XLA artifact (L1 Pallas kernel path) as through
+//! the native Rust traversal, and the AOT train step must reduce the loss.
+//! Requires `make artifacts` (skips cleanly if absent).
+
+use perf4sight::forest::Forest;
+use perf4sight::runtime::forest_exec::export_forest_config;
+use perf4sight::runtime::{ForestExecutor, Runtime, TrainState, TrainStepExecutor};
+use perf4sight::util::rng::Pcg64;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if Runtime::artifacts_present(&dir) {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn synth_forest() -> (Forest, Vec<Vec<f64>>) {
+    let mut rng = Pcg64::new(42);
+    let d = perf4sight::features::NUM_FEATURES;
+    let n = 300;
+    let x: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..d).map(|_| rng.uniform(0.0, 1e6)).collect())
+        .collect();
+    let y: Vec<f64> = x
+        .iter()
+        .map(|r| 1000.0 + 2e-3 * r[3] + if r[10] > 5e5 { 400.0 } else { 0.0 })
+        .collect();
+    let f = Forest::fit(&x, &y, &export_forest_config());
+    (f, x)
+}
+
+#[test]
+fn forest_artifact_matches_rust_numerics() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu(&dir).unwrap();
+    let (forest, x) = synth_forest();
+    let exec = ForestExecutor::new(&rt, &forest).unwrap();
+
+    // Batch path (chunked 256 with padding) vs native Rust.
+    let rows: Vec<Vec<f64>> = x.iter().take(300).cloned().collect();
+    let via_xla = exec.predict_batch(&rows).unwrap();
+    for (row, got) in rows.iter().zip(&via_xla) {
+        let want = forest.predict(row);
+        let rel = (got - want).abs() / want.abs().max(1.0);
+        assert!(rel < 1e-4, "xla {got} vs rust {want}");
+    }
+
+    // Single-row path.
+    let one = exec.predict_one(&rows[0]).unwrap();
+    let want = forest.predict(&rows[0]);
+    assert!((one - want).abs() / want.abs() < 1e-4);
+}
+
+#[test]
+fn train_step_reduces_loss() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu(&dir).unwrap();
+    let exec = TrainStepExecutor::new(&rt).unwrap();
+    let mut state = TrainState::init(7);
+    let mut rng = Pcg64::new(11);
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for i in 0..25 {
+        let (x, y) = perf4sight::runtime::trainstep_exec::synthetic_batch(&mut rng);
+        let loss = exec.step(&mut state, &x, &y, 0.1).unwrap();
+        assert!(loss.is_finite(), "loss diverged at step {i}");
+        if i == 0 {
+            first = loss;
+        }
+        last = loss;
+    }
+    assert!(
+        last < first * 0.8,
+        "no descent through AOT artifact: first {first}, last {last}"
+    );
+}
+
+#[test]
+fn manifest_matches_rust_constants() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu(&dir).unwrap();
+    let m = rt.manifest().unwrap();
+    assert_eq!(
+        m.get("num_features").and_then(|j| j.as_usize()),
+        Some(perf4sight::features::NUM_FEATURES)
+    );
+    let forest = m.get("forest").unwrap();
+    assert_eq!(forest.get("trees").and_then(|j| j.as_usize()), Some(64));
+    assert_eq!(forest.get("nodes").and_then(|j| j.as_usize()), Some(2048));
+}

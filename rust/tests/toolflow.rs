@@ -1,0 +1,81 @@
+//! Integration tests over the whole modelling toolflow:
+//! profile (simulated device) → analytical features → random forest →
+//! held-out prediction error. These assert the *shape* of the paper's
+//! headline results (single-digit Γ error, slightly higher Φ error).
+
+use perf4sight::device::Simulator;
+use perf4sight::forest::{Forest, ForestConfig};
+use perf4sight::models;
+use perf4sight::profiler::{profile, train_test_split, ProfileJob, PAPER_BATCH_SIZES};
+use perf4sight::pruning::Strategy;
+
+fn forest_cfg() -> ForestConfig {
+    ForestConfig {
+        n_trees: 40,
+        max_depth: 14,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn same_network_prediction_errors_are_paper_like() {
+    // Fig. 3 setting, one network: train on T={0,30,50,70,90}% random
+    // pruning, test on the other 14 levels. Paper: Γ ≤ 9.15%, Φ ≤ 14.7%.
+    let sim = Simulator::tx2();
+    let g = models::squeezenet(1000);
+    let (train, test) = train_test_split(&sim, "squeezenet", &g, Strategy::Random, 11);
+
+    let fg = Forest::fit(&train.x(), &train.y_gamma(), &forest_cfg());
+    let fp = Forest::fit(&train.x(), &train.y_phi(), &forest_cfg());
+    let gerr = fg.mape(&test.x(), &test.y_gamma());
+    let perr = fp.mape(&test.x(), &test.y_phi());
+    println!("squeezenet: gamma err {gerr:.2}%  phi err {perr:.2}%");
+    assert!(gerr < 9.15, "Γ error {gerr:.2}% exceeds the paper's worst case");
+    assert!(perr < 14.7, "Φ error {perr:.2}% exceeds the paper's worst case");
+}
+
+#[test]
+fn l1_test_strategy_only_slightly_worse() {
+    // Fig. 3 "L1" bars: train on random pruning, test on L1-norm pruning.
+    let sim = Simulator::tx2();
+    let g = models::resnet18(1000);
+    let (train, test_rand) = train_test_split(&sim, "resnet18", &g, Strategy::Random, 13);
+    let (_, test_l1) = train_test_split(&sim, "resnet18", &g, Strategy::L1Norm, 13);
+
+    let fg = Forest::fit(&train.x(), &train.y_gamma(), &forest_cfg());
+    let e_rand = fg.mape(&test_rand.x(), &test_rand.y_gamma());
+    let e_l1 = fg.mape(&test_l1.x(), &test_l1.y_gamma());
+    println!("resnet18 Γ: rand {e_rand:.2}%  l1 {e_l1:.2}%");
+    assert!(e_l1 < 15.0, "L1 strategy generalisation broke: {e_l1:.2}%");
+}
+
+#[test]
+fn single_level_training_set_is_much_worse() {
+    // Sec. 6.1: T={0} gives 33–74% error; 5 levels give 3–6%.
+    let sim = Simulator::tx2();
+    let g = models::alexnet(1000);
+    let one_level = ProfileJob {
+        levels: &[0.0],
+        batch_sizes: &PAPER_BATCH_SIZES,
+        ..ProfileJob::new("alexnet", &g)
+    };
+    let five_levels = ProfileJob::new("alexnet", &g);
+    let test_job = ProfileJob {
+        levels: &[0.25, 0.45, 0.65, 0.85],
+        seed: 999,
+        ..ProfileJob::new("alexnet", &g)
+    };
+    let train1 = profile(&sim, &one_level);
+    let train5 = profile(&sim, &five_levels);
+    let test = profile(&sim, &test_job);
+
+    let f1 = Forest::fit(&train1.x(), &train1.y_gamma(), &forest_cfg());
+    let f5 = Forest::fit(&train5.x(), &train5.y_gamma(), &forest_cfg());
+    let e1 = f1.mape(&test.x(), &test.y_gamma());
+    let e5 = f5.mape(&test.x(), &test.y_gamma());
+    println!("alexnet Γ: |T|=1 err {e1:.2}%  |T|=5 err {e5:.2}%");
+    assert!(
+        e1 > 2.0 * e5,
+        "single-level training should be much worse: {e1:.2}% vs {e5:.2}%"
+    );
+}
