@@ -13,8 +13,9 @@
 
 use perf4sight::device::{Simulator, PROFILE_COST_S};
 use perf4sight::experiments::ofa_models::forward_masked;
-use perf4sight::features::network_features;
+use perf4sight::features::network_features_from_plan;
 use perf4sight::forest::Forest;
+use perf4sight::ir::NetworkPlan;
 use perf4sight::models;
 use perf4sight::ofa::{evolutionary_search, Attributes, Constraints, EsConfig, Subset};
 use perf4sight::profiler::train_test_split;
@@ -72,10 +73,11 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(max_rel < 1e-4, "XLA path diverged from native forest");
 
     println!("\n=== 5. constrained OFA search with model-predicted attributes ===");
-    let predict = |_c: &perf4sight::ofa::SubnetConfig, g: &perf4sight::ir::Graph| {
+    let predict = |_c: &perf4sight::ofa::SubnetConfig, plan: &NetworkPlan| {
         // Γ through the XLA artifact (the deployed path); γ/φ natively.
-        let ft = network_features(g, 32).unwrap();
-        let fi = forward_masked(&network_features(g, 1).unwrap());
+        // One compiled plan per candidate serves both feature rows.
+        let ft = network_features_from_plan(plan, 32);
+        let fi = forward_masked(&network_features_from_plan(plan, 1));
         Attributes {
             gamma_train_mb: exec.predict_one(&ft).unwrap(),
             gamma_infer_mb: fg.predict(&fi).max(1500.0), // coarse reuse for the demo

@@ -7,7 +7,8 @@
 
 use perf4sight::device::{Simulator, PROFILE_COST_S};
 use perf4sight::experiments::ofa_models::{self, forward_masked};
-use perf4sight::features::network_features;
+use perf4sight::features::network_features_from_plan;
+use perf4sight::ir::NetworkPlan;
 use perf4sight::ofa::{
     evolutionary_search, initial_accuracy, retrained_accuracy, Attributes, Constraints,
     EsConfig, SubnetConfig, ALL_SUBSETS,
@@ -19,19 +20,24 @@ fn main() {
     let models = ofa_models::run(&sim, 40, 0x0fa5);
     ofa_models::print(&models.report);
 
-    let predict = |_c: &SubnetConfig, g: &perf4sight::ir::Graph| Attributes {
-        gamma_train_mb: models.gamma_train.predict(&network_features(g, 32).unwrap()),
-        gamma_infer_mb: models
-            .gamma_infer
-            .predict(&forward_masked(&network_features(g, 1).unwrap())),
-        phi_infer_ms: models
-            .phi_infer
-            .predict(&forward_masked(&network_features(g, 1).unwrap())),
+    // The search hands each candidate's compiled NetworkPlan to the
+    // predictor: one analysis pass serves the bs=32 training features and
+    // the shared bs=1 inference features.
+    let predict = |_c: &SubnetConfig, plan: &NetworkPlan| {
+        let f_train = network_features_from_plan(plan, 32);
+        let f_infer = forward_masked(&network_features_from_plan(plan, 1));
+        Attributes {
+            gamma_train_mb: models.gamma_train.predict(&f_train),
+            gamma_infer_mb: models.gamma_infer.predict(&f_infer),
+            phi_infer_ms: models.phi_infer.predict(&f_infer),
+        }
     };
 
     // Budgets between the predicted MIN and MAX attribute extremes.
-    let p_max = predict(&SubnetConfig::max(), &SubnetConfig::max().build());
-    let p_min = predict(&SubnetConfig::min(), &SubnetConfig::min().build());
+    let g_max = SubnetConfig::max().build();
+    let g_min = SubnetConfig::min().build();
+    let p_max = predict(&SubnetConfig::max(), &NetworkPlan::build(&g_max).unwrap());
+    let p_min = predict(&SubnetConfig::min(), &NetworkPlan::build(&g_min).unwrap());
     let mid = |lo: f64, hi: f64| lo + 0.4 * (hi - lo);
     let cons = Constraints {
         gamma_train_mb: mid(p_min.gamma_train_mb, p_max.gamma_train_mb),

@@ -7,7 +7,7 @@
 //! Run: `cargo run --release --example quickstart`
 
 use perf4sight::device::Simulator;
-use perf4sight::features::network_features;
+use perf4sight::features::network_features_from_plan;
 use perf4sight::forest::Forest;
 use perf4sight::models;
 use perf4sight::profiler::{profile, ProfileJob};
@@ -32,14 +32,17 @@ fn main() {
     let phi_model = Forest::fit(&dataset.x(), &dataset.y_phi(), &cfg);
 
     // 4. Predict an *unseen* topology: 40% L1-norm pruning, batch size 48.
+    //    One compiled NetworkPlan serves both the analytical features and
+    //    the ground-truth simulation (prune ⇒ rebuild plan).
     let mut rng = Pcg64::new(7);
     let pruned = prune(&resnet18, Strategy::L1Norm, 0.40, &mut rng);
-    let feats = network_features(&pruned, 48).unwrap();
+    let plan = pruned.plan().unwrap();
+    let feats = network_features_from_plan(&plan, 48);
     let gamma_pred = gamma_model.predict(&feats);
     let phi_pred = phi_model.predict(&feats);
 
     // 5. Compare against the simulated ground truth.
-    let truth = sim.train_step(&pruned, 48, None).unwrap();
+    let truth = sim.train_step_plan(&plan, 48, None);
     println!("\nresnet18 @ 40% L1 pruning, bs=48:");
     println!(
         "  Γ predicted {gamma_pred:>8.1} MB   measured {:>8.1} MB   ({:+.2}% error)",

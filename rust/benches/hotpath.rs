@@ -2,10 +2,16 @@
 //! extraction, forest prediction (native and through the XLA artifact),
 //! simulator evaluation, pruning, and a full ES iteration. These are the
 //! operations the OFA search executes ≥50,000 times.
+//!
+//! The "NetworkPlan" section contrasts the seed's direct-graph paths
+//! (which re-ran shape inference on every call) against the compiled-plan
+//! paths that build the analysis once and reuse it — the per-candidate
+//! cost the acceptance criteria track.
 
 use perf4sight::device::Simulator;
-use perf4sight::features::network_features;
+use perf4sight::features::{network_features, network_features_from_plan};
 use perf4sight::forest::Forest;
+use perf4sight::ir::NetworkPlan;
 use perf4sight::models;
 use perf4sight::ofa::SubnetConfig;
 use perf4sight::profiler::{profile, ProfileJob};
@@ -48,11 +54,60 @@ fn main() {
         std::hint::black_box(prune(&g50, Strategy::Random, 0.5, &mut rng));
     });
 
+    section("NetworkPlan — compiled analysis layer (build once, reuse)");
+
+    bench("NetworkPlan::build (resnet50)", 300, || {
+        std::hint::black_box(NetworkPlan::build(&g50).unwrap());
+    });
+
+    let plan50 = NetworkPlan::build(&g50).unwrap();
+    bench("train_step via reused plan (resnet50, bs=32)", 300, || {
+        std::hint::black_box(sim.train_step_plan(&plan50, 32, None));
+    });
+
+    bench("feature extraction via reused plan (resnet50)", 300, || {
+        std::hint::black_box(network_features_from_plan(&plan50, 32));
+    });
+
+    // The acceptance-criteria pair: one simulated train step plus train
+    // (bs=32) and inference (bs=1) feature rows — the per-candidate work of
+    // the search — via the seed's direct-graph path vs one compiled plan.
+    bench("train_step + 2 feature rows, direct graph (seed path)", 400, || {
+        std::hint::black_box((
+            sim.train_step(&g50, 32, None).unwrap(),
+            network_features(&g50, 32).unwrap(),
+            network_features(&g50, 1).unwrap(),
+        ));
+    });
+
+    bench("train_step + 2 feature rows, one NetworkPlan", 400, || {
+        let plan = NetworkPlan::build(&g50).unwrap();
+        std::hint::black_box((
+            sim.train_step_plan(&plan, 32, None),
+            network_features_from_plan(&plan, 32),
+            network_features_from_plan(&plan, 1),
+        ));
+    });
+
     // Fit a representative forest for prediction benchmarks.
     let train = profile(&sim, &ProfileJob::new("resnet50", &g50));
     let cfg = perf4sight::runtime::forest_exec::export_forest_config();
-    let forest = Forest::fit(&train.x(), &train.y_gamma(), &cfg);
+    let train_x = train.x();
+    let train_y = train.y_gamma();
+    let forest = Forest::fit(&train_x, &train_y, &cfg);
     let row = network_features(&g50, 32).unwrap();
+
+    section("forest fitting — parallel vs sequential (64 trees, 125 points)");
+
+    bench("Forest::fit (parallel, scoped threads)", 1500, || {
+        std::hint::black_box(Forest::fit(&train_x, &train_y, &cfg));
+    });
+
+    bench("Forest::fit_sequential (reference)", 1500, || {
+        std::hint::black_box(Forest::fit_sequential(&train_x, &train_y, &cfg));
+    });
+
+    section("forest prediction");
 
     bench("forest.predict native (64 trees)", 300, || {
         std::hint::black_box(forest.predict(&row));
@@ -63,33 +118,43 @@ fn main() {
         std::hint::black_box(forest.predict_batch(&rows));
     });
 
-    // Through the AOT XLA artifact (the Pallas kernel path).
+    // Through the AOT XLA artifact (the Pallas kernel path). Skips when
+    // artifacts are absent or the crate was built without the `xla`
+    // feature (the stub Runtime reports the latter).
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if Runtime::artifacts_present(&dir) {
-        let rt = Runtime::cpu(&dir).unwrap();
-        let exec = ForestExecutor::new(&rt, &forest).unwrap();
-        bench("forest predict_one via XLA artifact", 400, || {
-            std::hint::black_box(exec.predict_one(&row).unwrap());
-        });
-        let s = bench("forest predict_batch(256) via XLA artifact", 600, || {
-            std::hint::black_box(exec.predict_batch(&rows).unwrap());
-        });
-        println!(
-            "  -> XLA batch throughput: {:.0} candidates/s (paper budget: 0.1 s per candidate)",
-            256.0 * s.throughput_per_sec()
-        );
+        match Runtime::cpu(&dir) {
+            Ok(rt) => {
+                let exec = ForestExecutor::new(&rt, &forest).unwrap();
+                bench("forest predict_one via XLA artifact", 400, || {
+                    std::hint::black_box(exec.predict_one(&row).unwrap());
+                });
+                let s = bench("forest predict_batch(256) via XLA artifact", 600, || {
+                    std::hint::black_box(exec.predict_batch(&rows).unwrap());
+                });
+                println!(
+                    "  -> XLA batch throughput: {:.0} candidates/s \
+                     (paper budget: 0.1 s per candidate)",
+                    256.0 * s.throughput_per_sec()
+                );
+            }
+            Err(e) => println!("  (XLA runtime unavailable: {e}; skipping XLA-path benches)"),
+        }
     } else {
         println!("  (artifacts not built; skipping XLA-path benches — run `make artifacts`)");
     }
 
-    // Full per-candidate evaluation as the ES does it.
-    bench("ES candidate evaluation (build+features+3 predictions)", 400, || {
+    section("end-to-end ES candidate evaluation");
+
+    // Full per-candidate evaluation as the ES does it: one plan serves the
+    // bs=32 train features and the shared bs=1 inference features.
+    bench("ES candidate eval (build+plan+features+3 predictions)", 400, || {
         let mut rng = Pcg64::new(3);
         let c = SubnetConfig::sample(&mut rng);
         let g = c.build();
-        let convs = g.conv_infos().unwrap();
-        let ft = perf4sight::features::network_features_from_convs(&convs, 32);
-        let fi = perf4sight::features::network_features_from_convs(&convs, 1);
+        let plan = NetworkPlan::build(&g).unwrap();
+        let ft = network_features_from_plan(&plan, 32);
+        let fi = network_features_from_plan(&plan, 1);
         std::hint::black_box((forest.predict(&ft), forest.predict(&fi)));
     });
 }

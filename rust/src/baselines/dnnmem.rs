@@ -13,7 +13,7 @@
 //! This implementation reproduces exactly that failure mode: it is a
 //! correct first-principles model whose framework constants are generic.
 
-use crate::ir::{Graph, GraphError, Op};
+use crate::ir::{Graph, GraphError, NetworkPlan, Op};
 
 const BYTES: f64 = 4.0;
 const MB: f64 = 1024.0 * 1024.0;
@@ -43,11 +43,27 @@ pub fn estimate_training_memory_mb(
     bs: usize,
     cfg: &DnnMemConfig,
 ) -> Result<f64, GraphError> {
-    let shapes = graph.infer_shapes()?;
+    Ok(estimate_training_memory_mb_plan(
+        &NetworkPlan::build(graph)?,
+        bs,
+        cfg,
+    ))
+}
+
+/// As [`estimate_training_memory_mb`] over a pre-compiled plan — the
+/// comparison experiment evaluates every pruned topology at 25 batch
+/// sizes, so the plan amortises the liveness walk's shape inference.
+pub fn estimate_training_memory_mb_plan(
+    plan: &NetworkPlan<'_>,
+    bs: usize,
+    cfg: &DnnMemConfig,
+) -> f64 {
+    let graph = plan.graph();
+    let shapes = plan.shapes();
     let bsf = bs as f64;
 
     // Weight, gradient and optimizer (momentum) tensors.
-    let params = graph.param_count()? as f64;
+    let params = plan.param_count() as f64;
     let weight_mb = 3.0 * params * BYTES / MB;
 
     // Activation liveness: DNNMem walks the graph and keeps every tensor
@@ -78,7 +94,7 @@ pub fn estimate_training_memory_mb(
     // Input batch.
     let input_mb = bsf * shapes[0].numel() as f64 * BYTES / MB;
 
-    Ok(cfg.cuda_context_mb + weight_mb + act_mb + cfg.workspace_allowance_mb + input_mb)
+    cfg.cuda_context_mb + weight_mb + act_mb + cfg.workspace_allowance_mb + input_mb
 }
 
 #[cfg(test)]

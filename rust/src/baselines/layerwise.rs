@@ -7,7 +7,7 @@
 //! memory behaviour.
 
 use crate::device::Simulator;
-use crate::ir::{ConvInfo, Graph, GraphError};
+use crate::ir::{ConvInfo, Graph, GraphError, NetworkPlan};
 use crate::util::rng::Pcg64;
 
 use super::linreg::LinearModel;
@@ -72,24 +72,30 @@ impl LayerwiseModel {
     /// per-layer memory minus the duplicated framework base (memory) — the
     /// double-count correction Augur applies.
     pub fn predict(&self, graph: &Graph, bs: usize) -> Result<(f64, f64), GraphError> {
-        let convs = graph.conv_infos()?;
+        Ok(self.predict_from_convs(&graph.conv_infos()?, bs))
+    }
+
+    /// As [`LayerwiseModel::predict`] over a pre-compiled plan.
+    pub fn predict_plan(&self, plan: &NetworkPlan<'_>, bs: usize) -> (f64, f64) {
+        self.predict_from_convs(plan.conv_infos(), bs)
+    }
+
+    fn predict_from_convs(&self, convs: &[ConvInfo], bs: usize) -> (f64, f64) {
         let mut phi = 0.0;
         let mut gamma = 0.0;
-        let n = convs.len().max(1) as f64;
         // Every single-layer probe bakes in the per-step framework
         // overhead (step dispatch / framework base); Augur keeps one copy
         // and sums only the marginal per-layer contributions.
         let base_mem = self.memory.predict(&[0.0, 0.0, 0.0, 0.0]);
         let base_lat = self.latency.predict(&[0.0, 0.0, 0.0, 0.0]);
-        for c in &convs {
+        for c in convs {
             let f = matmul_features(c, bs);
             phi += (self.latency.predict(&f) - base_lat).max(0.0);
             gamma += (self.memory.predict(&f) - base_mem).max(0.0);
         }
         phi += base_lat.max(0.0);
         gamma += base_mem.max(0.0);
-        let _ = n;
-        Ok((gamma, phi))
+        (gamma, phi)
     }
 }
 

@@ -7,6 +7,6 @@ pub mod dnnmem;
 pub mod layerwise;
 pub mod linreg;
 
-pub use dnnmem::{estimate_training_memory_mb, DnnMemConfig};
+pub use dnnmem::{estimate_training_memory_mb, estimate_training_memory_mb_plan, DnnMemConfig};
 pub use layerwise::LayerwiseModel;
 pub use linreg::LinearModel;

@@ -13,8 +13,9 @@ use std::path::Path;
 
 use crate::device::{DeviceSpec, Simulator};
 use crate::experiments;
-use crate::features::network_features;
+use crate::features::network_features_from_plan;
 use crate::forest::Forest;
+use crate::ir::NetworkPlan;
 use crate::ofa::{Constraints, EsConfig, Subset};
 use crate::profiler::{profile, Dataset, ProfileJob, PAPER_BATCH_SIZES, TRAIN_LEVELS};
 use crate::pruning::Strategy;
@@ -86,12 +87,13 @@ fn cmd_zoo() -> Result<(), String> {
     println!("{:<14} {:>10} {:>10} {:>7}", "network", "params(M)", "size(MB)", "convs");
     for name in crate::models::ZOO {
         let g = crate::models::by_name(name).unwrap();
+        let plan = g.plan().map_err(|e| e.to_string())?;
         println!(
             "{:<14} {:>10.2} {:>10.1} {:>7}",
             name,
-            g.param_count().map_err(|e| e.to_string())? as f64 / 1e6,
-            g.model_size_mb().map_err(|e| e.to_string())?,
-            g.conv_infos().map_err(|e| e.to_string())?.len()
+            plan.param_count() as f64 / 1e6,
+            plan.model_size_mb(),
+            plan.conv_infos().len()
         );
     }
     Ok(())
@@ -150,7 +152,11 @@ fn cmd_fit(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
     let train_err = forest.mape(&ds.x(), &y);
     let out = args.get("out").ok_or("--out required")?;
     if let Some(dir) = Path::new(out).parent() {
-        std::fs::create_dir_all(dir).ok();
+        // `parent()` of a bare filename is `Some("")` — nothing to create.
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| format!("creating output directory {}: {e}", dir.display()))?;
+        }
     }
     std::fs::write(out, forest.to_json().to_string()).map_err(|e| e.to_string())?;
     println!(
@@ -174,13 +180,16 @@ fn cmd_predict(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
     let strategy = strategy_of(&args.get_or("strategy", "random"))?;
     let mut rng = crate::util::rng::Pcg64::new(args.u64_or("seed", cfg.seed)?);
     let pruned = crate::pruning::prune(&graph, strategy, level, &mut rng);
-    let f = network_features(&pruned, bs).map_err(|e| e.to_string())?;
+    // One compiled plan serves feature extraction and (optionally) the
+    // ground-truth simulation below.
+    let plan = pruned.plan().map_err(|e| e.to_string())?;
+    let f = network_features_from_plan(&plan, bs);
     let pred = forest.predict(&f);
     println!("{network} @ {:.0}% pruning, bs={bs}: predicted = {pred:.1}", level * 100.0);
     // Optional ground-truth comparison on the simulated device.
     if args.get("device").is_some() || args.flag("truth") {
         let sim = simulator(args, cfg)?;
-        let m = sim.train_step(&pruned, bs, None).map_err(|e| e.to_string())?;
+        let m = sim.train_step_plan(&plan, bs, None);
         println!(
             "simulated truth on {}: Γ = {:.1} MB, Φ = {:.1} ms",
             sim.spec.name, m.gamma_mb, m.phi_ms
@@ -204,14 +213,17 @@ fn cmd_search(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
     let models = experiments::ofa_models::run(&sim, subnets, seed);
     experiments::ofa_models::print(&models.report);
 
-    let predict = |_c: &crate::ofa::SubnetConfig, g: &crate::ir::Graph| crate::ofa::Attributes {
-        gamma_train_mb: models.gamma_train.predict(&network_features(g, 32).unwrap()),
-        gamma_infer_mb: models.gamma_infer.predict(&experiments::ofa_models::forward_masked(
-            &network_features(g, 1).unwrap(),
-        )),
-        phi_infer_ms: models.phi_infer.predict(&experiments::ofa_models::forward_masked(
-            &network_features(g, 1).unwrap(),
-        )),
+    let predict = |_c: &crate::ofa::SubnetConfig, plan: &NetworkPlan| {
+        // The candidate's compiled plan yields both feature rows; the bs=1
+        // forward-masked row is shared by the γ-infer and φ-infer models.
+        let f_train = network_features_from_plan(plan, 32);
+        let f_infer =
+            experiments::ofa_models::forward_masked(&network_features_from_plan(plan, 1));
+        crate::ofa::Attributes {
+            gamma_train_mb: models.gamma_train.predict(&f_train),
+            gamma_infer_mb: models.gamma_infer.predict(&f_infer),
+            phi_infer_ms: models.phi_infer.predict(&f_infer),
+        }
     };
     let cons = Constraints {
         gamma_train_mb: args.f64_or("gamma-max", f64::INFINITY)?,

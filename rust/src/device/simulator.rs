@@ -16,8 +16,14 @@
 //!
 //! Everything here is *hidden* from the analytical features — the random
 //! forest's job, exactly as on real hardware, is to learn it.
+//!
+//! All analysis paths consume a compiled [`NetworkPlan`] (`*_plan`
+//! methods); the `&Graph` entry points are thin wrappers that build the
+//! plan once and delegate. Callers that evaluate a graph more than once —
+//! the profiler across 25 batch sizes, the OFA search across features and
+//! three attributes — should build the plan themselves and reuse it.
 
-use crate::ir::{Graph, GraphError, Op};
+use crate::ir::{Graph, GraphError, NetworkPlan, Op};
 use crate::util::rng::Pcg64;
 
 use super::allocator::{pool_reserved, round_block};
@@ -96,18 +102,29 @@ impl Simulator {
         &self,
         graph: &Graph,
         bs: usize,
-        mut rng: Option<&mut Pcg64>,
+        rng: Option<&mut Pcg64>,
     ) -> Result<TrainMeasurement, GraphError> {
-        let mem = self.train_memory_breakdown(graph, bs)?;
-        let phi = self.train_latency_ms(graph, bs)?;
+        Ok(self.train_step_plan(&NetworkPlan::build(graph)?, bs, rng))
+    }
+
+    /// As [`Simulator::train_step`] over a pre-compiled plan (infallible:
+    /// the plan proves the graph valid).
+    pub fn train_step_plan(
+        &self,
+        plan: &NetworkPlan<'_>,
+        bs: usize,
+        mut rng: Option<&mut Pcg64>,
+    ) -> TrainMeasurement {
+        let mem = self.train_memory_breakdown_plan(plan, bs);
+        let phi = self.train_latency_ms_plan(plan, bs);
         let (g_noise, p_noise) = match rng.as_deref_mut() {
             Some(r) => (r.jitter(0.008), r.jitter(0.015)),
             None => (1.0, 1.0),
         };
-        Ok(TrainMeasurement {
+        TrainMeasurement {
             gamma_mb: mem.total_mb() * g_noise,
             phi_ms: phi * p_noise,
-        })
+        }
     }
 
     /// Simulate inference (forward only, no autograd retention).
@@ -115,18 +132,28 @@ impl Simulator {
         &self,
         graph: &Graph,
         bs: usize,
-        mut rng: Option<&mut Pcg64>,
+        rng: Option<&mut Pcg64>,
     ) -> Result<InferMeasurement, GraphError> {
-        let gamma = self.infer_memory_mb(graph, bs)?;
-        let phi = self.infer_latency_ms(graph, bs)?;
+        Ok(self.inference_plan(&NetworkPlan::build(graph)?, bs, rng))
+    }
+
+    /// As [`Simulator::inference`] over a pre-compiled plan.
+    pub fn inference_plan(
+        &self,
+        plan: &NetworkPlan<'_>,
+        bs: usize,
+        mut rng: Option<&mut Pcg64>,
+    ) -> InferMeasurement {
+        let gamma = self.infer_memory_mb_plan(plan, bs);
+        let phi = self.infer_latency_ms_plan(plan, bs);
         let (g_noise, p_noise) = match rng.as_deref_mut() {
             Some(r) => (r.jitter(0.006), r.jitter(0.012)),
             None => (1.0, 1.0),
         };
-        Ok(InferMeasurement {
+        InferMeasurement {
             gamma_mb: gamma * g_noise,
             phi_ms: phi * p_noise,
-        })
+        }
     }
 
     /// Γ components (noise-free).
@@ -135,12 +162,22 @@ impl Simulator {
         graph: &Graph,
         bs: usize,
     ) -> Result<MemoryBreakdown, GraphError> {
-        let shapes = graph.infer_shapes()?;
-        let convs = graph.conv_infos()?;
+        Ok(self.train_memory_breakdown_plan(&NetworkPlan::build(graph)?, bs))
+    }
+
+    /// Γ components (noise-free) from a pre-compiled plan.
+    pub fn train_memory_breakdown_plan(
+        &self,
+        plan: &NetworkPlan<'_>,
+        bs: usize,
+    ) -> MemoryBreakdown {
+        let graph = plan.graph();
+        let shapes = plan.shapes();
+        let convs = plan.conv_infos();
         let bsf = bs as f64;
 
         // --- parameters, gradients, momentum ---
-        let params = graph.param_count()? as f64;
+        let params = plan.param_count() as f64;
         let params_mb = pool_reserved([params * BYTES]) / MB;
         // grad + SGD momentum buffer (PyTorch momentum SGD).
         let optimizer_mb = 2.0 * params_mb;
@@ -226,7 +263,7 @@ impl Simulator {
             (bsf * in_numel * BYTES) / MB
         };
 
-        Ok(MemoryBreakdown {
+        MemoryBreakdown {
             framework_mb: self.spec.framework_base_train_mb,
             params_mb,
             optimizer_mb,
@@ -234,14 +271,20 @@ impl Simulator {
             workspace_mb,
             transient_mb,
             io_mb,
-        })
+        }
     }
 
     /// Φ (noise-free): conv ops via cuDNN choices + pointwise/BN/pool/linear
     /// traffic + optimizer + per-launch and per-step overheads.
     pub fn train_latency_ms(&self, graph: &Graph, bs: usize) -> Result<f64, GraphError> {
-        let shapes = graph.infer_shapes()?;
-        let convs = graph.conv_infos()?;
+        Ok(self.train_latency_ms_plan(&NetworkPlan::build(graph)?, bs))
+    }
+
+    /// Φ (noise-free) from a pre-compiled plan.
+    pub fn train_latency_ms_plan(&self, plan: &NetworkPlan<'_>, bs: usize) -> f64 {
+        let graph = plan.graph();
+        let shapes = plan.shapes();
+        let convs = plan.conv_infos();
         let bsf = bs as f64;
         let bw = self.spec.mem_bw_gbps * 1e9 * self.spec.bw_efficiency;
         let launch_ms = self.spec.launch_overhead_us / 1e3;
@@ -291,17 +334,22 @@ impl Simulator {
         }
 
         // SGD momentum update: read w/g/m, write w/m.
-        let params = graph.param_count()? as f64;
+        let params = plan.param_count() as f64;
         t += 5.0 * params * BYTES / bw * 1e3 + launch_ms * 3.0;
-        Ok(t)
+        t
     }
 
     /// Inference memory γ (noise-free).
     pub fn infer_memory_mb(&self, graph: &Graph, bs: usize) -> Result<f64, GraphError> {
-        let shapes = graph.infer_shapes()?;
-        let convs = graph.conv_infos()?;
+        Ok(self.infer_memory_mb_plan(&NetworkPlan::build(graph)?, bs))
+    }
+
+    /// Inference memory γ (noise-free) from a pre-compiled plan.
+    pub fn infer_memory_mb_plan(&self, plan: &NetworkPlan<'_>, bs: usize) -> f64 {
+        let shapes = plan.shapes();
+        let convs = plan.conv_infos();
         let bsf = bs as f64;
-        let params = graph.param_count()? as f64;
+        let params = plan.param_count() as f64;
         let params_mb = pool_reserved([params * BYTES]) / MB;
         // Ping-pong activation buffers: the two largest simultaneous
         // tensors bound the live set without autograd.
@@ -312,7 +360,7 @@ impl Simulator {
         sizes.sort_by(|a, b| b.partial_cmp(a).unwrap());
         let act_mb = pool_reserved(sizes.into_iter().take(2)) / MB;
         let mut ws_peak = 0.0f64;
-        for c in &convs {
+        for c in convs {
             ws_peak = ws_peak.max(choose(&self.spec, c, ConvOp::Fwd, bs).workspace_bytes);
         }
         let io_mb = if self.spec.unified {
@@ -320,22 +368,28 @@ impl Simulator {
         } else {
             (bsf * shapes[0].numel() as f64 * BYTES) / MB
         };
-        Ok(self.spec.framework_base_infer_mb
+        self.spec.framework_base_infer_mb
             + params_mb
             + act_mb
             + round_block(ws_peak) / MB
-            + io_mb)
+            + io_mb
     }
 
     /// Inference latency φ (noise-free).
     pub fn infer_latency_ms(&self, graph: &Graph, bs: usize) -> Result<f64, GraphError> {
-        let shapes = graph.infer_shapes()?;
-        let convs = graph.conv_infos()?;
+        Ok(self.infer_latency_ms_plan(&NetworkPlan::build(graph)?, bs))
+    }
+
+    /// Inference latency φ (noise-free) from a pre-compiled plan.
+    pub fn infer_latency_ms_plan(&self, plan: &NetworkPlan<'_>, bs: usize) -> f64 {
+        let graph = plan.graph();
+        let shapes = plan.shapes();
+        let convs = plan.conv_infos();
         let bsf = bs as f64;
         let bw = self.spec.mem_bw_gbps * 1e9 * self.spec.bw_efficiency;
         let launch_ms = self.spec.launch_overhead_us / 1e3;
         let mut t = 1.2; // dispatch overhead
-        for c in &convs {
+        for c in convs {
             t += choose(&self.spec, c, ConvOp::Fwd, bs).time_ms;
         }
         for node in &graph.nodes {
@@ -360,7 +414,7 @@ impl Simulator {
                 _ => 0.0,
             };
         }
-        Ok(t)
+        t
     }
 }
 

@@ -5,11 +5,15 @@
 //! and plain-linear-regression baselines. Paper numbers: perf4sight 2.45%
 //! vs DNNMem 17.4%; inference-era layer-wise methods 12–30%.
 
-use crate::baselines::{estimate_training_memory_mb, DnnMemConfig, LayerwiseModel, LinearModel};
+use crate::baselines::{
+    estimate_training_memory_mb_plan, DnnMemConfig, LayerwiseModel, LinearModel,
+};
 use crate::device::{DeviceSpec, Simulator};
+use crate::ir::NetworkPlan;
 use crate::profiler::train_test_split;
 use crate::pruning::Strategy;
 use crate::util::bench_harness::{section, table};
+use crate::util::rng::{hash_seed, Pcg64};
 use crate::util::stats;
 
 use super::fit_gamma_phi;
@@ -34,20 +38,51 @@ pub fn run(seed: u64) -> DnnmemReport {
     let perf4sight_err = fg.mape(&test.x(), &test.y_gamma());
     let perf4sight_phi_err = fp.mape(&test.x(), &test.y_phi());
 
-    // DNNMem analytical baseline: needs the *graph* per test point.
+    // Both graph-level baselines need the pruned topology per test point.
+    // Rebuild each level's pruned graph once — deterministically, on the
+    // same per-level stream the profiler used — and compile one
+    // NetworkPlan per level, shared by DNNMem and the layer-wise model
+    // across all 25 batch sizes.
+    let mut pruned: Vec<(f64, crate::ir::Graph)> = Vec::new();
+    for p in &test.points {
+        if !pruned.iter().any(|(l, _)| (l - p.level).abs() < 1e-12) {
+            let mut rng = Pcg64::with_stream(
+                seed ^ 0xdead_beef,
+                hash_seed(&format!("resnet50/random/{:.3}", p.level)),
+            );
+            pruned.push((
+                p.level,
+                crate::pruning::prune(&graph, Strategy::Random, p.level, &mut rng),
+            ));
+        }
+    }
+    let plans: Vec<(f64, NetworkPlan)> = pruned
+        .iter()
+        .map(|(l, g)| (*l, NetworkPlan::build(g).expect("valid pruned graph")))
+        .collect();
+    let plan_for = |level: f64| {
+        &plans
+            .iter()
+            .find(|(l, _)| (l - level).abs() < 1e-12)
+            .expect("level was pruned above")
+            .1
+    };
+
     let cfg = DnnMemConfig::default();
+    let lw = LayerwiseModel::calibrate(&sim, 150, seed ^ 0xa06);
     let mut dnn_pred = Vec::new();
     let mut truth = Vec::new();
+    let mut lw_gamma = Vec::new();
+    let mut lw_phi = Vec::new();
+    let mut phi_truth = Vec::new();
     for p in &test.points {
-        // Rebuild the pruned graph deterministically the same way the
-        // profiler did.
-        let mut rng = crate::util::rng::Pcg64::with_stream(
-            seed ^ 0xdead_beef,
-            crate::util::rng::hash_seed(&format!("resnet50/random/{:.3}", p.level)),
-        );
-        let pruned = crate::pruning::prune(&graph, Strategy::Random, p.level, &mut rng);
-        dnn_pred.push(estimate_training_memory_mb(&pruned, p.bs, &cfg).unwrap());
+        let plan = plan_for(p.level);
+        dnn_pred.push(estimate_training_memory_mb_plan(plan, p.bs, &cfg));
         truth.push(p.gamma_mb);
+        let (g, ph) = lw.predict_plan(plan, p.bs);
+        lw_gamma.push(g);
+        lw_phi.push(ph);
+        phi_truth.push(p.phi_ms);
     }
     let dnnmem_err = stats::mape(&dnn_pred, &truth);
 
@@ -55,23 +90,6 @@ pub fn run(seed: u64) -> DnnmemReport {
     // alternative).
     let lin = LinearModel::fit(&train.x(), &train.y_gamma(), 1e-3);
     let linreg_err = stats::mape(&lin.predict_batch(&test.x()), &test.y_gamma());
-
-    // Augur-style layer-wise model.
-    let lw = LayerwiseModel::calibrate(&sim, 150, seed ^ 0xa06);
-    let mut lw_gamma = Vec::new();
-    let mut lw_phi = Vec::new();
-    let mut phi_truth = Vec::new();
-    for p in &test.points {
-        let mut rng = crate::util::rng::Pcg64::with_stream(
-            seed ^ 0xdead_beef,
-            crate::util::rng::hash_seed(&format!("resnet50/random/{:.3}", p.level)),
-        );
-        let pruned = crate::pruning::prune(&graph, Strategy::Random, p.level, &mut rng);
-        let (g, ph) = lw.predict(&pruned, p.bs).unwrap();
-        lw_gamma.push(g);
-        lw_phi.push(ph);
-        phi_truth.push(p.phi_ms);
-    }
 
     DnnmemReport {
         perf4sight_err,

@@ -7,8 +7,9 @@
 //! model trained on ResNet50 data against the 100 sub-networks (4.28%).
 
 use crate::device::Simulator;
-use crate::features::{forward_only_mask, network_features, NUM_FEATURES};
+use crate::features::{forward_only_mask, network_features_from_plan, NUM_FEATURES};
 use crate::forest::Forest;
+use crate::ir::NetworkPlan;
 use crate::ofa::SubnetConfig;
 use crate::profiler::train_test_split;
 use crate::pruning::Strategy;
@@ -62,16 +63,22 @@ pub fn run(sim: &Simulator, subnets: usize, seed: u64) -> OfaModels {
     let mut rng = Pcg64::new(seed);
     let configs: Vec<SubnetConfig> = (0..subnets).map(|_| SubnetConfig::sample(&mut rng)).collect();
     let graphs: Vec<_> = configs.iter().map(|c| c.build()).collect();
+    // One compiled plan per sampled sub-network, reused across every batch
+    // size for both feature extraction and simulation.
+    let plans: Vec<NetworkPlan> = graphs
+        .iter()
+        .map(|g| NetworkPlan::build(g).expect("valid OFA sub-network"))
+        .collect();
 
     // ---- γ/φ inference models: train on the first quarter of subnets ----
     let n_train = (subnets / 4).max(2);
     let mut xg = Vec::new();
     let mut yg = Vec::new();
     let mut yp = Vec::new();
-    for g in graphs.iter().take(n_train) {
+    for plan in plans.iter().take(n_train) {
         for &bs in &INFER_BATCH_SIZES {
-            let f = forward_masked(&network_features(g, bs).unwrap());
-            let m = sim.inference(g, bs, Some(&mut rng)).unwrap();
+            let f = forward_masked(&network_features_from_plan(plan, bs));
+            let m = sim.inference_plan(plan, bs, Some(&mut rng));
             xg.push(f);
             yg.push(m.gamma_mb);
             yp.push(m.phi_ms);
@@ -86,10 +93,10 @@ pub fn run(sim: &Simulator, subnets: usize, seed: u64) -> OfaModels {
     let mut gtruth = Vec::new();
     let mut ppred = Vec::new();
     let mut ptruth = Vec::new();
-    for g in graphs.iter().skip(n_train) {
+    for plan in plans.iter().skip(n_train) {
         for &bs in &INFER_BATCH_SIZES {
-            let f = forward_masked(&network_features(g, bs).unwrap());
-            let m = sim.inference(g, bs, Some(&mut rng)).unwrap();
+            let f = forward_masked(&network_features_from_plan(plan, bs));
+            let m = sim.inference_plan(plan, bs, Some(&mut rng));
             gpred.push(gamma_infer.predict(&f));
             gtruth.push(m.gamma_mb);
             ppred.push(phi_infer.predict(&f));
@@ -104,10 +111,10 @@ pub fn run(sim: &Simulator, subnets: usize, seed: u64) -> OfaModels {
     let mut tg_pred = Vec::new();
     let mut tg_truth = Vec::new();
     let mut gamma_samples = Vec::new();
-    for g in &graphs {
+    for plan in &plans {
         for &bs in &[32usize, 64, 128] {
-            let f = network_features(g, bs).unwrap();
-            let m = sim.train_step(g, bs, Some(&mut rng)).unwrap();
+            let f = network_features_from_plan(plan, bs);
+            let m = sim.train_step_plan(plan, bs, Some(&mut rng));
             tg_pred.push(gamma_train.predict(&f));
             tg_truth.push(m.gamma_mb);
             if bs <= 128 {

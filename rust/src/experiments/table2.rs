@@ -9,9 +9,10 @@
 
 
 use crate::device::{Simulator, PROFILE_COST_S};
+use crate::ir::NetworkPlan;
 use crate::ofa::{
-    evolutionary_search, initial_accuracy, retrained_accuracy, Attributes, Constraints,
-    EsConfig, SubnetConfig, ALL_SUBSETS,
+    evolutionary_search, initial_accuracy_plan, retrained_accuracy_plan, Attributes,
+    Constraints, EsConfig, SubnetConfig, ALL_SUBSETS,
 };
 use crate::util::bench_harness::{section, table};
 
@@ -38,9 +39,9 @@ pub struct Table2Report {
 
 /// Ground-truth attributes of a sub-network (what the paper profiles for
 /// the final table).
-fn true_attrs(sim: &Simulator, g: &crate::ir::Graph) -> (f64, f64, f64) {
-    let t = sim.train_step(g, 32, None).unwrap();
-    let i = sim.inference(g, 1, None).unwrap();
+fn true_attrs(sim: &Simulator, plan: &NetworkPlan<'_>) -> (f64, f64, f64) {
+    let t = sim.train_step_plan(plan, 32, None);
+    let i = sim.inference_plan(plan, 1, None);
     (t.gamma_mb, i.gamma_mb, i.phi_ms)
 }
 
@@ -51,11 +52,12 @@ fn row_for(
     search_time_h: Option<(f64, f64)>,
 ) -> Table2Row {
     let g = config.build();
-    let (gamma, gamma_i, phi) = true_attrs(sim, &g);
+    let plan = NetworkPlan::build(&g).expect("valid sub-network");
+    let (gamma, gamma_i, phi) = true_attrs(sim, &plan);
     Table2Row {
         name: name.to_string(),
         search_time_h,
-        size_mb: g.model_size_mb().unwrap(),
+        size_mb: plan.model_size_mb(),
         gamma_mb: gamma,
         gamma_infer_mb: gamma_i,
         phi_ms: phi,
@@ -63,8 +65,8 @@ fn row_for(
             .iter()
             .map(|&s| {
                 (
-                    initial_accuracy(config, &g, s),
-                    retrained_accuracy(config, &g, s),
+                    initial_accuracy_plan(config, &plan, s),
+                    retrained_accuracy_plan(config, &plan, s),
                 )
             })
             .collect(),
@@ -73,11 +75,10 @@ fn row_for(
 
 pub fn run(sim: &Simulator, models: &OfaModels, es_cfg: &EsConfig) -> Table2Report {
     // Model-based attribute predictor — the fast path the paper proposes.
-    let predict = |_c: &SubnetConfig, g: &crate::ir::Graph| -> Attributes {
-        // One shape-inference pass serves both batch sizes (§Perf).
-        let convs = g.conv_infos().unwrap();
-        let f_train = crate::features::network_features_from_convs(&convs, 32);
-        let f_infer = forward_masked(&crate::features::network_features_from_convs(&convs, 1));
+    // The candidate's compiled plan serves both batch sizes (§Perf).
+    let predict = |_c: &SubnetConfig, plan: &NetworkPlan| -> Attributes {
+        let f_train = crate::features::network_features_from_plan(plan, 32);
+        let f_infer = forward_masked(&crate::features::network_features_from_plan(plan, 1));
         Attributes {
             gamma_train_mb: models.gamma_train.predict(&f_train),
             gamma_infer_mb: models.gamma_infer.predict(&f_infer),
@@ -94,8 +95,10 @@ pub fn run(sim: &Simulator, models: &OfaModels, es_cfg: &EsConfig) -> Table2Repo
     // the paper's (A: 1.6×/1.05×/1.8×, B: 1.9×/1.1×/2.8× vs MAX).
     let max_c = SubnetConfig::max();
     let min_c = SubnetConfig::min();
-    let pa_max = predict(&max_c, &max_c.build());
-    let pa_min = predict(&min_c, &min_c.build());
+    let g_max = max_c.build();
+    let g_min = min_c.build();
+    let pa_max = predict(&max_c, &NetworkPlan::build(&g_max).unwrap());
+    let pa_min = predict(&min_c, &NetworkPlan::build(&g_min).unwrap());
     let between = |lo: f64, hi: f64, frac: f64| lo + frac * (hi - lo);
     let cons_a = Constraints {
         gamma_train_mb: between(pa_min.gamma_train_mb, pa_max.gamma_train_mb, 0.45),

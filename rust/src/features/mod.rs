@@ -13,7 +13,7 @@
 //! (App. B.2.4), so the nominal 42-feature list expands to 56 columns; the
 //! batch size itself is prepended as column 0 for a total of 57.
 
-use crate::ir::{ConvInfo, Graph, GraphError};
+use crate::ir::{ConvInfo, Graph, GraphError, NetworkPlan};
 
 /// Feature families — used by the ablation experiment (E9) to knock out
 /// whole algorithm groups.
@@ -273,6 +273,14 @@ pub fn network_features(graph: &Graph, bs: usize) -> Result<Vec<f64>, GraphError
     Ok(network_features_from_convs(&graph.conv_infos()?, bs))
 }
 
+/// As [`network_features`] but over a compiled [`NetworkPlan`] — the entry
+/// point for callers that already hold a plan (profiler, OFA search,
+/// coordinator), so feature extraction at any batch size is pure arithmetic
+/// with no shape-inference pass.
+pub fn network_features_from_plan(plan: &NetworkPlan<'_>, bs: usize) -> Vec<f64> {
+    network_features_from_convs(plan.conv_infos(), bs)
+}
+
 /// As [`network_features`] but from pre-extracted conv summaries — lets
 /// callers that need features at several batch sizes (the OFA search needs
 /// bs=32 for Γ and bs=1 for γ/φ) run shape inference once (§Perf).
@@ -402,6 +410,18 @@ mod tests {
             get(&f4, "wino_ops_fwd_q4r3"),
             4.0 * get(&f1, "wino_ops_fwd_q4r3")
         );
+    }
+
+    #[test]
+    fn plan_features_match_graph_features() {
+        let g = crate::models::resnet18(1000);
+        let plan = g.plan().unwrap();
+        for bs in [1usize, 8, 32] {
+            assert_eq!(
+                network_features(&g, bs).unwrap(),
+                network_features_from_plan(&plan, bs)
+            );
+        }
     }
 
     #[test]

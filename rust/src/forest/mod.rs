@@ -49,8 +49,78 @@ pub struct Forest {
 }
 
 impl Forest {
-    /// Fit on row-major `x` (n × d) against `y` (n).
+    /// Fit on row-major `x` (n × d) against `y` (n), training trees in
+    /// parallel on scoped threads.
+    ///
+    /// Every per-tree RNG is forked from the seed generator up front, in
+    /// the same sequential order [`Forest::fit_sequential`] uses, so each
+    /// tree's randomness is independent of scheduling and the result is
+    /// bit-identical to the sequential reference (asserted by
+    /// `rust/tests/plan_equivalence.rs`).
     pub fn fit(x: &[Vec<f64>], y: &[f64], config: &ForestConfig) -> Forest {
+        let (tree_cfg, rngs, n, d) = Self::prepare(x, y, config);
+        let workers = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(rngs.len())
+            .max(1);
+        // Round-robin distribution keeps per-worker load even.
+        let mut chunks: Vec<Vec<(usize, Pcg64)>> = (0..workers).map(|_| Vec::new()).collect();
+        for (i, r) in rngs.into_iter().enumerate() {
+            chunks[i % workers].push((i, r));
+        }
+        let tree_cfg = &tree_cfg;
+        let bootstrap = config.bootstrap;
+        let mut fitted: Vec<(usize, Tree)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = chunks
+                .into_iter()
+                .map(|chunk| {
+                    scope.spawn(move || {
+                        chunk
+                            .into_iter()
+                            .map(|(i, mut rng)| {
+                                (i, Self::fit_one_tree(x, y, n, bootstrap, tree_cfg, &mut rng))
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().unwrap())
+                .collect()
+        });
+        fitted.sort_by_key(|&(i, _)| i);
+        Forest {
+            trees: fitted.into_iter().map(|(_, t)| t).collect(),
+            n_features: d,
+            config: config.clone(),
+        }
+    }
+
+    /// Single-threaded reference implementation of [`Forest::fit`] (the
+    /// original algorithm). Kept as the determinism oracle for the
+    /// parallel path and for profiling comparisons.
+    pub fn fit_sequential(x: &[Vec<f64>], y: &[f64], config: &ForestConfig) -> Forest {
+        let (tree_cfg, rngs, n, d) = Self::prepare(x, y, config);
+        let trees: Vec<Tree> = rngs
+            .into_iter()
+            .map(|mut rng| Self::fit_one_tree(x, y, n, config.bootstrap, &tree_cfg, &mut rng))
+            .collect();
+        Forest {
+            trees,
+            n_features: d,
+            config: config.clone(),
+        }
+    }
+
+    /// Shared fit setup: validate inputs, derive the tree config, and fork
+    /// one RNG per tree from the seed generator (sequential order).
+    fn prepare(
+        x: &[Vec<f64>],
+        y: &[f64],
+        config: &ForestConfig,
+    ) -> (TreeConfig, Vec<Pcg64>, usize, usize) {
         assert_eq!(x.len(), y.len());
         assert!(!x.is_empty(), "empty training set");
         let d = x[0].len();
@@ -63,22 +133,25 @@ impl Forest {
             max_features: Some(max_features),
         };
         let mut rng = Pcg64::new(config.seed);
-        let trees: Vec<Tree> = (0..config.n_trees)
-            .map(|_| {
-                let mut tree_rng = rng.fork();
-                let indices: Vec<usize> = if config.bootstrap {
-                    (0..n).map(|_| tree_rng.gen_range(n)).collect()
-                } else {
-                    (0..n).collect()
-                };
-                Tree::fit(x, y, &indices, &tree_cfg, &mut tree_rng)
-            })
-            .collect();
-        Forest {
-            trees,
-            n_features: d,
-            config: config.clone(),
-        }
+        let rngs: Vec<Pcg64> = (0..config.n_trees).map(|_| rng.fork()).collect();
+        (tree_cfg, rngs, n, d)
+    }
+
+    /// Fit one tree from its private RNG (bootstrap draw + split sampling).
+    fn fit_one_tree(
+        x: &[Vec<f64>],
+        y: &[f64],
+        n: usize,
+        bootstrap: bool,
+        tree_cfg: &TreeConfig,
+        rng: &mut Pcg64,
+    ) -> Tree {
+        let indices: Vec<usize> = if bootstrap {
+            (0..n).map(|_| rng.gen_range(n)).collect()
+        } else {
+            (0..n).collect()
+        };
+        Tree::fit(x, y, &indices, tree_cfg, rng)
     }
 
     /// Predict one row (mean over trees).

@@ -10,7 +10,7 @@ use crate::util::rng::Pcg64;
 /// A node in the flattened tree. Leaves have `feature == u32::MAX` and
 /// self-referential children (which makes fixed-depth tensor traversal in
 /// the Pallas kernel a no-op once a leaf is reached).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TreeNode {
     pub feature: u32,
     pub threshold: f64,
@@ -49,7 +49,7 @@ impl Default for TreeConfig {
 }
 
 /// A fitted regression tree.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Tree {
     pub nodes: Vec<TreeNode>,
 }

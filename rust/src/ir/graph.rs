@@ -4,8 +4,16 @@
 //! builder only lets a node consume earlier nodes, so the invariant holds by
 //! construction). Shape inference propagates per-sample `C × H × W` shapes
 //! and is re-run after structured pruning mutates filter counts.
+//!
+//! The per-call analyses below ([`Graph::infer_shapes`],
+//! [`Graph::conv_infos`], [`Graph::param_count`]) are the reference
+//! implementations; hot paths compile them once into a
+//! [`NetworkPlan`](super::plan::NetworkPlan) via [`Graph::plan`] and reuse
+//! the cached results. Pruning mutates the graph, so any plan must be
+//! rebuilt afterwards (prune ⇒ rebuild plan — enforced by the borrow).
 
 use super::op::{Groups, Op};
+use super::plan::NetworkPlan;
 use super::shapes::{conv_out_spatial, pool_out_spatial_ceil, Shape};
 use std::fmt;
 
@@ -335,65 +343,85 @@ impl Graph {
     /// Extract the paper's per-conv-layer variables (requires a valid graph).
     pub fn conv_infos(&self) -> Result<Vec<ConvInfo>, GraphError> {
         let shapes = self.infer_shapes()?;
-        let mut out = Vec::new();
-        for node in &self.nodes {
-            if let Op::Conv2d {
-                k, s, p, groups, ..
-            } = &node.op
-            {
-                let in_shape = shapes[node.inputs[0]];
-                let out_shape = shapes[node.id];
-                let m = in_shape.channels();
-                out.push(ConvInfo {
-                    node: node.id,
-                    n: out_shape.channels(),
-                    m,
-                    k: *k,
-                    s: *s,
-                    p: *p,
-                    g: groups.resolve(m),
-                    ip: in_shape.spatial(),
-                    op: out_shape.spatial(),
-                });
-            }
-        }
-        Ok(out)
+        Ok(conv_infos_from_shapes(self, &shapes))
     }
 
     /// Total parameter count (conv weights+bias, BN affine+running stats,
     /// linear weights+bias) — used for "Model Size (MB)" in Table 2.
     pub fn param_count(&self) -> Result<usize, GraphError> {
         let shapes = self.infer_shapes()?;
-        let mut total = 0usize;
-        for node in &self.nodes {
-            match &node.op {
-                Op::Conv2d { bias, groups, k, .. } => {
-                    let m = shapes[node.inputs[0]].channels();
-                    let n = shapes[node.id].channels();
-                    let g = groups.resolve(m);
-                    total += n * (m / g) * k * k;
-                    if *bias {
-                        total += n;
-                    }
-                }
-                Op::BatchNorm => {
-                    // weight, bias, running mean, running var
-                    total += 4 * shapes[node.id].channels();
-                }
-                Op::Linear { out, bias } => {
-                    let inf = shapes[node.inputs[0]].numel();
-                    total += inf * out + if *bias { *out } else { 0 };
-                }
-                _ => {}
-            }
-        }
-        Ok(total)
+        Ok(param_count_from_shapes(self, &shapes))
     }
 
     /// Model size in MB at fp32.
     pub fn model_size_mb(&self) -> Result<f64, GraphError> {
         Ok(self.param_count()? as f64 * 4.0 / (1024.0 * 1024.0))
     }
+
+    /// Compile this graph's analysis plan: one validating pass caching
+    /// shapes, conv summaries and parameter counts for all downstream
+    /// consumers. Rebuild after any mutation (e.g. pruning).
+    pub fn plan(&self) -> Result<NetworkPlan<'_>, GraphError> {
+        NetworkPlan::build(self)
+    }
+}
+
+/// Conv summaries from pre-inferred shapes — the single implementation
+/// shared by [`Graph::conv_infos`] and `NetworkPlan::build`, so the two
+/// paths cannot drift.
+pub(crate) fn conv_infos_from_shapes(graph: &Graph, shapes: &[Shape]) -> Vec<ConvInfo> {
+    let mut out = Vec::new();
+    for node in &graph.nodes {
+        if let Op::Conv2d {
+            k, s, p, groups, ..
+        } = &node.op
+        {
+            let in_shape = shapes[node.inputs[0]];
+            let out_shape = shapes[node.id];
+            let m = in_shape.channels();
+            out.push(ConvInfo {
+                node: node.id,
+                n: out_shape.channels(),
+                m,
+                k: *k,
+                s: *s,
+                p: *p,
+                g: groups.resolve(m),
+                ip: in_shape.spatial(),
+                op: out_shape.spatial(),
+            });
+        }
+    }
+    out
+}
+
+/// Parameter count from pre-inferred shapes — the single implementation
+/// shared by [`Graph::param_count`] and `NetworkPlan::build`.
+pub(crate) fn param_count_from_shapes(graph: &Graph, shapes: &[Shape]) -> usize {
+    let mut total = 0usize;
+    for node in &graph.nodes {
+        match &node.op {
+            Op::Conv2d { bias, groups, k, .. } => {
+                let m = shapes[node.inputs[0]].channels();
+                let n = shapes[node.id].channels();
+                let g = groups.resolve(m);
+                total += n * (m / g) * k * k;
+                if *bias {
+                    total += n;
+                }
+            }
+            Op::BatchNorm => {
+                // weight, bias, running mean, running var
+                total += 4 * shapes[node.id].channels();
+            }
+            Op::Linear { out, bias } => {
+                let inf = shapes[node.inputs[0]].numel();
+                total += inf * out + if *bias { *out } else { 0 };
+            }
+            _ => {}
+        }
+    }
+    total
 }
 
 impl fmt::Display for Graph {

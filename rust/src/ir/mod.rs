@@ -5,13 +5,19 @@
 //! exactly as in the paper's analytical model where every feature is linear
 //! in `bs`). The IR is the common substrate for the network zoo, structured
 //! pruning, analytical feature extraction and the device simulator.
+//!
+//! Derived analyses (shapes, conv summaries, parameter counts) are compiled
+//! once into a [`NetworkPlan`] and shared by every consumer; see
+//! [`plan`] for the invalidation rule (prune ⇒ rebuild plan).
 
 pub mod builder;
 pub mod graph;
 pub mod op;
+pub mod plan;
 pub mod shapes;
 
 pub use builder::GraphBuilder;
 pub use graph::{ConvInfo, Graph, GraphError, Node, NodeId};
 pub use op::{Act, Groups, Op};
+pub use plan::NetworkPlan;
 pub use shapes::{conv_out_spatial, pool_out_spatial_ceil, Shape};

@@ -1,0 +1,199 @@
+//! The compiled analysis layer: [`NetworkPlan`].
+//!
+//! Every downstream consumer of a [`Graph`] — the device simulator, the
+//! analytical feature extractor, the profiler, the baselines, the OFA
+//! accuracy proxy — needs the same derived facts: inferred per-node shapes,
+//! per-convolution summaries ([`ConvInfo`]), and the parameter count.
+//! Before this layer existed each consumer re-ran `Graph::infer_shapes()`
+//! on demand, so a single simulated training step paid for shape inference
+//! six times and an OFA search candidate paid for it eight-plus times.
+//!
+//! `NetworkPlan::build` performs **one** validating pass over the graph and
+//! caches everything; consumers take `&NetworkPlan` and read the cached
+//! results. The cached quantities go through the very same
+//! `*_from_shapes` implementations the corresponding `Graph` methods use,
+//! so plan-based paths are bit-identical to the direct-graph paths by
+//! construction (and asserted end-to-end across the whole model zoo by
+//! `rust/tests/plan_equivalence.rs`).
+//!
+//! # Invalidation rule
+//!
+//! A plan is a snapshot of one graph topology. Structured pruning mutates
+//! filter counts, so: **prune ⇒ rebuild the plan**. The borrow of the
+//! underlying graph makes stale plans unrepresentable — a `NetworkPlan`
+//! holds `&Graph`, so the graph cannot be mutated while a plan over it is
+//! alive.
+
+use super::graph::{
+    conv_infos_from_shapes, param_count_from_shapes, ConvInfo, Graph, GraphError, NodeId,
+};
+use super::shapes::Shape;
+
+/// One-pass compiled analysis of a [`Graph`]: shapes, conv summaries and
+/// parameter counts, computed together and cached for reuse.
+#[derive(Clone, Debug)]
+pub struct NetworkPlan<'g> {
+    graph: &'g Graph,
+    shapes: Vec<Shape>,
+    convs: Vec<ConvInfo>,
+    param_count: usize,
+}
+
+impl<'g> NetworkPlan<'g> {
+    /// Compile the plan: a single validating shape-inference pass, with the
+    /// conv summaries and parameter count derived from the shared shape
+    /// vector through the same `*_from_shapes` implementations
+    /// [`Graph::conv_infos`] and [`Graph::param_count`] use, so results
+    /// are bit-identical by construction.
+    pub fn build(graph: &'g Graph) -> Result<Self, GraphError> {
+        let shapes = graph.infer_shapes()?;
+        let convs = conv_infos_from_shapes(graph, &shapes);
+        let param_count = param_count_from_shapes(graph, &shapes);
+        Ok(NetworkPlan {
+            graph,
+            shapes,
+            convs,
+            param_count,
+        })
+    }
+
+    /// The graph this plan was compiled from.
+    pub fn graph(&self) -> &'g Graph {
+        self.graph
+    }
+
+    /// Inferred per-node output shapes (parallel to `graph.nodes`).
+    pub fn shapes(&self) -> &[Shape] {
+        &self.shapes
+    }
+
+    /// Inferred output shape of one node.
+    pub fn shape(&self, id: NodeId) -> Shape {
+        self.shapes[id]
+    }
+
+    /// Per-convolution summaries (the paper's per-layer variables), in
+    /// topological order.
+    pub fn conv_infos(&self) -> &[ConvInfo] {
+        &self.convs
+    }
+
+    /// Total parameter count (conv weights+bias, BN affine+running stats,
+    /// linear weights+bias).
+    pub fn param_count(&self) -> usize {
+        self.param_count
+    }
+
+    /// Model size in MB at fp32.
+    pub fn model_size_mb(&self) -> f64 {
+        self.param_count as f64 * 4.0 / (1024.0 * 1024.0)
+    }
+
+    /// Total forward MACs at `bs = 1`, summed over conv layers.
+    pub fn fwd_macs(&self) -> f64 {
+        self.convs.iter().map(|c| c.fwd_macs()).sum()
+    }
+
+    /// Node count of the underlying graph.
+    pub fn len(&self) -> usize {
+        self.shapes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shapes.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::Act;
+    use crate::ir::{Groups, Op};
+
+    fn tiny() -> Graph {
+        let mut g = Graph::new("tiny");
+        let x = g.add("input", Op::Input { c: 3, h: 32, w: 32 }, &[]);
+        let c1 = g.add(
+            "conv1",
+            Op::Conv2d {
+                out_c: 16,
+                k: 3,
+                s: 1,
+                p: 1,
+                groups: Groups::Fixed(1),
+                bias: false,
+            },
+            &[x],
+        );
+        let b1 = g.add("bn1", Op::BatchNorm, &[c1]);
+        let r1 = g.add("relu1", Op::Activation(Act::Relu), &[b1]);
+        let gp = g.add("gap", Op::GlobalAvgPool, &[r1]);
+        let fl = g.add("flatten", Op::Flatten, &[gp]);
+        g.add(
+            "fc",
+            Op::Linear {
+                out: 10,
+                bias: true,
+            },
+            &[fl],
+        );
+        g
+    }
+
+    #[test]
+    fn plan_matches_graph_methods() {
+        let g = tiny();
+        let plan = NetworkPlan::build(&g).unwrap();
+        assert_eq!(plan.shapes(), g.infer_shapes().unwrap().as_slice());
+        assert_eq!(plan.conv_infos(), g.conv_infos().unwrap().as_slice());
+        assert_eq!(plan.param_count(), g.param_count().unwrap());
+        assert_eq!(plan.model_size_mb(), g.model_size_mb().unwrap());
+        assert_eq!(plan.len(), g.len());
+        assert!(!plan.is_empty());
+    }
+
+    #[test]
+    fn plan_rejects_invalid_graphs() {
+        let mut g = Graph::new("bad");
+        let x = g.add("in", Op::Input { c: 3, h: 8, w: 8 }, &[]);
+        let a = g.add(
+            "a",
+            Op::Conv2d {
+                out_c: 4,
+                k: 1,
+                s: 1,
+                p: 0,
+                groups: Groups::Fixed(1),
+                bias: false,
+            },
+            &[x],
+        );
+        let b = g.add(
+            "b",
+            Op::Conv2d {
+                out_c: 6,
+                k: 1,
+                s: 1,
+                p: 0,
+                groups: Groups::Fixed(1),
+                bias: false,
+            },
+            &[x],
+        );
+        g.add("add", Op::Add, &[a, b]);
+        assert!(NetworkPlan::build(&g).is_err());
+    }
+
+    #[test]
+    fn prune_then_rebuild_tracks_mutation() {
+        let mut g = tiny();
+        let before = NetworkPlan::build(&g).unwrap().param_count();
+        g.set_conv_filters(1, 8);
+        // The invalidation rule: the old plan cannot outlive the mutation
+        // (borrowck), so a fresh build is the only way to read the graph —
+        // and it must see the new filter count.
+        let after = NetworkPlan::build(&g).unwrap();
+        assert!(after.param_count() < before);
+        assert_eq!(after.conv_infos()[0].n, 8);
+    }
+}

@@ -9,7 +9,7 @@
 //! un-retrained MAX. The proxy encodes exactly that, with constants set
 //! from Table 2's MAX/MIN rows and seeded noise for realism.
 
-use crate::ir::Graph;
+use crate::ir::{ConvInfo, Graph, NetworkPlan};
 use crate::util::rng::{hash_seed, Pcg64};
 
 use super::supernet::SubnetConfig;
@@ -55,12 +55,13 @@ impl Subset {
 /// Normalised capacity in [0,1]: log-FLOPs position between the MIN and
 /// MAX sub-networks.
 pub fn capacity(graph: &Graph) -> f64 {
-    let flops: f64 = graph
-        .conv_infos()
-        .expect("valid graph")
-        .iter()
-        .map(|c| c.fwd_macs())
-        .sum();
+    capacity_from_convs(&graph.conv_infos().expect("valid graph"))
+}
+
+/// As [`capacity`] from pre-extracted conv summaries (the search hot path
+/// reads them off the candidate's compiled [`NetworkPlan`]).
+pub fn capacity_from_convs(convs: &[ConvInfo]) -> f64 {
+    let flops: f64 = convs.iter().map(|c| c.fwd_macs()).sum();
     let min_flops = min_max_flops().0;
     let max_flops = min_max_flops().1;
     ((flops.ln() - min_flops.ln()) / (max_flops.ln() - min_flops.ln())).clamp(0.0, 1.0)
@@ -86,8 +87,16 @@ fn min_max_flops() -> (f64, f64) {
 /// Top-1 accuracy (%) of the *deployed* (not retrained) sub-network on a
 /// subset. Deterministic per (config, subset).
 pub fn initial_accuracy(config: &SubnetConfig, graph: &Graph, subset: Subset) -> f64 {
+    initial_accuracy_from_capacity(config, capacity(graph), subset)
+}
+
+/// As [`initial_accuracy`] over the candidate's compiled plan.
+pub fn initial_accuracy_plan(config: &SubnetConfig, plan: &NetworkPlan<'_>, subset: Subset) -> f64 {
+    initial_accuracy_from_capacity(config, capacity_from_convs(plan.conv_infos()), subset)
+}
+
+fn initial_accuracy_from_capacity(config: &SubnetConfig, c: f64, subset: Subset) -> f64 {
     let (lo, hi, _) = subset.constants();
-    let c = capacity(graph);
     // Diminishing returns in capacity.
     let acc = lo + (hi - lo) * c.powf(0.65);
     let mut rng = Pcg64::new(hash_seed(&format!("acc/{config:?}/{}", subset.name())));
@@ -97,9 +106,21 @@ pub fn initial_accuracy(config: &SubnetConfig, graph: &Graph, subset: Subset) ->
 /// Top-1 accuracy after retraining for 1 epoch on the subset (the DaPR
 /// step): smaller networks specialise more; narrow subsets gain more.
 pub fn retrained_accuracy(config: &SubnetConfig, graph: &Graph, subset: Subset) -> f64 {
+    retrained_accuracy_from_capacity(config, capacity(graph), subset)
+}
+
+/// As [`retrained_accuracy`] over the candidate's compiled plan.
+pub fn retrained_accuracy_plan(
+    config: &SubnetConfig,
+    plan: &NetworkPlan<'_>,
+    subset: Subset,
+) -> f64 {
+    retrained_accuracy_from_capacity(config, capacity_from_convs(plan.conv_infos()), subset)
+}
+
+fn retrained_accuracy_from_capacity(config: &SubnetConfig, c: f64, subset: Subset) -> f64 {
     let (_, _, boost) = subset.constants();
-    let c = capacity(graph);
-    let initial = initial_accuracy(config, graph, subset);
+    let initial = initial_accuracy_from_capacity(config, c, subset);
     let gain = boost * (1.0 - 0.45 * c);
     let mut rng = Pcg64::new(hash_seed(&format!("ret/{config:?}/{}", subset.name())));
     (initial + gain + rng.normal() * 0.2).clamp(0.0, 99.5)

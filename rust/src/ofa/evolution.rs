@@ -7,14 +7,17 @@
 //! The predictor is pluggable so the experiment can compare: (a) the naive
 //! approach — on-device profiling at 20 s/sample — and (b) the paper's
 //! approach — random-forest inference (natively or through the XLA
-//! artifact).
+//! artifact). Each candidate's graph is compiled once into a
+//! [`NetworkPlan`] which serves the predictor (features / simulator at
+//! every batch size) and the accuracy proxy, so a candidate costs exactly
+//! one shape-inference pass.
 
 use std::time::{Duration, Instant};
 
-use crate::ir::Graph;
+use crate::ir::NetworkPlan;
 use crate::util::rng::Pcg64;
 
-use super::accuracy::{initial_accuracy, Subset};
+use super::accuracy::{initial_accuracy_plan, Subset};
 use super::supernet::SubnetConfig;
 
 /// Hard constraints on the three attributes (MB, MB, ms).
@@ -90,14 +93,16 @@ pub struct EsResult {
 
 /// Run the evolutionary search.
 ///
-/// * `predict` estimates (Γ, γ, φ) for a candidate graph — the cost centre
-///   the paper's models accelerate 200×.
+/// * `predict` estimates (Γ, γ, φ) for a candidate from its compiled
+///   [`NetworkPlan`] — the cost centre the paper's models accelerate 200×.
+///   The same plan then feeds the accuracy proxy, so each candidate is
+///   analysed exactly once.
 /// * `subset` selects the accuracy-proxy fitness target.
 pub fn evolutionary_search(
     constraints: &Constraints,
     cfg: &EsConfig,
     subset: Subset,
-    mut predict: impl FnMut(&SubnetConfig, &Graph) -> Attributes,
+    mut predict: impl FnMut(&SubnetConfig, &NetworkPlan) -> Attributes,
 ) -> EsResult {
     let started = Instant::now();
     let mut rng = Pcg64::new(cfg.seed);
@@ -105,15 +110,16 @@ pub fn evolutionary_search(
 
     let evaluate = |c: &SubnetConfig,
                         samples: &mut usize,
-                        predict: &mut dyn FnMut(&SubnetConfig, &Graph) -> Attributes|
+                        predict: &mut dyn FnMut(&SubnetConfig, &NetworkPlan) -> Attributes|
      -> Option<(f64, Attributes)> {
         let g = c.build();
+        let plan = NetworkPlan::build(&g).expect("OFA sub-networks are always valid");
         *samples += 1;
-        let attrs = predict(c, &g);
+        let attrs = predict(c, &plan);
         if !attrs.satisfies(constraints) {
             return None;
         }
-        Some((initial_accuracy(c, &g, subset), attrs))
+        Some((initial_accuracy_plan(c, &plan, subset), attrs))
     };
 
     // Seed population: rejection-sample valid candidates (bounded tries).
@@ -172,10 +178,12 @@ mod tests {
     use super::*;
     use crate::device::Simulator;
 
-    fn sim_predict(sim: &Simulator) -> impl FnMut(&SubnetConfig, &Graph) -> Attributes + '_ {
-        move |_c, g| {
-            let t = sim.train_step(g, 32, None).unwrap();
-            let i = sim.inference(g, 1, None).unwrap();
+    fn sim_predict(
+        sim: &Simulator,
+    ) -> impl FnMut(&SubnetConfig, &NetworkPlan) -> Attributes + '_ {
+        move |_c: &SubnetConfig, plan: &NetworkPlan| {
+            let t = sim.train_step_plan(plan, 32, None);
+            let i = sim.inference_plan(plan, 1, None);
             Attributes {
                 gamma_train_mb: t.gamma_mb,
                 gamma_infer_mb: i.gamma_mb,

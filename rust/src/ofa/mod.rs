@@ -7,6 +7,9 @@ pub mod accuracy;
 pub mod evolution;
 pub mod supernet;
 
-pub use accuracy::{capacity, initial_accuracy, retrained_accuracy, Subset, ALL_SUBSETS};
+pub use accuracy::{
+    capacity, capacity_from_convs, initial_accuracy, initial_accuracy_plan, retrained_accuracy,
+    retrained_accuracy_plan, Subset, ALL_SUBSETS,
+};
 pub use evolution::{evolutionary_search, Attributes, Constraints, EsConfig, EsResult};
 pub use supernet::{SubnetConfig, BASE_DEPTHS, EXPAND_CHOICES, WIDTH_CHOICES};

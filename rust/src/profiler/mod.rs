@@ -2,14 +2,28 @@
 //! *entire network's* training step — never an isolated layer — measured on
 //! the (simulated) target device across pruning levels, pruning strategies
 //! and batch sizes, paired with the analytical feature vector.
+//!
+//! Execution model: pruning runs once per level (sequentially, on the same
+//! per-level RNG stream as always, so pruned topologies stay reproducible
+//! and reconstructible by consumers such as the DNNMem comparison); each
+//! pruned graph is compiled into one [`NetworkPlan`] shared by all of its
+//! batch sizes; and the flat (level × batch-size) work units are drained by
+//! a worker pool, so parallelism is bounded by the unit count (e.g. 125)
+//! rather than the level count (5). Every work unit resumes its level's
+//! measurement stream at the exact offset the sequential order would have
+//! reached (each measurement consumes a fixed number of noise draws), so
+//! datasets are **bit-identical** to [`profile_sequential`], the original
+//! per-level implementation kept as the determinism oracle.
 
 pub mod dataset;
 
 pub use dataset::{Dataset, ProfilePoint};
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
 use crate::device::Simulator;
-use crate::features::network_features;
-use crate::ir::Graph;
+use crate::features::network_features_from_plan;
+use crate::ir::{Graph, NetworkPlan};
 use crate::pruning::{prune, Strategy};
 use crate::util::rng::{hash_seed, Pcg64};
 
@@ -66,61 +80,170 @@ impl<'a> ProfileJob<'a> {
     }
 }
 
+/// Noise draws one `train_step` measurement consumes from the stream: two
+/// log-normal jitters (Γ, Φ), each one Box-Muller normal of two `next_u64`
+/// draws. Lets a work unit fast-forward past earlier batch sizes' draws;
+/// `flat_profile_matches_sequential_reference` guards the count.
+const NOISE_DRAWS_PER_MEASUREMENT: u64 = 4;
+
 /// Profile a network per the job spec: for every (level, bs), prune,
 /// extract features, and average `runs` noisy simulated measurements.
-/// Parallelised over pruning levels with scoped threads.
+///
+/// Pruning and plan compilation happen once per level; the flat
+/// (level, bs) work units then run on a scoped worker pool, each unit
+/// reusing its level's [`NetworkPlan`] and resuming the level's
+/// measurement stream at its sequential offset — output is bit-identical
+/// to [`profile_sequential`].
 pub fn profile(sim: &Simulator, job: &ProfileJob) -> Dataset {
-    let mut points: Vec<ProfilePoint> = Vec::new();
-    let results: Vec<Vec<ProfilePoint>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = job
-            .levels
-            .iter()
-            .map(|&level| {
-                let sim = sim.clone();
-                let job = job.clone();
-                scope.spawn(move || profile_one_level(&sim, &job, level))
+    // One pruned topology per level, on the historical per-level stream
+    // (consumers reconstruct these graphs from the same derivation). The
+    // post-prune RNG state is kept: it is the start of the level's
+    // measurement stream.
+    let pruned: Vec<(f64, Graph, Pcg64)> = job
+        .levels
+        .iter()
+        .map(|&level| {
+            let mut rng = Pcg64::with_stream(job.seed, level_stream(job, level));
+            let g = prune(job.graph, job.strategy, level, &mut rng);
+            (level, g, rng)
+        })
+        .collect();
+    // One compiled plan per pruned graph, shared across all batch sizes.
+    let plans: Vec<NetworkPlan> = pruned
+        .iter()
+        .map(|(_, g, _)| NetworkPlan::build(g).expect("valid pruned graph"))
+        .collect();
+
+    // Flat (level, bs) work units drained through an atomic cursor.
+    let units: Vec<(usize, usize)> = (0..pruned.len())
+        .flat_map(|li| (0..job.batch_sizes.len()).map(move |bi| (li, bi)))
+        .collect();
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(units.len());
+    let cursor = AtomicUsize::new(0);
+    let mut results: Vec<(usize, ProfilePoint)> = std::thread::scope(|scope| {
+        let cursor = &cursor;
+        let units = &units;
+        let pruned = &pruned;
+        let plans = &plans;
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= units.len() {
+                            break;
+                        }
+                        let (li, bi) = units[i];
+                        let (level, _, ref base_rng) = pruned[li];
+                        let point = profile_one_point(
+                            sim,
+                            job,
+                            &plans[li],
+                            level,
+                            base_rng,
+                            bi,
+                            job.batch_sizes[bi],
+                        );
+                        out.push((i, point));
+                    }
+                    out
+                })
             })
             .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect()
     });
-    for r in results {
-        points.extend(r);
+    // Restore the deterministic level-major, batch-size-minor order.
+    results.sort_by_key(|&(i, _)| i);
+    Dataset::new(results.into_iter().map(|(_, p)| p).collect())
+}
+
+/// The original single-thread-per-level implementation, kept as the
+/// determinism oracle for [`profile`]: one RNG stream per level drives
+/// pruning and then every measurement in batch-size order, with the
+/// direct-graph (non-plan) analysis paths.
+pub fn profile_sequential(sim: &Simulator, job: &ProfileJob) -> Dataset {
+    let mut points = Vec::new();
+    for &level in job.levels {
+        let mut rng = Pcg64::with_stream(job.seed, level_stream(job, level));
+        let pruned = prune(job.graph, job.strategy, level, &mut rng);
+        for &bs in job.batch_sizes {
+            let features =
+                crate::features::network_features(&pruned, bs).expect("valid pruned graph");
+            let mut gamma = 0.0;
+            let mut phi = 0.0;
+            for _ in 0..job.runs.max(1) {
+                let m = sim
+                    .train_step(&pruned, bs, Some(&mut rng))
+                    .expect("simulation");
+                gamma += m.gamma_mb;
+                phi += m.phi_ms;
+            }
+            let runs = job.runs.max(1) as f64;
+            points.push(ProfilePoint {
+                network: job.network.to_string(),
+                strategy: job.strategy.name(),
+                level,
+                bs,
+                features,
+                gamma_mb: gamma / runs,
+                phi_ms: phi / runs,
+            });
+        }
     }
     Dataset::new(points)
 }
 
-fn profile_one_level(sim: &Simulator, job: &ProfileJob, level: f64) -> Vec<ProfilePoint> {
-    let stream = hash_seed(&format!(
+/// Per-level RNG stream (drives pruning then measurement; the historical
+/// derivation — `dnnmem_cmp` reconstructs pruned graphs from it).
+fn level_stream(job: &ProfileJob, level: f64) -> u64 {
+    hash_seed(&format!(
         "{}/{}/{level:.3}",
         job.network,
         job.strategy.name()
-    ));
-    let mut rng = Pcg64::with_stream(job.seed, stream);
-    let pruned = prune(job.graph, job.strategy, level, &mut rng);
-    let mut out = Vec::with_capacity(job.batch_sizes.len());
-    for &bs in job.batch_sizes {
-        let features = network_features(&pruned, bs).expect("valid pruned graph");
-        let mut gamma = 0.0;
-        let mut phi = 0.0;
-        for _ in 0..job.runs.max(1) {
-            let m = sim
-                .train_step(&pruned, bs, Some(&mut rng))
-                .expect("simulation");
-            gamma += m.gamma_mb;
-            phi += m.phi_ms;
-        }
-        let runs = job.runs.max(1) as f64;
-        out.push(ProfilePoint {
-            network: job.network.to_string(),
-            strategy: job.strategy.name(),
-            level,
-            bs,
-            features,
-            gamma_mb: gamma / runs,
-            phi_ms: phi / runs,
-        });
+    ))
+}
+
+/// One (level, bs) datapoint: plan-based features + averaged noisy runs.
+/// `base_rng` is the level stream just after pruning; the unit
+/// fast-forwards past the draws earlier batch sizes consume, so any
+/// worker can run it in any order and reproduce the sequential values.
+#[allow(clippy::too_many_arguments)]
+fn profile_one_point(
+    sim: &Simulator,
+    job: &ProfileJob,
+    plan: &NetworkPlan<'_>,
+    level: f64,
+    base_rng: &Pcg64,
+    bs_index: usize,
+    bs: usize,
+) -> ProfilePoint {
+    let runs = job.runs.max(1);
+    let mut rng = base_rng.clone();
+    rng.advance(bs_index as u64 * runs as u64 * NOISE_DRAWS_PER_MEASUREMENT);
+    let features = network_features_from_plan(plan, bs);
+    let mut gamma = 0.0;
+    let mut phi = 0.0;
+    for _ in 0..runs {
+        let m = sim.train_step_plan(plan, bs, Some(&mut rng));
+        gamma += m.gamma_mb;
+        phi += m.phi_ms;
     }
-    out
+    ProfilePoint {
+        network: job.network.to_string(),
+        strategy: job.strategy.name(),
+        level,
+        bs,
+        features,
+        gamma_mb: gamma / runs as f64,
+        phi_ms: phi / runs as f64,
+    }
 }
 
 /// Convenience: profile one network at the paper's train/test split.
@@ -182,6 +305,30 @@ mod tests {
                 .unwrap()
         };
         assert!(find(0.0, 32).gamma_mb > find(0.5, 32).gamma_mb);
+    }
+
+    #[test]
+    fn flat_profile_matches_sequential_reference() {
+        // The flat parallel schedule + plan reuse must reproduce the
+        // original per-level sequential implementation bit for bit
+        // (features, Γ and Φ — including the noise draws).
+        let sim = Simulator::tx2();
+        let g = models::squeezenet(1000);
+        let job = ProfileJob {
+            levels: &[0.0, 0.4, 0.7],
+            batch_sizes: &[4, 16, 32],
+            runs: 2,
+            ..ProfileJob::new("squeezenet", &g)
+        };
+        let flat = profile(&sim, &job);
+        let seq = profile_sequential(&sim, &job);
+        assert_eq!(flat.len(), seq.len());
+        for (a, b) in flat.points.iter().zip(&seq.points) {
+            assert_eq!((a.level, a.bs), (b.level, b.bs));
+            assert_eq!(a.features, b.features, "level {} bs {}", a.level, a.bs);
+            assert_eq!(a.gamma_mb, b.gamma_mb, "level {} bs {}", a.level, a.bs);
+            assert_eq!(a.phi_ms, b.phi_ms, "level {} bs {}", a.level, a.bs);
+        }
     }
 
     #[test]

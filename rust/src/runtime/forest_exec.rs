@@ -1,8 +1,12 @@
 //! Forest-inference executor: runs the `forest_b{1,256}.hlo.txt` artifacts
 //! (L2 graph wrapping the L1 Pallas traversal kernel) against forests
 //! fitted in Rust, padded to the artifact's fixed shapes.
+//!
+//! The executor itself needs the `xla` feature; the artifact-shape
+//! constants and the export-compatible forest config below are pure Rust
+//! and always available.
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use crate::forest::{Forest, ForestTensors};
 
@@ -38,6 +42,7 @@ impl Default for ForestArtifactShape {
 /// literal-per-call implementation deep-copied all five arrays on every
 /// prediction and was ~39× slower on the single-row path (see
 /// EXPERIMENTS.md §Perf).
+#[cfg(feature = "xla")]
 pub struct ForestExecutor {
     client: xla::PjRtClient,
     exe_b1: xla::PjRtLoadedExecutable,
@@ -51,11 +56,13 @@ pub struct ForestExecutor {
     value: xla::PjRtBuffer,
 }
 
+#[cfg(feature = "xla")]
 impl ForestExecutor {
     /// Load the artifacts and bind `forest` (must fit the artifact shape:
     /// exactly `trees` trees — padding trees would change the mean — and at
     /// most `nodes` nodes and `depth` levels).
     pub fn new(rt: &Runtime, forest: &Forest) -> Result<ForestExecutor> {
+        use anyhow::bail;
         let shape = ForestArtifactShape::default();
         let mut t = forest.to_tensors();
         if t.n_trees != shape.trees {
@@ -163,6 +170,33 @@ impl ForestExecutor {
             out.extend(self.run(&self.exe_b256, &xs, 256, chunk.len())?);
         }
         Ok(out)
+    }
+}
+
+/// Stub executor: keeps callers compiling without the `xla` feature; every
+/// operation reports that the PJRT path is unavailable. Unconstructible in
+/// practice because [`Runtime::cpu`] already fails in stub builds.
+#[cfg(not(feature = "xla"))]
+pub struct ForestExecutor {
+    _private: (),
+}
+
+#[cfg(not(feature = "xla"))]
+impl ForestExecutor {
+    pub fn new(_rt: &Runtime, _forest: &Forest) -> Result<ForestExecutor> {
+        anyhow::bail!("ForestExecutor requires the `xla` feature")
+    }
+
+    pub fn shape(&self) -> ForestArtifactShape {
+        ForestArtifactShape::default()
+    }
+
+    pub fn predict_one(&self, _row: &[f64]) -> Result<f64> {
+        anyhow::bail!("ForestExecutor requires the `xla` feature")
+    }
+
+    pub fn predict_batch(&self, _rows: &[Vec<f64>]) -> Result<Vec<f64>> {
+        anyhow::bail!("ForestExecutor requires the `xla` feature")
     }
 }
 

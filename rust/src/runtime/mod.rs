@@ -3,6 +3,13 @@
 //! is never involved at runtime — the pattern from
 //! /opt/xla-example/load_hlo/ (HLO *text* interchange; see aot.py for why
 //! text, not serialised protos).
+//!
+//! The PJRT-backed execution paths require the `xla` cargo feature (which
+//! in turn needs the xla-rs bindings and libpjrt from the lab toolchain
+//! image). Without the feature this module compiles as a stub: artifact
+//! presence checks, manifest parsing and the pure-Rust pieces
+//! ([`TrainState`], [`forest_exec::export_forest_config`], …) all work,
+//! while [`Runtime::cpu`] and the executors return a clear error.
 
 pub mod forest_exec;
 pub mod trainstep_exec;
@@ -18,14 +25,17 @@ use crate::util::json::Json;
 /// Default artifacts directory (relative to the repo root).
 pub const ARTIFACTS_DIR: &str = "artifacts";
 
-/// A loaded PJRT CPU runtime.
+/// A loaded PJRT CPU runtime (stub without the `xla` feature:
+/// construction fails with a clear error).
 pub struct Runtime {
+    #[cfg(feature = "xla")]
     pub client: xla::PjRtClient,
     pub artifacts: PathBuf,
 }
 
 impl Runtime {
     /// Create a CPU PJRT client rooted at an artifacts directory.
+    #[cfg(feature = "xla")]
     pub fn cpu(artifacts: impl Into<PathBuf>) -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Runtime {
@@ -34,13 +44,36 @@ impl Runtime {
         })
     }
 
+    /// Stub: the crate was built without the `xla` feature, so no PJRT
+    /// client can be created.
+    #[cfg(not(feature = "xla"))]
+    pub fn cpu(artifacts: impl Into<PathBuf>) -> Result<Runtime> {
+        let artifacts: PathBuf = artifacts.into();
+        anyhow::bail!(
+            "PJRT runtime unavailable: perf4sight was built without the `xla` feature \
+             (artifacts dir: {}). Rebuild with `--features xla` on a machine with the \
+             xla-rs toolchain.",
+            artifacts.display()
+        )
+    }
+
     /// Load + compile an HLO-text artifact by file name.
+    #[cfg(feature = "xla")]
     pub fn load(&self, name: &str) -> Result<xla::PjRtLoadedExecutable> {
         let path = self.artifacts.join(name);
         self.load_path(&path)
     }
 
+    /// Stub: loading executables needs the `xla` feature.
+    #[cfg(not(feature = "xla"))]
+    pub fn load(&self, name: &str) -> Result<()> {
+        anyhow::bail!(
+            "cannot load {name}: perf4sight was built without the `xla` feature"
+        )
+    }
+
     /// Load + compile an HLO-text file.
+    #[cfg(feature = "xla")]
     pub fn load_path(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().context("non-utf8 artifact path")?,
@@ -74,6 +107,7 @@ impl Runtime {
 }
 
 /// Build an f32 literal with the given dims.
+#[cfg(feature = "xla")]
 pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
     let lit = xla::Literal::vec1(data);
     lit.reshape(dims)
@@ -81,6 +115,7 @@ pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
 }
 
 /// Build an i32 literal with the given dims.
+#[cfg(feature = "xla")]
 pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
     let lit = xla::Literal::vec1(data);
     lit.reshape(dims)
@@ -88,6 +123,7 @@ pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
 }
 
 /// Build an f32 scalar literal.
+#[cfg(feature = "xla")]
 pub fn literal_scalar_f32(v: f32) -> xla::Literal {
     xla::Literal::scalar(v)
 }
@@ -96,6 +132,7 @@ pub fn literal_scalar_f32(v: f32) -> xla::Literal {
 mod tests {
     use super::*;
 
+    #[cfg(feature = "xla")]
     #[test]
     fn literal_construction_roundtrip() {
         let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
@@ -109,5 +146,12 @@ mod tests {
     #[test]
     fn artifacts_presence_check() {
         assert!(!Runtime::artifacts_present(Path::new("/nonexistent")));
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_runtime_errors_cleanly() {
+        let err = Runtime::cpu("/tmp/nowhere").err().expect("stub must error");
+        assert!(err.to_string().contains("xla"));
     }
 }

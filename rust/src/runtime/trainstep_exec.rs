@@ -4,11 +4,15 @@
 //! synthetic workload and log the loss curve (the end-to-end validation
 //! demanded by DESIGN.md §6).
 
-use anyhow::{Context, Result};
+use anyhow::Result;
+#[cfg(feature = "xla")]
+use anyhow::Context;
 
 use crate::util::rng::Pcg64;
 
-use super::{literal_f32, literal_scalar_f32, Runtime};
+use super::Runtime;
+#[cfg(feature = "xla")]
+use super::{literal_f32, literal_scalar_f32};
 
 /// Shapes of the training artifact (mirrors python/compile/model.py).
 pub const TRAIN_BATCH: usize = 64;
@@ -50,11 +54,30 @@ impl TrainState {
     }
 }
 
-/// The executor.
+/// The executor (stub without the `xla` feature: construction fails).
+#[cfg(feature = "xla")]
 pub struct TrainStepExecutor {
     exe: xla::PjRtLoadedExecutable,
 }
 
+/// Stub executor: keeps callers compiling without the `xla` feature.
+#[cfg(not(feature = "xla"))]
+pub struct TrainStepExecutor {
+    _private: (),
+}
+
+#[cfg(not(feature = "xla"))]
+impl TrainStepExecutor {
+    pub fn new(_rt: &Runtime) -> Result<TrainStepExecutor> {
+        anyhow::bail!("TrainStepExecutor requires the `xla` feature")
+    }
+
+    pub fn step(&self, _state: &mut TrainState, _x: &[f32], _y: &[i32], _lr: f32) -> Result<f64> {
+        anyhow::bail!("TrainStepExecutor requires the `xla` feature")
+    }
+}
+
+#[cfg(feature = "xla")]
 impl TrainStepExecutor {
     pub fn new(rt: &Runtime) -> Result<TrainStepExecutor> {
         Ok(TrainStepExecutor {

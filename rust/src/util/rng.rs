@@ -43,6 +43,15 @@ impl Pcg64 {
         Self::with_stream(seed, stream)
     }
 
+    /// Advance the stream as if [`Pcg64::next_u64`] had been called `n`
+    /// times (O(n); used to resume a shared stream at a known offset, e.g.
+    /// the profiler skipping earlier work units' noise draws).
+    pub fn advance(&mut self, n: u64) {
+        for _ in 0..n {
+            self.next_u64();
+        }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
@@ -225,6 +234,17 @@ mod tests {
         let mut sorted = xs.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn advance_matches_sequential_draws() {
+        let mut a = Pcg64::new(17);
+        let mut b = Pcg64::new(17);
+        a.advance(137);
+        for _ in 0..137 {
+            b.next_u64();
+        }
+        assert_eq!(a.next_u64(), b.next_u64());
     }
 
     #[test]

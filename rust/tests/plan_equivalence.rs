@@ -1,0 +1,158 @@
+//! Equivalence suite for the compiled analysis layer: every
+//! `NetworkPlan`-based result must be **bit-identical** to the direct
+//! `Graph` analysis path, across the whole model zoo, before and after
+//! pruning — and the parallel `Forest::fit` must reproduce the sequential
+//! reference exactly.
+
+use perf4sight::baselines::{
+    estimate_training_memory_mb, estimate_training_memory_mb_plan, DnnMemConfig,
+};
+use perf4sight::device::Simulator;
+use perf4sight::features::{network_features, network_features_from_plan};
+use perf4sight::forest::{Forest, ForestConfig};
+use perf4sight::ir::{Graph, NetworkPlan};
+use perf4sight::models;
+use perf4sight::pruning::{prune, Strategy};
+use perf4sight::util::rng::Pcg64;
+
+#[test]
+fn plan_matches_graph_analyses_across_zoo() {
+    for name in models::ZOO {
+        let g = models::by_name(name).unwrap();
+        let plan = NetworkPlan::build(&g).unwrap();
+        assert_eq!(
+            plan.shapes(),
+            g.infer_shapes().unwrap().as_slice(),
+            "{name}: shapes diverge"
+        );
+        assert_eq!(
+            plan.conv_infos(),
+            g.conv_infos().unwrap().as_slice(),
+            "{name}: conv summaries diverge"
+        );
+        assert_eq!(
+            plan.param_count(),
+            g.param_count().unwrap(),
+            "{name}: param count diverges"
+        );
+        assert_eq!(
+            plan.model_size_mb(),
+            g.model_size_mb().unwrap(),
+            "{name}: model size diverges"
+        );
+    }
+}
+
+#[test]
+fn plan_features_bit_identical_across_zoo() {
+    for name in models::ZOO {
+        let g = models::by_name(name).unwrap();
+        let plan = g.plan().unwrap();
+        for bs in [1usize, 8, 32, 128] {
+            assert_eq!(
+                network_features(&g, bs).unwrap(),
+                network_features_from_plan(&plan, bs),
+                "{name} bs={bs}: feature rows diverge"
+            );
+        }
+    }
+}
+
+#[test]
+fn plan_simulator_paths_bit_identical_across_zoo() {
+    let sim = Simulator::tx2();
+    for name in models::ZOO {
+        let g = models::by_name(name).unwrap();
+        let plan = NetworkPlan::build(&g).unwrap();
+        for bs in [1usize, 32] {
+            let t_g = sim.train_step(&g, bs, None).unwrap();
+            let t_p = sim.train_step_plan(&plan, bs, None);
+            assert_eq!(t_g.gamma_mb, t_p.gamma_mb, "{name} bs={bs}: Γ diverges");
+            assert_eq!(t_g.phi_ms, t_p.phi_ms, "{name} bs={bs}: Φ diverges");
+            let i_g = sim.inference(&g, bs, None).unwrap();
+            let i_p = sim.inference_plan(&plan, bs, None);
+            assert_eq!(i_g.gamma_mb, i_p.gamma_mb, "{name} bs={bs}: γ diverges");
+            assert_eq!(i_g.phi_ms, i_p.phi_ms, "{name} bs={bs}: φ diverges");
+        }
+        // Noisy paths consume the RNG identically too.
+        let mut r1 = Pcg64::new(7);
+        let mut r2 = Pcg64::new(7);
+        let n_g = sim.train_step(&g, 16, Some(&mut r1)).unwrap();
+        let n_p = sim.train_step_plan(&plan, 16, Some(&mut r2));
+        assert_eq!(n_g.gamma_mb, n_p.gamma_mb, "{name}: noisy Γ diverges");
+        assert_eq!(n_g.phi_ms, n_p.phi_ms, "{name}: noisy Φ diverges");
+    }
+}
+
+#[test]
+fn plan_baselines_bit_identical() {
+    let cfg = DnnMemConfig::default();
+    for name in ["resnet18", "mobilenetv2", "squeezenet"] {
+        let g = models::by_name(name).unwrap();
+        let plan = NetworkPlan::build(&g).unwrap();
+        for bs in [8usize, 64] {
+            assert_eq!(
+                estimate_training_memory_mb(&g, bs, &cfg).unwrap(),
+                estimate_training_memory_mb_plan(&plan, bs, &cfg),
+                "{name} bs={bs}: DNNMem estimate diverges"
+            );
+        }
+    }
+}
+
+#[test]
+fn plan_equivalence_survives_pruning() {
+    // The invalidation rule in practice: prune, rebuild the plan, and the
+    // rebuilt plan must agree with the pruned graph exactly.
+    let sim = Simulator::tx2();
+    for name in models::ZOO {
+        let g = models::by_name(name).unwrap();
+        let mut rng = Pcg64::new(0x9e1f);
+        let pruned: Graph = prune(&g, Strategy::L1Norm, 0.5, &mut rng);
+        let plan = NetworkPlan::build(&pruned).unwrap();
+        assert_eq!(
+            plan.param_count(),
+            pruned.param_count().unwrap(),
+            "{name}: pruned param count diverges"
+        );
+        assert_eq!(
+            network_features(&pruned, 32).unwrap(),
+            network_features_from_plan(&plan, 32),
+            "{name}: pruned features diverge"
+        );
+        let t_g = sim.train_step(&pruned, 32, None).unwrap();
+        let t_p = sim.train_step_plan(&plan, 32, None);
+        assert_eq!(t_g.gamma_mb, t_p.gamma_mb, "{name}: pruned Γ diverges");
+        assert_eq!(t_g.phi_ms, t_p.phi_ms, "{name}: pruned Φ diverges");
+    }
+}
+
+#[test]
+fn parallel_forest_fit_matches_sequential_reference() {
+    // Synthetic regression problem large enough that trees differ if any
+    // RNG stream is consumed out of order.
+    let mut rng = Pcg64::new(42);
+    let x: Vec<Vec<f64>> = (0..200)
+        .map(|_| (0..8).map(|_| rng.uniform(0.0, 100.0)).collect())
+        .collect();
+    let y: Vec<f64> = x
+        .iter()
+        .map(|r| 2.0 * r[0] + r[3] + if r[5] > 50.0 { 25.0 } else { 0.0 })
+        .collect();
+    for n_trees in [1usize, 7, 24] {
+        let cfg = ForestConfig {
+            n_trees,
+            seed: 0xf0e57 ^ n_trees as u64,
+            ..Default::default()
+        };
+        let par = Forest::fit(&x, &y, &cfg);
+        let seq = Forest::fit_sequential(&x, &y, &cfg);
+        assert_eq!(par.trees.len(), seq.trees.len());
+        for (i, (a, b)) in par.trees.iter().zip(&seq.trees).enumerate() {
+            assert_eq!(a.nodes, b.nodes, "n_trees={n_trees}: tree {i} diverges");
+        }
+        for row in x.iter().take(25) {
+            assert_eq!(par.predict(row), seq.predict(row));
+        }
+    }
+}
