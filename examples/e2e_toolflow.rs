@@ -17,7 +17,9 @@ use perf4sight::features::network_features_from_plan;
 use perf4sight::forest::Forest;
 use perf4sight::ir::NetworkPlan;
 use perf4sight::models;
-use perf4sight::ofa::{evolutionary_search, Attributes, Constraints, EsConfig, Subset};
+use perf4sight::ofa::{
+    evolutionary_search, Attributes, Constraints, EsConfig, PlanOracle, Subset,
+};
 use perf4sight::profiler::train_test_split;
 use perf4sight::pruning::Strategy;
 use perf4sight::runtime::{forest_exec::export_forest_config, ForestExecutor, Runtime};
@@ -94,7 +96,9 @@ fn main() -> anyhow::Result<()> {
         iterations: 8,
         ..Default::default()
     };
-    let result = evolutionary_search(&cons, &es, Subset::City, predict);
+    // The XLA-backed closure plugs into the same oracle seam the batched
+    // PredictionEngine implements.
+    let result = evolutionary_search(&cons, &es, Subset::City, &mut PlanOracle::new(predict));
     let naive_h = result.samples as f64 * PROFILE_COST_S / 3600.0;
     println!(
         "  best {:?}\n  predicted acc {:.1}%  attrs {:?}",

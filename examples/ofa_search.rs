@@ -1,17 +1,20 @@
 //! OFA case-study example (Sec. 6.4): fit the three attribute models,
-//! search the elastic OFA-ResNet50 space under hard constraints for each
-//! of the four autonomous-driving subsets, and report the selected
-//! sub-networks with their retraining gains.
+//! compile them into the batched `PredictionEngine`, and search the
+//! elastic OFA-ResNet50 space under hard constraints for each of the four
+//! autonomous-driving subsets.
+//!
+//! One engine serves all four searches: every generation's (Γ, γ, φ)
+//! estimates are answered in three batched `predict_rows` calls, and
+//! candidates revisited within or across searches hit the fingerprint
+//! memo cache instead of being re-evaluated.
 //!
 //! Run: `cargo run --release --example ofa_search`
 
 use perf4sight::device::{Simulator, PROFILE_COST_S};
-use perf4sight::experiments::ofa_models::{self, forward_masked};
-use perf4sight::features::network_features_from_plan;
-use perf4sight::ir::NetworkPlan;
+use perf4sight::experiments::ofa_models;
 use perf4sight::ofa::{
-    evolutionary_search, initial_accuracy, retrained_accuracy, Attributes, Constraints,
-    EsConfig, SubnetConfig, ALL_SUBSETS,
+    evolutionary_search, initial_accuracy, retrained_accuracy, Constraints, EsConfig,
+    GenerationOracle, SubnetConfig, ALL_SUBSETS,
 };
 
 fn main() {
@@ -20,24 +23,11 @@ fn main() {
     let models = ofa_models::run(&sim, 40, 0x0fa5);
     ofa_models::print(&models.report);
 
-    // The search hands each candidate's compiled NetworkPlan to the
-    // predictor: one analysis pass serves the bs=32 training features and
-    // the shared bs=1 inference features.
-    let predict = |_c: &SubnetConfig, plan: &NetworkPlan| {
-        let f_train = network_features_from_plan(plan, 32);
-        let f_infer = forward_masked(&network_features_from_plan(plan, 1));
-        Attributes {
-            gamma_train_mb: models.gamma_train.predict(&f_train),
-            gamma_infer_mb: models.gamma_infer.predict(&f_infer),
-            phi_infer_ms: models.phi_infer.predict(&f_infer),
-        }
-    };
+    let mut engine = models.engine();
 
     // Budgets between the predicted MIN and MAX attribute extremes.
-    let g_max = SubnetConfig::max().build();
-    let g_min = SubnetConfig::min().build();
-    let p_max = predict(&SubnetConfig::max(), &NetworkPlan::build(&g_max).unwrap());
-    let p_min = predict(&SubnetConfig::min(), &NetworkPlan::build(&g_min).unwrap());
+    let anchors = engine.evaluate_generation(&[SubnetConfig::max(), SubnetConfig::min()]);
+    let (p_max, p_min) = (anchors[0].attrs, anchors[1].attrs);
     let mid = |lo: f64, hi: f64| lo + 0.4 * (hi - lo);
     let cons = Constraints {
         gamma_train_mb: mid(p_min.gamma_train_mb, p_max.gamma_train_mb),
@@ -55,22 +45,32 @@ fn main() {
         ..Default::default()
     };
     for subset in ALL_SUBSETS {
-        let result = evolutionary_search(&cons, &es, subset, predict);
+        let result = evolutionary_search(&cons, &es, subset, &mut engine);
         let g = result.best.build();
         let init = initial_accuracy(&result.best, &g, subset);
         let ret = retrained_accuracy(&result.best, &g, subset);
         let naive_h = result.samples as f64 * PROFILE_COST_S / 3600.0;
+        let hit_rate = result.cache.map(|c| 100.0 * c.hit_rate()).unwrap_or(0.0);
         println!(
             "\n{:<13} best {:?}\n              size {:.0} MB | top-1 {:.1}% → {:.1}% after retraining \
-             | {} samples in {:.2?} (naive: {:.1} h)",
+             | {} samples ({} unique evaluations, {:.0}% cache hits) in {:.2?} (naive: {:.1} h)",
             subset.name(),
             result.best,
             g.model_size_mb().unwrap(),
             init,
             ret,
             result.samples,
+            result.unique_evaluations,
+            hit_rate,
             result.elapsed,
             naive_h
         );
     }
+    let total = engine.stats();
+    println!(
+        "\nengine totals across all searches: {} requests, {:.1}% served from cache, {} live entries",
+        total.requests(),
+        100.0 * total.hit_rate(),
+        total.entries
+    );
 }

@@ -9,11 +9,12 @@
 //! cost the acceptance criteria track.
 
 use perf4sight::device::Simulator;
+use perf4sight::engine::PredictionEngine;
 use perf4sight::features::{network_features, network_features_from_plan};
 use perf4sight::forest::Forest;
 use perf4sight::ir::NetworkPlan;
 use perf4sight::models;
-use perf4sight::ofa::SubnetConfig;
+use perf4sight::ofa::{GenerationOracle, SubnetConfig};
 use perf4sight::profiler::{profile, ProfileJob};
 use perf4sight::pruning::{prune, Strategy};
 use perf4sight::runtime::{ForestExecutor, Runtime};
@@ -118,6 +119,13 @@ fn main() {
         std::hint::black_box(forest.predict_batch(&rows));
     });
 
+    // The engine's batched slab traversal vs the scalar tree walk above —
+    // same 256 rows, bit-identical results (engine_equivalence.rs).
+    let compiled = forest.compile();
+    bench("CompiledForest::predict_rows (256 rows)", 300, || {
+        std::hint::black_box(compiled.predict_rows(&rows));
+    });
+
     // Through the AOT XLA artifact (the Pallas kernel path). Skips when
     // artifacts are absent or the crate was built without the `xla`
     // feature (the stub Runtime reports the latter).
@@ -157,4 +165,34 @@ fn main() {
         let fi = network_features_from_plan(&plan, 1);
         std::hint::black_box((forest.predict(&ft), forest.predict(&fi)));
     });
+
+    section("PredictionEngine — generation serving + fingerprint cache");
+
+    // One ES generation of 64 candidates, half of them repeats (the shape
+    // converged ES populations actually produce). The same fitted forest
+    // stands in for all three attribute models — the serving cost is what
+    // is measured here, not model quality.
+    let mut rng = Pcg64::new(9);
+    let distinct: Vec<SubnetConfig> = (0..32).map(|_| SubnetConfig::sample(&mut rng)).collect();
+    let mut generation = distinct.clone();
+    generation.extend(distinct.iter().copied());
+
+    let mut uncached = PredictionEngine::new(&forest, &forest, &forest).with_cache_capacity(0);
+    bench("engine generation, cache off (64 candidates)", 1200, || {
+        std::hint::black_box(uncached.evaluate_generation(&generation));
+    });
+
+    let mut warm = PredictionEngine::new(&forest, &forest, &forest);
+    warm.evaluate_generation(&generation); // fill the memo
+    bench("engine generation, warm cache (64 candidates)", 300, || {
+        std::hint::black_box(warm.evaluate_generation(&generation));
+    });
+    let cs = warm.stats();
+    println!(
+        "  -> cache hit rate {:.1}% ({} hits / {} misses, {} entries)",
+        100.0 * cs.hit_rate(),
+        cs.hits,
+        cs.misses,
+        cs.entries
+    );
 }

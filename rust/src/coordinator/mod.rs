@@ -15,7 +15,6 @@ use crate::device::{DeviceSpec, Simulator};
 use crate::experiments;
 use crate::features::network_features_from_plan;
 use crate::forest::Forest;
-use crate::ir::NetworkPlan;
 use crate::ofa::{Constraints, EsConfig, Subset};
 use crate::profiler::{profile, Dataset, ProfileJob, PAPER_BATCH_SIZES, TRAIN_LEVELS};
 use crate::pruning::Strategy;
@@ -32,8 +31,9 @@ COMMANDS:
              [--levels 0,0.3,..] [--batch-sizes 2,4,..] [--runs 3]
              [--seed S] --out FILE.json
   fit        --data FILE.json[,FILE2..] --target gamma|phi --out MODEL.json
-  predict    --model MODEL.json --network N [--level 0.3] [--bs 32]
+  predict    --model MODEL.json --network N [--level 0.3,0.5,..] [--bs 2,4,..]
              [--strategy random] [--device tx2] [--seed S]
+             (comma lists sweep level × bs in one batched engine call)
   search     [--device tx2] [--subset city|off-road|motorway|country-side]
              [--gamma-max MB] [--gamma-infer-max MB] [--phi-max MS]
              [--population 100] [--iterations 500] [--subnets 100] [--seed S]
@@ -175,26 +175,77 @@ fn cmd_predict(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
     let forest = Forest::from_json(&Json::parse(&text)?)?;
     let network = args.get("network").ok_or("--network required")?;
     let graph = crate::models::by_name(network).ok_or_else(|| format!("unknown network {network}"))?;
-    let level = args.f64_or("level", 0.0)?;
-    let bs = args.usize_or("bs", 32)?;
-    let strategy = strategy_of(&args.get_or("strategy", "random"))?;
-    let mut rng = crate::util::rng::Pcg64::new(args.u64_or("seed", cfg.seed)?);
-    let pruned = crate::pruning::prune(&graph, strategy, level, &mut rng);
-    // One compiled plan serves feature extraction and (optionally) the
-    // ground-truth simulation below.
-    let plan = pruned.plan().map_err(|e| e.to_string())?;
-    let f = network_features_from_plan(&plan, bs);
-    let pred = forest.predict(&f);
-    println!("{network} @ {:.0}% pruning, bs={bs}: predicted = {pred:.1}", level * 100.0);
-    // Optional ground-truth comparison on the simulated device.
-    if args.get("device").is_some() || args.flag("truth") {
-        let sim = simulator(args, cfg)?;
-        let m = sim.train_step_plan(&plan, bs, None);
-        println!(
-            "simulated truth on {}: Γ = {:.1} MB, Φ = {:.1} ms",
-            sim.spec.name, m.gamma_mb, m.phi_ms
-        );
+    // `--level 0.3` and `--bs 32` accept comma lists (`--levels` is an
+    // alias matching the profile subcommand); the full (level × bs) sweep
+    // is answered by ONE batched call through the compiled forest.
+    let levels = match args.f64_list("level")? {
+        Some(v) => v,
+        None => args.f64_list("levels")?.unwrap_or_else(|| vec![0.0]),
+    };
+    let batch_sizes = args.usize_list("bs")?.unwrap_or_else(|| vec![32]);
+    if levels.is_empty() || batch_sizes.is_empty() {
+        return Err("--level and --bs need at least one value".into());
     }
+    let strategy = strategy_of(&args.get_or("strategy", "random"))?;
+    let seed = args.u64_or("seed", cfg.seed)?;
+    // One pruned topology + compiled plan per level (prune ⇒ rebuild plan;
+    // each level prunes the original graph from a fresh seeded RNG, so a
+    // single-point invocation reproduces the pre-sweep behaviour exactly).
+    let pruned: Vec<_> = levels
+        .iter()
+        .map(|&level| {
+            let mut rng = crate::util::rng::Pcg64::new(seed);
+            crate::pruning::prune(&graph, strategy, level, &mut rng)
+        })
+        .collect();
+    let mut plans = Vec::with_capacity(pruned.len());
+    for g in &pruned {
+        plans.push(g.plan().map_err(|e| e.to_string())?);
+    }
+    let mut rows = Vec::with_capacity(levels.len() * batch_sizes.len());
+    for plan in &plans {
+        for &bs in &batch_sizes {
+            rows.push(network_features_from_plan(plan, bs));
+        }
+    }
+    let preds = forest.compile().predict_rows(&rows);
+    // Optional ground-truth comparison on the simulated device.
+    let truth_sim = if args.get("device").is_some() || args.flag("truth") {
+        Some(simulator(args, cfg)?)
+    } else {
+        None
+    };
+    let mut header = vec!["level", "bs", "predicted"];
+    if truth_sim.is_some() {
+        header.push("sim Γ MB");
+        header.push("sim Φ ms");
+    }
+    let mut body = Vec::new();
+    for (li, (level, plan)) in levels.iter().zip(&plans).enumerate() {
+        for (bi, &bs) in batch_sizes.iter().enumerate() {
+            let mut cells = vec![
+                format!("{:.0}%", level * 100.0),
+                format!("{bs}"),
+                format!("{:.1}", preds[li * batch_sizes.len() + bi]),
+            ];
+            if let Some(sim) = &truth_sim {
+                let m = sim.train_step_plan(plan, bs, None);
+                cells.push(format!("{:.1}", m.gamma_mb));
+                cells.push(format!("{:.1}", m.phi_ms));
+            }
+            body.push(cells);
+        }
+    }
+    println!(
+        "{network} ({} levels × {} batch sizes, one batched predict_rows call{}):",
+        levels.len(),
+        batch_sizes.len(),
+        truth_sim
+            .as_ref()
+            .map(|s| format!("; truth on {}", s.spec.name))
+            .unwrap_or_default()
+    );
+    crate::util::bench_harness::table(&header, &body);
     Ok(())
 }
 
@@ -213,18 +264,10 @@ fn cmd_search(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
     let models = experiments::ofa_models::run(&sim, subnets, seed);
     experiments::ofa_models::print(&models.report);
 
-    let predict = |_c: &crate::ofa::SubnetConfig, plan: &NetworkPlan| {
-        // The candidate's compiled plan yields both feature rows; the bs=1
-        // forward-masked row is shared by the γ-infer and φ-infer models.
-        let f_train = network_features_from_plan(plan, 32);
-        let f_infer =
-            experiments::ofa_models::forward_masked(&network_features_from_plan(plan, 1));
-        crate::ofa::Attributes {
-            gamma_train_mb: models.gamma_train.predict(&f_train),
-            gamma_infer_mb: models.gamma_infer.predict(&f_infer),
-            phi_infer_ms: models.phi_infer.predict(&f_infer),
-        }
-    };
+    // The batched, cache-backed engine serves every (Γ, γ, φ) estimate:
+    // each generation is answered in three `predict_rows` calls, repeated
+    // candidates by a fingerprint lookup.
+    let mut engine = models.engine();
     let cons = Constraints {
         gamma_train_mb: args.f64_or("gamma-max", f64::INFINITY)?,
         gamma_infer_mb: args.f64_or("gamma-infer-max", f64::INFINITY)?,
@@ -237,15 +280,35 @@ fn cmd_search(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
         ..Default::default()
     };
     println!("running evolutionary search ({} × {})…", es_cfg.population, es_cfg.iterations);
-    let result = crate::ofa::evolutionary_search(&cons, &es_cfg, subset, predict);
+    let result = crate::ofa::evolutionary_search(&cons, &es_cfg, subset, &mut engine);
     let naive_h = result.samples as f64 * crate::device::PROFILE_COST_S / 3600.0;
     println!("\nbest sub-network: {:?}", result.best);
     println!("predicted accuracy ({}): {:.1}%", subset.name(), result.best_fitness);
     println!("predicted attributes: {:?}", result.best_attrs);
+    // `samples` counts attribute estimates *requested* (the paper's
+    // "sub-networks sampled" figure — what naive profiling would have had
+    // to measure); `unique evaluations` counts the cache misses that
+    // actually ran the predictors.
     println!(
-        "{} candidates in {:.2?} (naive on-device profiling would take {:.1} h — {:.0}x slower)",
+        "{} sub-networks sampled ({} unique evaluations, {} answered by the engine cache) in {:.2?}",
         result.samples,
-        result.elapsed,
+        result.unique_evaluations,
+        result.samples - result.unique_evaluations,
+        result.elapsed
+    );
+    if let Some(cs) = result.cache {
+        println!(
+            "engine cache: {} hits / {} misses / {} evictions ({:.1}% hit rate, {} entries live)",
+            cs.hits,
+            cs.misses,
+            cs.evictions,
+            100.0 * cs.hit_rate(),
+            cs.entries
+        );
+    }
+    println!(
+        "naive on-device profiling of all {} samples would take {:.1} h — {:.0}x slower",
+        result.samples,
         naive_h,
         naive_h * 3600.0 / result.elapsed.as_secs_f64().max(1e-9)
     );

@@ -1,0 +1,354 @@
+//! Topology-fingerprint memo cache for the [`PredictionEngine`]
+//! (`crate::engine`): repeated ES candidates cost one hash lookup instead
+//! of a graph build + plan compile + feature extraction + three forest
+//! traversals.
+//!
+//! Keys are 64-bit FNV-1a fingerprints of the candidate's topology —
+//! [`config_fingerprint`] for OFA [`SubnetConfig`]s, [`graph_fingerprint`]
+//! for arbitrary (e.g. pruned) graphs. The invalidation rule is the same
+//! as PR 1's plan rule, one level up: **prune ⇒ new topology ⇒ new
+//! fingerprint ⇒ cache miss** — a mutated graph can never alias a cached
+//! entry. Entries additionally store the full `SubnetConfig` and compare
+//! it on lookup, so a (vanishingly unlikely) 64-bit collision degrades to
+//! a miss, never to a wrong answer.
+
+use std::collections::HashMap;
+
+use crate::ir::Graph;
+use crate::ofa::{CandidateEval, SubnetConfig};
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x100_0000_01b3;
+
+#[inline]
+fn fnv_bytes(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+#[inline]
+fn fnv_u64(h: u64, v: u64) -> u64 {
+    fnv_bytes(h, &v.to_le_bytes())
+}
+
+/// Fingerprint of an OFA sub-network configuration (its nine genes fully
+/// determine the built graph's topology).
+pub fn config_fingerprint(c: &SubnetConfig) -> u64 {
+    let mut h = fnv_bytes(FNV_OFFSET, b"subnet/");
+    for i in 0..4 {
+        h = fnv_u64(h, c.depth[i] as u64);
+        h = fnv_u64(h, c.expand[i] as u64);
+    }
+    fnv_u64(h, c.width as u64)
+}
+
+/// Structural fingerprint of an arbitrary IR graph: every node's operator
+/// (with all its parameters) and wiring, independent of node names.
+/// Structured pruning rewrites conv filter counts, so a pruned graph never
+/// shares a fingerprint with its parent.
+pub fn graph_fingerprint(g: &Graph) -> u64 {
+    let mut h = fnv_bytes(FNV_OFFSET, b"graph/");
+    h = fnv_u64(h, g.nodes.len() as u64);
+    h = fnv_u64(h, g.output as u64);
+    for n in &g.nodes {
+        h = fnv_bytes(h, format!("{:?}", n.op).as_bytes());
+        h = fnv_u64(h, n.inputs.len() as u64);
+        for &i in &n.inputs {
+            h = fnv_u64(h, i as u64);
+        }
+    }
+    h
+}
+
+/// Cache counters. `hits + misses` equals the total attribute estimates
+/// requested; `misses` counts the estimates that actually ran the batched
+/// predictors (a batch-local duplicate of an in-flight miss is served from
+/// the generation's own results and counted as a hit).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// Entries discarded to stay within capacity (LRU order).
+    pub evictions: u64,
+    /// Live entries at sampling time.
+    pub entries: u64,
+}
+
+impl CacheStats {
+    pub fn requests(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of requests served without evaluation, in [0, 1].
+    pub fn hit_rate(&self) -> f64 {
+        if self.requests() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.requests() as f64
+        }
+    }
+
+    /// Counter deltas accumulated since `earlier` (a snapshot of the same
+    /// cache); `entries` is reported as-is.
+    pub fn since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits - earlier.hits,
+            misses: self.misses - earlier.misses,
+            evictions: self.evictions - earlier.evictions,
+            entries: self.entries,
+        }
+    }
+}
+
+struct Entry {
+    /// Collision guard: compared on every lookup.
+    config: SubnetConfig,
+    eval: CandidateEval,
+    /// The compiled plan's bs=32 training-feature row.
+    f_train: Vec<f64>,
+    /// The forward-masked bs=1 inference-feature row (shared by γ and φ).
+    f_infer: Vec<f64>,
+    last_used: u64,
+}
+
+/// Bounded LRU memo keyed by topology fingerprint.
+pub struct FingerprintCache {
+    capacity: usize,
+    map: HashMap<u64, Entry>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl FingerprintCache {
+    /// `capacity == 0` disables the cache (every lookup misses, nothing is
+    /// stored) — the reference configuration of the equivalence suite.
+    pub fn new(capacity: usize) -> FingerprintCache {
+        FingerprintCache {
+            capacity,
+            map: HashMap::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Look up a candidate; a hit refreshes its LRU stamp and bumps the hit
+    /// counter. A miss counts nothing — the caller decides whether the
+    /// candidate becomes an evaluation ([`FingerprintCache::note_misses`])
+    /// or is served from the in-flight batch
+    /// ([`FingerprintCache::note_batch_hits`]).
+    pub fn get(&mut self, fp: u64, config: &SubnetConfig) -> Option<CandidateEval> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.map.get_mut(&fp) {
+            Some(e) if e.config == *config => {
+                e.last_used = tick;
+                self.hits += 1;
+                Some(e.eval)
+            }
+            _ => None,
+        }
+    }
+
+    /// Cached feature rows `(f_train, f_infer)` for a candidate, if present.
+    pub fn rows(&self, fp: u64, config: &SubnetConfig) -> Option<(&[f64], &[f64])> {
+        self.map
+            .get(&fp)
+            .filter(|e| e.config == *config)
+            .map(|e| (e.f_train.as_slice(), e.f_infer.as_slice()))
+    }
+
+    /// Record `n` requests answered from the current generation's freshly
+    /// computed results (batch-local duplicates).
+    pub fn note_batch_hits(&mut self, n: u64) {
+        self.hits += n;
+    }
+
+    /// Record `n` requests that ran the batched predictors.
+    pub fn note_misses(&mut self, n: u64) {
+        self.misses += n;
+    }
+
+    /// Insert (or refresh) an entry, evicting the least-recently-used one
+    /// when at capacity. No-op when the cache is disabled.
+    pub fn insert(
+        &mut self,
+        fp: u64,
+        config: &SubnetConfig,
+        eval: CandidateEval,
+        f_train: Vec<f64>,
+        f_infer: Vec<f64>,
+    ) {
+        if self.capacity == 0 {
+            return;
+        }
+        self.tick += 1;
+        if !self.map.contains_key(&fp) && self.map.len() >= self.capacity {
+            // O(len) scan; `last_used` stamps are unique so the victim is
+            // deterministic regardless of HashMap iteration order.
+            if let Some(lru) = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&k, _)| k)
+            {
+                self.map.remove(&lru);
+                self.evictions += 1;
+            }
+        }
+        self.map.insert(
+            fp,
+            Entry {
+                config: *config,
+                eval,
+                f_train,
+                f_infer,
+                last_used: self.tick,
+            },
+        );
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            entries: self.map.len() as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ofa::Attributes;
+    use crate::util::rng::Pcg64;
+
+    fn eval(v: f64) -> CandidateEval {
+        CandidateEval {
+            attrs: Attributes {
+                gamma_train_mb: v,
+                gamma_infer_mb: v,
+                phi_infer_ms: v,
+            },
+            capacity: 0.5,
+        }
+    }
+
+    #[test]
+    fn hit_returns_inserted_eval() {
+        let mut cache = FingerprintCache::new(4);
+        let c = SubnetConfig::max();
+        let fp = config_fingerprint(&c);
+        assert!(cache.get(fp, &c).is_none());
+        cache.insert(fp, &c, eval(7.0), vec![1.0], vec![2.0]);
+        let got = cache.get(fp, &c).expect("hit");
+        assert_eq!(got.attrs.gamma_train_mb, 7.0);
+        assert_eq!(cache.rows(fp, &c).unwrap(), (&[1.0][..], &[2.0][..]));
+        assert_eq!(cache.stats().hits, 1);
+        assert_eq!(cache.stats().entries, 1);
+    }
+
+    #[test]
+    fn lru_eviction_discards_oldest() {
+        let mut cache = FingerprintCache::new(2);
+        let (a, b, c) = (
+            SubnetConfig::min(),
+            SubnetConfig::max(),
+            SubnetConfig {
+                width: 1,
+                ..SubnetConfig::min()
+            },
+        );
+        cache.insert(config_fingerprint(&a), &a, eval(1.0), vec![], vec![]);
+        cache.insert(config_fingerprint(&b), &b, eval(2.0), vec![], vec![]);
+        // Touch `a` so `b` becomes the LRU victim.
+        assert!(cache.get(config_fingerprint(&a), &a).is_some());
+        cache.insert(config_fingerprint(&c), &c, eval(3.0), vec![], vec![]);
+        assert_eq!(cache.stats().evictions, 1);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(config_fingerprint(&a), &a).is_some());
+        assert!(cache.get(config_fingerprint(&b), &b).is_none());
+        assert!(cache.get(config_fingerprint(&c), &c).is_some());
+    }
+
+    #[test]
+    fn zero_capacity_disables_storage() {
+        let mut cache = FingerprintCache::new(0);
+        let c = SubnetConfig::max();
+        let fp = config_fingerprint(&c);
+        cache.insert(fp, &c, eval(1.0), vec![], vec![]);
+        assert!(cache.get(fp, &c).is_none());
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn config_fingerprints_distinct_over_entire_space() {
+        // Enumerate every legal SubnetConfig (60 × 81 × 3 = 14,580) and
+        // assert zero fingerprint collisions.
+        use crate::ofa::{BASE_DEPTHS, EXPAND_CHOICES, WIDTH_CHOICES};
+        let mut seen = std::collections::HashSet::new();
+        let mut count = 0usize;
+        let depth_choices: Vec<Vec<usize>> = BASE_DEPTHS
+            .iter()
+            .map(|&max| (crate::ofa::supernet::MIN_DEPTH..=max).collect())
+            .collect();
+        for &d0 in &depth_choices[0] {
+            for &d1 in &depth_choices[1] {
+                for &d2 in &depth_choices[2] {
+                    for &d3 in &depth_choices[3] {
+                        for e0 in 0..EXPAND_CHOICES.len() {
+                            for e1 in 0..EXPAND_CHOICES.len() {
+                                for e2 in 0..EXPAND_CHOICES.len() {
+                                    for e3 in 0..EXPAND_CHOICES.len() {
+                                        for w in 0..WIDTH_CHOICES.len() {
+                                            let c = SubnetConfig {
+                                                depth: [d0, d1, d2, d3],
+                                                expand: [e0, e1, e2, e3],
+                                                width: w,
+                                            };
+                                            assert!(
+                                                seen.insert(config_fingerprint(&c)),
+                                                "collision at {c:?}"
+                                            );
+                                            count += 1;
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        assert_eq!(count, 14_580);
+    }
+
+    #[test]
+    fn graph_fingerprint_changes_on_prune() {
+        let g = crate::models::resnet18(1000);
+        let fp = graph_fingerprint(&g);
+        assert_eq!(fp, graph_fingerprint(&g), "fingerprint must be stable");
+        let mut rng = Pcg64::new(9);
+        let pruned = crate::pruning::prune(&g, crate::pruning::Strategy::L1Norm, 0.5, &mut rng);
+        assert_ne!(fp, graph_fingerprint(&pruned), "prune must change the fingerprint");
+    }
+}

@@ -1,0 +1,311 @@
+//! [`CompiledForest`] — a fitted [`Forest`] flattened into contiguous
+//! structure-of-arrays node slabs for batched inference.
+//!
+//! `Forest::predict` walks `Vec<Tree>` → `Vec<TreeNode>` pointer chains:
+//! every node visit loads a 40-byte struct to read at most three fields,
+//! and every row re-walks every tree from a cold cache. The compiled form
+//! stores one slab per field (feature / threshold / left / right / value)
+//! with absolute child indices, so a traversal touches only the bytes it
+//! compares, and [`CompiledForest::predict_rows`] drives *many rows through
+//! each tree in turn* — the tree's nodes stay cache-resident across the
+//! whole row batch, and row chunks fan out over scoped threads.
+//!
+//! Accumulation order is the scalar reference's exactly (per row: tree 0,
+//! tree 1, … then one divide), so batched results are **bit-identical** to
+//! `Forest::predict` — asserted across zoo-trained models by
+//! `rust/tests/engine_equivalence.rs`.
+
+use crate::forest::{Forest, ForestTensors};
+
+/// A forest compiled to flat SoA slabs (see module docs).
+#[derive(Clone, Debug)]
+pub struct CompiledForest {
+    n_features: usize,
+    n_trees: usize,
+    /// Maximum tree depth (fixed-shape traversal bound for the tensor export).
+    depth: usize,
+    /// Slab offset of each tree's root; `offsets[n_trees]` is the slab length.
+    offsets: Vec<u32>,
+    /// Split feature per node; `u32::MAX` marks a leaf.
+    feature: Vec<u32>,
+    threshold: Vec<f64>,
+    /// Absolute child indices into the slab (self-referential at leaves).
+    left: Vec<u32>,
+    right: Vec<u32>,
+    value: Vec<f64>,
+}
+
+/// Below this many rows per worker, thread spawn overhead beats the win.
+const MIN_ROWS_PER_WORKER: usize = 16;
+
+impl CompiledForest {
+    /// Flatten a fitted forest into the slab layout.
+    pub fn compile(forest: &Forest) -> CompiledForest {
+        let total: usize = forest.trees.iter().map(|t| t.nodes.len()).sum();
+        let mut offsets = Vec::with_capacity(forest.trees.len() + 1);
+        let mut feature = Vec::with_capacity(total);
+        let mut threshold = Vec::with_capacity(total);
+        let mut left = Vec::with_capacity(total);
+        let mut right = Vec::with_capacity(total);
+        let mut value = Vec::with_capacity(total);
+        let mut base = 0u32;
+        for t in &forest.trees {
+            offsets.push(base);
+            for n in &t.nodes {
+                feature.push(n.feature);
+                threshold.push(n.threshold);
+                left.push(base + n.left);
+                right.push(base + n.right);
+                value.push(n.value);
+            }
+            base += t.nodes.len() as u32;
+        }
+        offsets.push(base);
+        CompiledForest {
+            n_features: forest.n_features,
+            n_trees: forest.trees.len(),
+            depth: forest.trees.iter().map(|t| t.depth()).max().unwrap_or(1),
+            offsets,
+            feature,
+            threshold,
+            left,
+            right,
+            value,
+        }
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.n_trees
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    /// Maximum tree depth.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Total nodes across all trees.
+    pub fn n_nodes(&self) -> usize {
+        self.value.len()
+    }
+
+    /// Node count of the largest tree (the padded tensor export's node
+    /// dimension).
+    pub fn max_tree_nodes(&self) -> usize {
+        (0..self.n_trees)
+            .map(|t| (self.offsets[t + 1] - self.offsets[t]) as usize)
+            .max()
+            .unwrap_or(1)
+    }
+
+    /// Predict one row — bit-identical to [`Forest::predict`].
+    pub fn predict_row(&self, row: &[f64]) -> f64 {
+        debug_assert_eq!(row.len(), self.n_features);
+        let mut acc = 0.0f64;
+        for t in 0..self.n_trees {
+            acc += self.traverse(self.offsets[t] as usize, row);
+        }
+        acc / self.n_trees as f64
+    }
+
+    /// Predict many rows, traversing each tree once per row *batch* (the
+    /// tree's slab stays hot across rows) and splitting the batch over
+    /// scoped threads. Bit-identical to per-row [`Forest::predict`].
+    pub fn predict_rows(&self, rows: &[Vec<f64>]) -> Vec<f64> {
+        let n = rows.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut out = vec![0.0f64; n];
+        let workers = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(n / MIN_ROWS_PER_WORKER)
+            .max(1);
+        if workers == 1 {
+            self.predict_into(rows, &mut out);
+            return out;
+        }
+        let chunk = (n + workers - 1) / workers;
+        std::thread::scope(|scope| {
+            for (row_chunk, out_chunk) in rows.chunks(chunk).zip(out.chunks_mut(chunk)) {
+                scope.spawn(move || self.predict_into(row_chunk, out_chunk));
+            }
+        });
+        out
+    }
+
+    /// Serial batched kernel: trees outer, rows inner (see module docs).
+    fn predict_into(&self, rows: &[Vec<f64>], out: &mut [f64]) {
+        debug_assert_eq!(rows.len(), out.len());
+        for t in 0..self.n_trees {
+            let root = self.offsets[t] as usize;
+            for (row, acc) in rows.iter().zip(out.iter_mut()) {
+                *acc += self.traverse(root, row);
+            }
+        }
+        let nt = self.n_trees as f64;
+        for acc in out.iter_mut() {
+            *acc /= nt;
+        }
+    }
+
+    #[inline]
+    fn traverse(&self, root: usize, row: &[f64]) -> f64 {
+        debug_assert_eq!(row.len(), self.n_features);
+        let mut idx = root;
+        loop {
+            let f = self.feature[idx];
+            if f == u32::MAX {
+                return self.value[idx];
+            }
+            idx = if row[f as usize] <= self.threshold[idx] {
+                self.left[idx] as usize
+            } else {
+                self.right[idx] as usize
+            };
+        }
+    }
+
+    /// Export to the fixed-shape padded tensors the L1 Pallas / XLA kernel
+    /// consumes — same slabs, node dimension padded to the largest tree
+    /// with self-looping leaves. This is the one producer of
+    /// [`ForestTensors`]; `Forest::to_tensors` delegates here, so the
+    /// native batched path and the artifact path share one layout.
+    pub fn to_tensors(&self) -> ForestTensors {
+        let nt = self.n_trees;
+        let tree_nodes = |t: usize| (self.offsets[t + 1] - self.offsets[t]) as usize;
+        let max_nodes = self.max_tree_nodes();
+        let mut feature = vec![0i32; nt * max_nodes];
+        let mut threshold = vec![f32::INFINITY; nt * max_nodes];
+        let mut left = vec![0i32; nt * max_nodes];
+        let mut right = vec![0i32; nt * max_nodes];
+        let mut value = vec![0f32; nt * max_nodes];
+        for t in 0..nt {
+            let base = self.offsets[t] as usize;
+            for ni in 0..tree_nodes(t) {
+                let i = t * max_nodes + ni;
+                let s = base + ni;
+                if self.feature[s] == u32::MAX {
+                    // Leaf: self-loop so extra fixed-depth iterations are no-ops.
+                    left[i] = ni as i32;
+                    right[i] = ni as i32;
+                } else {
+                    feature[i] = self.feature[s] as i32;
+                    threshold[i] = self.threshold[s] as f32;
+                    left[i] = (self.left[s] as usize - base) as i32;
+                    right[i] = (self.right[s] as usize - base) as i32;
+                }
+                value[i] = self.value[s] as f32;
+            }
+            // Padding nodes: self-looping zero-value leaves (never reached).
+            for ni in tree_nodes(t)..max_nodes {
+                let i = t * max_nodes + ni;
+                left[i] = ni as i32;
+                right[i] = ni as i32;
+            }
+        }
+        ForestTensors {
+            n_trees: nt,
+            n_nodes: max_nodes,
+            depth: self.depth,
+            feature,
+            threshold,
+            left,
+            right,
+            value,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forest::ForestConfig;
+    use crate::util::rng::Pcg64;
+
+    fn synth(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Pcg64::new(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let a = rng.uniform(0.0, 10.0);
+            let b = rng.next_f64();
+            let c = rng.uniform(0.0, 2.0);
+            x.push(vec![a, b, c]);
+            y.push(2.0 * a + if b > 0.5 { 10.0 } else { 0.0 } + c * a);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn batched_rows_bit_identical_to_scalar() {
+        let (x, y) = synth(300, 11);
+        let f = Forest::fit(
+            &x,
+            &y,
+            &ForestConfig {
+                n_trees: 24,
+                ..Default::default()
+            },
+        );
+        let c = CompiledForest::compile(&f);
+        let batched = c.predict_rows(&x);
+        assert_eq!(batched.len(), x.len());
+        for (row, &b) in x.iter().zip(&batched) {
+            let scalar = f.predict(row);
+            assert_eq!(scalar.to_bits(), b.to_bits(), "row diverges");
+            assert_eq!(c.predict_row(row).to_bits(), scalar.to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let (x, y) = synth(50, 12);
+        let c = CompiledForest::compile(&Forest::fit(&x, &y, &ForestConfig::default()));
+        assert!(c.predict_rows(&[]).is_empty());
+    }
+
+    #[test]
+    fn large_batch_spans_threads() {
+        let (x, y) = synth(200, 13);
+        let f = Forest::fit(
+            &x,
+            &y,
+            &ForestConfig {
+                n_trees: 10,
+                ..Default::default()
+            },
+        );
+        let c = CompiledForest::compile(&f);
+        // 1000 rows forces the multi-worker path on any multicore box.
+        let rows: Vec<Vec<f64>> = (0..1000).map(|i| x[i % x.len()].clone()).collect();
+        let batched = c.predict_rows(&rows);
+        for (row, &b) in rows.iter().zip(&batched) {
+            assert_eq!(f.predict(row).to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn tensor_export_round_trips_through_compiled_layout() {
+        let (x, y) = synth(150, 14);
+        let f = Forest::fit(
+            &x,
+            &y,
+            &ForestConfig {
+                n_trees: 8,
+                max_depth: 9,
+                ..Default::default()
+            },
+        );
+        let t = CompiledForest::compile(&f).to_tensors();
+        for row in x.iter().take(25) {
+            let a = f.predict(row);
+            let b = t.predict(row, t.depth);
+            assert!((a - b).abs() / a.abs().max(1.0) < 1e-5, "{a} vs {b}");
+        }
+    }
+}

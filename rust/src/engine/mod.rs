@@ -1,0 +1,269 @@
+//! The PredictionEngine — batched, cache-aware serving of the paper's
+//! three attribute models (Γ training memory, γ inference memory, φ
+//! inference latency).
+//!
+//! The ES of Sec. 6.4 needs ≥50,000 (Γ, γ, φ) estimates; the paper's whole
+//! point is that forest inference makes each estimate cheap enough to
+//! replace 20 s/sample on-device profiling. This subsystem turns the
+//! remaining per-candidate cost into a query service with three pillars:
+//!
+//! 1. [`CompiledForest`] — trees flattened into contiguous SoA node slabs
+//!    with a batched [`CompiledForest::predict_rows`] that drives many rows
+//!    through each tree (cache-resident slabs, parallel row chunks),
+//!    bit-identical to the scalar `Forest::predict` reference.
+//! 2. [`FingerprintCache`] — a memo keyed by topology fingerprint: a
+//!    repeated ES candidate costs one hash lookup instead of graph build +
+//!    plan compile + feature extraction + three forest traversals.
+//!    Invalidation follows PR 1's plan rule: prune ⇒ new fingerprint ⇒
+//!    miss.
+//! 3. Generation-batched evaluation — [`ofa::evolution`](crate::ofa) hands
+//!    the engine a whole generation of candidates at once; the uncached
+//!    ones are answered in exactly **three** `predict_rows` calls.
+
+pub mod cache;
+pub mod compiled;
+
+pub use cache::{config_fingerprint, graph_fingerprint, CacheStats, FingerprintCache};
+pub use compiled::CompiledForest;
+
+use std::collections::HashMap;
+
+use crate::features::{forward_masked, network_features_from_plan, NUM_FEATURES};
+use crate::forest::Forest;
+use crate::ir::NetworkPlan;
+use crate::ofa::{capacity_from_convs, Attributes, CandidateEval, GenerationOracle, SubnetConfig};
+
+/// Γ is estimated at the paper's retraining batch size (Sec. 6.4).
+pub const TRAIN_BS: usize = 32;
+
+/// Default memo capacity — comfortably above the 14,580 distinct
+/// `SubnetConfig`s, so paper-scale searches never evict.
+pub const DEFAULT_CACHE_CAPACITY: usize = 32_768;
+
+/// Batched, cache-aware server for (Γ, γ, φ) queries (see module docs).
+pub struct PredictionEngine {
+    gamma_train: CompiledForest,
+    gamma_infer: CompiledForest,
+    phi_infer: CompiledForest,
+    cache: FingerprintCache,
+}
+
+impl PredictionEngine {
+    /// Compile the three fitted forests into the batched slab layout. The
+    /// Γ model consumes full bs=32 feature rows; the γ/φ models consume
+    /// forward-masked bs=1 rows (the same convention the experiments fit
+    /// them with).
+    pub fn new(gamma_train: &Forest, gamma_infer: &Forest, phi_infer: &Forest) -> PredictionEngine {
+        for f in [gamma_train, gamma_infer, phi_infer] {
+            assert_eq!(
+                f.n_features, NUM_FEATURES,
+                "engine forests must consume the {NUM_FEATURES}-column feature rows"
+            );
+        }
+        PredictionEngine {
+            gamma_train: CompiledForest::compile(gamma_train),
+            gamma_infer: CompiledForest::compile(gamma_infer),
+            phi_infer: CompiledForest::compile(phi_infer),
+            cache: FingerprintCache::new(DEFAULT_CACHE_CAPACITY),
+        }
+    }
+
+    /// Replace the memo with one of the given capacity. `0` disables
+    /// caching entirely — the reference configuration the equivalence
+    /// suite compares against.
+    pub fn with_cache_capacity(mut self, capacity: usize) -> PredictionEngine {
+        self.cache = FingerprintCache::new(capacity);
+        self
+    }
+
+    /// Current cache counters.
+    pub fn stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// The memoised feature rows `(f_train, f_infer)` of a previously
+    /// evaluated candidate, if still cached.
+    pub fn cached_feature_rows(&self, config: &SubnetConfig) -> Option<(&[f64], &[f64])> {
+        self.cache.rows(config_fingerprint(config), config)
+    }
+
+    /// Compile plans + feature rows for `candidates` and answer Γ/γ/φ for
+    /// all of them in three batched traversals. Returns the evals plus the
+    /// per-candidate (train, infer) rows for memoisation.
+    #[allow(clippy::type_complexity)]
+    fn compute_batch(
+        &self,
+        candidates: &[SubnetConfig],
+    ) -> (Vec<CandidateEval>, Vec<Vec<f64>>, Vec<Vec<f64>>) {
+        let mut train_rows = Vec::with_capacity(candidates.len());
+        let mut infer_rows = Vec::with_capacity(candidates.len());
+        let mut capacities = Vec::with_capacity(candidates.len());
+        for c in candidates {
+            let g = c.build();
+            let plan = NetworkPlan::build(&g).expect("OFA sub-networks are always valid");
+            train_rows.push(network_features_from_plan(&plan, TRAIN_BS));
+            infer_rows.push(forward_masked(&network_features_from_plan(&plan, 1)));
+            capacities.push(capacity_from_convs(plan.conv_infos()));
+        }
+        let gamma_t = self.gamma_train.predict_rows(&train_rows);
+        let gamma_i = self.gamma_infer.predict_rows(&infer_rows);
+        let phi_i = self.phi_infer.predict_rows(&infer_rows);
+        let evals = capacities
+            .iter()
+            .enumerate()
+            .map(|(i, &capacity)| CandidateEval {
+                attrs: Attributes {
+                    gamma_train_mb: gamma_t[i],
+                    gamma_infer_mb: gamma_i[i],
+                    phi_infer_ms: phi_i[i],
+                },
+                capacity,
+            })
+            .collect();
+        (evals, train_rows, infer_rows)
+    }
+}
+
+impl GenerationOracle for PredictionEngine {
+    /// Serve one generation: cache hits are answered by lookup, the unique
+    /// misses are evaluated together (three `predict_rows` calls), and
+    /// batch-local duplicates are filled from the fresh results.
+    fn evaluate_generation(&mut self, candidates: &[SubnetConfig]) -> Vec<CandidateEval> {
+        if candidates.is_empty() {
+            return Vec::new();
+        }
+        if self.cache.capacity() == 0 {
+            // Cache disabled: every request is an evaluation.
+            let (evals, _, _) = self.compute_batch(candidates);
+            self.cache.note_misses(candidates.len() as u64);
+            return evals;
+        }
+        let fps: Vec<u64> = candidates.iter().map(config_fingerprint).collect();
+        let mut out: Vec<Option<CandidateEval>> = vec![None; candidates.len()];
+        // Unique misses, in first-appearance order. Dedup compares the full
+        // config, not just the fingerprint, mirroring the cache's collision
+        // guard: a 64-bit collision costs a second evaluation, never a
+        // wrong answer.
+        let mut miss_slots: HashMap<u64, Vec<usize>> = HashMap::new();
+        let mut miss_idx: Vec<usize> = Vec::new();
+        for (i, (&fp, c)) in fps.iter().zip(candidates).enumerate() {
+            if let Some(eval) = self.cache.get(fp, c) {
+                out[i] = Some(eval);
+            } else {
+                let slots = miss_slots.entry(fp).or_default();
+                if !slots.iter().any(|&s| candidates[miss_idx[s]] == *c) {
+                    slots.push(miss_idx.len());
+                    miss_idx.push(i);
+                }
+            }
+        }
+        let missing: Vec<SubnetConfig> = miss_idx.iter().map(|&i| candidates[i]).collect();
+        let (evals, train_rows, infer_rows) = self.compute_batch(&missing);
+        self.cache.note_misses(missing.len() as u64);
+        for ((&i, eval), (f_train, f_infer)) in miss_idx
+            .iter()
+            .zip(evals.iter().copied())
+            .zip(train_rows.into_iter().zip(infer_rows))
+        {
+            self.cache.insert(fps[i], &candidates[i], eval, f_train, f_infer);
+        }
+        // Fill batch-local duplicates from the freshly computed slots.
+        let mut batch_hits = 0u64;
+        for (i, &fp) in fps.iter().enumerate() {
+            if out[i].is_none() {
+                let slot = *miss_slots[&fp]
+                    .iter()
+                    .find(|&&s| candidates[miss_idx[s]] == candidates[i])
+                    .expect("every missing candidate was evaluated");
+                out[i] = Some(evals[slot]);
+                if miss_idx[slot] != i {
+                    batch_hits += 1;
+                }
+            }
+        }
+        self.cache.note_batch_hits(batch_hits);
+        out.into_iter()
+            .map(|e| e.expect("every candidate resolved"))
+            .collect()
+    }
+
+    fn cache_stats(&self) -> Option<CacheStats> {
+        Some(self.cache.stats())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// A small engine whose three roles are served by one synthetic forest
+    /// fitted on feature-row geometry (enough for serving-layer tests; the
+    /// model-quality tests live in `experiments::ofa_models`).
+    fn tiny_engine(cache_capacity: usize) -> PredictionEngine {
+        let mut rng = Pcg64::new(0xe27);
+        let x: Vec<Vec<f64>> = (0..40)
+            .map(|_| (0..NUM_FEATURES).map(|_| rng.uniform(0.0, 1e6)).collect())
+            .collect();
+        let y: Vec<f64> = x.iter().map(|r| r[1] / 1e3 + r[3] / 1e4 + 100.0).collect();
+        let f = Forest::fit(
+            &x,
+            &y,
+            &crate::forest::ForestConfig {
+                n_trees: 8,
+                max_depth: 6,
+                ..Default::default()
+            },
+        );
+        PredictionEngine::new(&f, &f, &f).with_cache_capacity(cache_capacity)
+    }
+
+    #[test]
+    fn repeat_candidate_is_a_hit_and_bit_identical() {
+        let mut eng = tiny_engine(64);
+        let c = SubnetConfig::min();
+        let first = eng.evaluate_generation(&[c])[0];
+        let second = eng.evaluate_generation(&[c])[0];
+        assert_eq!(first, second);
+        let s = eng.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert!(eng.cached_feature_rows(&c).is_some());
+    }
+
+    #[test]
+    fn batch_local_duplicates_evaluate_once() {
+        let mut eng = tiny_engine(64);
+        let c = SubnetConfig::max();
+        let evals = eng.evaluate_generation(&[c, c, c]);
+        assert_eq!(evals[0], evals[1]);
+        assert_eq!(evals[1], evals[2]);
+        let s = eng.stats();
+        assert_eq!((s.hits, s.misses), (2, 1), "one evaluation, two memo answers");
+    }
+
+    #[test]
+    fn disabled_cache_counts_every_request_as_miss() {
+        let mut eng = tiny_engine(0);
+        let c = SubnetConfig::min();
+        let a = eng.evaluate_generation(&[c])[0];
+        let b = eng.evaluate_generation(&[c])[0];
+        assert_eq!(a, b, "determinism does not depend on the cache");
+        let s = eng.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 2, 0));
+        assert!(eng.cached_feature_rows(&c).is_none());
+    }
+
+    #[test]
+    fn eviction_counter_moves_at_tiny_capacity() {
+        let mut eng = tiny_engine(2);
+        let mid = SubnetConfig {
+            width: 1,
+            ..SubnetConfig::min()
+        };
+        let gen3 = [SubnetConfig::min(), SubnetConfig::max(), mid];
+        eng.evaluate_generation(&gen3);
+        let s = eng.stats();
+        assert_eq!(s.entries, 2);
+        assert_eq!(s.evictions, 1);
+    }
+}

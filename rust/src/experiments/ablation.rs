@@ -12,6 +12,7 @@ use crate::forest::Forest;
 use crate::profiler::train_test_split;
 use crate::pruning::Strategy;
 use crate::util::bench_harness::{section, table};
+use crate::util::stats;
 
 use super::experiment_forest_config;
 
@@ -61,10 +62,12 @@ pub fn run(sim: &Simulator, network: &str, seed: u64) -> AblationReport {
         let xte = knockout(&test.x(), family);
         let fg = Forest::fit(&xtr, &train.y_gamma(), &cfg);
         let fp = Forest::fit(&xtr, &train.y_phi(), &cfg);
+        // Held-out predictions go through the engine's batched layout
+        // (bit-identical to the scalar `Forest::mape` path).
         rows.push(AblationRow {
             knocked_out: name,
-            gamma_err_pct: fg.mape(&xte, &test.y_gamma()),
-            phi_err_pct: fp.mape(&xte, &test.y_phi()),
+            gamma_err_pct: stats::mape(&fg.compile().predict_rows(&xte), &test.y_gamma()),
+            phi_err_pct: stats::mape(&fp.compile().predict_rows(&xte), &test.y_phi()),
         });
     }
     AblationReport {

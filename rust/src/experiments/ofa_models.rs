@@ -7,7 +7,8 @@
 //! model trained on ResNet50 data against the 100 sub-networks (4.28%).
 
 use crate::device::Simulator;
-use crate::features::{forward_only_mask, network_features_from_plan, NUM_FEATURES};
+use crate::engine::PredictionEngine;
+use crate::features::{network_features_from_plan, NUM_FEATURES};
 use crate::forest::Forest;
 use crate::ir::NetworkPlan;
 use crate::ofa::SubnetConfig;
@@ -19,25 +20,13 @@ use crate::util::stats;
 
 use super::{experiment_forest_config, fit_gamma_phi};
 
+// The canonical implementation moved to `features` so the engine can use
+// it without depending on the experiment harnesses; re-exported here for
+// the established call sites.
+pub use crate::features::forward_masked;
+
 /// Inference-profiling batch sizes (Sec. 6.4: "batch sizes 1,2,4,8,16,32").
 pub const INFER_BATCH_SIZES: [usize; 6] = [1, 2, 4, 8, 16, 32];
-
-/// Zero all backward-pass feature columns (keeps the 57-wide artifact
-/// shape; trees never split on constant-zero columns).
-pub fn forward_masked(features: &[f64]) -> Vec<f64> {
-    let mask = forward_mask_cached();
-    features
-        .iter()
-        .zip(mask)
-        .map(|(&f, &keep)| if keep { f } else { 0.0 })
-        .collect()
-}
-
-fn forward_mask_cached() -> &'static [bool] {
-    use std::sync::OnceLock;
-    static CELL: OnceLock<Vec<bool>> = OnceLock::new();
-    CELL.get_or_init(forward_only_mask)
-}
 
 #[derive(Clone, Debug)]
 pub struct OfaModelsReport {
@@ -57,6 +46,14 @@ pub struct OfaModels {
     pub gamma_infer: Forest,
     pub phi_infer: Forest,
     pub report: OfaModelsReport,
+}
+
+impl OfaModels {
+    /// Compile the three fitted forests into a batched, cache-backed
+    /// [`PredictionEngine`] — the serving path of the search experiments.
+    pub fn engine(&self) -> PredictionEngine {
+        PredictionEngine::new(&self.gamma_train, &self.gamma_infer, &self.phi_infer)
+    }
 }
 
 pub fn run(sim: &Simulator, subnets: usize, seed: u64) -> OfaModels {
@@ -88,40 +85,41 @@ pub fn run(sim: &Simulator, subnets: usize, seed: u64) -> OfaModels {
     let gamma_infer = Forest::fit(&xg, &yg, &cfg);
     let phi_infer = Forest::fit(&xg, &yp, &cfg);
 
-    // Test on the remaining subnets.
-    let mut gpred = Vec::new();
+    // Test on the remaining subnets: collect every row, then answer each
+    // model with one batched traversal through its compiled form (bit-
+    // identical to per-row `Forest::predict`).
+    let mut test_rows = Vec::new();
     let mut gtruth = Vec::new();
-    let mut ppred = Vec::new();
     let mut ptruth = Vec::new();
     for plan in plans.iter().skip(n_train) {
         for &bs in &INFER_BATCH_SIZES {
-            let f = forward_masked(&network_features_from_plan(plan, bs));
+            test_rows.push(forward_masked(&network_features_from_plan(plan, bs)));
             let m = sim.inference_plan(plan, bs, Some(&mut rng));
-            gpred.push(gamma_infer.predict(&f));
             gtruth.push(m.gamma_mb);
-            ppred.push(phi_infer.predict(&f));
             ptruth.push(m.phi_ms);
         }
     }
+    let gpred = gamma_infer.compile().predict_rows(&test_rows);
+    let ppred = phi_infer.compile().predict_rows(&test_rows);
 
     // ---- Γ generalisation: model trained on plain ResNet50 TX2 data ----
     let r50 = crate::models::resnet50(1000);
     let (train, _) = train_test_split(sim, "resnet50", &r50, Strategy::Random, seed);
     let (gamma_train, _) = fit_gamma_phi(&train);
-    let mut tg_pred = Vec::new();
+    let mut tg_rows = Vec::new();
     let mut tg_truth = Vec::new();
     let mut gamma_samples = Vec::new();
     for plan in &plans {
         for &bs in &[32usize, 64, 128] {
-            let f = network_features_from_plan(plan, bs);
+            tg_rows.push(network_features_from_plan(plan, bs));
             let m = sim.train_step_plan(plan, bs, Some(&mut rng));
-            tg_pred.push(gamma_train.predict(&f));
             tg_truth.push(m.gamma_mb);
             if bs <= 128 {
                 gamma_samples.push(m.gamma_mb);
             }
         }
     }
+    let tg_pred = gamma_train.compile().predict_rows(&tg_rows);
 
     let report = OfaModelsReport {
         gamma_infer_err: stats::mape(&gpred, &gtruth),

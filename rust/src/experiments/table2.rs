@@ -9,14 +9,15 @@
 
 
 use crate::device::{Simulator, PROFILE_COST_S};
+use crate::engine::{CacheStats, PredictionEngine};
 use crate::ir::NetworkPlan;
 use crate::ofa::{
-    evolutionary_search, initial_accuracy_plan, retrained_accuracy_plan, Attributes,
-    Constraints, EsConfig, SubnetConfig, ALL_SUBSETS,
+    evolutionary_search, initial_accuracy_plan, retrained_accuracy_plan, Constraints, EsConfig,
+    GenerationOracle, SubnetConfig, ALL_SUBSETS,
 };
 use crate::util::bench_harness::{section, table};
 
-use super::ofa_models::{forward_masked, OfaModels};
+use super::ofa_models::OfaModels;
 
 #[derive(Clone, Debug)]
 pub struct Table2Row {
@@ -35,6 +36,9 @@ pub struct Table2Row {
 pub struct Table2Report {
     pub rows: Vec<Table2Row>,
     pub search_speedup: f64,
+    /// Engine cache counters across both searches (they share one memo,
+    /// so search B reuses candidates search A already evaluated).
+    pub cache: CacheStats,
 }
 
 /// Ground-truth attributes of a sub-network (what the paper profiles for
@@ -74,17 +78,11 @@ fn row_for(
 }
 
 pub fn run(sim: &Simulator, models: &OfaModels, es_cfg: &EsConfig) -> Table2Report {
-    // Model-based attribute predictor — the fast path the paper proposes.
-    // The candidate's compiled plan serves both batch sizes (§Perf).
-    let predict = |_c: &SubnetConfig, plan: &NetworkPlan| -> Attributes {
-        let f_train = crate::features::network_features_from_plan(plan, 32);
-        let f_infer = forward_masked(&crate::features::network_features_from_plan(plan, 1));
-        Attributes {
-            gamma_train_mb: models.gamma_train.predict(&f_train),
-            gamma_infer_mb: models.gamma_infer.predict(&f_infer),
-            phi_infer_ms: models.phi_infer.predict(&f_infer),
-        }
-    };
+    // Model-based attribute prediction — the fast path the paper proposes —
+    // served by the batched, cache-backed engine. One engine answers the
+    // anchor points and both searches, so candidates revisited across
+    // searches cost a hash lookup.
+    let mut engine = models.engine();
 
     // Constraint sets placed between the MIN and MAX attribute extremes —
     // "progressively stricter constraints on Γ, γ and φ" (Sec. 6.4). The
@@ -93,12 +91,9 @@ pub fn run(sim: &Simulator, models: &OfaModels, es_cfg: &EsConfig) -> Table2Repo
     // exactly what an operator calibrating budgets with these models would
     // do. Fractions are chosen so the achieved improvement ratios land near
     // the paper's (A: 1.6×/1.05×/1.8×, B: 1.9×/1.1×/2.8× vs MAX).
-    let max_c = SubnetConfig::max();
-    let min_c = SubnetConfig::min();
-    let g_max = max_c.build();
-    let g_min = min_c.build();
-    let pa_max = predict(&max_c, &NetworkPlan::build(&g_max).unwrap());
-    let pa_min = predict(&min_c, &NetworkPlan::build(&g_min).unwrap());
+    let anchors = engine.evaluate_generation(&[SubnetConfig::max(), SubnetConfig::min()]);
+    let pa_max = anchors[0].attrs;
+    let pa_min = anchors[1].attrs;
     let between = |lo: f64, hi: f64, frac: f64| lo + frac * (hi - lo);
     let cons_a = Constraints {
         gamma_train_mb: between(pa_min.gamma_train_mb, pa_max.gamma_train_mb, 0.45),
@@ -111,19 +106,21 @@ pub fn run(sim: &Simulator, models: &OfaModels, es_cfg: &EsConfig) -> Table2Repo
         phi_infer_ms: between(pa_min.phi_infer_ms, pa_max.phi_infer_ms, 0.22),
     };
 
-    let search = |cons: &Constraints, seed: u64, subset| {
+    let search = |engine: &mut PredictionEngine, cons: &Constraints, seed: u64, subset| {
         let cfg = EsConfig {
             seed,
             ..es_cfg.clone()
         };
-        let result = evolutionary_search(cons, &cfg, subset, predict);
+        let result = evolutionary_search(cons, &cfg, subset, engine);
         let naive_h = result.samples as f64 * PROFILE_COST_S / 3600.0;
         let model_h = result.elapsed.as_secs_f64() / 3600.0;
         (result, naive_h, model_h)
     };
 
-    let (res_a, naive_a, model_a) = search(&cons_a, es_cfg.seed, crate::ofa::Subset::City);
-    let (res_b, naive_b, model_b) = search(&cons_b, es_cfg.seed ^ 1, crate::ofa::Subset::City);
+    let (res_a, naive_a, model_a) =
+        search(&mut engine, &cons_a, es_cfg.seed, crate::ofa::Subset::City);
+    let (res_b, naive_b, model_b) =
+        search(&mut engine, &cons_b, es_cfg.seed ^ 1, crate::ofa::Subset::City);
 
     let rows = vec![
         row_for(sim, "MAX", &SubnetConfig::max(), None),
@@ -135,6 +132,7 @@ pub fn run(sim: &Simulator, models: &OfaModels, es_cfg: &EsConfig) -> Table2Repo
     Table2Report {
         rows,
         search_speedup: speedup,
+        cache: engine.stats(),
     }
 }
 
@@ -182,6 +180,13 @@ pub fn print(report: &Table2Report) {
         "\nsearch speed-up model vs naive profiling: {:.0}x  (paper: ~200x; 11 days → 1.4 h)",
         report.search_speedup
     );
+    println!(
+        "engine cache over both searches: {} hits / {} misses ({:.1}% hit rate, {} evictions)",
+        report.cache.hits,
+        report.cache.misses,
+        100.0 * report.cache.hit_rate(),
+        report.cache.evictions
+    );
 }
 
 #[cfg(test)]
@@ -219,5 +224,7 @@ mod tests {
         assert!(wins >= 3, "A retrained beats MAX initial in only {wins}/4");
         // Search with models is dramatically faster than naive profiling.
         assert!(r.search_speedup > 50.0, "speedup {:.0}x", r.search_speedup);
+        // Both searches went through the engine (anchor points included).
+        assert!(r.cache.requests() > 2, "engine unused: {:?}", r.cache);
     }
 }

@@ -308,6 +308,26 @@ pub fn forward_only_mask() -> Vec<bool> {
         .collect()
 }
 
+/// Zero all backward-pass feature columns, keeping the full
+/// [`NUM_FEATURES`]-wide artifact shape (trees never split on
+/// constant-zero columns). The γ/φ inference models consume these rows —
+/// Sec. 6.4 trains them "using only the features corresponding to the
+/// forward pass".
+pub fn forward_masked(features: &[f64]) -> Vec<f64> {
+    let mask = forward_mask_cached();
+    features
+        .iter()
+        .zip(mask)
+        .map(|(&f, &keep)| if keep { f } else { 0.0 })
+        .collect()
+}
+
+fn forward_mask_cached() -> &'static [bool] {
+    use std::sync::OnceLock;
+    static CELL: OnceLock<Vec<bool>> = OnceLock::new();
+    CELL.get_or_init(forward_only_mask)
+}
+
 /// Apply a column mask to a feature vector.
 pub fn mask_features(features: &[f64], mask: &[bool]) -> Vec<f64> {
     features

@@ -154,16 +154,26 @@ impl Forest {
         Tree::fit(x, y, &indices, tree_cfg, rng)
     }
 
-    /// Predict one row (mean over trees).
+    /// Predict one row (mean over trees). This is the scalar *reference*
+    /// path; hot loops compile the forest once
+    /// ([`Forest::compile`]) and answer whole row batches through
+    /// [`CompiledForest::predict_rows`](crate::engine::CompiledForest),
+    /// which is bit-identical by construction.
     pub fn predict(&self, row: &[f64]) -> f64 {
         debug_assert_eq!(row.len(), self.n_features);
         let sum: f64 = self.trees.iter().map(|t| t.predict(row)).sum();
         sum / self.trees.len() as f64
     }
 
-    /// Predict many rows.
+    /// Predict many rows (scalar reference; see [`Forest::predict`]).
     pub fn predict_batch(&self, rows: &[Vec<f64>]) -> Vec<f64> {
         rows.iter().map(|r| self.predict(r)).collect()
+    }
+
+    /// Flatten into the contiguous SoA layout served by the
+    /// `PredictionEngine` (batched traversal, parallel row chunks).
+    pub fn compile(&self) -> crate::engine::CompiledForest {
+        crate::engine::CompiledForest::compile(self)
     }
 
     /// Mean absolute percentage error on a labelled set (the paper's
@@ -295,48 +305,12 @@ impl Forest {
     /// `idx = x[feat] <= thr ? left : right` traversal is stable at any
     /// fixed depth ≥ max tree depth. Layout matches
     /// `python/compile/kernels/forest.py`.
+    ///
+    /// Derived from the same compiled slab layout the native batched path
+    /// uses (`CompiledForest::to_tensors`), so the XLA artifact and the
+    /// `PredictionEngine` serve one forest representation.
     pub fn to_tensors(&self) -> ForestTensors {
-        let max_nodes = self.trees.iter().map(|t| t.nodes.len()).max().unwrap_or(1);
-        let nt = self.trees.len();
-        let mut feature = vec![0i32; nt * max_nodes];
-        let mut threshold = vec![f32::INFINITY; nt * max_nodes];
-        let mut left = vec![0i32; nt * max_nodes];
-        let mut right = vec![0i32; nt * max_nodes];
-        let mut value = vec![0f32; nt * max_nodes];
-        for (ti, t) in self.trees.iter().enumerate() {
-            for (ni, n) in t.nodes.iter().enumerate() {
-                let i = ti * max_nodes + ni;
-                if n.is_leaf() {
-                    feature[i] = 0;
-                    threshold[i] = f32::INFINITY;
-                    left[i] = ni as i32;
-                    right[i] = ni as i32;
-                } else {
-                    feature[i] = n.feature as i32;
-                    threshold[i] = n.threshold as f32;
-                    left[i] = n.left as i32;
-                    right[i] = n.right as i32;
-                }
-                value[i] = n.value as f32;
-            }
-            // Padding nodes: self-looping zero-value leaves (never reached).
-            for ni in t.nodes.len()..max_nodes {
-                let i = ti * max_nodes + ni;
-                left[i] = ni as i32;
-                right[i] = ni as i32;
-            }
-        }
-        let depth = self.trees.iter().map(|t| t.depth()).max().unwrap_or(1);
-        ForestTensors {
-            n_trees: nt,
-            n_nodes: max_nodes,
-            depth,
-            feature,
-            threshold,
-            left,
-            right,
-            value,
-        }
+        self.compile().to_tensors()
     }
 }
 
@@ -374,6 +348,35 @@ impl ForestTensors {
             acc += self.value[base + idx] as f64;
         }
         acc / self.n_trees as f64
+    }
+
+    /// Batched reference traversal: many rows through each padded tree in
+    /// turn (the tree's arrays stay cache-resident across the row batch —
+    /// the same schedule `CompiledForest::predict_rows` and the Pallas
+    /// kernel's grid use). Accumulation order matches
+    /// [`ForestTensors::predict`], so results are bit-identical to the
+    /// per-row path.
+    pub fn predict_rows(&self, rows: &[Vec<f64>], iterations: usize) -> Vec<f64> {
+        let mut out = vec![0.0f64; rows.len()];
+        for t in 0..self.n_trees {
+            let base = t * self.n_nodes;
+            for (row, acc) in rows.iter().zip(out.iter_mut()) {
+                let mut idx = 0usize;
+                for _ in 0..iterations {
+                    let f = self.feature[base + idx] as usize;
+                    let go_left = (row[f] as f32) <= self.threshold[base + idx];
+                    idx = if go_left {
+                        self.left[base + idx] as usize
+                    } else {
+                        self.right[base + idx] as usize
+                    };
+                }
+                *acc += self.value[base + idx] as f64;
+            }
+        }
+        let nt = self.n_trees as f64;
+        out.iter_mut().for_each(|v| *v /= nt);
+        out
     }
 
     /// Pad the node dimension up to `nodes` (for fixed-shape artifacts).

@@ -16,6 +16,7 @@
 pub mod baselines;
 pub mod coordinator;
 pub mod device;
+pub mod engine;
 pub mod experiments;
 pub mod features;
 pub mod forest;

@@ -95,7 +95,11 @@ pub fn initial_accuracy_plan(config: &SubnetConfig, plan: &NetworkPlan<'_>, subs
     initial_accuracy_from_capacity(config, capacity_from_convs(plan.conv_infos()), subset)
 }
 
-fn initial_accuracy_from_capacity(config: &SubnetConfig, c: f64, subset: Subset) -> f64 {
+/// As [`initial_accuracy`] from a precomputed capacity scalar — the entry
+/// point for engine-cached candidates, whose capacity is memoised
+/// alongside the predicted attributes so a cache hit skips the graph
+/// build entirely.
+pub fn initial_accuracy_from_capacity(config: &SubnetConfig, c: f64, subset: Subset) -> f64 {
     let (lo, hi, _) = subset.constants();
     // Diminishing returns in capacity.
     let acc = lo + (hi - lo) * c.powf(0.65);

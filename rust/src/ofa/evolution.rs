@@ -4,20 +4,24 @@
 //! sampled", every candidate requiring estimates of Γ (training memory),
 //! γ (inference memory) and φ (inference latency).
 //!
-//! The predictor is pluggable so the experiment can compare: (a) the naive
-//! approach — on-device profiling at 20 s/sample — and (b) the paper's
-//! approach — random-forest inference (natively or through the XLA
-//! artifact). Each candidate's graph is compiled once into a
-//! [`NetworkPlan`] which serves the predictor (features / simulator at
-//! every batch size) and the accuracy proxy, so a candidate costs exactly
-//! one shape-inference pass.
+//! The predictor is pluggable through [`GenerationOracle`], which answers
+//! a whole generation of candidates in one call. The production
+//! implementation is [`PredictionEngine`](crate::engine::PredictionEngine)
+//! — batched `CompiledForest` traversals plus a fingerprint memo cache —
+//! while [`PlanOracle`] adapts any per-candidate closure (simulator ground
+//! truth, naive profiling) to the same interface. Candidates are generated
+//! in chunks sized to exactly the population shortfall, so the candidate
+//! stream is a pure function of the seed: results are identical whichever
+//! oracle answers, and a cached run is bit-identical to an uncached one
+//! (asserted by `rust/tests/engine_equivalence.rs`).
 
 use std::time::{Duration, Instant};
 
+use crate::engine::CacheStats;
 use crate::ir::NetworkPlan;
 use crate::util::rng::Pcg64;
 
-use super::accuracy::{initial_accuracy_plan, Subset};
+use super::accuracy::{capacity_from_convs, initial_accuracy_from_capacity, Subset};
 use super::supernet::SubnetConfig;
 
 /// Hard constraints on the three attributes (MB, MB, ms).
@@ -42,7 +46,7 @@ impl Constraints {
 }
 
 /// Attribute estimates for one candidate.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Attributes {
     pub gamma_train_mb: f64,
     pub gamma_infer_mb: f64,
@@ -54,6 +58,61 @@ impl Attributes {
         self.gamma_train_mb <= c.gamma_train_mb
             && self.gamma_infer_mb <= c.gamma_infer_mb
             && self.phi_infer_ms <= c.phi_infer_ms
+    }
+}
+
+/// One candidate's oracle answer: the attribute estimates plus the
+/// capacity scalar that feeds the accuracy proxy (memoised alongside the
+/// attributes by the engine cache, so a repeated candidate skips its graph
+/// build entirely).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CandidateEval {
+    pub attrs: Attributes,
+    /// Normalised log-FLOPs capacity in [0, 1] (see [`super::accuracy`]).
+    pub capacity: f64,
+}
+
+/// A service answering (Γ, γ, φ) + capacity for a whole generation of
+/// candidates in one call — the seam the search hot path hangs on.
+pub trait GenerationOracle {
+    /// Evaluate every candidate of one generation. Must return one eval
+    /// per candidate, in order.
+    fn evaluate_generation(&mut self, candidates: &[SubnetConfig]) -> Vec<CandidateEval>;
+
+    /// Cache counters, if this oracle memoises (the engine does; plain
+    /// per-candidate oracles return `None`).
+    fn cache_stats(&self) -> Option<CacheStats> {
+        None
+    }
+}
+
+/// Adapts a per-candidate closure to [`GenerationOracle`]: builds each
+/// candidate's graph and compiled [`NetworkPlan`] and hands both to the
+/// closure. This is the uncached reference path (and how tests plug the
+/// simulator in as ground truth).
+pub struct PlanOracle<F> {
+    predict: F,
+}
+
+impl<F: FnMut(&SubnetConfig, &NetworkPlan) -> Attributes> PlanOracle<F> {
+    pub fn new(predict: F) -> PlanOracle<F> {
+        PlanOracle { predict }
+    }
+}
+
+impl<F: FnMut(&SubnetConfig, &NetworkPlan) -> Attributes> GenerationOracle for PlanOracle<F> {
+    fn evaluate_generation(&mut self, candidates: &[SubnetConfig]) -> Vec<CandidateEval> {
+        candidates
+            .iter()
+            .map(|c| {
+                let g = c.build();
+                let plan = NetworkPlan::build(&g).expect("OFA sub-networks are always valid");
+                CandidateEval {
+                    attrs: (self.predict)(c, &plan),
+                    capacity: capacity_from_convs(plan.conv_infos()),
+                }
+            })
+            .collect()
     }
 }
 
@@ -85,51 +144,72 @@ pub struct EsResult {
     pub best: SubnetConfig,
     pub best_fitness: f64,
     pub best_attrs: Attributes,
-    /// Total candidates whose attributes were estimated (includes
-    /// constraint-rejected ones — each costs one prediction).
+    /// Attribute estimates *requested* (includes constraint-rejected
+    /// candidates and cache hits) — the paper's "sub-networks sampled"
+    /// count, kept so the ≥50,000 comparison stays honest under caching.
     pub samples: usize,
+    /// Estimates that actually ran the predictors (cache misses). Equals
+    /// `samples` for uncached oracles.
+    pub unique_evaluations: usize,
+    /// Cache counter deltas for this search (`None` for uncached oracles).
+    pub cache: Option<CacheStats>,
     pub elapsed: Duration,
 }
 
 /// Run the evolutionary search.
 ///
-/// * `predict` estimates (Γ, γ, φ) for a candidate from its compiled
-///   [`NetworkPlan`] — the cost centre the paper's models accelerate 200×.
-///   The same plan then feeds the accuracy proxy, so each candidate is
-///   analysed exactly once.
-/// * `subset` selects the accuracy-proxy fitness target.
+/// Each generation's candidates are evaluated in bulk through `oracle`
+/// ([`GenerationOracle::evaluate_generation`]); chunks are sized to the
+/// exact population shortfall, so the candidate stream — and therefore the
+/// result — is independent of how the oracle answers (cache on/off,
+/// batched or scalar).
 pub fn evolutionary_search(
     constraints: &Constraints,
     cfg: &EsConfig,
     subset: Subset,
-    mut predict: impl FnMut(&SubnetConfig, &NetworkPlan) -> Attributes,
+    oracle: &mut dyn GenerationOracle,
 ) -> EsResult {
     let started = Instant::now();
     let mut rng = Pcg64::new(cfg.seed);
     let mut samples = 0usize;
+    let stats_before = oracle.cache_stats();
 
-    let evaluate = |c: &SubnetConfig,
-                        samples: &mut usize,
-                        predict: &mut dyn FnMut(&SubnetConfig, &NetworkPlan) -> Attributes|
-     -> Option<(f64, Attributes)> {
-        let g = c.build();
-        let plan = NetworkPlan::build(&g).expect("OFA sub-networks are always valid");
-        *samples += 1;
-        let attrs = predict(c, &plan);
-        if !attrs.satisfies(constraints) {
-            return None;
-        }
-        Some((initial_accuracy_plan(c, &plan, subset), attrs))
+    // Evaluate one chunk of candidates: constraint screen + fitness.
+    let evaluate_chunk = |chunk: &[SubnetConfig],
+                          samples: &mut usize,
+                          oracle: &mut dyn GenerationOracle|
+     -> Vec<Option<(f64, Attributes)>> {
+        *samples += chunk.len();
+        oracle
+            .evaluate_generation(chunk)
+            .into_iter()
+            .zip(chunk)
+            .map(|(eval, c)| {
+                if eval.attrs.satisfies(constraints) {
+                    Some((
+                        initial_accuracy_from_capacity(c, eval.capacity, subset),
+                        eval.attrs,
+                    ))
+                } else {
+                    None
+                }
+            })
+            .collect()
     };
 
-    // Seed population: rejection-sample valid candidates (bounded tries).
+    // Seed population: rejection-sample valid candidates (bounded tries),
+    // evaluated a shortfall-sized chunk at a time.
     let mut population: Vec<(SubnetConfig, f64, Attributes)> = Vec::new();
     let mut tries = 0usize;
-    while population.len() < cfg.population && tries < cfg.population * 60 {
-        tries += 1;
-        let c = SubnetConfig::sample(&mut rng);
-        if let Some((fit, attrs)) = evaluate(&c, &mut samples, &mut predict) {
-            population.push((c, fit, attrs));
+    let try_cap = cfg.population * 60;
+    while population.len() < cfg.population && tries < try_cap {
+        let need = (cfg.population - population.len()).min(try_cap - tries);
+        let chunk: Vec<SubnetConfig> = (0..need).map(|_| SubnetConfig::sample(&mut rng)).collect();
+        tries += need;
+        for (c, r) in chunk.iter().zip(evaluate_chunk(&chunk, &mut samples, &mut *oracle)) {
+            if let Some((fit, attrs)) = r {
+                population.push((*c, fit, attrs));
+            }
         }
     }
     assert!(
@@ -138,37 +218,58 @@ pub fn evolutionary_search(
     );
 
     let n_parents = ((cfg.population as f64 * cfg.parent_fraction) as usize).max(2);
-    for _iter in 0..cfg.iterations {
+    // Rejection may loop; bound total estimates for pathological
+    // constraint sets.
+    let sample_cap = cfg.population * (cfg.iterations + 2) * 4;
+    'iterations: for _iter in 0..cfg.iterations {
         // Keep the fittest parents.
         population.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
         population.truncate(n_parents.min(population.len()));
-        // Refill with mutations + crossovers of parents.
+        // Refill with mutations + crossovers of parents, one generation
+        // chunk at a time.
         while population.len() < cfg.population {
-            let a = rng.gen_range(n_parents.min(population.len()));
-            let child = if rng.chance(0.5) {
-                population[a].0.mutate(&mut rng, cfg.mutation_prob)
-            } else {
-                let b = rng.gen_range(n_parents.min(population.len()));
-                let crossed = population[a].0.crossover(&population[b].0, &mut rng);
-                crossed.mutate(&mut rng, cfg.mutation_prob * 0.5)
-            };
-            if let Some((fit, attrs)) = evaluate(&child, &mut samples, &mut predict) {
-                population.push((child, fit, attrs));
+            let parent_n = n_parents.min(population.len());
+            let budget = sample_cap.saturating_sub(samples);
+            if budget == 0 {
+                break 'iterations;
             }
-            // Rejection may loop; bail out of pathological constraint sets.
-            if samples > cfg.population * (cfg.iterations + 2) * 4 {
-                break;
+            let need = (cfg.population - population.len()).min(budget);
+            let chunk: Vec<SubnetConfig> = (0..need)
+                .map(|_| {
+                    let a = rng.gen_range(parent_n);
+                    if rng.chance(0.5) {
+                        population[a].0.mutate(&mut rng, cfg.mutation_prob)
+                    } else {
+                        let b = rng.gen_range(parent_n);
+                        population[a]
+                            .0
+                            .crossover(&population[b].0, &mut rng)
+                            .mutate(&mut rng, cfg.mutation_prob * 0.5)
+                    }
+                })
+                .collect();
+            for (c, r) in chunk.iter().zip(evaluate_chunk(&chunk, &mut samples, &mut *oracle)) {
+                if let Some((fit, attrs)) = r {
+                    population.push((*c, fit, attrs));
+                }
             }
         }
     }
 
     population.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
     let (best, best_fitness, best_attrs) = population[0].clone();
+    let cache = match (stats_before, oracle.cache_stats()) {
+        (Some(before), Some(after)) => Some(after.since(&before)),
+        _ => None,
+    };
+    let unique_evaluations = cache.map_or(samples, |c| c.misses as usize);
     EsResult {
         best,
         best_fitness,
         best_attrs,
         samples,
+        unique_evaluations,
+        cache,
         elapsed: started.elapsed(),
     }
 }
@@ -208,12 +309,15 @@ mod tests {
             &Constraints::unconstrained(),
             &small_cfg(1),
             Subset::City,
-            sim_predict(&sim),
+            &mut PlanOracle::new(sim_predict(&sim)),
         );
         // Best fitness should approach the MAX ceiling (82.0).
         assert!(r.best_fitness > 80.0, "fitness {}", r.best_fitness);
         // samples = initial population + iterations × (pop − parents)
         assert!(r.samples >= 12 + 6 * (12 - 3), "samples = {}", r.samples);
+        // An uncached oracle evaluates every sample and reports no cache.
+        assert_eq!(r.unique_evaluations, r.samples);
+        assert!(r.cache.is_none());
     }
 
     #[test]
@@ -224,14 +328,19 @@ mod tests {
             gamma_infer_mb: 1900.0,
             phi_infer_ms: 60.0,
         };
-        let r = evolutionary_search(&cons, &small_cfg(2), Subset::OffRoad, sim_predict(&sim));
+        let r = evolutionary_search(
+            &cons,
+            &small_cfg(2),
+            Subset::OffRoad,
+            &mut PlanOracle::new(sim_predict(&sim)),
+        );
         assert!(r.best_attrs.satisfies(&cons), "{:?}", r.best_attrs);
         // Tighter constraints → smaller best than unconstrained MAX.
         let unc = evolutionary_search(
             &Constraints::unconstrained(),
             &small_cfg(2),
             Subset::OffRoad,
-            sim_predict(&sim),
+            &mut PlanOracle::new(sim_predict(&sim)),
         );
         assert!(r.best_attrs.gamma_train_mb <= unc.best_attrs.gamma_train_mb + 1e-9);
     }
@@ -245,7 +354,12 @@ mod tests {
             gamma_infer_mb: 1.0,
             phi_infer_ms: 0.001,
         };
-        evolutionary_search(&cons, &small_cfg(3), Subset::City, sim_predict(&sim));
+        evolutionary_search(
+            &cons,
+            &small_cfg(3),
+            Subset::City,
+            &mut PlanOracle::new(sim_predict(&sim)),
+        );
     }
 
     #[test]
@@ -255,13 +369,13 @@ mod tests {
             &Constraints::unconstrained(),
             &small_cfg(5),
             Subset::Motorway,
-            sim_predict(&sim),
+            &mut PlanOracle::new(sim_predict(&sim)),
         );
         let b = evolutionary_search(
             &Constraints::unconstrained(),
             &small_cfg(5),
             Subset::Motorway,
-            sim_predict(&sim),
+            &mut PlanOracle::new(sim_predict(&sim)),
         );
         assert_eq!(a.best, b.best);
         assert_eq!(a.samples, b.samples);

@@ -8,8 +8,11 @@ pub mod evolution;
 pub mod supernet;
 
 pub use accuracy::{
-    capacity, capacity_from_convs, initial_accuracy, initial_accuracy_plan, retrained_accuracy,
-    retrained_accuracy_plan, Subset, ALL_SUBSETS,
+    capacity, capacity_from_convs, initial_accuracy, initial_accuracy_from_capacity,
+    initial_accuracy_plan, retrained_accuracy, retrained_accuracy_plan, Subset, ALL_SUBSETS,
 };
-pub use evolution::{evolutionary_search, Attributes, Constraints, EsConfig, EsResult};
+pub use evolution::{
+    evolutionary_search, Attributes, CandidateEval, Constraints, EsConfig, EsResult,
+    GenerationOracle, PlanOracle,
+};
 pub use supernet::{SubnetConfig, BASE_DEPTHS, EXPAND_CHOICES, WIDTH_CHOICES};

@@ -2,6 +2,13 @@
 //! (L2 graph wrapping the L1 Pallas traversal kernel) against forests
 //! fitted in Rust, padded to the artifact's fixed shapes.
 //!
+//! The padded tensors come from the same `CompiledForest` slab layout the
+//! native `PredictionEngine` serves (`Forest::to_tensors` delegates to
+//! `CompiledForest::to_tensors`), so the artifact path and the batched
+//! host path traverse one forest representation; `ForestTensors::
+//! predict_rows` is the host-side reference for the kernel's
+//! rows-per-tree batching schedule.
+//!
 //! The executor itself needs the `xla` feature; the artifact-shape
 //! constants and the export-compatible forest config below are pure Rust
 //! and always available.
@@ -214,4 +221,11 @@ pub fn export_forest_config() -> crate::forest::ForestConfig {
 pub fn fits_artifact(t: &ForestTensors) -> bool {
     let s = ForestArtifactShape::default();
     t.n_trees == s.trees && t.n_nodes <= s.nodes && t.depth <= s.depth
+}
+
+/// As [`fits_artifact`], straight off the engine's compiled slab layout
+/// (no padded export needed — the two representations share tree shape).
+pub fn compiled_fits_artifact(c: &crate::engine::CompiledForest) -> bool {
+    let s = ForestArtifactShape::default();
+    c.n_trees() == s.trees && c.max_tree_nodes() <= s.nodes && c.depth() <= s.depth
 }

@@ -1,0 +1,185 @@
+//! Equivalence suite for the PredictionEngine: the batched
+//! `CompiledForest` path must be **bit-identical** to the scalar
+//! `Forest::predict` reference on zoo-trained models, the padded-tensor
+//! batched path must match its per-row reference, and an ES search with
+//! the fingerprint cache enabled must return exactly the same result as a
+//! cache-off run at the same seed.
+
+use perf4sight::device::Simulator;
+use perf4sight::experiments::{experiment_forest_config, ofa_models};
+use perf4sight::features::{forward_masked, network_features_from_plan};
+use perf4sight::forest::Forest;
+use perf4sight::ir::NetworkPlan;
+use perf4sight::models;
+use perf4sight::ofa::{
+    evolutionary_search, Constraints, EsConfig, GenerationOracle, PlanOracle, Subset,
+    SubnetConfig,
+};
+use perf4sight::profiler::train_test_split;
+use perf4sight::pruning::Strategy;
+use perf4sight::runtime::forest_exec::compiled_fits_artifact;
+
+#[test]
+fn batched_predict_rows_bit_identical_to_scalar_on_zoo_models() {
+    let sim = Simulator::tx2();
+    for (name, strategy) in [("resnet18", Strategy::Random), ("squeezenet", Strategy::L1Norm)] {
+        let g = models::by_name(name).unwrap();
+        let (train, test) = train_test_split(&sim, name, &g, strategy, 21);
+        let rows = test.x();
+        for target in [train.y_gamma(), train.y_phi()] {
+            let forest = Forest::fit(&train.x(), &target, &experiment_forest_config());
+            let compiled = forest.compile();
+            assert!(compiled_fits_artifact(&compiled), "{name}: artifact shape");
+            let batched = compiled.predict_rows(&rows);
+            assert_eq!(batched.len(), rows.len());
+            for (row, &b) in rows.iter().zip(&batched) {
+                let scalar = forest.predict(row);
+                assert_eq!(
+                    scalar.to_bits(),
+                    b.to_bits(),
+                    "{name}: batched prediction diverges from scalar"
+                );
+                assert_eq!(compiled.predict_row(row).to_bits(), scalar.to_bits());
+            }
+        }
+    }
+}
+
+#[test]
+fn padded_tensor_batched_path_matches_per_row_reference() {
+    let sim = Simulator::tx2();
+    let g = models::by_name("squeezenet").unwrap();
+    let (train, test) = train_test_split(&sim, "squeezenet", &g, Strategy::Random, 22);
+    let forest = Forest::fit(&train.x(), &train.y_gamma(), &experiment_forest_config());
+    let t = forest.to_tensors();
+    let rows = test.x();
+    let batched = t.predict_rows(&rows, t.depth);
+    for (row, &b) in rows.iter().zip(&batched) {
+        assert_eq!(
+            t.predict(row, t.depth).to_bits(),
+            b.to_bits(),
+            "padded batched traversal diverges"
+        );
+    }
+}
+
+#[test]
+fn engine_generation_matches_scalar_plan_oracle_bitwise() {
+    let sim = Simulator::tx2();
+    let m = ofa_models::run(&sim, 10, 33);
+    let mut engine = m.engine();
+    // The scalar reference: per-candidate closure over the same forests.
+    let mut reference = PlanOracle::new(|_c: &SubnetConfig, plan: &NetworkPlan| {
+        let f_train = network_features_from_plan(plan, 32);
+        let f_infer = forward_masked(&network_features_from_plan(plan, 1));
+        perf4sight::ofa::Attributes {
+            gamma_train_mb: m.gamma_train.predict(&f_train),
+            gamma_infer_mb: m.gamma_infer.predict(&f_infer),
+            phi_infer_ms: m.phi_infer.predict(&f_infer),
+        }
+    });
+    let mut rng = perf4sight::util::rng::Pcg64::new(5);
+    let mut generation: Vec<SubnetConfig> =
+        (0..24).map(|_| SubnetConfig::sample(&mut rng)).collect();
+    generation.push(SubnetConfig::max());
+    generation.push(SubnetConfig::min());
+    let via_engine = engine.evaluate_generation(&generation);
+    let via_scalar = reference.evaluate_generation(&generation);
+    for (e, s) in via_engine.iter().zip(&via_scalar) {
+        assert_eq!(
+            e.attrs.gamma_train_mb.to_bits(),
+            s.attrs.gamma_train_mb.to_bits()
+        );
+        assert_eq!(
+            e.attrs.gamma_infer_mb.to_bits(),
+            s.attrs.gamma_infer_mb.to_bits()
+        );
+        assert_eq!(e.attrs.phi_infer_ms.to_bits(), s.attrs.phi_infer_ms.to_bits());
+        assert_eq!(e.capacity.to_bits(), s.capacity.to_bits());
+    }
+}
+
+#[test]
+fn paper_default_population_search_hits_cache() {
+    // Sec. 6.4 runs the ES at population 100; ES populations converge, so
+    // children frequently repeat already-evaluated candidates and the
+    // fingerprint cache must show a measurable hit rate.
+    let sim = Simulator::tx2();
+    let m = ofa_models::run(&sim, 10, 51);
+    let mut engine = m.engine();
+    let cfg = EsConfig {
+        population: 100,
+        iterations: 40,
+        ..Default::default()
+    };
+    let r = evolutionary_search(
+        &Constraints::unconstrained(),
+        &cfg,
+        Subset::City,
+        &mut engine,
+    );
+    // Unconstrained: seed fill of 100 plus 40 refills of 75 children.
+    assert_eq!(r.samples, 100 + 40 * 75);
+    let cs = r.cache.expect("engine reports cache stats");
+    assert!(cs.hits > 0, "no cache hits at population 100: {cs:?}");
+    assert!(
+        r.unique_evaluations < r.samples,
+        "cache saved no work: {} of {}",
+        r.unique_evaluations,
+        r.samples
+    );
+    assert_eq!(cs.hits as usize + r.unique_evaluations, r.samples);
+}
+
+#[test]
+fn cached_search_bit_identical_to_uncached_search() {
+    let sim = Simulator::tx2();
+    let m = ofa_models::run(&sim, 12, 31);
+    // Constraints between the predicted extremes so rejection paths run too.
+    let mut probe = m.engine();
+    let anchors = probe.evaluate_generation(&[SubnetConfig::max(), SubnetConfig::min()]);
+    let (hi, lo) = (anchors[0].attrs, anchors[1].attrs);
+    let mid = |a: f64, b: f64| b + 0.6 * (a - b);
+    let cons = Constraints {
+        gamma_train_mb: mid(hi.gamma_train_mb, lo.gamma_train_mb),
+        gamma_infer_mb: f64::INFINITY,
+        phi_infer_ms: mid(hi.phi_infer_ms, lo.phi_infer_ms),
+    };
+    let cfg = EsConfig {
+        population: 16,
+        iterations: 8,
+        seed: 77,
+        ..Default::default()
+    };
+
+    let mut cached = m.engine();
+    let mut uncached = m.engine().with_cache_capacity(0);
+    let on = evolutionary_search(&cons, &cfg, Subset::City, &mut cached);
+    let off = evolutionary_search(&cons, &cfg, Subset::City, &mut uncached);
+
+    assert_eq!(on.best, off.best, "cache changed the selected sub-network");
+    assert_eq!(
+        on.best_fitness.to_bits(),
+        off.best_fitness.to_bits(),
+        "cache changed the fitness"
+    );
+    assert_eq!(on.best_attrs, off.best_attrs);
+    assert_eq!(on.samples, off.samples);
+    // Honest accounting: cache-off evaluates every sample; cache-on reports
+    // misses as the unique work.
+    assert_eq!(off.unique_evaluations, off.samples);
+    let cs = on.cache.expect("engine reports cache stats");
+    assert_eq!(cs.requests() as usize, on.samples);
+    assert_eq!(on.unique_evaluations, cs.misses as usize);
+    assert!(on.unique_evaluations <= on.samples);
+
+    // A second identical search on the warm engine repeats every candidate:
+    // zero predictor evaluations, bit-identical result.
+    let warm = evolutionary_search(&cons, &cfg, Subset::City, &mut cached);
+    assert_eq!(warm.best, on.best);
+    assert_eq!(warm.best_fitness.to_bits(), on.best_fitness.to_bits());
+    let warm_cs = warm.cache.unwrap();
+    assert_eq!(warm_cs.misses, 0, "warm cache must answer everything");
+    assert_eq!(warm_cs.hits as usize, warm.samples);
+    assert_eq!(warm.unique_evaluations, 0);
+}
