@@ -1,7 +1,9 @@
 //! End-to-end toolflow driver (DESIGN.md §6): exercises every layer of the
 //! system on a real small workload and proves they compose.
 //!
-//!   1. profile two networks on the simulated TX2 (L3 substrate),
+//!   1. run a merged profiling campaign over two networks on the simulated
+//!      TX2 (sharded work-stealing execution, bit-identical to
+//!      single-process profiling),
 //!   2. fit Γ/Φ random forests (L3),
 //!   3. evaluate on held-out pruned topologies (paper-shape errors),
 //!   4. export the Γ forest as tensors, load `forest_b*.hlo.txt` through
@@ -11,37 +13,59 @@
 //!
 //! Run after `make artifacts`: `cargo run --release --example e2e_toolflow`
 
+use perf4sight::campaign::{self, CampaignSpec};
 use perf4sight::device::{Simulator, PROFILE_COST_S};
 use perf4sight::experiments::ofa_models::forward_masked;
 use perf4sight::features::network_features_from_plan;
 use perf4sight::forest::Forest;
 use perf4sight::ir::NetworkPlan;
-use perf4sight::models;
 use perf4sight::ofa::{
     evolutionary_search, Attributes, Constraints, EsConfig, PlanOracle, Subset,
 };
-use perf4sight::profiler::train_test_split;
+use perf4sight::profiler::{test_levels, PAPER_BATCH_SIZES, TRAIN_LEVELS};
 use perf4sight::pruning::Strategy;
 use perf4sight::runtime::{forest_exec::export_forest_config, ForestExecutor, Runtime};
 
 fn main() -> anyhow::Result<()> {
     let sim = Simulator::tx2();
-    println!("=== 1. network-wise profiling (simulated {}) ===", sim.spec.name);
-    let r18 = models::resnet18(1000);
-    let sq = models::squeezenet(1000);
-    let (train_a, test_a) = train_test_split(&sim, "resnet18", &r18, Strategy::Random, 11);
-    let (train_b, test_b) = train_test_split(&sim, "squeezenet", &sq, Strategy::L1Norm, 13);
     println!(
-        "  {} + {} train points, {} + {} test points",
-        train_a.len(),
-        train_b.len(),
+        "=== 1. profiling campaign (simulated {}) ===",
+        sim.spec.name
+    );
+    // One merged campaign covers both training networks; the sharded
+    // work-stealing execution is bit-identical to per-network profile()
+    // calls (rust/tests/campaign_shards.rs holds the oracle).
+    let base = CampaignSpec {
+        networks: vec!["resnet18".into(), "squeezenet".into()],
+        strategies: vec![Strategy::Random],
+        levels: TRAIN_LEVELS.to_vec(),
+        batch_sizes: PAPER_BATCH_SIZES.to_vec(),
+        runs: 3,
+        seed: 11,
+        device: "tx2".into(),
+    };
+    let train = campaign::collect(&base).map_err(anyhow::Error::msg)?;
+    let held_out = test_levels();
+    let test_spec = |network: &str, strategy: Strategy, seed: u64| CampaignSpec {
+        networks: vec![network.into()],
+        strategies: vec![strategy],
+        levels: held_out.clone(),
+        seed,
+        ..base.clone()
+    };
+    let test_a = campaign::collect(&test_spec("resnet18", Strategy::Random, 11 ^ 0xdead_beef))
+        .map_err(anyhow::Error::msg)?;
+    let test_b = campaign::collect(&test_spec("squeezenet", Strategy::L1Norm, 13 ^ 0xdead_beef))
+        .map_err(anyhow::Error::msg)?;
+    println!(
+        "  {} merged train points ({} networks), {} + {} held-out test points",
+        train.len(),
+        base.networks.len(),
         test_a.len(),
         test_b.len()
     );
 
     println!("\n=== 2. fit Γ/Φ forests ===");
-    let mut train = train_a;
-    train.extend(train_b);
     let cfg = export_forest_config();
     let fg = Forest::fit(&train.x(), &train.y_gamma(), &cfg);
     let fp = Forest::fit(&train.x(), &train.y_phi(), &cfg);

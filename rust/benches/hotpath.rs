@@ -8,6 +8,7 @@
 //! paths that build the analysis once and reuse it — the per-candidate
 //! cost the acceptance criteria track.
 
+use perf4sight::campaign::{self, CampaignSpec};
 use perf4sight::device::Simulator;
 use perf4sight::engine::PredictionEngine;
 use perf4sight::features::{network_features, network_features_from_plan};
@@ -195,4 +196,26 @@ fn main() {
         cs.misses,
         cs.entries
     );
+
+    section("profiling campaigns — sharded execution vs monolithic profile()");
+
+    // The same small campaign grid through both producers: the sequential
+    // per-(network, strategy) profile() loop vs the sharded work-stealing
+    // executor + in-memory merge. Results are bit-identical (the campaign
+    // oracle suite asserts it); the delta here is pure scheduling.
+    let camp = CampaignSpec {
+        networks: vec!["squeezenet".into(), "mnasnet".into()],
+        strategies: vec![Strategy::Random],
+        levels: vec![0.0, 0.5],
+        batch_sizes: vec![4, 16, 32],
+        runs: 1,
+        seed: 42,
+        device: "tx2".into(),
+    };
+    bench("monolithic campaign (2 nets × 2 levels × 3 bs)", 900, || {
+        std::hint::black_box(campaign::profile_campaign(&camp).unwrap());
+    });
+    bench("sharded campaign (work stealing + merge)", 900, || {
+        std::hint::black_box(campaign::collect(&camp).unwrap());
+    });
 }

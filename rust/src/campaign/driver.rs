@@ -1,0 +1,299 @@
+//! Campaign execution: shard-scoped profiling (reusing the profiler's
+//! RNG-offset machinery, so any unit computes the same bits anywhere), a
+//! resumable work-stealing driver, and the worker-process spawn path.
+//!
+//! The driver drains pending shards through a fixed number of lanes; each
+//! lane pulls the next un-done shard from a shared cursor (work stealing —
+//! a slow shard never blocks the others). In [`ExecMode::Spawn`] a lane
+//! runs the shard in a spawned worker *process* (the binary re-executed in
+//! its hidden `profile-worker` mode); in [`ExecMode::InProcess`] it runs
+//! on a thread of the current process.
+//!
+//! Resume: every manifest in the output dir is first validated against
+//! the spec fingerprint and the requested partition (stale or foreign
+//! shard files fail loudly); a shard is then complete iff its manifest
+//! and dataset files are present. Complete shards are skipped on
+//! re-runs; missing shard files are simply re-executed (workers write
+//! the dataset before the manifest — the manifest itself atomically —
+//! so a crash can never leave a manifest without its full data).
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use crate::ir::NetworkPlan;
+use crate::profiler::{level_stream, profile_unit, Dataset, ProfilePoint};
+use crate::pruning::prune;
+use crate::util::pool::drain_indexed;
+use crate::util::rng::Pcg64;
+
+use super::manifest::{shard_dataset_name, shard_manifest_path, ShardManifest};
+use super::spec::{CampaignSpec, ShardPlan, SPEC_FILE};
+
+/// How the driver executes a shard.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Spawn worker processes (self-exec via the hidden `profile-worker`
+    /// CLI mode).
+    Spawn,
+    /// Run shards on threads of the current process.
+    InProcess,
+}
+
+/// Driver configuration.
+#[derive(Clone, Debug)]
+pub struct DriverConfig {
+    /// Number of shards to cut the campaign into (clamped to the unit
+    /// count).
+    pub shards: usize,
+    /// Concurrent lanes draining the shard queue (worker processes in
+    /// [`ExecMode::Spawn`], threads in [`ExecMode::InProcess`]).
+    pub workers: usize,
+    pub mode: ExecMode,
+    /// Binary to self-exec in [`ExecMode::Spawn`]; `None` uses
+    /// `std::env::current_exe()` (correct when running as the perf4sight
+    /// CLI; test harnesses pass their `CARGO_BIN_EXE_perf4sight`).
+    pub exe: Option<PathBuf>,
+}
+
+/// What a driver run did — which shards executed and which were resumed
+/// as already complete.
+#[derive(Clone, Debug)]
+pub struct CampaignRun {
+    /// Actual partition width after clamping.
+    pub shards: usize,
+    pub executed: Vec<usize>,
+    pub skipped: Vec<usize>,
+}
+
+/// Execute one shard's units in canonical order. Consecutive units of the
+/// same (network, strategy, level) share one pruned topology and compiled
+/// plan; every unit fast-forwards the level's measurement stream to its
+/// sequential offset, so output bits match the single-process
+/// [`crate::profiler::profile`] path exactly.
+pub fn execute_shard(spec: &CampaignSpec, shard: &ShardPlan) -> Result<Vec<ProfilePoint>, String> {
+    spec.validate()?;
+    let sim = spec.simulator()?;
+    let mut points = Vec::with_capacity(shard.units.len());
+    let mut i = 0;
+    while i < shard.units.len() {
+        let head = spec.unit(shard.units[i]);
+        let graph = crate::models::by_name(head.network)
+            .ok_or_else(|| format!("unknown network {:?}", head.network))?;
+        let mut rng = Pcg64::with_stream(
+            spec.seed,
+            level_stream(head.network, head.strategy, head.level),
+        );
+        let pruned = prune(&graph, head.strategy, head.level, &mut rng);
+        let plan = NetworkPlan::build(&pruned)
+            .map_err(|e| format!("planning pruned {}: {e}", head.network))?;
+        while i < shard.units.len() {
+            let u = spec.unit(shard.units[i]);
+            if (u.net_index, u.strategy_index, u.level_index)
+                != (head.net_index, head.strategy_index, head.level_index)
+            {
+                break;
+            }
+            points.push(profile_unit(
+                &sim, u.network, u.strategy, spec.runs, &plan, u.level, &rng, u.bs_index, u.bs,
+            ));
+            i += 1;
+        }
+    }
+    Ok(points)
+}
+
+/// Execute a shard and checkpoint it: dataset file first, manifest last
+/// (the manifest's existence is the completeness marker the driver and
+/// merge step trust).
+pub fn write_shard(spec: &CampaignSpec, dir: &Path, shard: &ShardPlan) -> Result<(), String> {
+    let points = execute_shard(spec, shard)?;
+    let dataset = shard_dataset_name(shard.index);
+    Dataset::new(points)
+        .save(&dir.join(&dataset))
+        .map_err(|e| e.to_string())?;
+    let manifest = ShardManifest {
+        fingerprint: spec.fingerprint(),
+        shard_index: shard.index,
+        shard_count: shard.count,
+        dataset,
+        units: shard.units.clone(),
+    };
+    manifest.save(&shard_manifest_path(dir, shard.index))
+}
+
+/// Write `spec.json` into the campaign dir, or verify an existing one
+/// matches. Returns the spec path. Writing goes through a temp file +
+/// rename so concurrent shard invocations never observe a torn spec.
+pub fn ensure_spec_file(spec: &CampaignSpec, dir: &Path) -> Result<PathBuf, String> {
+    std::fs::create_dir_all(dir)
+        .map_err(|e| format!("creating campaign dir {}: {e}", dir.display()))?;
+    let path = dir.join(SPEC_FILE);
+    if path.exists() {
+        let existing = CampaignSpec::load(&path)?;
+        if existing.fingerprint() != spec.fingerprint() {
+            return Err(format!(
+                "campaign dir {} already holds a different spec (fingerprint {:016x}, \
+                 expected {:016x}); use a fresh --out-dir or delete its shard files",
+                dir.display(),
+                existing.fingerprint(),
+                spec.fingerprint()
+            ));
+        }
+    } else {
+        let tmp = dir.join(format!("{SPEC_FILE}.tmp-{}", std::process::id()));
+        spec.save(&tmp)?;
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| format!("renaming campaign spec into {}: {e}", path.display()))?;
+    }
+    Ok(path)
+}
+
+/// The partition width recorded by a previous run's manifests under
+/// `dir`, if any (first readable manifest in sorted order, so the answer
+/// is deterministic). Lets an auto-sharded campaign resume under
+/// different parallelism (other machine, changed `PERF4SIGHT_WORKERS`)
+/// instead of erroring on a partition mismatch; unreadable manifests are
+/// left for [`run_campaign`] to report properly.
+pub fn existing_shard_count(dir: &Path) -> Option<usize> {
+    super::merge::manifest_paths(dir)
+        .ok()?
+        .into_iter()
+        .find_map(|p| ShardManifest::load(&p).ok().map(|m| m.shard_count))
+}
+
+/// Validate every checkpointed manifest under `dir` against this spec
+/// and partition. Stale files from a different campaign, or from an
+/// older partition (e.g. a crashed run re-invoked with another
+/// `--shards`), must fail loudly here — not silently coexist with the
+/// new partition's shards and wedge the merge with duplicate-coverage
+/// errors later.
+fn validate_existing_manifests(
+    dir: &Path,
+    fingerprint: u64,
+    plans: &[ShardPlan],
+) -> Result<(), String> {
+    for mpath in super::merge::manifest_paths(dir)? {
+        let m = ShardManifest::load(&mpath)?;
+        if m.fingerprint != fingerprint {
+            return Err(format!(
+                "shard manifest {} belongs to a different campaign (fingerprint {:016x}, \
+                 expected {:016x}); use a fresh --out-dir or delete the stale shard files",
+                mpath.display(),
+                m.fingerprint,
+                fingerprint
+            ));
+        }
+        let aligned = m.shard_count == plans.len()
+            && plans
+                .get(m.shard_index)
+                .is_some_and(|p| p.units == m.units);
+        if !aligned {
+            return Err(format!(
+                "shard manifest {} was written for a different partition ({} shards); \
+                 re-run with --shards {} or use a fresh --out-dir",
+                mpath.display(),
+                m.shard_count,
+                m.shard_count
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Is this shard already checkpointed? Its manifest was validated against
+/// the spec and partition up front, and a manifest is only ever written
+/// after its dataset (atomically), so completeness is just "both files
+/// present" — no dataset parse; every point is re-verified at merge time
+/// anyway.
+fn shard_complete(dir: &Path, shard: &ShardPlan) -> bool {
+    shard_manifest_path(dir, shard.index).exists()
+        && dir.join(shard_dataset_name(shard.index)).exists()
+}
+
+/// Run a campaign to completion under `dir`: partition, skip checkpointed
+/// shards, and drain the rest work-stealing style through
+/// `cfg.workers` lanes. Idempotent — re-running after a crash resumes
+/// where the last run stopped.
+pub fn run_campaign(
+    spec: &CampaignSpec,
+    dir: &Path,
+    cfg: &DriverConfig,
+) -> Result<CampaignRun, String> {
+    spec.validate()?;
+    if cfg.shards == 0 {
+        return Err("campaign driver: shard count must be ≥ 1".into());
+    }
+    let spec_path = ensure_spec_file(spec, dir)?;
+    let fingerprint = spec.fingerprint();
+    let plans = spec.shard_plans(cfg.shards);
+    validate_existing_manifests(dir, fingerprint, &plans)?;
+    let mut pending = Vec::new();
+    let mut skipped = Vec::new();
+    for plan in &plans {
+        if shard_complete(dir, plan) {
+            skipped.push(plan.index);
+        } else {
+            pending.push(plan.clone());
+        }
+    }
+    let executed: Vec<usize> = pending.iter().map(|p| p.index).collect();
+    let exe: Option<PathBuf> = match cfg.mode {
+        ExecMode::InProcess => None,
+        ExecMode::Spawn => Some(match &cfg.exe {
+            Some(p) => p.clone(),
+            None => std::env::current_exe()
+                .map_err(|e| format!("resolving current executable for worker spawn: {e}"))?,
+        }),
+    };
+    let workers = cfg.workers.clamp(1, pending.len().max(1));
+    // Every pending shard is attempted even when a sibling fails: whatever
+    // completes is checkpointed for the next resume, and all failures are
+    // reported together.
+    let outcomes = drain_indexed(pending.len(), workers, |i| {
+        let shard = &pending[i];
+        match &exe {
+            Some(exe) => spawn_worker(exe, &spec_path, dir, shard),
+            None => write_shard(spec, dir, shard),
+        }
+    });
+    let errors: Vec<String> = outcomes.into_iter().filter_map(|(_, r)| r.err()).collect();
+    if !errors.is_empty() {
+        return Err(errors.join("\n"));
+    }
+    Ok(CampaignRun {
+        shards: plans.len(),
+        executed,
+        skipped,
+    })
+}
+
+/// Run one shard in a spawned worker process via the hidden
+/// `profile-worker` CLI mode.
+fn spawn_worker(
+    exe: &Path,
+    spec_path: &Path,
+    dir: &Path,
+    shard: &ShardPlan,
+) -> Result<(), String> {
+    let output = Command::new(exe)
+        .arg("profile-worker")
+        .arg("--spec")
+        .arg(spec_path)
+        .arg("--shards")
+        .arg(shard.count.to_string())
+        .arg("--shard-index")
+        .arg(shard.index.to_string())
+        .arg("--out-dir")
+        .arg(dir)
+        .output()
+        .map_err(|e| format!("spawning worker for shard {}: {e}", shard.index))?;
+    if !output.status.success() {
+        return Err(format!(
+            "worker process for shard {} failed ({}): {}",
+            shard.index,
+            output.status,
+            String::from_utf8_lossy(&output.stderr).trim()
+        ));
+    }
+    Ok(())
+}

@@ -1,0 +1,154 @@
+//! Shard manifests: the completeness contract between workers and the
+//! merge step. A worker writes its shard's dataset file first and the
+//! manifest last, so a manifest's existence implies the dataset it names
+//! was fully written; the merge step trusts nothing else.
+//!
+//! Invalidation rule: a manifest binds its shard to one campaign via the
+//! spec fingerprint. Any spec change ⇒ new fingerprint ⇒ stale manifests
+//! are rejected with a clear error instead of silently merging mixed
+//! campaigns. A corrupt manifest is likewise a hard error — delete it and
+//! re-run the driver to regenerate the shard.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Per-shard sidecar describing exactly which campaign units the shard's
+/// dataset file holds, in dataset row order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardManifest {
+    /// [`super::CampaignSpec::fingerprint`] of the campaign the shard
+    /// belongs to.
+    pub fingerprint: u64,
+    pub shard_index: usize,
+    /// Partition width the shard was cut from.
+    pub shard_count: usize,
+    /// Dataset file name, relative to the manifest's directory.
+    pub dataset: String,
+    /// Canonical unit ids, in the same order as the dataset's points.
+    pub units: Vec<usize>,
+}
+
+/// Dataset file name for shard `index`.
+pub fn shard_dataset_name(index: usize) -> String {
+    format!("shard-{index}.json")
+}
+
+/// Manifest path for shard `index` under `dir`.
+pub fn shard_manifest_path(dir: &Path, index: usize) -> PathBuf {
+    dir.join(format!("shard-{index}.manifest.json"))
+}
+
+impl ShardManifest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            // Hex string: u64 fingerprints are not exactly representable
+            // as f64.
+            ("campaign", Json::Str(format!("{:016x}", self.fingerprint))),
+            ("shard_index", Json::Num(self.shard_index as f64)),
+            ("shard_count", Json::Num(self.shard_count as f64)),
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("units", Json::arr_usize(&self.units)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ShardManifest, String> {
+        let fp = j
+            .get("campaign")
+            .and_then(Json::as_str)
+            .ok_or("manifest: missing campaign fingerprint")?;
+        let fingerprint = u64::from_str_radix(fp.trim_start_matches("0x"), 16)
+            .map_err(|e| format!("manifest: bad campaign fingerprint {fp:?}: {e}"))?;
+        let units = j
+            .get("units")
+            .and_then(Json::as_arr)
+            .ok_or("manifest: missing units")?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| "manifest: units must be integers".to_string()))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(ShardManifest {
+            fingerprint,
+            shard_index: j
+                .get("shard_index")
+                .and_then(Json::as_usize)
+                .ok_or("manifest: missing shard_index")?,
+            shard_count: j
+                .get("shard_count")
+                .and_then(Json::as_usize)
+                .ok_or("manifest: missing shard_count")?,
+            dataset: j
+                .get("dataset")
+                .and_then(Json::as_str)
+                .ok_or("manifest: missing dataset")?
+                .to_string(),
+            units,
+        })
+    }
+
+    /// Write the manifest atomically (sibling temp file + rename): the
+    /// manifest is the shard's resume marker, so a crash mid-write must
+    /// leave either the old state or the new one, never a torn file that
+    /// would hard-error every later resume. Leftover `*.manifest.tmp-*`
+    /// files are ignored by both the driver and the merge scan.
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        let tmp = path.with_extension(format!("tmp-{}", std::process::id()));
+        std::fs::write(&tmp, self.to_json().to_string())
+            .map_err(|e| format!("writing shard manifest {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| format!("renaming shard manifest into {}: {e}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<ShardManifest, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading shard manifest {}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| {
+            format!(
+                "corrupt shard manifest {}: {e} — delete it and re-run the campaign driver \
+                 to regenerate the shard",
+                path.display()
+            )
+        })?;
+        Self::from_json(&j).map_err(|e| format!("corrupt shard manifest {}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let m = ShardManifest {
+            fingerprint: 0xdead_beef_0123_4567,
+            shard_index: 2,
+            shard_count: 5,
+            dataset: "shard-2.json".into(),
+            units: vec![10, 11, 12, 13],
+        };
+        let back = ShardManifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn file_roundtrip_and_corruption_error() {
+        let dir = std::env::temp_dir().join(format!(
+            "perf4sight-manifest-test-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = ShardManifest {
+            fingerprint: 7,
+            shard_index: 0,
+            shard_count: 1,
+            dataset: shard_dataset_name(0),
+            units: vec![0, 1],
+        };
+        let path = shard_manifest_path(&dir, 0);
+        m.save(&path).unwrap();
+        assert_eq!(ShardManifest::load(&path).unwrap(), m);
+        std::fs::write(&path, "{not json").unwrap();
+        let err = ShardManifest::load(&path).unwrap_err();
+        assert!(err.contains("corrupt shard manifest"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,141 @@
+//! Manifest-checked dataset merging: validate that the shard files under a
+//! campaign directory cover the spec's unit grid exactly once, then
+//! reassemble them in canonical level-major order. The merged [`Dataset`]
+//! is bit-identical (JSON bytes included) to what the single-process
+//! [`crate::profiler::profile`] path produces — guarded by the oracle
+//! tests in `rust/tests/campaign_shards.rs`.
+
+use std::path::{Path, PathBuf};
+
+use crate::profiler::{Dataset, ProfilePoint};
+
+use super::manifest::ShardManifest;
+use super::spec::{CampaignSpec, SPEC_FILE};
+
+/// Merge a campaign directory using the spec stored inside it.
+pub fn merge_dir(dir: &Path) -> Result<(CampaignSpec, Dataset), String> {
+    let spec = CampaignSpec::load(&dir.join(SPEC_FILE))?;
+    let ds = merge(&spec, dir)?;
+    Ok((spec, ds))
+}
+
+/// Merge the shard files under `dir` into the canonical dataset for
+/// `spec`, validating completeness against the manifests: every unit
+/// covered exactly once, every shard bound to this spec's fingerprint,
+/// every point matching its unit's provenance. Any violation is a hard
+/// error naming the offending file.
+pub fn merge(spec: &CampaignSpec, dir: &Path) -> Result<Dataset, String> {
+    spec.validate()?;
+    let total = spec.total_units();
+    let fingerprint = spec.fingerprint();
+    let manifest_paths = manifest_paths(dir)?;
+    if manifest_paths.is_empty() {
+        return Err(format!(
+            "no shard manifests under {} — run the campaign driver first",
+            dir.display()
+        ));
+    }
+    let mut slots: Vec<Option<ProfilePoint>> = vec![None; total];
+    for mpath in &manifest_paths {
+        let m = ShardManifest::load(mpath)?;
+        if m.fingerprint != fingerprint {
+            return Err(format!(
+                "shard manifest {} belongs to a different campaign (fingerprint {:016x}, \
+                 expected {:016x}); stale shard files? use a fresh --out-dir",
+                mpath.display(),
+                m.fingerprint,
+                fingerprint
+            ));
+        }
+        let dpath = dir.join(&m.dataset);
+        let ds = Dataset::load(&dpath).map_err(|e| {
+            format!(
+                "shard dataset for manifest {}: {e} — delete this shard's files and \
+                 re-run the campaign driver to regenerate it",
+                mpath.display()
+            )
+        })?;
+        if ds.len() != m.units.len() {
+            return Err(format!(
+                "{}: dataset {} holds {} points but the manifest lists {} units — \
+                 delete this shard's files and re-run the campaign driver",
+                mpath.display(),
+                dpath.display(),
+                ds.len(),
+                m.units.len()
+            ));
+        }
+        for (&uid, point) in m.units.iter().zip(ds.points) {
+            if uid >= total {
+                return Err(format!(
+                    "{}: unit id {uid} out of range (grid has {total} units)",
+                    mpath.display()
+                ));
+            }
+            let unit = spec.unit(uid);
+            if point.network != unit.network
+                || point.strategy != unit.strategy.name()
+                || point.level != unit.level
+                || point.bs != unit.bs
+            {
+                return Err(format!(
+                    "{}: point for unit {uid} is ({}, {}, level {}, bs {}) but the spec \
+                     expects ({}, {}, level {}, bs {})",
+                    mpath.display(),
+                    point.network,
+                    point.strategy,
+                    point.level,
+                    point.bs,
+                    unit.network,
+                    unit.strategy.name(),
+                    unit.level,
+                    unit.bs
+                ));
+            }
+            if slots[uid].is_some() {
+                return Err(format!(
+                    "unit {uid} is covered by more than one shard (second copy in {})",
+                    mpath.display()
+                ));
+            }
+            slots[uid] = Some(point);
+        }
+    }
+    let missing: Vec<usize> = slots
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.is_none())
+        .map(|(i, _)| i)
+        .collect();
+    if !missing.is_empty() {
+        return Err(format!(
+            "campaign under {} is incomplete: {}/{} units missing (first ids: {:?}) — \
+             re-run the campaign driver to fill the gaps",
+            dir.display(),
+            missing.len(),
+            total,
+            &missing[..missing.len().min(8)]
+        ));
+    }
+    Ok(Dataset::new(slots.into_iter().flatten().collect()))
+}
+
+/// Shard manifest files under `dir`, sorted so every consumer (merge
+/// validation, the driver's up-front partition check, shard-count
+/// adoption on resume) sees them in a deterministic order.
+pub(crate) fn manifest_paths(dir: &Path) -> Result<Vec<PathBuf>, String> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| format!("reading campaign dir {}: {e}", dir.display()))?;
+    let mut paths: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.starts_with("shard-") && n.ends_with(".manifest.json"))
+                .unwrap_or(false)
+        })
+        .collect();
+    paths.sort();
+    Ok(paths)
+}

@@ -1,0 +1,152 @@
+//! Sharded, resumable profiling campaigns — the job system that turns the
+//! paper's Sec. 5.1 profiling sweeps from a single-process function call
+//! into a crash-tolerant, machine-saturating pipeline.
+//!
+//! A [`CampaignSpec`] names the full (networks × strategies × levels ×
+//! batch sizes) grid and is deterministically partitioned into
+//! [`ShardPlan`]s over a canonical unit order. The [`driver`] drains
+//! shards work-stealing style, either on in-process threads or across
+//! spawned worker processes (the binary self-exec'd in its hidden
+//! `profile-worker` CLI mode); each shard checkpoints a dataset file plus
+//! a fingerprinted [`ShardManifest`]. The [`merge()`] step validates
+//! completeness against the manifests and reassembles the canonical
+//! dataset.
+//!
+//! Invariant: because every profiling unit fast-forwards its level's RNG
+//! stream to the exact offset the sequential order would have reached
+//! (the profiler's `NOISE_DRAWS_PER_MEASUREMENT` machinery), a merged
+//! campaign is **bit-identical** — JSON bytes included — to running
+//! [`crate::profiler::profile`] per (network, strategy) in one process,
+//! for *any* shard count and *any* worker placement. Invalidation rule:
+//! any spec change ⇒ new fingerprint ⇒ stale shard files are rejected
+//! instead of merged.
+
+pub mod driver;
+pub mod manifest;
+pub mod merge;
+pub mod spec;
+
+pub use driver::{
+    ensure_spec_file, execute_shard, existing_shard_count, run_campaign, write_shard,
+    CampaignRun, DriverConfig, ExecMode,
+};
+pub use manifest::ShardManifest;
+pub use merge::{merge, merge_dir};
+pub use spec::{CampaignSpec, CampaignUnit, ShardPlan, SPEC_FILE};
+
+use crate::profiler::{profile, worker_width, Dataset, ProfileJob};
+use crate::util::pool::drain_indexed;
+
+/// The single-process reference path: one [`profile`] call per
+/// (network, strategy) pair in spec order. This is the oracle every
+/// sharded execution must reproduce bitwise.
+pub fn profile_campaign(spec: &CampaignSpec) -> Result<Dataset, String> {
+    spec.validate()?;
+    let sim = spec.simulator()?;
+    let mut out = Dataset::default();
+    for network in &spec.networks {
+        let graph = crate::models::by_name(network)
+            .ok_or_else(|| format!("unknown network {network:?}"))?;
+        for &strategy in &spec.strategies {
+            let job = ProfileJob {
+                network,
+                graph: &graph,
+                strategy,
+                levels: &spec.levels,
+                batch_sizes: &spec.batch_sizes,
+                runs: spec.runs,
+                seed: spec.seed,
+            };
+            out.extend(profile(&sim, &job));
+        }
+    }
+    Ok(out)
+}
+
+/// Execute a whole campaign in-process — shards drained work-stealing
+/// style by a thread pool, merged in memory — and return the canonical
+/// dataset. Bit-identical to [`profile_campaign`]; this is the fast path
+/// the experiment harnesses fit from.
+pub fn collect(spec: &CampaignSpec) -> Result<Dataset, String> {
+    spec.validate()?;
+    let total = spec.total_units();
+    let workers = worker_width(total);
+    // A few shards per worker so one slow shard cannot straggle the pool.
+    let plans = spec.shard_plans(workers * 4);
+    let mut results = drain_indexed(plans.len(), workers, |i| execute_shard(spec, &plans[i]));
+    // Contiguous ascending shards: concatenation in shard order *is* the
+    // canonical unit order.
+    results.sort_by_key(|&(i, _)| i);
+    let mut points = Vec::with_capacity(total);
+    for (_, r) in results {
+        points.extend(r?);
+    }
+    Ok(Dataset::new(points))
+}
+
+/// Resolve the campaign driver's worker count: CLI flag, then the
+/// `PERF4SIGHT_WORKERS` env override (pinned, reproducible parallelism
+/// for CI and benches), then the config-file knob, then the machine's
+/// available parallelism; always clamped to `[1, cap]`.
+pub fn resolve_workers(cli: Option<usize>, configured: usize, cap: usize) -> usize {
+    cli.filter(|&w| w > 0)
+        .or_else(crate::profiler::env_workers)
+        .or_else(|| (configured > 0).then_some(configured))
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+        .clamp(1, cap.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::Strategy;
+
+    fn tiny_spec() -> CampaignSpec {
+        CampaignSpec {
+            networks: vec!["squeezenet".into()],
+            strategies: vec![Strategy::Random],
+            levels: vec![0.0, 0.5],
+            batch_sizes: vec![4, 16],
+            runs: 1,
+            seed: 3,
+            device: "tx2".into(),
+        }
+    }
+
+    #[test]
+    fn collect_matches_reference_bitwise() {
+        let spec = tiny_spec();
+        let a = profile_campaign(&spec).unwrap();
+        let b = collect(&spec).unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+
+    #[test]
+    fn execute_shard_covers_its_units() {
+        let spec = tiny_spec();
+        let plans = spec.shard_plans(3);
+        let n: usize = plans
+            .iter()
+            .map(|p| execute_shard(&spec, p).unwrap().len())
+            .sum();
+        assert_eq!(n, spec.total_units());
+    }
+
+    #[test]
+    fn resolve_workers_precedence_and_clamp() {
+        // CLI wins regardless of config; everything clamps to cap.
+        assert_eq!(resolve_workers(Some(3), 8, 100), 3);
+        assert_eq!(resolve_workers(Some(64), 8, 4), 4);
+        if std::env::var("PERF4SIGHT_WORKERS").is_ok() {
+            return; // the env override would shadow the fall-through cases
+        }
+        assert_eq!(resolve_workers(Some(0), 5, 100), 5);
+        assert_eq!(resolve_workers(None, 2, 100), 2);
+        assert!(resolve_workers(None, 0, 100) >= 1);
+        assert_eq!(resolve_workers(None, 0, 1), 1);
+    }
+}

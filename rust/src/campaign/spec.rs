@@ -1,0 +1,369 @@
+//! Campaign specification: the full zoo-scale profiling work grid
+//! (networks × strategies × levels × batch sizes), its canonical unit
+//! order, and the deterministic partition into shards.
+//!
+//! The canonical order is the concatenation, network-major then
+//! strategy-major, of the profiler's level-major / batch-size-minor
+//! schedule — i.e. exactly what running [`crate::profiler::profile`] per
+//! (network, strategy) pair in spec order would produce. Unit ids index
+//! that order, so any partition of the id space can be merged back into
+//! the canonical dataset without re-sorting ambiguity.
+
+use std::path::Path;
+
+use crate::device::{DeviceSpec, Simulator};
+use crate::pruning::Strategy;
+use crate::util::json::Json;
+use crate::util::rng::hash_seed;
+
+/// File name of the serialised spec inside a campaign output directory.
+pub const SPEC_FILE: &str = "spec.json";
+
+/// The full profiling campaign: every (network × strategy × level × batch
+/// size) point to measure, plus the measurement parameters. Serialisable,
+/// fingerprintable, and shardable — the unit of work distribution.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CampaignSpec {
+    pub networks: Vec<String>,
+    pub strategies: Vec<Strategy>,
+    pub levels: Vec<f64>,
+    pub batch_sizes: Vec<usize>,
+    /// Noisy measurements averaged per datapoint.
+    pub runs: usize,
+    /// Base seed; identical to [`crate::profiler::ProfileJob::seed`]
+    /// semantics, so campaign output is bit-compatible with `profile()`.
+    pub seed: u64,
+    /// Simulated device preset name ([`DeviceSpec::by_name`]).
+    pub device: String,
+}
+
+/// One resolved work unit of a campaign: a single (network, strategy,
+/// level, batch size) datapoint plus the indices needed to resume the
+/// level's RNG stream at the right offset.
+#[derive(Clone, Copy, Debug)]
+pub struct CampaignUnit<'a> {
+    pub id: usize,
+    pub network: &'a str,
+    pub strategy: Strategy,
+    pub level: f64,
+    pub bs: usize,
+    pub net_index: usize,
+    pub strategy_index: usize,
+    pub level_index: usize,
+    /// Position of `bs` within the spec's batch-size list — the RNG
+    /// fast-forward offset within the level's measurement stream.
+    pub bs_index: usize,
+}
+
+/// A contiguous slice of the canonical unit order, assigned to one worker
+/// execution. `count` is the partition width the plan was cut from; a
+/// worker re-deriving the partition from (spec, count, index) lands on the
+/// same unit list.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardPlan {
+    pub index: usize,
+    pub count: usize,
+    pub units: Vec<usize>,
+}
+
+impl CampaignSpec {
+    /// Check the spec is executable: known networks and device, non-empty
+    /// grid axes, sane levels.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.networks.is_empty() {
+            return Err("campaign spec: no networks".into());
+        }
+        for n in &self.networks {
+            if crate::models::by_name(n).is_none() {
+                return Err(format!("campaign spec: unknown network {n:?}"));
+            }
+        }
+        if self.strategies.is_empty() {
+            return Err("campaign spec: no strategies".into());
+        }
+        if self.levels.is_empty() {
+            return Err("campaign spec: no levels".into());
+        }
+        for &l in &self.levels {
+            if !(0.0..1.0).contains(&l) {
+                return Err(format!("campaign spec: level {l} outside [0,1)"));
+            }
+        }
+        if self.batch_sizes.is_empty() {
+            return Err("campaign spec: no batch sizes".into());
+        }
+        if self.batch_sizes.contains(&0) {
+            return Err("campaign spec: batch size 0".into());
+        }
+        if self.runs == 0 {
+            return Err("campaign spec: runs must be ≥ 1".into());
+        }
+        if DeviceSpec::by_name(&self.device).is_none() {
+            return Err(format!(
+                "campaign spec: unknown device {:?} (tx2, xavier, 2080ti)",
+                self.device
+            ));
+        }
+        Ok(())
+    }
+
+    /// The simulated device the spec targets.
+    pub fn simulator(&self) -> Result<Simulator, String> {
+        DeviceSpec::by_name(&self.device)
+            .map(Simulator::new)
+            .ok_or_else(|| format!("unknown device {:?}", self.device))
+    }
+
+    /// Total number of work units in the grid.
+    pub fn total_units(&self) -> usize {
+        self.networks.len() * self.strategies.len() * self.levels.len() * self.batch_sizes.len()
+    }
+
+    /// Resolve unit `id` in the canonical order (network-major, then
+    /// strategy, then level, batch size minor).
+    pub fn unit(&self, id: usize) -> CampaignUnit<'_> {
+        assert!(id < self.total_units(), "unit id {id} out of range");
+        let b = self.batch_sizes.len();
+        let l = self.levels.len();
+        let s = self.strategies.len();
+        let bs_index = id % b;
+        let level_index = (id / b) % l;
+        let strategy_index = (id / (b * l)) % s;
+        let net_index = id / (b * l * s);
+        CampaignUnit {
+            id,
+            network: &self.networks[net_index],
+            strategy: self.strategies[strategy_index],
+            level: self.levels[level_index],
+            bs: self.batch_sizes[bs_index],
+            net_index,
+            strategy_index,
+            level_index,
+            bs_index,
+        }
+    }
+
+    /// Deterministically partition the unit space into `count` contiguous,
+    /// balanced shards. Boundaries are aligned to whole (network,
+    /// strategy, level) groups — one group is one pruned topology × all
+    /// batch sizes — so no topology is ever pruned and planned twice
+    /// across shards; `count` therefore clamps to the group count.
+    pub fn shard_plans(&self, count: usize) -> Vec<ShardPlan> {
+        let group = self.batch_sizes.len().max(1);
+        let groups = self.total_units() / group;
+        let count = count.clamp(1, groups.max(1));
+        (0..count)
+            .map(|index| ShardPlan {
+                index,
+                count,
+                units: (index * groups / count * group..(index + 1) * groups / count * group)
+                    .collect(),
+            })
+            .collect()
+    }
+
+    /// Stable 64-bit fingerprint of the spec — the manifest invalidation
+    /// key: any change to the grid or measurement parameters produces a
+    /// different fingerprint, so shard files can never be merged across
+    /// campaigns.
+    pub fn fingerprint(&self) -> u64 {
+        hash_seed(&self.to_json().to_string())
+    }
+
+    // ---------- persistence ----------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("networks", Json::arr_str(&self.networks)),
+            (
+                "strategies",
+                Json::arr_str(
+                    &self
+                        .strategies
+                        .iter()
+                        .map(|s| s.name())
+                        .collect::<Vec<_>>(),
+                ),
+            ),
+            ("levels", Json::arr_f64(&self.levels)),
+            ("batch_sizes", Json::arr_usize(&self.batch_sizes)),
+            ("runs", Json::Num(self.runs as f64)),
+            // Hex string: u64 seeds are not exactly representable as f64.
+            ("seed", Json::Str(format!("{:016x}", self.seed))),
+            ("device", Json::Str(self.device.clone())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<CampaignSpec, String> {
+        let str_list = |key: &str| -> Result<Vec<String>, String> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("campaign spec: missing {key}"))?
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| format!("campaign spec: {key} entries must be strings"))
+                })
+                .collect()
+        };
+        let strategies = str_list("strategies")?
+            .iter()
+            .map(|s| {
+                Strategy::from_name(s)
+                    .ok_or_else(|| format!("campaign spec: unknown strategy {s:?}"))
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        let batch_sizes = j
+            .get("batch_sizes")
+            .and_then(Json::as_arr)
+            .ok_or("campaign spec: missing batch_sizes")?
+            .iter()
+            .map(|v| {
+                v.as_usize()
+                    .ok_or_else(|| "campaign spec: batch_sizes must be integers".to_string())
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        let seed = match j.get("seed") {
+            Some(Json::Str(s)) => u64::from_str_radix(s.trim_start_matches("0x"), 16)
+                .map_err(|e| format!("campaign spec: bad seed {s:?}: {e}"))?,
+            Some(v) => v
+                .as_f64()
+                .map(|x| x as u64)
+                .ok_or("campaign spec: bad seed")?,
+            None => return Err("campaign spec: missing seed".into()),
+        };
+        Ok(CampaignSpec {
+            networks: str_list("networks")?,
+            strategies,
+            levels: j
+                .get("levels")
+                .and_then(Json::f64_vec)
+                .ok_or("campaign spec: missing levels")?,
+            batch_sizes,
+            runs: j
+                .get("runs")
+                .and_then(Json::as_usize)
+                .ok_or("campaign spec: missing runs")?,
+            seed,
+            device: j
+                .get("device")
+                .and_then(Json::as_str)
+                .ok_or("campaign spec: missing device")?
+                .to_string(),
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        std::fs::write(path, self.to_json().to_string())
+            .map_err(|e| format!("writing campaign spec {}: {e}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<CampaignSpec, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading campaign spec {}: {e}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| format!("corrupt campaign spec {}: {e}", path.display()))?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CampaignSpec {
+        CampaignSpec {
+            networks: vec!["squeezenet".into(), "mnasnet".into()],
+            strategies: vec![Strategy::Random, Strategy::L1Norm],
+            levels: vec![0.0, 0.3, 0.5],
+            batch_sizes: vec![4, 16],
+            runs: 2,
+            seed: 0x9e1f,
+            device: "tx2".into(),
+        }
+    }
+
+    #[test]
+    fn canonical_order_matches_nested_loops() {
+        let s = spec();
+        assert_eq!(s.total_units(), 2 * 2 * 3 * 2);
+        let mut id = 0;
+        for (ni, net) in s.networks.iter().enumerate() {
+            for (si, &strat) in s.strategies.iter().enumerate() {
+                for (li, &level) in s.levels.iter().enumerate() {
+                    for (bi, &bs) in s.batch_sizes.iter().enumerate() {
+                        let u = s.unit(id);
+                        assert_eq!(u.network, net);
+                        assert_eq!(u.strategy, strat);
+                        assert_eq!(u.level, level);
+                        assert_eq!(u.bs, bs);
+                        assert_eq!(
+                            (u.net_index, u.strategy_index, u.level_index, u.bs_index),
+                            (ni, si, li, bi)
+                        );
+                        id += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shards_partition_exactly_on_group_boundaries() {
+        let s = spec();
+        let group = s.batch_sizes.len();
+        for count in [1, 2, 3, 5, 7, 24, 100] {
+            let plans = s.shard_plans(count);
+            assert!(plans.len() * group <= s.total_units());
+            let mut seen = Vec::new();
+            for p in &plans {
+                assert_eq!(p.count, plans.len());
+                // Aligned starts: a (network, strategy, level) topology is
+                // never split across shards.
+                assert_eq!(p.units[0] % group, 0, "count={count}");
+                seen.extend(p.units.iter().copied());
+            }
+            assert_eq!(seen, (0..s.total_units()).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_fingerprint() {
+        let s = spec();
+        let back = CampaignSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(back.fingerprint(), s.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_changes_with_any_field() {
+        let base = spec();
+        let mut seeded = base.clone();
+        seeded.seed ^= 1;
+        let mut leveled = base.clone();
+        leveled.levels.push(0.7);
+        let mut dev = base.clone();
+        dev.device = "xavier".into();
+        for other in [seeded, leveled, dev] {
+            assert_ne!(base.fingerprint(), other.fingerprint());
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_specs() {
+        let mut s = spec();
+        s.networks = vec!["lenet".into()];
+        assert!(s.validate().is_err());
+        let mut s = spec();
+        s.levels = vec![1.5];
+        assert!(s.validate().is_err());
+        let mut s = spec();
+        s.device = "a100".into();
+        assert!(s.validate().is_err());
+        let mut s = spec();
+        s.batch_sizes.clear();
+        assert!(s.validate().is_err());
+        assert!(spec().validate().is_ok());
+    }
+}

@@ -65,6 +65,14 @@ impl Args {
         }
     }
 
+    /// Parse an optional usize option (`Ok(None)` when absent).
+    pub fn usize_opt(&self, key: &str) -> Result<Option<usize>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, String> {
         match self.get(key) {
             None => Ok(default),
@@ -136,6 +144,14 @@ mod tests {
     fn bad_number_is_error() {
         let a = parse("x --bs abc");
         assert!(a.usize_or("bs", 1).is_err());
+    }
+
+    #[test]
+    fn optional_usize() {
+        let a = parse("campaign --shards 4");
+        assert_eq!(a.usize_opt("shards").unwrap(), Some(4));
+        assert_eq!(a.usize_opt("workers").unwrap(), None);
+        assert!(parse("campaign --shards x").usize_opt("shards").is_err());
     }
 
     #[test]

@@ -79,6 +79,13 @@ pub struct ToolflowConfig {
     pub forest: ForestConfig,
     pub artifacts_dir: String,
     pub data_dir: String,
+    /// Campaign driver worker-pool width (`[campaign] workers`); 0 = auto
+    /// (the `PERF4SIGHT_WORKERS` env override, else available
+    /// parallelism).
+    pub campaign_workers: usize,
+    /// Campaign shard count (`[campaign] shards`); 0 = auto (one shard
+    /// per worker).
+    pub campaign_shards: usize,
 }
 
 impl Default for ToolflowConfig {
@@ -90,6 +97,8 @@ impl Default for ToolflowConfig {
             forest: crate::runtime::forest_exec::export_forest_config(),
             artifacts_dir: "artifacts".into(),
             data_dir: "data".into(),
+            campaign_workers: 0,
+            campaign_shards: 0,
         }
     }
 }
@@ -113,6 +122,8 @@ impl ToolflowConfig {
             },
             artifacts_dir: raw.string("paths.artifacts", &d.artifacts_dir),
             data_dir: raw.string("paths.data", &d.data_dir),
+            campaign_workers: raw.usize("campaign.workers", d.campaign_workers),
+            campaign_shards: raw.usize("campaign.shards", d.campaign_shards),
         }
     }
 
@@ -138,6 +149,10 @@ feature_fraction = 0.5
 [profiling]
 runs = 5
 
+[campaign]
+workers = 3
+shards = 6
+
 [paths]
 artifacts = "build/artifacts"
 "#;
@@ -161,6 +176,8 @@ artifacts = "build/artifacts"
         assert_eq!(cfg.forest.n_trees, 64);
         assert_eq!(cfg.forest.max_depth, 10);
         assert_eq!(cfg.artifacts_dir, "build/artifacts");
+        assert_eq!(cfg.campaign_workers, 3);
+        assert_eq!(cfg.campaign_shards, 6);
         // untouched keys keep defaults
         assert_eq!(cfg.data_dir, "data");
     }

@@ -9,8 +9,9 @@ pub mod config;
 pub use cli::Args;
 pub use config::{RawConfig, ToolflowConfig};
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
+use crate::campaign::{self, CampaignSpec, DriverConfig, ExecMode};
 use crate::device::{DeviceSpec, Simulator};
 use crate::experiments;
 use crate::features::network_features_from_plan;
@@ -30,6 +31,16 @@ COMMANDS:
   profile    --network N [--device tx2] [--strategy random|l1norm]
              [--levels 0,0.3,..] [--batch-sizes 2,4,..] [--runs 3]
              [--seed S] --out FILE.json
+             (or: --shards K --shard-index I --out-dir DIR to run one
+              campaign shard and write shard-I.json + its manifest)
+  campaign   --networks N1,N2[,..] --out-dir DIR [--strategies random,l1norm]
+             [--levels 0,0.3,..] [--batch-sizes 2,4,..] [--runs 3] [--seed S]
+             [--device tx2] [--shards K] [--workers W] [--in-process]
+             [--merge-only] [--format json|csv] [--out FILE]
+             (spawns W worker processes that drain K shards work-stealing
+              style, checkpointing shard-*.json + manifests under DIR, then
+              merges them — bit-identical to single-process profiling.
+              Re-running resumes: complete shards are skipped.)
   fit        --data FILE.json[,FILE2..] --target gamma|phi --out MODEL.json
   predict    --model MODEL.json --network N [--level 0.3,0.5,..] [--bs 2,4,..]
              [--strategy random] [--device tx2] [--seed S]
@@ -43,6 +54,7 @@ COMMANDS:
   help
 
 Options may also come from --config FILE (TOML subset; see rust/src/coordinator/config.rs).
+The PERF4SIGHT_WORKERS env var pins worker-pool width (profiling + campaigns).
 ";
 
 /// Entry point used by `main.rs`.
@@ -55,6 +67,10 @@ pub fn run(raw_args: Vec<String>) -> Result<(), String> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("zoo") => cmd_zoo(),
         Some("profile") => cmd_profile(&args, &cfg),
+        Some("campaign") => cmd_campaign(&args, &cfg),
+        // Hidden: the campaign driver self-execs this mode to run one
+        // shard in a worker process.
+        Some("profile-worker") => cmd_profile_worker(&args),
         Some("fit") => cmd_fit(&args, &cfg),
         Some("predict") => cmd_predict(&args, &cfg),
         Some("search") => cmd_search(&args, &cfg),
@@ -76,11 +92,7 @@ fn simulator(args: &Args, cfg: &ToolflowConfig) -> Result<Simulator, String> {
 }
 
 fn strategy_of(name: &str) -> Result<Strategy, String> {
-    match name {
-        "random" => Ok(Strategy::Random),
-        "l1norm" | "l1" => Ok(Strategy::L1Norm),
-        other => Err(format!("unknown strategy {other:?}")),
-    }
+    Strategy::from_name(name).ok_or_else(|| format!("unknown strategy {name:?}"))
 }
 
 fn cmd_zoo() -> Result<(), String> {
@@ -102,20 +114,61 @@ fn cmd_zoo() -> Result<(), String> {
 fn cmd_profile(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
     let network = args.get("network").ok_or("--network required")?;
     let graph = crate::models::by_name(network).ok_or_else(|| format!("unknown network {network}"))?;
-    let sim = simulator(args, cfg)?;
     let strategy = strategy_of(&args.get_or("strategy", "random"))?;
     let levels = args.f64_list("levels")?.unwrap_or_else(|| TRAIN_LEVELS.to_vec());
     let batch_sizes = args
         .usize_list("batch-sizes")?
         .unwrap_or_else(|| PAPER_BATCH_SIZES.to_vec());
+    let runs = args.usize_or("runs", cfg.runs)?;
+    let seed = args.u64_or("seed", cfg.seed)?;
+
+    // Shard mode: run one shard of the single-network campaign grid and
+    // checkpoint it (shard-I.json + manifest) for a later `campaign
+    // --merge-only`.
+    if let Some(shards) = args.usize_opt("shards")? {
+        let shard_index = args
+            .usize_opt("shard-index")?
+            .ok_or("--shard-index required with --shards")?;
+        let dir = PathBuf::from(
+            args.get("out-dir")
+                .ok_or("--out-dir required with --shards (shard + manifest files land there)")?,
+        );
+        let spec = CampaignSpec {
+            networks: vec![network.to_string()],
+            strategies: vec![strategy],
+            levels,
+            batch_sizes,
+            runs,
+            seed,
+            device: args.get_or("device", &cfg.device),
+        };
+        spec.validate()?;
+        let plans = spec.shard_plans(shards);
+        let plan = plans.get(shard_index).ok_or_else(|| {
+            format!("--shard-index {shard_index} out of range ({} shards)", plans.len())
+        })?;
+        campaign::ensure_spec_file(&spec, &dir)?;
+        campaign::write_shard(&spec, &dir, plan)?;
+        println!(
+            "shard {}/{}: {} of {} units → {}",
+            shard_index,
+            plans.len(),
+            plan.units.len(),
+            spec.total_units(),
+            dir.display()
+        );
+        return Ok(());
+    }
+
+    let sim = simulator(args, cfg)?;
     let job = ProfileJob {
         network,
         graph: &graph,
         strategy,
         levels: &levels,
         batch_sizes: &batch_sizes,
-        runs: args.usize_or("runs", cfg.runs)?,
-        seed: args.u64_or("seed", cfg.seed)?,
+        runs,
+        seed,
     };
     let started = std::time::Instant::now();
     let ds = profile(&sim, &job);
@@ -131,6 +184,114 @@ fn cmd_profile(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
         out
     );
     Ok(())
+}
+
+fn cmd_campaign(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
+    let dir = PathBuf::from(args.get("out-dir").ok_or("--out-dir required")?);
+    // Validate the output format up front: a typo must fail instantly,
+    // not after a multi-hour profiling run.
+    let format = args.get_or("format", "json");
+    if format != "json" && format != "csv" {
+        return Err(format!("--format must be json|csv, got {format}"));
+    }
+    let started = std::time::Instant::now();
+    let spec = if args.flag("merge-only") {
+        CampaignSpec::load(&dir.join(campaign::SPEC_FILE))?
+    } else {
+        let networks: Vec<String> = args
+            .get("networks")
+            .ok_or("--networks required (comma list; see `zoo`)")?
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .collect();
+        let strategies = match args.get("strategies") {
+            None => vec![Strategy::Random],
+            Some(list) => list
+                .split(',')
+                .map(|s| strategy_of(s.trim()))
+                .collect::<Result<Vec<_>, _>>()?,
+        };
+        let spec = CampaignSpec {
+            networks,
+            strategies,
+            levels: args.f64_list("levels")?.unwrap_or_else(|| TRAIN_LEVELS.to_vec()),
+            batch_sizes: args
+                .usize_list("batch-sizes")?
+                .unwrap_or_else(|| PAPER_BATCH_SIZES.to_vec()),
+            runs: args.usize_or("runs", cfg.runs)?,
+            seed: args.u64_or("seed", cfg.seed)?,
+            device: args.get_or("device", &cfg.device),
+        };
+        spec.validate()?;
+        let total = spec.total_units();
+        let workers =
+            campaign::resolve_workers(args.usize_opt("workers")?, cfg.campaign_workers, total);
+        let shards = match args.usize_opt("shards")? {
+            Some(n) => n,
+            None if cfg.campaign_shards > 0 => cfg.campaign_shards,
+            // Resume-friendly auto default: adopt the partition already
+            // checkpointed under --out-dir (worker width varies across
+            // machines and must not invalidate a resumable campaign),
+            // else one shard per worker.
+            None => campaign::existing_shard_count(&dir).unwrap_or(workers),
+        };
+        let driver_cfg = DriverConfig {
+            shards,
+            workers,
+            mode: if args.flag("in-process") {
+                ExecMode::InProcess
+            } else {
+                ExecMode::Spawn
+            },
+            exe: None,
+        };
+        let run = campaign::run_campaign(&spec, &dir, &driver_cfg)?;
+        println!(
+            "campaign: {} units across {} shard(s) — {} executed, {} resumed complete — on {} {}",
+            total,
+            run.shards,
+            run.executed.len(),
+            run.skipped.len(),
+            workers,
+            match driver_cfg.mode {
+                ExecMode::Spawn => "worker process(es)",
+                ExecMode::InProcess => "in-process worker(s)",
+            }
+        );
+        spec
+    };
+    let ds = campaign::merge(&spec, &dir)?;
+    let out = args.get("out").map(PathBuf::from).unwrap_or_else(|| {
+        dir.join(if format == "csv" { "dataset.csv" } else { "dataset.json" })
+    });
+    if format == "csv" {
+        ds.save_csv(&out).map_err(|e| e.to_string())?;
+    } else {
+        ds.save(&out).map_err(|e| e.to_string())?;
+    }
+    println!(
+        "merged {} manifest-checked points in {:.2?} → {}",
+        ds.len(),
+        started.elapsed(),
+        out.display()
+    );
+    Ok(())
+}
+
+/// Hidden worker mode: execute one shard of a campaign spec file. Spawned
+/// by the campaign driver (self-exec); not part of the documented CLI.
+fn cmd_profile_worker(args: &Args) -> Result<(), String> {
+    let spec = CampaignSpec::load(Path::new(args.get("spec").ok_or("--spec required")?))?;
+    let shards = args.usize_opt("shards")?.ok_or("--shards required")?;
+    let shard_index = args
+        .usize_opt("shard-index")?
+        .ok_or("--shard-index required")?;
+    let dir = PathBuf::from(args.get("out-dir").ok_or("--out-dir required")?);
+    let plans = spec.shard_plans(shards);
+    let plan = plans
+        .get(shard_index)
+        .ok_or_else(|| format!("shard index {shard_index} out of range ({} shards)", plans.len()))?;
+    campaign::write_shard(&spec, &dir, plan)
 }
 
 fn cmd_fit(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {

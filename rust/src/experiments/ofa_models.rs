@@ -6,13 +6,14 @@
 //! 1.8% / 4.4% test error on the remaining 75. It also validates the Γ
 //! model trained on ResNet50 data against the 100 sub-networks (4.28%).
 
+use crate::campaign::{self, CampaignSpec};
 use crate::device::Simulator;
 use crate::engine::PredictionEngine;
 use crate::features::{network_features_from_plan, NUM_FEATURES};
 use crate::forest::Forest;
 use crate::ir::NetworkPlan;
 use crate::ofa::SubnetConfig;
-use crate::profiler::train_test_split;
+use crate::profiler::{PAPER_BATCH_SIZES, TRAIN_LEVELS};
 use crate::pruning::Strategy;
 use crate::util::bench_harness::section;
 use crate::util::rng::Pcg64;
@@ -103,8 +104,20 @@ pub fn run(sim: &Simulator, subnets: usize, seed: u64) -> OfaModels {
     let ppred = phi_infer.compile().predict_rows(&test_rows);
 
     // ---- Γ generalisation: model trained on plain ResNet50 TX2 data ----
-    let r50 = crate::models::resnet50(1000);
-    let (train, _) = train_test_split(sim, "resnet50", &r50, Strategy::Random, seed);
+    // The training data comes from a merged profiling campaign — the one
+    // canonical dataset producer — bit-identical to the former ad-hoc
+    // per-network profile() call (and no longer paying for the unused
+    // held-out half of the old train/test split).
+    let train = campaign::collect(&CampaignSpec {
+        networks: vec!["resnet50".into()],
+        strategies: vec![Strategy::Random],
+        levels: TRAIN_LEVELS.to_vec(),
+        batch_sizes: PAPER_BATCH_SIZES.to_vec(),
+        runs: 3,
+        seed,
+        device: sim.spec.name.into(),
+    })
+    .expect("resnet50 training campaign");
     let (gamma_train, _) = fit_gamma_phi(&train);
     let mut tg_rows = Vec::new();
     let mut tg_truth = Vec::new();

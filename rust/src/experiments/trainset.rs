@@ -4,8 +4,10 @@
 //! levels. Paper: error starts at 33–74% for T={0} and plateaus at 3–6%
 //! from T={0,30,50,70,90} onward.
 
+use crate::campaign::{self, CampaignSpec};
 use crate::device::Simulator;
-use crate::profiler::{all_levels, profile, ProfileJob, PAPER_BATCH_SIZES};
+use crate::profiler::{all_levels, PAPER_BATCH_SIZES};
+use crate::pruning::Strategy;
 use crate::util::bench_harness::{section, table};
 
 use super::fit_gamma_phi;
@@ -32,30 +34,26 @@ pub struct TrainsetReport {
 }
 
 pub fn run(sim: &Simulator, seed: u64) -> TrainsetReport {
-    let graph = crate::models::alexnet(1000);
+    // Two merged campaigns (one per seed stream) over *all* levels replace
+    // the former 16 ad-hoc per-step profile() calls: per-level RNG streams
+    // are independent, so filtering the merged dataset to a level subset
+    // is bit-identical to profiling exactly that subset.
+    let spec = |s: u64| CampaignSpec {
+        networks: vec!["alexnet".into()],
+        strategies: vec![Strategy::Random],
+        levels: all_levels(),
+        batch_sizes: PAPER_BATCH_SIZES.to_vec(),
+        runs: 3,
+        seed: s,
+        device: sim.spec.name.into(),
+    };
+    let train_all = campaign::collect(&spec(seed)).expect("alexnet training campaign");
+    let test_all = campaign::collect(&spec(seed ^ 0xabcd)).expect("alexnet test campaign");
     let mut points = Vec::new();
     for t_levels in train_set_sequence() {
-        let train = profile(
-            sim,
-            &ProfileJob {
-                levels: &t_levels,
-                seed,
-                ..ProfileJob::new("alexnet", &graph)
-            },
-        );
-        let test_levels: Vec<f64> = all_levels()
-            .into_iter()
-            .filter(|l| !t_levels.iter().any(|t| (t - l).abs() < 1e-9))
-            .collect();
-        let test = profile(
-            sim,
-            &ProfileJob {
-                levels: &test_levels,
-                batch_sizes: &PAPER_BATCH_SIZES,
-                seed: seed ^ 0xabcd,
-                ..ProfileJob::new("alexnet", &graph)
-            },
-        );
+        let in_t = |level: f64| t_levels.iter().any(|t| (t - level).abs() < 1e-9);
+        let train = train_all.filter(|p| in_t(p.level));
+        let test = test_all.filter(|p| !in_t(p.level));
         let (fg, fp) = fit_gamma_phi(&train);
         points.push((
             t_levels.len(),
@@ -82,6 +80,7 @@ pub fn print(report: &TrainsetReport) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::profiler::{profile, ProfileJob};
 
     #[test]
     fn error_shrinks_then_plateaus() {
@@ -115,6 +114,40 @@ mod tests {
             "no improvement from |T|=1 ({:.2}%) to |T|=5 ({:.2}%)",
             errs[0],
             errs[1]
+        );
+    }
+
+    #[test]
+    fn filtered_campaign_matches_direct_profiling_bitwise() {
+        // The refactor's core assumption: per-level RNG streams are
+        // independent, so a level-subset filter of the merged all-levels
+        // campaign equals profiling exactly that subset.
+        let sim = Simulator::tx2();
+        let graph = crate::models::squeezenet(1000);
+        let spec = CampaignSpec {
+            networks: vec!["squeezenet".into()],
+            strategies: vec![Strategy::Random],
+            levels: vec![0.0, 0.3, 0.6],
+            batch_sizes: vec![4, 16],
+            runs: 1,
+            seed: 21,
+            device: "tx2".into(),
+        };
+        let merged = campaign::collect(&spec).unwrap();
+        let direct = profile(
+            &sim,
+            &ProfileJob {
+                levels: &[0.3],
+                batch_sizes: &[4, 16],
+                runs: 1,
+                seed: 21,
+                ..ProfileJob::new("squeezenet", &graph)
+            },
+        );
+        let filtered = merged.filter(|p| (p.level - 0.3).abs() < 1e-9);
+        assert_eq!(
+            filtered.to_json().to_string(),
+            direct.to_json().to_string()
         );
     }
 }

@@ -14,6 +14,7 @@
 //!   AOT-lowered to HLO text in `artifacts/`, executed from `runtime/`.
 
 pub mod baselines;
+pub mod campaign;
 pub mod coordinator;
 pub mod device;
 pub mod engine;

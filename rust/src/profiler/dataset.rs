@@ -123,16 +123,24 @@ impl Dataset {
         Ok(Dataset { points })
     }
 
+    /// Save as JSON, creating missing parent directories (parity with the
+    /// `cmd_fit` output-dir handling). Errors name the offending path.
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        std::fs::write(path, self.to_json().to_string())
+        write_named(path, self.to_json().to_string())
+    }
+
+    /// Save as CSV with the same parent-directory handling and
+    /// path-named errors as [`Dataset::save`] — the campaign
+    /// `--format csv` output path.
+    pub fn save_csv(&self, path: &Path) -> std::io::Result<()> {
+        write_named(path, self.to_csv())
     }
 
     pub fn load(path: &Path) -> Result<Dataset, String> {
-        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
-        Self::from_json(&Json::parse(&text)?)
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading dataset {}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| format!("corrupt dataset {}: {e}", path.display()))?;
+        Self::from_json(&j)
     }
 
     /// CSV dump (header + rows) for external analysis / plotting.
@@ -156,6 +164,77 @@ impl Dataset {
         }
         out
     }
+
+    /// Inverse of [`Dataset::to_csv`]: floats round-trip bitwise (`{}` on
+    /// f64 prints the shortest representation that parses back exactly).
+    /// Used by the campaign `--format csv` output path.
+    pub fn from_csv(text: &str) -> Result<Dataset, String> {
+        let expected_cols = 6 + feature_names().len();
+        let mut lines = text.lines();
+        let header = lines.next().ok_or("empty CSV")?;
+        let head: Vec<&str> = header.split(',').collect();
+        if head.len() != expected_cols
+            || head[..6] != ["network", "strategy", "level", "bs", "gamma_mb", "phi_ms"]
+        {
+            return Err(format!("unexpected CSV header: {header}"));
+        }
+        let mut points = Vec::new();
+        for (i, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split(',').collect();
+            if cols.len() != expected_cols {
+                return Err(format!(
+                    "CSV line {}: {} columns, expected {expected_cols}",
+                    i + 2,
+                    cols.len()
+                ));
+            }
+            let f64_at = |c: usize| -> Result<f64, String> {
+                cols[c]
+                    .parse::<f64>()
+                    .map_err(|e| format!("CSV line {}: column {}: {e}", i + 2, c + 1))
+            };
+            points.push(ProfilePoint {
+                network: cols[0].to_string(),
+                strategy: cols[1].to_string(),
+                level: f64_at(2)?,
+                bs: cols[3]
+                    .parse()
+                    .map_err(|e| format!("CSV line {}: bs: {e}", i + 2))?,
+                features: (6..expected_cols)
+                    .map(f64_at)
+                    .collect::<Result<Vec<_>, _>>()?,
+                gamma_mb: f64_at(4)?,
+                phi_ms: f64_at(5)?,
+            });
+        }
+        Ok(Dataset::new(points))
+    }
+}
+
+/// Write a dataset artifact, creating missing parent directories;
+/// errors name the offending path.
+fn write_named(path: &Path, contents: String) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        // `parent()` of a bare filename is `Some("")` — nothing to create.
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| {
+                std::io::Error::new(
+                    e.kind(),
+                    format!(
+                        "creating parent directory {} for dataset {}: {e}",
+                        dir.display(),
+                        path.display()
+                    ),
+                )
+            })?;
+        }
+    }
+    std::fs::write(path, contents).map_err(|e| {
+        std::io::Error::new(e.kind(), format!("saving dataset to {}: {e}", path.display()))
+    })
 }
 
 #[cfg(test)]
@@ -216,6 +295,28 @@ mod tests {
     }
 
     #[test]
+    fn save_creates_nested_parents_and_errors_name_the_path() {
+        let ds = Dataset::new(vec![point("x", 8, 42.0)]);
+        let dir = std::env::temp_dir().join(format!(
+            "perf4sight-test-ds-nested-{}",
+            std::process::id()
+        ));
+        // Two missing directory levels.
+        let path = dir.join("a/b/ds.json");
+        ds.save(&path).unwrap();
+        assert!(path.exists());
+        std::fs::remove_dir_all(&dir).ok();
+        // Unwritable target: the error message surfaces the path.
+        let bad = std::path::Path::new("/proc/perf4sight-definitely-not-writable/ds.json");
+        let err = ds.save(bad).unwrap_err().to_string();
+        assert!(err.contains("ds.json"), "error should name the path: {err}");
+        // Load errors name the path too.
+        let missing = std::path::Path::new("/nonexistent/p4s.json");
+        let err = Dataset::load(missing).unwrap_err();
+        assert!(err.contains("/nonexistent/p4s.json"), "{err}");
+    }
+
+    #[test]
     fn csv_has_header_and_rows() {
         let ds = Dataset::new(vec![point("a", 2, 1.0)]);
         let csv = ds.to_csv();
@@ -223,5 +324,27 @@ mod tests {
         assert_eq!(lines.len(), 2);
         assert!(lines[0].starts_with("network,strategy,level,bs"));
         assert_eq!(lines[0].split(',').count(), 6 + NUM_FEATURES);
+    }
+
+    #[test]
+    fn csv_roundtrip_bitwise() {
+        let mut a = point("resnet18", 32, 1234.567_890_123);
+        a.features = (0..NUM_FEATURES).map(|i| (i as f64) * 0.3 + 0.007).collect();
+        a.level = 0.30000000000000004; // a level all_levels() actually produces
+        let mut b = point("squeezenet", 2, 0.125);
+        b.phi_ms = 1.0 / 3.0;
+        let ds = Dataset::new(vec![a, b]);
+        let back = Dataset::from_csv(&ds.to_csv()).unwrap();
+        // Bitwise identity, JSON bytes included.
+        assert_eq!(back.to_json().to_string(), ds.to_json().to_string());
+    }
+
+    #[test]
+    fn csv_rejects_malformed_input() {
+        assert!(Dataset::from_csv("").is_err());
+        assert!(Dataset::from_csv("wrong,header\n").is_err());
+        let good = Dataset::new(vec![point("a", 2, 1.0)]).to_csv();
+        let truncated: String = good.lines().next().unwrap().to_string() + "\na,b,0.1\n";
+        assert!(Dataset::from_csv(&truncated).is_err());
     }
 }

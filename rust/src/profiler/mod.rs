@@ -19,8 +19,6 @@ pub mod dataset;
 
 pub use dataset::{Dataset, ProfilePoint};
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-
 use crate::device::Simulator;
 use crate::features::network_features_from_plan;
 use crate::ir::{Graph, NetworkPlan};
@@ -86,6 +84,32 @@ impl<'a> ProfileJob<'a> {
 /// `flat_profile_matches_sequential_reference` guards the count.
 const NOISE_DRAWS_PER_MEASUREMENT: u64 = 4;
 
+/// Worker-pool width for flat profiling schedules: the
+/// `PERF4SIGHT_WORKERS` env override when set (pinned, reproducible
+/// parallelism for CI and benches), otherwise the machine's available
+/// parallelism; always clamped to `[1, cap]`. Used by [`profile`] and the
+/// campaign subsystem's in-process execution.
+pub fn worker_width(cap: usize) -> usize {
+    let fallback = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    env_workers().unwrap_or(fallback).clamp(1, cap.max(1))
+}
+
+/// The `PERF4SIGHT_WORKERS` override when set to a positive integer —
+/// the single parsing point shared by [`worker_width`] and the campaign
+/// driver's worker resolution.
+pub(crate) fn env_workers() -> Option<usize> {
+    parse_workers(std::env::var("PERF4SIGHT_WORKERS").ok().as_deref())
+}
+
+/// Pure parsing logic behind [`env_workers`], split out for tests
+/// (reading the real env var would race across the parallel test runner).
+fn parse_workers(raw: Option<&str>) -> Option<usize> {
+    raw.and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+}
+
 /// Profile a network per the job spec: for every (level, bs), prune,
 /// extract features, and average `runs` noisy simulated measurements.
 ///
@@ -103,7 +127,10 @@ pub fn profile(sim: &Simulator, job: &ProfileJob) -> Dataset {
         .levels
         .iter()
         .map(|&level| {
-            let mut rng = Pcg64::with_stream(job.seed, level_stream(job, level));
+            let mut rng = Pcg64::with_stream(
+                job.seed,
+                level_stream(job.network, job.strategy, level),
+            );
             let g = prune(job.graph, job.strategy, level, &mut rng);
             (level, g, rng)
         })
@@ -114,50 +141,25 @@ pub fn profile(sim: &Simulator, job: &ProfileJob) -> Dataset {
         .map(|(_, g, _)| NetworkPlan::build(g).expect("valid pruned graph"))
         .collect();
 
-    // Flat (level, bs) work units drained through an atomic cursor.
+    // Flat (level, bs) work units drained work-stealing style.
     let units: Vec<(usize, usize)> = (0..pruned.len())
         .flat_map(|li| (0..job.batch_sizes.len()).map(move |bi| (li, bi)))
         .collect();
-    let workers = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-        .min(units.len());
-    let cursor = AtomicUsize::new(0);
-    let mut results: Vec<(usize, ProfilePoint)> = std::thread::scope(|scope| {
-        let cursor = &cursor;
-        let units = &units;
-        let pruned = &pruned;
-        let plans = &plans;
-        let handles: Vec<_> = (0..workers)
-            .map(|_| {
-                scope.spawn(move || {
-                    let mut out = Vec::new();
-                    loop {
-                        let i = cursor.fetch_add(1, Ordering::Relaxed);
-                        if i >= units.len() {
-                            break;
-                        }
-                        let (li, bi) = units[i];
-                        let (level, _, ref base_rng) = pruned[li];
-                        let point = profile_one_point(
-                            sim,
-                            job,
-                            &plans[li],
-                            level,
-                            base_rng,
-                            bi,
-                            job.batch_sizes[bi],
-                        );
-                        out.push((i, point));
-                    }
-                    out
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .flat_map(|h| h.join().unwrap())
-            .collect()
+    let workers = worker_width(units.len());
+    let mut results = crate::util::pool::drain_indexed(units.len(), workers, |i| {
+        let (li, bi) = units[i];
+        let (level, _, ref base_rng) = pruned[li];
+        profile_unit(
+            sim,
+            job.network,
+            job.strategy,
+            job.runs,
+            &plans[li],
+            level,
+            base_rng,
+            bi,
+            job.batch_sizes[bi],
+        )
     });
     // Restore the deterministic level-major, batch-size-minor order.
     results.sort_by_key(|&(i, _)| i);
@@ -171,7 +173,10 @@ pub fn profile(sim: &Simulator, job: &ProfileJob) -> Dataset {
 pub fn profile_sequential(sim: &Simulator, job: &ProfileJob) -> Dataset {
     let mut points = Vec::new();
     for &level in job.levels {
-        let mut rng = Pcg64::with_stream(job.seed, level_stream(job, level));
+        let mut rng = Pcg64::with_stream(
+            job.seed,
+            level_stream(job.network, job.strategy, level),
+        );
         let pruned = prune(job.graph, job.strategy, level, &mut rng);
         for &bs in job.batch_sizes {
             let features =
@@ -201,30 +206,30 @@ pub fn profile_sequential(sim: &Simulator, job: &ProfileJob) -> Dataset {
 }
 
 /// Per-level RNG stream (drives pruning then measurement; the historical
-/// derivation — `dnnmem_cmp` reconstructs pruned graphs from it).
-fn level_stream(job: &ProfileJob, level: f64) -> u64 {
-    hash_seed(&format!(
-        "{}/{}/{level:.3}",
-        job.network,
-        job.strategy.name()
-    ))
+/// derivation — `dnnmem_cmp` reconstructs pruned graphs from it, and the
+/// campaign subsystem derives shard-local streams from it).
+pub(crate) fn level_stream(network: &str, strategy: Strategy, level: f64) -> u64 {
+    hash_seed(&format!("{network}/{}/{level:.3}", strategy.name()))
 }
 
 /// One (level, bs) datapoint: plan-based features + averaged noisy runs.
 /// `base_rng` is the level stream just after pruning; the unit
 /// fast-forwards past the draws earlier batch sizes consume, so any
-/// worker can run it in any order and reproduce the sequential values.
+/// worker — thread or spawned campaign process — can run it anywhere, in
+/// any order, and reproduce the sequential values bit for bit.
 #[allow(clippy::too_many_arguments)]
-fn profile_one_point(
+pub(crate) fn profile_unit(
     sim: &Simulator,
-    job: &ProfileJob,
+    network: &str,
+    strategy: Strategy,
+    runs: usize,
     plan: &NetworkPlan<'_>,
     level: f64,
     base_rng: &Pcg64,
     bs_index: usize,
     bs: usize,
 ) -> ProfilePoint {
-    let runs = job.runs.max(1);
+    let runs = runs.max(1);
     let mut rng = base_rng.clone();
     rng.advance(bs_index as u64 * runs as u64 * NOISE_DRAWS_PER_MEASUREMENT);
     let features = network_features_from_plan(plan, bs);
@@ -236,8 +241,8 @@ fn profile_one_point(
         phi += m.phi_ms;
     }
     ProfilePoint {
-        network: job.network.to_string(),
-        strategy: job.strategy.name(),
+        network: network.to_string(),
+        strategy: strategy.name(),
         level,
         bs,
         features,
@@ -275,6 +280,20 @@ pub fn train_test_split(
 mod tests {
     use super::*;
     use crate::models;
+
+    #[test]
+    fn worker_env_parsing_and_clamp() {
+        // Override applies when parseable and positive; junk and zero
+        // fall back to auto.
+        assert_eq!(parse_workers(Some("2")), Some(2));
+        assert_eq!(parse_workers(Some(" 3 ")), Some(3));
+        assert_eq!(parse_workers(Some("zippy")), None);
+        assert_eq!(parse_workers(Some("0")), None);
+        assert_eq!(parse_workers(None), None);
+        // worker_width clamps to [1, cap] whatever the env says.
+        assert!(worker_width(4) <= 4);
+        assert_eq!(worker_width(0), 1);
+    }
 
     #[test]
     fn paper_constants() {

@@ -48,6 +48,26 @@ impl Strategy {
         }
     }
 
+    /// Inverse of [`Strategy::name`] (plus the `l1` shorthand) — used by
+    /// the CLI and the campaign spec (de)serialisation.
+    pub fn from_name(name: &str) -> Option<Strategy> {
+        Some(match name {
+            "random" => Strategy::Random,
+            "l1norm" | "l1" => Strategy::L1Norm,
+            other => {
+                let profile = other.strip_prefix("weighted-")?;
+                Strategy::Weighted(match profile {
+                    "uniform" => Profile::Uniform,
+                    "earlyheavy" => Profile::EarlyHeavy,
+                    "middleheavy" => Profile::MiddleHeavy,
+                    "lateheavy" => Profile::LateHeavy,
+                    "random" => Profile::Random,
+                    _ => return None,
+                })
+            }
+        })
+    }
+
     /// Number of filters to REMOVE from a group of `filters` filters at
     /// normalised depth `depth`, targeting global `level` ∈ [0,1).
     ///
@@ -183,5 +203,17 @@ mod tests {
             Strategy::Weighted(Profile::MiddleHeavy).name(),
             "weighted-middleheavy"
         );
+    }
+
+    #[test]
+    fn from_name_round_trips_every_strategy() {
+        let mut all = vec![Strategy::Random, Strategy::L1Norm];
+        all.extend(ALL_PROFILES.iter().map(|&p| Strategy::Weighted(p)));
+        for s in all {
+            assert_eq!(Strategy::from_name(&s.name()), Some(s));
+        }
+        assert_eq!(Strategy::from_name("l1"), Some(Strategy::L1Norm));
+        assert_eq!(Strategy::from_name("magnitude"), None);
+        assert_eq!(Strategy::from_name("weighted-steep"), None);
     }
 }

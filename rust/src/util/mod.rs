@@ -5,6 +5,7 @@
 
 pub mod bench_harness;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

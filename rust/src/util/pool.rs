@@ -1,0 +1,56 @@
+//! The one work-stealing drain loop behind every flat schedule in the
+//! toolflow: profiling units ([`crate::profiler::profile`]), in-process
+//! campaign shards, and campaign worker processes all pull indices from a
+//! shared cursor so a slow item never blocks the remaining lanes.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `work(0..n)` across `workers` scoped threads, each pulling the
+/// next index from a shared cursor (work stealing). Returns `(index,
+/// output)` pairs in completion order — sort by index to restore the
+/// canonical order.
+pub(crate) fn drain_indexed<T, F>(n: usize, workers: usize, work: F) -> Vec<(usize, T)>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let cursor = AtomicUsize::new(0);
+    let results = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|scope| {
+        let cursor = &cursor;
+        let results = &results;
+        let work = &work;
+        for _ in 0..workers.clamp(1, n.max(1)) {
+            scope.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = work(i);
+                results.lock().unwrap().push((i, out));
+            });
+        }
+    });
+    results.into_inner().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drains_every_index_exactly_once() {
+        for workers in [1, 3, 16] {
+            let mut got = drain_indexed(10, workers, |i| i * 2);
+            got.sort_by_key(|&(i, _)| i);
+            let expect: Vec<(usize, usize)> = (0..10).map(|i| (i, i * 2)).collect();
+            assert_eq!(got, expect, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn empty_input_is_fine() {
+        assert!(drain_indexed(0, 4, |i| i).is_empty());
+    }
+}

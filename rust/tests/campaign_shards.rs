@@ -1,0 +1,203 @@
+//! Campaign oracle + resilience suite: sharded, multi-process campaign
+//! execution must reproduce the single-process `profile()` path bit for
+//! bit (JSON bytes included) at any shard count; the driver must resume
+//! after partial failure; and manifest-checked merging must fail loudly on
+//! corrupt or stale shard state.
+
+use std::path::PathBuf;
+
+use perf4sight::campaign::{self, CampaignSpec, DriverConfig, ExecMode};
+use perf4sight::device::Simulator;
+use perf4sight::profiler::{profile_sequential, Dataset, ProfileJob};
+use perf4sight::pruning::Strategy;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "perf4sight-campaign-{name}-{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn small_spec(networks: &[&str], seed: u64) -> CampaignSpec {
+    CampaignSpec {
+        networks: networks.iter().map(|s| s.to_string()).collect(),
+        strategies: vec![Strategy::Random, Strategy::L1Norm],
+        levels: vec![0.0, 0.4],
+        batch_sizes: vec![4, 16],
+        runs: 2,
+        seed,
+        device: "tx2".into(),
+    }
+}
+
+fn json_of(ds: &Dataset) -> String {
+    ds.to_json().to_string()
+}
+
+fn in_process(shards: usize) -> DriverConfig {
+    DriverConfig {
+        shards,
+        workers: 2,
+        mode: ExecMode::InProcess,
+        exe: None,
+    }
+}
+
+#[test]
+fn merged_shards_bit_identical_for_shard_counts_1_3_7() {
+    let spec = small_spec(&["squeezenet"], 5);
+    let reference = campaign::profile_campaign(&spec).unwrap();
+
+    // Chain the oracle all the way down: the campaign reference equals the
+    // original sequential per-level implementation, concatenated in spec
+    // order.
+    let sim = Simulator::tx2();
+    let graph = perf4sight::models::by_name("squeezenet").unwrap();
+    let mut sequential = Dataset::default();
+    for &strategy in &spec.strategies {
+        sequential.extend(profile_sequential(
+            &sim,
+            &ProfileJob {
+                network: "squeezenet",
+                graph: &graph,
+                strategy,
+                levels: &spec.levels,
+                batch_sizes: &spec.batch_sizes,
+                runs: spec.runs,
+                seed: spec.seed,
+            },
+        ));
+    }
+    assert_eq!(json_of(&reference), json_of(&sequential));
+
+    for shards in [1, 3, 7] {
+        let dir = tmpdir(&format!("oracle-{shards}"));
+        let run = campaign::run_campaign(&spec, &dir, &in_process(shards)).unwrap();
+        assert_eq!(run.executed.len(), run.shards, "shards={shards}");
+        let merged = campaign::merge(&spec, &dir).unwrap();
+        assert_eq!(json_of(&merged), json_of(&reference), "shards={shards}");
+        // merge_dir picks the spec up from disk and agrees.
+        let (loaded, merged2) = campaign::merge_dir(&dir).unwrap();
+        assert_eq!(loaded.fingerprint(), spec.fingerprint());
+        assert_eq!(json_of(&merged2), json_of(&reference));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn multi_process_campaign_matches_single_process() {
+    // ≥2 spawned worker processes over ≥2 zoo networks (the acceptance
+    // criterion): the merged dataset is byte-identical JSON to the
+    // single-process profile() path.
+    let spec = small_spec(&["squeezenet", "mnasnet"], 7);
+    let dir = tmpdir("procs");
+    let cfg = DriverConfig {
+        shards: 4,
+        workers: 2,
+        mode: ExecMode::Spawn,
+        exe: Some(PathBuf::from(env!("CARGO_BIN_EXE_perf4sight"))),
+    };
+    let run = campaign::run_campaign(&spec, &dir, &cfg).unwrap();
+    assert_eq!(run.executed, vec![0, 1, 2, 3]);
+    assert!(run.skipped.is_empty());
+    let merged = campaign::merge(&spec, &dir).unwrap();
+    let reference = campaign::profile_campaign(&spec).unwrap();
+    assert_eq!(merged.len(), spec.total_units());
+    assert_eq!(json_of(&merged), json_of(&reference));
+
+    // A second driver run is a no-op resume: everything checkpointed.
+    let rerun = campaign::run_campaign(&spec, &dir, &cfg).unwrap();
+    assert!(rerun.executed.is_empty());
+    assert_eq!(rerun.skipped, vec![0, 1, 2, 3]);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_refills_deleted_shard_and_merge_succeeds() {
+    let spec = small_spec(&["squeezenet"], 9);
+    let dir = tmpdir("resume");
+    campaign::run_campaign(&spec, &dir, &in_process(3)).unwrap();
+
+    // A later run can rediscover the checkpointed partition (the CLI's
+    // auto-shard default uses this to resume under different parallelism).
+    assert_eq!(campaign::existing_shard_count(&dir), Some(3));
+
+    // Simulate a crash that lost one shard's dataset file.
+    std::fs::remove_file(dir.join("shard-1.json")).unwrap();
+    let run = campaign::run_campaign(&spec, &dir, &in_process(3)).unwrap();
+    assert_eq!(run.executed, vec![1]);
+    assert_eq!(run.skipped, vec![0, 2]);
+
+    let merged = campaign::merge(&spec, &dir).unwrap();
+    let reference = campaign::profile_campaign(&spec).unwrap();
+    assert_eq!(json_of(&merged), json_of(&reference));
+
+    // A missing shard (dataset + manifest) makes merge name the gap.
+    std::fs::remove_file(dir.join("shard-2.json")).unwrap();
+    std::fs::remove_file(dir.join("shard-2.manifest.json")).unwrap();
+    let err = campaign::merge(&spec, &dir).unwrap_err();
+    assert!(err.contains("incomplete"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_manifest_is_a_clear_error() {
+    let spec = small_spec(&["squeezenet"], 11);
+    let dir = tmpdir("corrupt");
+    campaign::run_campaign(&spec, &dir, &in_process(2)).unwrap();
+    std::fs::write(dir.join("shard-0.manifest.json"), "{definitely not json").unwrap();
+
+    let err = campaign::merge(&spec, &dir).unwrap_err();
+    assert!(err.contains("corrupt shard manifest"), "{err}");
+    assert!(err.contains("shard-0.manifest.json"), "{err}");
+
+    // The driver's resume check refuses to guess as well.
+    let err = campaign::run_campaign(&spec, &dir, &in_process(2)).unwrap_err();
+    assert!(err.contains("corrupt shard manifest"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn stale_shards_from_a_different_spec_are_rejected() {
+    let spec = small_spec(&["squeezenet"], 13);
+    let dir = tmpdir("stale");
+    campaign::run_campaign(&spec, &dir, &in_process(2)).unwrap();
+
+    let mut other = spec.clone();
+    other.seed ^= 1;
+    // The campaign dir pins its spec: a different spec cannot reuse it …
+    let err = campaign::run_campaign(&other, &dir, &in_process(2)).unwrap_err();
+    assert!(err.contains("different spec"), "{err}");
+    // … and merging against the wrong spec trips the fingerprint check.
+    let err = campaign::merge(&other, &dir).unwrap_err();
+    assert!(err.contains("fingerprint"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn partition_change_on_partial_dir_is_detected() {
+    let spec = small_spec(&["squeezenet"], 17);
+    let dir = tmpdir("partition");
+    campaign::run_campaign(&spec, &dir, &in_process(3)).unwrap();
+    // Same spec, different shard count: the checkpointed manifests no
+    // longer line up with the requested partition.
+    let err = campaign::run_campaign(&spec, &dir, &in_process(2)).unwrap_err();
+    assert!(err.contains("different partition"), "{err}");
+    // Merging still works — unit coverage is partition-independent.
+    let merged = campaign::merge(&spec, &dir).unwrap();
+    assert_eq!(merged.len(), spec.total_units());
+
+    // Even a stale manifest whose index does NOT overlap the narrower
+    // partition is caught up front (it would otherwise double-cover
+    // units at merge time).
+    for i in [0, 1] {
+        std::fs::remove_file(dir.join(format!("shard-{i}.json"))).unwrap();
+        std::fs::remove_file(dir.join(format!("shard-{i}.manifest.json"))).unwrap();
+    }
+    let err = campaign::run_campaign(&spec, &dir, &in_process(2)).unwrap_err();
+    assert!(err.contains("different partition"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}

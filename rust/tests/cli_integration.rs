@@ -84,3 +84,93 @@ fn quick_experiment_via_cli() {
     // The fastest experiment end-to-end through the CLI dispatch.
     run("experiment ablation --network squeezenet --seed 5").unwrap();
 }
+
+#[test]
+fn campaign_cli_runs_merges_and_fits() {
+    // In-process mode: the test binary is not the perf4sight CLI, so
+    // worker processes cannot be self-exec'd from here (the spawn path is
+    // covered by tests/campaign_shards.rs and the CI smoke job).
+    let dir = tmpdir("campaign");
+    let out_dir = dir.join("camp");
+    let merged = dir.join("merged.json");
+    run(&format!(
+        "campaign --networks squeezenet --strategies random --levels 0,0.5 \
+         --batch-sizes 4,16 --runs 1 --seed 3 --shards 2 --workers 2 --in-process \
+         --out-dir {} --out {}",
+        out_dir.display(),
+        merged.display()
+    ))
+    .unwrap();
+    let ds = perf4sight::profiler::Dataset::load(&merged).unwrap();
+    assert_eq!(ds.len(), 4);
+    // The merged campaign output is byte-identical to plain `profile`.
+    let mono = dir.join("mono.json");
+    run(&format!(
+        "profile --network squeezenet --strategy random --levels 0,0.5 \
+         --batch-sizes 4,16 --runs 1 --seed 3 --out {}",
+        mono.display()
+    ))
+    .unwrap();
+    assert_eq!(
+        std::fs::read_to_string(&merged).unwrap(),
+        std::fs::read_to_string(&mono).unwrap()
+    );
+    // Resume + alternate output format without re-profiling.
+    let csv = dir.join("merged.csv");
+    run(&format!(
+        "campaign --merge-only --out-dir {} --format csv --out {}",
+        out_dir.display(),
+        csv.display()
+    ))
+    .unwrap();
+    let text = std::fs::read_to_string(&csv).unwrap();
+    let back = perf4sight::profiler::Dataset::from_csv(&text).unwrap();
+    assert_eq!(back.to_json().to_string(), ds.to_json().to_string());
+    // The fitted-model step of the smoke flow.
+    run(&format!(
+        "fit --data {} --target phi --out {}",
+        merged.display(),
+        dir.join("phi.json").display()
+    ))
+    .unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn profile_shard_mode_feeds_campaign_merge() {
+    let dir = tmpdir("shard-mode");
+    let out_dir = dir.join("shards");
+    for i in 0..2 {
+        run(&format!(
+            "profile --network squeezenet --levels 0,0.5 --batch-sizes 4 --runs 1 \
+             --seed 3 --shards 2 --shard-index {i} --out-dir {}",
+            out_dir.display()
+        ))
+        .unwrap();
+    }
+    let merged = dir.join("merged.json");
+    run(&format!(
+        "campaign --merge-only --out-dir {} --out {}",
+        out_dir.display(),
+        merged.display()
+    ))
+    .unwrap();
+    let ds = perf4sight::profiler::Dataset::load(&merged).unwrap();
+    assert_eq!(ds.len(), 2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn campaign_cli_errors_are_clean() {
+    assert!(run("campaign --out-dir /tmp/p4s-no-spec-here --merge-only").is_err());
+    assert!(run("campaign --networks nope --out-dir /tmp/p4s-bad-net --in-process").is_err());
+    assert!(run("profile --network squeezenet --shards 2 --out /tmp/x.json").is_err());
+    let dir = tmpdir("bad-format");
+    assert!(run(&format!(
+        "campaign --networks squeezenet --levels 0 --batch-sizes 4 --runs 1 \
+         --shards 1 --workers 1 --in-process --out-dir {} --format yaml",
+        dir.join("c").display()
+    ))
+    .is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
