@@ -11,15 +11,16 @@
 use perf4sight::campaign::{self, CampaignSpec};
 use perf4sight::device::Simulator;
 use perf4sight::engine::PredictionEngine;
-use perf4sight::features::{network_features, network_features_from_plan};
+use perf4sight::features::{forward_masked, network_features, network_features_from_plan};
 use perf4sight::forest::Forest;
-use perf4sight::ir::NetworkPlan;
+use perf4sight::ir::{GraphArena, NetworkPlan, PlanBuffers, PlanView};
 use perf4sight::models;
-use perf4sight::ofa::{GenerationOracle, SubnetConfig};
+use perf4sight::ofa::{capacity_from_convs, GenerationOracle, SubnetConfig};
 use perf4sight::profiler::{profile, ProfileJob};
-use perf4sight::pruning::{prune, Strategy};
+use perf4sight::pruning::{prune, prune_overlay, Strategy};
 use perf4sight::runtime::{ForestExecutor, Runtime};
 use perf4sight::util::bench_harness::{bench, section};
+use perf4sight::util::json::Json;
 use perf4sight::util::rng::Pcg64;
 
 fn main() {
@@ -197,6 +198,75 @@ fn main() {
         cs.entries
     );
 
+    section("zero-allocation candidate evaluation — overlay fast path vs clone+rebuild");
+
+    // Cold-cache UNIQUE candidates: the common case in early ES
+    // generations, where the fingerprint memo cannot help and every
+    // candidate pays the full miss path. The clone+rebuild baseline is
+    // exactly what the engine's miss path did before the arena layer
+    // (graph build + NetworkPlan + fresh rows + capacity), with the same
+    // batched predictors, so the delta is pure candidate-prep cost.
+    let mut cold_rng = Pcg64::new(21);
+    let cold: Vec<SubnetConfig> = (0..256).map(|_| SubnetConfig::sample(&mut cold_rng)).collect();
+    let compiled_ref = forest.compile();
+    let clone_stats = bench("256 cold candidates, clone+rebuild miss path", 2500, || {
+        let mut train_rows = Vec::with_capacity(cold.len());
+        let mut infer_rows = Vec::with_capacity(cold.len());
+        let mut caps = Vec::with_capacity(cold.len());
+        for c in &cold {
+            let g = c.build();
+            let plan = NetworkPlan::build(&g).unwrap();
+            train_rows.push(network_features_from_plan(&plan, 32));
+            infer_rows.push(forward_masked(&network_features_from_plan(&plan, 1)));
+            caps.push(capacity_from_convs(PlanView::conv_infos(&plan)));
+        }
+        std::hint::black_box((
+            compiled_ref.predict_rows(&train_rows),
+            compiled_ref.predict_rows(&infer_rows),
+            compiled_ref.predict_rows(&infer_rows),
+            caps,
+        ));
+    });
+    let mut cold_engine = PredictionEngine::new(&forest, &forest, &forest).with_cache_capacity(0);
+    cold_engine.evaluate_generation(&cold); // warm the per-depth arenas once
+    let overlay_stats = bench("256 cold candidates, overlay fast path (engine)", 2500, || {
+        std::hint::black_box(cold_engine.evaluate_generation(&cold));
+    });
+    let clone_cps = 256.0 * clone_stats.throughput_per_sec();
+    let overlay_cps = 256.0 * overlay_stats.throughput_per_sec();
+    println!(
+        "  -> cold-cache unique-candidate throughput: clone+rebuild {:.0}/s, \
+         overlay {:.0}/s ({:.2}x)",
+        clone_cps,
+        overlay_cps,
+        overlay_cps / clone_cps
+    );
+
+    // Campaign unit prep: what every (network, strategy, level) group of a
+    // profiling campaign pays before its first measurement.
+    let prep_levels = [0.0, 0.3, 0.5, 0.7, 0.9];
+    let prep_legacy = bench("unit prep ×5 levels, prune + NetworkPlan (legacy)", 1200, || {
+        for &level in &prep_levels {
+            let mut rng = Pcg64::new(4);
+            let p = prune(&g50, Strategy::Random, level, &mut rng);
+            std::hint::black_box(NetworkPlan::build(&p).unwrap().param_count());
+        }
+    });
+    let arena50 = GraphArena::compile(&g50).unwrap();
+    let prep_overlay = bench("unit prep ×5 levels, overlay (incremental)", 1200, || {
+        let mut buffers = PlanBuffers::new();
+        for &level in &prep_levels {
+            let mut rng = Pcg64::new(4);
+            let ov = prune_overlay(&arena50, Strategy::Random, level, &mut rng);
+            arena50.plan_into(&ov, &mut buffers).unwrap();
+            std::hint::black_box(PlanView::param_count(&arena50.view_buffers(&buffers)));
+        }
+    });
+    println!(
+        "  -> campaign unit prep speedup: {:.2}x",
+        prep_legacy.mean_ns / prep_overlay.mean_ns
+    );
+
     section("profiling campaigns — sharded execution vs monolithic profile()");
 
     // The same small campaign grid through both producers: the sequential
@@ -218,4 +288,34 @@ fn main() {
     bench("sharded campaign (work stealing + merge)", 900, || {
         std::hint::black_box(campaign::collect(&camp).unwrap());
     });
+
+    // Machine-readable perf-trajectory summary. Written to target/ so
+    // local runs never dirty the working tree; CI parses it, enforces the
+    // regression gate and uploads it as the BENCH_hotpath artifact. To
+    // refresh the checked-in repo-root seed, copy it over deliberately.
+    let summary = Json::obj(vec![
+        ("schema", Json::Str("perf4sight/hotpath-bench/v1".into())),
+        (
+            "cold_cache_unique_candidates",
+            Json::obj(vec![
+                ("batch", Json::Num(256.0)),
+                ("clone_rebuild_cands_per_sec", Json::Num(clone_cps)),
+                ("overlay_cands_per_sec", Json::Num(overlay_cps)),
+                ("speedup", Json::Num(overlay_cps / clone_cps)),
+            ]),
+        ),
+        (
+            "campaign_unit_prep_5_levels",
+            Json::obj(vec![
+                ("legacy_ms", Json::Num(prep_legacy.mean_ms())),
+                ("overlay_ms", Json::Num(prep_overlay.mean_ms())),
+                ("speedup", Json::Num(prep_legacy.mean_ns / prep_overlay.mean_ns)),
+            ]),
+        ),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/target/BENCH_hotpath.json");
+    let mut body = summary.to_string();
+    body.push('\n');
+    std::fs::write(path, body).expect("writing BENCH_hotpath.json");
+    println!("wrote {path}");
 }

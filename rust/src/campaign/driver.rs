@@ -20,9 +20,9 @@
 use std::path::{Path, PathBuf};
 use std::process::Command;
 
-use crate::ir::NetworkPlan;
+use crate::ir::{GraphArena, PlanBuffers};
 use crate::profiler::{level_stream, profile_unit, Dataset, ProfilePoint};
-use crate::pruning::prune;
+use crate::pruning::prune_overlay;
 use crate::util::pool::drain_indexed;
 use crate::util::rng::Pcg64;
 
@@ -66,26 +66,39 @@ pub struct CampaignRun {
 }
 
 /// Execute one shard's units in canonical order. Consecutive units of the
-/// same (network, strategy, level) share one pruned topology and compiled
-/// plan; every unit fast-forwards the level's measurement stream to its
-/// sequential offset, so output bits match the single-process
+/// same network share one compiled [`GraphArena`]; each (network,
+/// strategy, level) group prunes as an overlay whose analysis rebuilds
+/// *incrementally* into shard-local plan buffers (no graph clone, no
+/// from-scratch inference — the per-unit prep cost of a campaign). Every
+/// unit fast-forwards the level's measurement stream to its sequential
+/// offset, so output bits match the single-process
 /// [`crate::profiler::profile`] path exactly.
 pub fn execute_shard(spec: &CampaignSpec, shard: &ShardPlan) -> Result<Vec<ProfilePoint>, String> {
     spec.validate()?;
     let sim = spec.simulator()?;
     let mut points = Vec::with_capacity(shard.units.len());
+    let mut current: Option<(usize, GraphArena)> = None;
+    let mut buffers = PlanBuffers::new();
     let mut i = 0;
     while i < shard.units.len() {
         let head = spec.unit(shard.units[i]);
-        let graph = crate::models::by_name(head.network)
-            .ok_or_else(|| format!("unknown network {:?}", head.network))?;
+        if current.as_ref().map(|&(ni, _)| ni) != Some(head.net_index) {
+            let graph = crate::models::by_name(head.network)
+                .ok_or_else(|| format!("unknown network {:?}", head.network))?;
+            let arena = GraphArena::compile(&graph)
+                .map_err(|e| format!("compiling arena for {}: {e}", head.network))?;
+            current = Some((head.net_index, arena));
+        }
+        let (_, arena) = current.as_ref().expect("arena compiled above");
         let mut rng = Pcg64::with_stream(
             spec.seed,
             level_stream(head.network, head.strategy, head.level),
         );
-        let pruned = prune(&graph, head.strategy, head.level, &mut rng);
-        let plan = NetworkPlan::build(&pruned)
+        let overlay = prune_overlay(arena, head.strategy, head.level, &mut rng);
+        arena
+            .plan_into(&overlay, &mut buffers)
             .map_err(|e| format!("planning pruned {}: {e}", head.network))?;
+        let plan = arena.view_buffers(&buffers);
         while i < shard.units.len() {
             let u = spec.unit(shard.units[i]);
             if (u.net_index, u.strategy_index, u.level_index)

@@ -17,13 +17,17 @@
 //! Everything here is *hidden* from the analytical features — the random
 //! forest's job, exactly as on real hardware, is to learn it.
 //!
-//! All analysis paths consume a compiled [`NetworkPlan`] (`*_plan`
-//! methods); the `&Graph` entry points are thin wrappers that build the
-//! plan once and delegate. Callers that evaluate a graph more than once —
-//! the profiler across 25 batch sizes, the OFA search across features and
-//! three attributes — should build the plan themselves and reuse it.
+//! All analysis paths consume a compiled analysis view (`*_plan` methods,
+//! generic over [`PlanView`] — a [`NetworkPlan`] or the overlay fast
+//! path's [`OverlayPlan`](crate::ir::OverlayPlan)); the `&Graph` entry
+//! points are thin wrappers that build a plan once and delegate. Callers
+//! that evaluate a topology more than once — the profiler across 25 batch
+//! sizes, the OFA search across features and three attributes — should
+//! build the plan themselves and reuse it. Because both view types feed
+//! the identical code below, overlay-based measurements are bit-identical
+//! to graph-based ones (`rust/tests/overlay_equivalence.rs`).
 
-use crate::ir::{Graph, GraphError, NetworkPlan, Op};
+use crate::ir::{Graph, GraphError, NetworkPlan, Op, PlanView};
 use crate::util::rng::Pcg64;
 
 use super::allocator::{pool_reserved, round_block};
@@ -107,11 +111,11 @@ impl Simulator {
         Ok(self.train_step_plan(&NetworkPlan::build(graph)?, bs, rng))
     }
 
-    /// As [`Simulator::train_step`] over a pre-compiled plan (infallible:
-    /// the plan proves the graph valid).
-    pub fn train_step_plan(
+    /// As [`Simulator::train_step`] over a pre-compiled analysis view
+    /// (infallible: the view proves the topology valid).
+    pub fn train_step_plan<P: PlanView>(
         &self,
-        plan: &NetworkPlan<'_>,
+        plan: &P,
         bs: usize,
         mut rng: Option<&mut Pcg64>,
     ) -> TrainMeasurement {
@@ -137,10 +141,10 @@ impl Simulator {
         Ok(self.inference_plan(&NetworkPlan::build(graph)?, bs, rng))
     }
 
-    /// As [`Simulator::inference`] over a pre-compiled plan.
-    pub fn inference_plan(
+    /// As [`Simulator::inference`] over a pre-compiled analysis view.
+    pub fn inference_plan<P: PlanView>(
         &self,
-        plan: &NetworkPlan<'_>,
+        plan: &P,
         bs: usize,
         mut rng: Option<&mut Pcg64>,
     ) -> InferMeasurement {
@@ -165,13 +169,9 @@ impl Simulator {
         Ok(self.train_memory_breakdown_plan(&NetworkPlan::build(graph)?, bs))
     }
 
-    /// Γ components (noise-free) from a pre-compiled plan.
-    pub fn train_memory_breakdown_plan(
-        &self,
-        plan: &NetworkPlan<'_>,
-        bs: usize,
-    ) -> MemoryBreakdown {
-        let graph = plan.graph();
+    /// Γ components (noise-free) from a pre-compiled analysis view.
+    pub fn train_memory_breakdown_plan<P: PlanView>(&self, plan: &P, bs: usize) -> MemoryBreakdown {
+        let n_nodes = plan.n_nodes();
         let shapes = plan.shapes();
         let convs = plan.conv_infos();
         let bsf = bs as f64;
@@ -186,43 +186,41 @@ impl Simulator {
         // `retained[i]` marks node i's output tensor as alive until its
         // consumer's backward; a tensor saved by several consumers counts
         // once (PyTorch keeps references, not copies).
-        let mut retained = vec![false; graph.len()];
+        let mut retained = vec![false; n_nodes];
         let mut extra_blocks: Vec<f64> = Vec::new(); // masks, indices, stats
-        for node in &graph.nodes {
-            match &node.op {
+        for id in 0..n_nodes {
+            match plan.op(id) {
                 Op::Conv2d { .. } | Op::Linear { .. } => {
-                    retained[node.inputs[0]] = true;
+                    retained[plan.inputs(id)[0]] = true;
                 }
                 Op::BatchNorm => {
-                    retained[node.inputs[0]] = true;
+                    retained[plan.inputs(id)[0]] = true;
                     // saved mean + invstd
-                    let c = shapes[node.id].channels() as f64;
+                    let c = shapes[id].channels() as f64;
                     extra_blocks.push(2.0 * c * BYTES);
                 }
                 Op::Activation(_) => {
                     // in-place ReLU keeps its output (the next consumer's
                     // input) — mark own output.
-                    retained[node.id] = true;
+                    retained[id] = true;
                 }
                 Op::MaxPool { .. } => {
                     // backward needs int64 argmax indices
-                    let elems = bsf * shapes[node.id].numel() as f64;
+                    let elems = bsf * shapes[id].numel() as f64;
                     extra_blocks.push(elems * 8.0);
                 }
                 Op::Dropout(_) => {
                     // bool mask
-                    let elems = bsf * shapes[node.id].numel() as f64;
+                    let elems = bsf * shapes[id].numel() as f64;
                     extra_blocks.push(elems);
                 }
                 Op::Add | Op::Concat | Op::AvgPool { .. } | Op::GlobalAvgPool
                 | Op::Flatten | Op::Input { .. } => {}
             }
         }
-        let act_blocks = graph
-            .nodes
-            .iter()
-            .filter(|n| retained[n.id])
-            .map(|n| bsf * shapes[n.id].numel() as f64 * BYTES)
+        let act_blocks = (0..n_nodes)
+            .filter(|&i| retained[i])
+            .map(|i| bsf * shapes[i].numel() as f64 * BYTES)
             .chain(extra_blocks.iter().copied());
         let activations_mb = pool_reserved(act_blocks) / MB;
 
@@ -242,10 +240,10 @@ impl Simulator {
         // --- transient backward peak: largest simultaneous (grad_out +
         //     grad_in) pair ---
         let mut transient = 0.0f64;
-        for node in &graph.nodes {
-            let out = bsf * shapes[node.id].numel() as f64;
-            let inp: f64 = node
-                .inputs
+        for id in 0..n_nodes {
+            let out = bsf * shapes[id].numel() as f64;
+            let inp: f64 = plan
+                .inputs(id)
                 .iter()
                 .map(|&i| bsf * shapes[i].numel() as f64)
                 .sum();
@@ -280,9 +278,9 @@ impl Simulator {
         Ok(self.train_latency_ms_plan(&NetworkPlan::build(graph)?, bs))
     }
 
-    /// Φ (noise-free) from a pre-compiled plan.
-    pub fn train_latency_ms_plan(&self, plan: &NetworkPlan<'_>, bs: usize) -> f64 {
-        let graph = plan.graph();
+    /// Φ (noise-free) from a pre-compiled analysis view.
+    pub fn train_latency_ms_plan<P: PlanView>(&self, plan: &P, bs: usize) -> f64 {
+        let n_nodes = plan.n_nodes();
         let shapes = plan.shapes();
         let convs = plan.conv_infos();
         let bsf = bs as f64;
@@ -303,24 +301,24 @@ impl Simulator {
         let traffic = |factor: f64, elems: f64, launches: f64| {
             factor * elems * BYTES / bw * 1e3 + launches * launch_ms
         };
-        for node in &graph.nodes {
-            let elems = bsf * shapes[node.id].numel() as f64;
-            t += match &node.op {
+        for id in 0..n_nodes {
+            let elems = bsf * shapes[id].numel() as f64;
+            t += match plan.op(id) {
                 Op::BatchNorm => traffic(3.0 + 5.0, elems, 2.0),
                 Op::Activation(_) => traffic(2.0 + 3.0, elems, 2.0),
                 Op::MaxPool { .. } | Op::AvgPool { .. } => {
-                    let in_elems = bsf * shapes[node.inputs[0]].numel() as f64;
+                    let in_elems = bsf * shapes[plan.inputs(id)[0]].numel() as f64;
                     traffic(2.0, in_elems + elems, 2.0)
                 }
                 Op::GlobalAvgPool => {
-                    let in_elems = bsf * shapes[node.inputs[0]].numel() as f64;
+                    let in_elems = bsf * shapes[plan.inputs(id)[0]].numel() as f64;
                     traffic(1.0, in_elems, 2.0)
                 }
                 Op::Add => traffic(3.0, elems, 1.0),
                 Op::Concat => traffic(2.0 + 2.0, elems, 2.0),
                 Op::Dropout(_) => traffic(2.0 + 2.0, elems, 2.0),
                 Op::Linear { out, .. } => {
-                    let inf = shapes[node.inputs[0]].numel() as f64;
+                    let inf = shapes[plan.inputs(id)[0]].numel() as f64;
                     let macs = bsf * inf * *out as f64;
                     // fwd + bwd_x + bwd_w, modest efficiency for skinny GEMMs
                     let flops = 3.0 * 2.0 * macs;
@@ -344,8 +342,8 @@ impl Simulator {
         Ok(self.infer_memory_mb_plan(&NetworkPlan::build(graph)?, bs))
     }
 
-    /// Inference memory γ (noise-free) from a pre-compiled plan.
-    pub fn infer_memory_mb_plan(&self, plan: &NetworkPlan<'_>, bs: usize) -> f64 {
+    /// Inference memory γ (noise-free) from a pre-compiled analysis view.
+    pub fn infer_memory_mb_plan<P: PlanView>(&self, plan: &P, bs: usize) -> f64 {
         let shapes = plan.shapes();
         let convs = plan.conv_infos();
         let bsf = bs as f64;
@@ -380,9 +378,9 @@ impl Simulator {
         Ok(self.infer_latency_ms_plan(&NetworkPlan::build(graph)?, bs))
     }
 
-    /// Inference latency φ (noise-free) from a pre-compiled plan.
-    pub fn infer_latency_ms_plan(&self, plan: &NetworkPlan<'_>, bs: usize) -> f64 {
-        let graph = plan.graph();
+    /// Inference latency φ (noise-free) from a pre-compiled analysis view.
+    pub fn infer_latency_ms_plan<P: PlanView>(&self, plan: &P, bs: usize) -> f64 {
+        let n_nodes = plan.n_nodes();
         let shapes = plan.shapes();
         let convs = plan.conv_infos();
         let bsf = bs as f64;
@@ -392,20 +390,20 @@ impl Simulator {
         for c in convs {
             t += choose(&self.spec, c, ConvOp::Fwd, bs).time_ms;
         }
-        for node in &graph.nodes {
-            let elems = bsf * shapes[node.id].numel() as f64;
-            t += match &node.op {
+        for id in 0..n_nodes {
+            let elems = bsf * shapes[id].numel() as f64;
+            t += match plan.op(id) {
                 Op::BatchNorm => 3.0 * elems * BYTES / bw * 1e3 + launch_ms,
                 Op::Activation(_) | Op::Dropout(_) => {
                     2.0 * elems * BYTES / bw * 1e3 + launch_ms
                 }
                 Op::MaxPool { .. } | Op::AvgPool { .. } | Op::GlobalAvgPool => {
-                    let in_elems = bsf * shapes[node.inputs[0]].numel() as f64;
+                    let in_elems = bsf * shapes[plan.inputs(id)[0]].numel() as f64;
                     2.0 * in_elems * BYTES / bw * 1e3 + launch_ms
                 }
                 Op::Add | Op::Concat => 3.0 * elems * BYTES / bw * 1e3 + launch_ms,
                 Op::Linear { out, .. } => {
-                    let inf = shapes[node.inputs[0]].numel() as f64;
+                    let inf = shapes[plan.inputs(id)[0]].numel() as f64;
                     let macs = bsf * inf * *out as f64;
                     let t_c = 2.0 * macs / (self.spec.peak_gflops() * 1e9 * 0.35) * 1e3;
                     let t_m = inf * *out as f64 * BYTES / bw * 1e3;

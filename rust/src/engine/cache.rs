@@ -16,23 +16,7 @@ use std::collections::HashMap;
 
 use crate::ir::Graph;
 use crate::ofa::{CandidateEval, SubnetConfig};
-
-const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-const FNV_PRIME: u64 = 0x100_0000_01b3;
-
-#[inline]
-fn fnv_bytes(mut h: u64, bytes: &[u8]) -> u64 {
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(FNV_PRIME);
-    }
-    h
-}
-
-#[inline]
-fn fnv_u64(h: u64, v: u64) -> u64 {
-    fnv_bytes(h, &v.to_le_bytes())
-}
+use crate::util::fingerprint::{fnv_bytes, fnv_u64, FNV_OFFSET};
 
 /// Fingerprint of an OFA sub-network configuration (its nine genes fully
 /// determine the built graph's topology).
@@ -49,6 +33,11 @@ pub fn config_fingerprint(c: &SubnetConfig) -> u64 {
 /// (with all its parameters) and wiring, independent of node names.
 /// Structured pruning rewrites conv filter counts, so a pruned graph never
 /// shares a fingerprint with its parent.
+///
+/// `GraphArena::fingerprint` (the overlay fast path) computes this very
+/// hash from (arena, overlay) without materializing the pruned graph —
+/// any change here must be mirrored there (and is guarded by
+/// `rust/tests/overlay_equivalence.rs`).
 pub fn graph_fingerprint(g: &Graph) -> u64 {
     let mut h = fnv_bytes(FNV_OFFSET, b"graph/");
     h = fnv_u64(h, g.nodes.len() as u64);

@@ -114,8 +114,33 @@ impl CompiledForest {
     /// Predict many rows, traversing each tree once per row *batch* (the
     /// tree's slab stays hot across rows) and splitting the batch over
     /// scoped threads. Bit-identical to per-row [`Forest::predict`].
+    ///
+    /// Thin adapter over [`CompiledForest::predict_rows_flat`] — one copy
+    /// into a flat row-major buffer, then the single shared dispatch, so
+    /// the two entry points cannot drift.
     pub fn predict_rows(&self, rows: &[Vec<f64>]) -> Vec<f64> {
-        let n = rows.len();
+        let mut flat = Vec::with_capacity(rows.len() * self.n_features);
+        for row in rows {
+            debug_assert_eq!(row.len(), self.n_features);
+            flat.extend_from_slice(row);
+        }
+        self.predict_rows_flat(&flat)
+    }
+
+    /// As [`CompiledForest::predict_rows`] over one flat row-major buffer
+    /// (`n_features` columns per row) — the engine's zero-allocation miss
+    /// path accumulates candidate rows into one reusable `Vec<f64>` and
+    /// predicts them all here without materializing per-row `Vec`s. This
+    /// is the one batched dispatch (worker split + serial kernel);
+    /// accumulation order matches the scalar walk, so results are
+    /// bit-identical to per-row [`Forest::predict`].
+    pub fn predict_rows_flat(&self, flat: &[f64]) -> Vec<f64> {
+        assert_eq!(
+            flat.len() % self.n_features,
+            0,
+            "flat row buffer length must be a multiple of n_features"
+        );
+        let n = flat.len() / self.n_features;
         if n == 0 {
             return Vec::new();
         }
@@ -126,24 +151,28 @@ impl CompiledForest {
             .min(n / MIN_ROWS_PER_WORKER)
             .max(1);
         if workers == 1 {
-            self.predict_into(rows, &mut out);
+            self.predict_into_flat(flat, &mut out);
             return out;
         }
         let chunk = (n + workers - 1) / workers;
         std::thread::scope(|scope| {
-            for (row_chunk, out_chunk) in rows.chunks(chunk).zip(out.chunks_mut(chunk)) {
-                scope.spawn(move || self.predict_into(row_chunk, out_chunk));
+            for (row_chunk, out_chunk) in flat
+                .chunks(chunk * self.n_features)
+                .zip(out.chunks_mut(chunk))
+            {
+                scope.spawn(move || self.predict_into_flat(row_chunk, out_chunk));
             }
         });
         out
     }
 
-    /// Serial batched kernel: trees outer, rows inner (see module docs).
-    fn predict_into(&self, rows: &[Vec<f64>], out: &mut [f64]) {
-        debug_assert_eq!(rows.len(), out.len());
+    /// Serial batched kernel over a flat row-major buffer: trees outer,
+    /// rows inner (see module docs).
+    fn predict_into_flat(&self, flat: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(flat.len(), out.len() * self.n_features);
         for t in 0..self.n_trees {
             let root = self.offsets[t] as usize;
-            for (row, acc) in rows.iter().zip(out.iter_mut()) {
+            for (row, acc) in flat.chunks_exact(self.n_features).zip(out.iter_mut()) {
                 *acc += self.traverse(root, row);
             }
         }
@@ -267,6 +296,30 @@ mod tests {
         let (x, y) = synth(50, 12);
         let c = CompiledForest::compile(&Forest::fit(&x, &y, &ForestConfig::default()));
         assert!(c.predict_rows(&[]).is_empty());
+        assert!(c.predict_rows_flat(&[]).is_empty());
+    }
+
+    #[test]
+    fn flat_rows_bit_identical_to_nested() {
+        let (x, y) = synth(300, 15);
+        let f = Forest::fit(
+            &x,
+            &y,
+            &ForestConfig {
+                n_trees: 16,
+                ..Default::default()
+            },
+        );
+        let c = CompiledForest::compile(&f);
+        // Enough rows to force the multi-worker path in both variants.
+        let rows: Vec<Vec<f64>> = (0..600).map(|i| x[i % x.len()].clone()).collect();
+        let flat: Vec<f64> = rows.iter().flatten().copied().collect();
+        let a = c.predict_rows(&rows);
+        let b = c.predict_rows_flat(&flat);
+        assert_eq!(a.len(), b.len());
+        for (&ai, &bi) in a.iter().zip(&b) {
+            assert_eq!(ai.to_bits(), bi.to_bits());
+        }
     }
 
     #[test]

@@ -18,7 +18,15 @@
 //!    miss.
 //! 3. Generation-batched evaluation — [`ofa::evolution`](crate::ofa) hands
 //!    the engine a whole generation of candidates at once; the uncached
-//!    ones are answered in exactly **three** `predict_rows` calls.
+//!    ones are answered in exactly **three** batched traversals.
+//!
+//! Since PR 5 the *miss path* is zero-allocation too: candidates are
+//! evaluated through per-depth-key [`GraphArena`]s + `PruneOverlay`s with
+//! incremental plan rebuilds and flat feature-row scratch (see
+//! [`crate::ir::arena`]) — a unique candidate never builds a `Graph`,
+//! never runs full shape inference from scratch, and never allocates a
+//! feature row. Invalidation is unchanged: prune ⇒ new overlay ⇒ new
+//! fingerprint ⇒ miss.
 
 pub mod cache;
 pub mod compiled;
@@ -28,9 +36,9 @@ pub use compiled::CompiledForest;
 
 use std::collections::HashMap;
 
-use crate::features::{forward_masked, network_features_from_plan, NUM_FEATURES};
+use crate::features::{forward_mask_in_place, network_features_into, NUM_FEATURES};
 use crate::forest::Forest;
-use crate::ir::NetworkPlan;
+use crate::ir::{GraphArena, PlanBuffers, PlanView, PruneOverlay};
 use crate::ofa::{capacity_from_convs, Attributes, CandidateEval, GenerationOracle, SubnetConfig};
 
 /// Γ is estimated at the paper's retraining batch size (Sec. 6.4).
@@ -40,12 +48,33 @@ pub const TRAIN_BS: usize = 32;
 /// `SubnetConfig`s, so paper-scale searches never evict.
 pub const DEFAULT_CACHE_CAPACITY: usize = 32_768;
 
+/// Reusable per-engine evaluation state for the zero-allocation miss
+/// path: one compiled [`GraphArena`] per OFA depth key (only the four
+/// depth genes change the graph *structure*; expand/width genes are pure
+/// conv-width overlays), a rebindable [`PruneOverlay`], incremental
+/// [`PlanBuffers`], and flat feature-row scratch. After the arenas for
+/// the depths in play exist (at most 60), evaluating a unique candidate
+/// performs no graph build, no full shape inference and no per-row heap
+/// allocation.
+#[derive(Default)]
+struct EvalScratch {
+    arenas: HashMap<[usize; 4], GraphArena>,
+    overlay: Option<PruneOverlay>,
+    buffers: PlanBuffers,
+    /// One-row scratch (bs=32 then masked bs=1 rows are staged here).
+    row: Vec<f64>,
+    /// Flat row-major batches handed to `predict_rows_flat`.
+    train_flat: Vec<f64>,
+    infer_flat: Vec<f64>,
+}
+
 /// Batched, cache-aware server for (Γ, γ, φ) queries (see module docs).
 pub struct PredictionEngine {
     gamma_train: CompiledForest,
     gamma_infer: CompiledForest,
     phi_infer: CompiledForest,
     cache: FingerprintCache,
+    scratch: EvalScratch,
 }
 
 impl PredictionEngine {
@@ -65,6 +94,7 @@ impl PredictionEngine {
             gamma_infer: CompiledForest::compile(gamma_infer),
             phi_infer: CompiledForest::compile(phi_infer),
             cache: FingerprintCache::new(DEFAULT_CACHE_CAPACITY),
+            scratch: EvalScratch::default(),
         }
     }
 
@@ -87,28 +117,47 @@ impl PredictionEngine {
         self.cache.rows(config_fingerprint(config), config)
     }
 
-    /// Compile plans + feature rows for `candidates` and answer Γ/γ/φ for
-    /// all of them in three batched traversals. Returns the evals plus the
-    /// per-candidate (train, infer) rows for memoisation.
-    #[allow(clippy::type_complexity)]
-    fn compute_batch(
-        &self,
-        candidates: &[SubnetConfig],
-    ) -> (Vec<CandidateEval>, Vec<Vec<f64>>, Vec<Vec<f64>>) {
-        let mut train_rows = Vec::with_capacity(candidates.len());
-        let mut infer_rows = Vec::with_capacity(candidates.len());
+    /// Answer Γ/γ/φ for `candidates` in three batched traversals via the
+    /// zero-allocation overlay fast path: per candidate, fetch (or compile
+    /// once) the depth-key arena, write the candidate's conv widths into
+    /// the reusable overlay, rebuild the analysis incrementally into the
+    /// engine's plan buffers, and accumulate the feature rows into flat
+    /// scratch. No graph is ever built on this path; results are
+    /// bit-identical to the clone+rebuild reference
+    /// (`rust/tests/engine_equivalence.rs`, `overlay_equivalence.rs`).
+    ///
+    /// The (train, infer) rows stay in `self.scratch.{train,infer}_flat`
+    /// (row `i` at `i*NUM_FEATURES..`) for the caller to memoise.
+    fn compute_batch(&mut self, candidates: &[SubnetConfig]) -> Vec<CandidateEval> {
+        let scratch = &mut self.scratch;
+        scratch.train_flat.clear();
+        scratch.infer_flat.clear();
         let mut capacities = Vec::with_capacity(candidates.len());
         for c in candidates {
-            let g = c.build();
-            let plan = NetworkPlan::build(&g).expect("OFA sub-networks are always valid");
-            train_rows.push(network_features_from_plan(&plan, TRAIN_BS));
-            infer_rows.push(forward_masked(&network_features_from_plan(&plan, 1)));
-            capacities.push(capacity_from_convs(plan.conv_infos()));
+            let arena = scratch.arenas.entry(c.depth_key()).or_insert_with(|| {
+                let rep = SubnetConfig::depth_representative(c.depth_key()).build();
+                GraphArena::compile(&rep).expect("OFA sub-networks are always valid")
+            });
+            let overlay = scratch
+                .overlay
+                .get_or_insert_with(|| arena.identity_overlay());
+            overlay.rebind_empty(arena);
+            c.fill_conv_widths(overlay.widths_mut());
+            arena
+                .plan_into(overlay, &mut scratch.buffers)
+                .expect("OFA sub-networks are always valid");
+            let view = arena.view_buffers(&scratch.buffers);
+            network_features_into(view.conv_infos(), TRAIN_BS, &mut scratch.row);
+            scratch.train_flat.extend_from_slice(&scratch.row);
+            network_features_into(view.conv_infos(), 1, &mut scratch.row);
+            forward_mask_in_place(&mut scratch.row);
+            scratch.infer_flat.extend_from_slice(&scratch.row);
+            capacities.push(capacity_from_convs(view.conv_infos()));
         }
-        let gamma_t = self.gamma_train.predict_rows(&train_rows);
-        let gamma_i = self.gamma_infer.predict_rows(&infer_rows);
-        let phi_i = self.phi_infer.predict_rows(&infer_rows);
-        let evals = capacities
+        let gamma_t = self.gamma_train.predict_rows_flat(&scratch.train_flat);
+        let gamma_i = self.gamma_infer.predict_rows_flat(&scratch.infer_flat);
+        let phi_i = self.phi_infer.predict_rows_flat(&scratch.infer_flat);
+        capacities
             .iter()
             .enumerate()
             .map(|(i, &capacity)| CandidateEval {
@@ -119,8 +168,7 @@ impl PredictionEngine {
                 },
                 capacity,
             })
-            .collect();
-        (evals, train_rows, infer_rows)
+            .collect()
     }
 }
 
@@ -134,7 +182,7 @@ impl GenerationOracle for PredictionEngine {
         }
         if self.cache.capacity() == 0 {
             // Cache disabled: every request is an evaluation.
-            let (evals, _, _) = self.compute_batch(candidates);
+            let evals = self.compute_batch(candidates);
             self.cache.note_misses(candidates.len() as u64);
             return evals;
         }
@@ -158,13 +206,16 @@ impl GenerationOracle for PredictionEngine {
             }
         }
         let missing: Vec<SubnetConfig> = miss_idx.iter().map(|&i| candidates[i]).collect();
-        let (evals, train_rows, infer_rows) = self.compute_batch(&missing);
+        let evals = self.compute_batch(&missing);
         self.cache.note_misses(missing.len() as u64);
-        for ((&i, eval), (f_train, f_infer)) in miss_idx
-            .iter()
-            .zip(evals.iter().copied())
-            .zip(train_rows.into_iter().zip(infer_rows))
-        {
+        // Memoise each fresh evaluation; its rows sit in the flat scratch
+        // at `slot * NUM_FEATURES` (the only per-candidate allocations
+        // left are the cache's own copies).
+        for (slot, (&i, eval)) in miss_idx.iter().zip(evals.iter().copied()).enumerate() {
+            let f_train = self.scratch.train_flat[slot * NUM_FEATURES..(slot + 1) * NUM_FEATURES]
+                .to_vec();
+            let f_infer = self.scratch.infer_flat[slot * NUM_FEATURES..(slot + 1) * NUM_FEATURES]
+                .to_vec();
             self.cache.insert(fps[i], &candidates[i], eval, f_train, f_infer);
         }
         // Fill batch-local duplicates from the freshly computed slots.

@@ -13,7 +13,7 @@
 //! (App. B.2.4), so the nominal 42-feature list expands to 56 columns; the
 //! batch size itself is prepended as column 0 for a total of 57.
 
-use crate::ir::{ConvInfo, Graph, GraphError, NetworkPlan};
+use crate::ir::{ConvInfo, Graph, GraphError, PlanView};
 
 /// Feature families — used by the ablation experiment (E9) to knock out
 /// whole algorithm groups.
@@ -273,11 +273,13 @@ pub fn network_features(graph: &Graph, bs: usize) -> Result<Vec<f64>, GraphError
     Ok(network_features_from_convs(&graph.conv_infos()?, bs))
 }
 
-/// As [`network_features`] but over a compiled [`NetworkPlan`] — the entry
-/// point for callers that already hold a plan (profiler, OFA search,
-/// coordinator), so feature extraction at any batch size is pure arithmetic
-/// with no shape-inference pass.
-pub fn network_features_from_plan(plan: &NetworkPlan<'_>, bs: usize) -> Vec<f64> {
+/// As [`network_features`] but over any compiled analysis view
+/// ([`NetworkPlan`](crate::ir::NetworkPlan) or
+/// [`OverlayPlan`](crate::ir::OverlayPlan)) — the entry point for callers
+/// that already hold a plan (profiler, OFA search, coordinator), so
+/// feature extraction at any batch size is pure arithmetic with no
+/// shape-inference pass.
+pub fn network_features_from_plan<P: PlanView>(plan: &P, bs: usize) -> Vec<f64> {
     network_features_from_convs(plan.conv_infos(), bs)
 }
 
@@ -286,11 +288,27 @@ pub fn network_features_from_plan(plan: &NetworkPlan<'_>, bs: usize) -> Vec<f64>
 /// bs=32 for Γ and bs=1 for γ/φ) run shape inference once (§Perf).
 pub fn network_features_from_convs(convs: &[ConvInfo], bs: usize) -> Vec<f64> {
     let mut total = vec![0.0f64; NUM_FEATURES];
-    for c in convs {
-        accumulate_layer_features(c, bs, &mut total);
-    }
-    total[0] = bs as f64; // bs is a scalar input, not a sum
+    network_features_into_slice(convs, bs, &mut total);
     total
+}
+
+/// Allocation-free variant of [`network_features_from_convs`]: writes the
+/// row into a caller-owned scratch `Vec` (cleared and resized in place) —
+/// the engine's zero-allocation miss path computes every candidate row
+/// this way. Accumulation order is identical to the allocating variant,
+/// so results are bit-identical.
+pub fn network_features_into(convs: &[ConvInfo], bs: usize, out: &mut Vec<f64>) {
+    out.clear();
+    out.resize(NUM_FEATURES, 0.0);
+    network_features_into_slice(convs, bs, out);
+}
+
+fn network_features_into_slice(convs: &[ConvInfo], bs: usize, out: &mut [f64]) {
+    debug_assert_eq!(out.len(), NUM_FEATURES);
+    for c in convs {
+        accumulate_layer_features(c, bs, out);
+    }
+    out[0] = bs as f64; // bs is a scalar input, not a sum
 }
 
 /// Inference-stage features: forward-pass terms only (Sec. 6.4 trains the
@@ -314,12 +332,19 @@ pub fn forward_only_mask() -> Vec<bool> {
 /// Sec. 6.4 trains them "using only the features corresponding to the
 /// forward pass".
 pub fn forward_masked(features: &[f64]) -> Vec<f64> {
-    let mask = forward_mask_cached();
-    features
-        .iter()
-        .zip(mask)
-        .map(|(&f, &keep)| if keep { f } else { 0.0 })
-        .collect()
+    let mut out = features.to_vec();
+    forward_mask_in_place(&mut out);
+    out
+}
+
+/// In-place variant of [`forward_masked`] for rows living in reusable
+/// scratch buffers (the engine's zero-allocation miss path).
+pub fn forward_mask_in_place(features: &mut [f64]) {
+    for (f, &keep) in features.iter_mut().zip(forward_mask_cached()) {
+        if !keep {
+            *f = 0.0;
+        }
+    }
 }
 
 fn forward_mask_cached() -> &'static [bool] {

@@ -1,0 +1,776 @@
+//! The zero-allocation candidate-evaluation fast path: [`GraphArena`],
+//! [`PruneOverlay`] and incremental overlay plans.
+//!
+//! The OFA search and the profiling campaigns evaluate tens of thousands
+//! of *unique* topologies. Before this layer, every unique candidate paid
+//! a full `Graph::clone` (per-node `String` names + `Vec` inputs), a
+//! from-scratch `prune`, a complete `NetworkPlan::build` shape-inference
+//! pass and fresh feature-row allocations. The arena compiles a base
+//! network **once** into immutable, cache-friendly tables:
+//!
+//! - node names interned into a single `String` (span table),
+//! - input adjacency in CSR form (one flat `Vec<NodeId>` + offsets),
+//! - an op table plus a conv table (node id ↔ conv slot, base widths),
+//! - a precompiled fingerprint byte program (see [`GraphArena::fingerprint`]),
+//! - the pruning dependency analysis (`protected_convs` + `prune_groups`),
+//!   computed once per base network instead of on every `prune` call.
+//!
+//! A pruned candidate is then just a [`PruneOverlay`] — per-conv output
+//! widths over the arena — and its analysis is rebuilt **incrementally**
+//! into caller-owned [`PlanBuffers`]: only nodes downstream of a changed
+//! conv recompute their shape, and parameter totals update by delta. The
+//! resulting [`OverlayPlan`] view implements
+//! [`PlanView`](super::plan::PlanView), so the simulator and feature
+//! extractor run the exact same code as over a [`NetworkPlan`].
+//!
+//! # Invalidation rule
+//!
+//! The arena is immutable per base network. Pruning never mutates it:
+//! prune ⇒ new overlay ⇒ new fingerprint (and the overlay's widths are
+//! the *only* candidate state). This extends PR 1's "prune ⇒ rebuild
+//! plan" and PR 2's "prune ⇒ new fingerprint ⇒ cache miss" rules without
+//! ever cloning or mutating a graph.
+//!
+//! # Bit-identity
+//!
+//! Every derived quantity goes through the same per-node kernels the
+//! legacy path uses (`node_output_shape`, `conv_info_from_shapes`,
+//! `node_param_count`), shape/param arithmetic is exact (`usize`), and
+//! the fingerprint hashes the identical byte stream — so overlay results
+//! are bit-identical to clone+rebuild, asserted across the zoo by
+//! `rust/tests/overlay_equivalence.rs`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::graph::{
+    conv_info_from_shapes, node_output_shape, node_param_count, ConvInfo, Graph, GraphError, Node,
+    NodeId,
+};
+use super::op::Op;
+use super::plan::PlanView;
+use super::shapes::Shape;
+use crate::pruning::{protected_convs, prune_groups_from_shapes, PruneGroup};
+use crate::util::fingerprint::{fnv_bytes, fnv_decimal, fnv_u64, FNV_OFFSET};
+
+/// Process-unique arena ids: overlays and buffers carry the id of the
+/// arena they were built for, so cross-arena mixups fail loudly instead
+/// of producing silently wrong analyses.
+static NEXT_ARENA_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Fingerprint byte program per node: non-conv ops hash a fixed
+/// precomputed span; convs hash prefix + overlay width (decimal) + suffix,
+/// reproducing `format!("{:?}", op)` of the materialized op exactly.
+#[derive(Clone, Debug)]
+enum FpNode {
+    Fixed { start: u32, end: u32 },
+    Conv { pre: (u32, u32), suf: (u32, u32), slot: u32 },
+}
+
+/// Debug prefix of `Op::Conv2d` up to the `out_c` digits — `out_c` is the
+/// first field, so everything before the digits is this constant.
+const CONV_DBG_PREFIX: &str = "Conv2d { out_c: ";
+
+/// An immutable, compiled base network (see module docs). Built once per
+/// base graph; all candidate state lives in [`PruneOverlay`]s.
+#[derive(Clone, Debug)]
+pub struct GraphArena {
+    id: u64,
+    name: String,
+    output: NodeId,
+    /// Op per node. Conv `out_c` values here are the *base* widths;
+    /// overlays supply effective widths without touching this table.
+    ops: Vec<Op>,
+    /// CSR input adjacency: node `i`'s inputs are
+    /// `inputs[input_offsets[i]..input_offsets[i+1]]`.
+    input_offsets: Vec<u32>,
+    inputs: Vec<NodeId>,
+    /// Interned node names (one allocation for the whole graph).
+    names: String,
+    name_spans: Vec<(u32, u32)>,
+    /// Conv node ids in topological order (conv slot ↔ position here).
+    convs: Vec<NodeId>,
+    /// Node id → conv slot, `u32::MAX` for non-conv nodes.
+    conv_slot: Vec<u32>,
+    /// Base (unpruned) `out_c` per conv slot.
+    base_widths: Vec<usize>,
+    /// Analysis of the base (identity-overlay) network.
+    base: PlanSnapshot,
+    /// Fingerprint byte program (see [`FpNode`]).
+    fp_bytes: Vec<u8>,
+    fp_nodes: Vec<FpNode>,
+    /// Pruning dependency analysis, computed once per base network
+    /// (`protected_convs` + `prune_groups` used to run on every `prune`).
+    protected: Vec<NodeId>,
+    groups: Vec<PruneGroup>,
+}
+
+impl GraphArena {
+    /// Compile `graph` into the arena form. One validating shape-inference
+    /// pass (the same one `NetworkPlan::build` runs) plus the pruning
+    /// dependency analysis; everything downstream is allocation-free.
+    pub fn compile(graph: &Graph) -> Result<GraphArena, GraphError> {
+        let shapes = graph.infer_shapes()?;
+        let n = graph.nodes.len();
+        let mut input_offsets = Vec::with_capacity(n + 1);
+        let mut inputs = Vec::new();
+        let mut names = String::new();
+        let mut name_spans = Vec::with_capacity(n);
+        let mut ops = Vec::with_capacity(n);
+        let mut convs = Vec::new();
+        let mut conv_slot = vec![u32::MAX; n];
+        let mut base_widths = Vec::new();
+        for node in &graph.nodes {
+            input_offsets.push(inputs.len() as u32);
+            inputs.extend_from_slice(&node.inputs);
+            let start = names.len() as u32;
+            names.push_str(&node.name);
+            name_spans.push((start, names.len() as u32));
+            if let Op::Conv2d { out_c, .. } = &node.op {
+                conv_slot[node.id] = convs.len() as u32;
+                convs.push(node.id);
+                base_widths.push(*out_c);
+            }
+            ops.push(node.op.clone());
+        }
+        input_offsets.push(inputs.len() as u32);
+
+        // Fingerprint byte program: replicate engine::cache::graph_fingerprint's
+        // per-node `format!("{:?}", op)` bytes, with conv widths left as holes.
+        let mut fp_bytes = Vec::new();
+        let mut fp_nodes = Vec::with_capacity(n);
+        for node in &graph.nodes {
+            let dbg = format!("{:?}", node.op);
+            if let Op::Conv2d { out_c, .. } = &node.op {
+                let digits = out_c.to_string();
+                assert!(
+                    dbg.starts_with(CONV_DBG_PREFIX)
+                        && dbg[CONV_DBG_PREFIX.len()..].starts_with(&digits),
+                    "unexpected Conv2d debug layout: {dbg}"
+                );
+                let pre_start = fp_bytes.len() as u32;
+                fp_bytes.extend_from_slice(CONV_DBG_PREFIX.as_bytes());
+                let pre_end = fp_bytes.len() as u32;
+                fp_bytes.extend_from_slice(dbg[CONV_DBG_PREFIX.len() + digits.len()..].as_bytes());
+                let suf_end = fp_bytes.len() as u32;
+                fp_nodes.push(FpNode::Conv {
+                    pre: (pre_start, pre_end),
+                    suf: (pre_end, suf_end),
+                    slot: conv_slot[node.id],
+                });
+            } else {
+                let start = fp_bytes.len() as u32;
+                fp_bytes.extend_from_slice(dbg.as_bytes());
+                fp_nodes.push(FpNode::Fixed {
+                    start,
+                    end: fp_bytes.len() as u32,
+                });
+            }
+        }
+
+        let protected = protected_convs(graph);
+        // Reuse this compile's shape pass — no second inference inside the
+        // dependency analysis.
+        let groups = prune_groups_from_shapes(graph, &protected, &shapes);
+
+        let id = NEXT_ARENA_ID.fetch_add(1, Ordering::Relaxed);
+        let convs_info: Vec<ConvInfo> = graph
+            .nodes
+            .iter()
+            .filter_map(|nd| conv_info_from_shapes(nd.id, &nd.op, &nd.inputs, &shapes))
+            .collect();
+        let node_params: Vec<usize> = graph
+            .nodes
+            .iter()
+            .map(|nd| node_param_count(nd.id, &nd.op, &nd.inputs, &shapes))
+            .collect();
+        let param_count = node_params.iter().sum();
+        let base = PlanSnapshot {
+            arena_id: id,
+            shapes,
+            convs: convs_info,
+            node_params,
+            param_count,
+        };
+
+        Ok(GraphArena {
+            id,
+            name: graph.name.clone(),
+            output: graph.output,
+            ops,
+            input_offsets,
+            inputs,
+            names,
+            name_spans,
+            convs,
+            conv_slot,
+            base_widths,
+            base,
+            fp_bytes,
+            fp_nodes,
+            protected,
+            groups,
+        })
+    }
+
+    /// Process-unique id of this arena.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Name of the base graph.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Node count.
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Number of convolution nodes (the overlay width-vector length).
+    pub fn conv_count(&self) -> usize {
+        self.convs.len()
+    }
+
+    /// Conv node ids in topological order (slot `i` ↔ `conv_ids()[i]`).
+    pub fn conv_ids(&self) -> &[NodeId] {
+        &self.convs
+    }
+
+    /// Conv slot of a node, if it is a convolution.
+    pub fn conv_slot_of(&self, id: NodeId) -> Option<usize> {
+        let s = self.conv_slot[id];
+        (s != u32::MAX).then_some(s as usize)
+    }
+
+    /// Base (unpruned) `out_c` per conv slot.
+    pub fn base_widths(&self) -> &[usize] {
+        &self.base_widths
+    }
+
+    /// The cached pruning dependency analysis: conv ids whose filter count
+    /// is pinned by the class dimension.
+    pub fn protected_convs(&self) -> &[NodeId] {
+        &self.protected
+    }
+
+    /// The cached channel-dependency groups (see [`crate::pruning::groups`]).
+    pub fn prune_groups(&self) -> &[PruneGroup] {
+        &self.groups
+    }
+
+    fn node_inputs(&self, id: NodeId) -> &[NodeId] {
+        &self.inputs[self.input_offsets[id] as usize..self.input_offsets[id + 1] as usize]
+    }
+
+    fn node_name(&self, id: NodeId) -> &str {
+        let (s, e) = self.name_spans[id];
+        &self.names[s as usize..e as usize]
+    }
+
+    fn width_override(&self, id: NodeId, overlay: &PruneOverlay) -> Option<usize> {
+        let slot = self.conv_slot[id];
+        (slot != u32::MAX).then(|| overlay.widths[slot as usize])
+    }
+
+    /// The identity overlay: base widths everywhere (an unpruned network).
+    pub fn identity_overlay(&self) -> PruneOverlay {
+        PruneOverlay {
+            arena_id: self.id,
+            widths: self.base_widths.clone(),
+        }
+    }
+
+    /// Analysis view of the unmodified base network (compiled once).
+    pub fn base_view(&self) -> OverlayPlan<'_> {
+        OverlayPlan {
+            arena: self,
+            snap: &self.base,
+        }
+    }
+
+    /// Structural fingerprint of (arena, overlay) — byte-identical to
+    /// [`crate::engine::cache::graph_fingerprint`] of the materialized
+    /// pruned graph, computed without building one and without allocating.
+    pub fn fingerprint(&self, overlay: &PruneOverlay) -> u64 {
+        assert_eq!(
+            overlay.arena_id, self.id,
+            "overlay belongs to a different arena"
+        );
+        let mut h = fnv_bytes(FNV_OFFSET, b"graph/");
+        h = fnv_u64(h, self.ops.len() as u64);
+        h = fnv_u64(h, self.output as u64);
+        for (id, fp) in self.fp_nodes.iter().enumerate() {
+            match fp {
+                FpNode::Fixed { start, end } => {
+                    h = fnv_bytes(h, &self.fp_bytes[*start as usize..*end as usize]);
+                }
+                FpNode::Conv { pre, suf, slot } => {
+                    h = fnv_bytes(h, &self.fp_bytes[pre.0 as usize..pre.1 as usize]);
+                    h = fnv_decimal(h, overlay.widths[*slot as usize]);
+                    h = fnv_bytes(h, &self.fp_bytes[suf.0 as usize..suf.1 as usize]);
+                }
+            }
+            let ins = self.node_inputs(id);
+            h = fnv_u64(h, ins.len() as u64);
+            for &i in ins {
+                h = fnv_u64(h, i as u64);
+            }
+        }
+        h
+    }
+
+    /// Rebuild the overlay's analysis into `buf`. When `buf` already holds
+    /// this arena's analysis for some earlier overlay, only nodes
+    /// downstream of a changed conv recompute (incremental shape
+    /// inference); otherwise a full single-pass build runs. Either way the
+    /// result is bit-identical to `NetworkPlan::build` over the
+    /// materialized pruned graph.
+    pub fn plan_into(
+        &self,
+        overlay: &PruneOverlay,
+        buf: &mut PlanBuffers,
+    ) -> Result<(), GraphError> {
+        assert_eq!(
+            overlay.arena_id, self.id,
+            "overlay belongs to a different arena"
+        );
+        assert_eq!(
+            overlay.widths.len(),
+            self.convs.len(),
+            "overlay width vector does not match the arena's conv count"
+        );
+        // Callers may fill widths wholesale via `widths_mut`, bypassing
+        // `set_width`'s per-slot assert — re-establish the invariant loudly
+        // here rather than let a zero width flow into silently wrong
+        // shapes/params on chain topologies.
+        assert!(
+            overlay.widths.iter().all(|&w| w >= 1),
+            "overlay contains a zero conv width"
+        );
+        let r = if buf.arena_id == Some(self.id) && buf.widths.len() == overlay.widths.len() {
+            self.plan_incremental(overlay, buf)
+        } else {
+            self.plan_full(overlay, buf)
+        };
+        if r.is_err() {
+            // A failed rebuild leaves the buffers partially written —
+            // invalidate so the next call starts from scratch.
+            buf.arena_id = None;
+        }
+        r
+    }
+
+    fn plan_full(&self, overlay: &PruneOverlay, buf: &mut PlanBuffers) -> Result<(), GraphError> {
+        let n = self.ops.len();
+        buf.arena_id = Some(self.id);
+        buf.widths.clear();
+        buf.widths.extend_from_slice(&overlay.widths);
+        let snap = &mut buf.snap;
+        snap.arena_id = self.id;
+        snap.shapes.clear();
+        snap.shapes.reserve(n);
+        for id in 0..n {
+            let shape = node_output_shape(
+                id,
+                self.node_name(id),
+                &self.ops[id],
+                self.node_inputs(id),
+                &snap.shapes,
+                self.width_override(id, overlay),
+            )?;
+            snap.shapes.push(shape);
+        }
+        snap.convs.clear();
+        for &cid in &self.convs {
+            snap.convs.push(
+                conv_info_from_shapes(cid, &self.ops[cid], self.node_inputs(cid), &snap.shapes)
+                    .expect("conv table only lists conv nodes"),
+            );
+        }
+        snap.node_params.clear();
+        let mut total = 0usize;
+        for id in 0..n {
+            let p = node_param_count(id, &self.ops[id], self.node_inputs(id), &snap.shapes);
+            snap.node_params.push(p);
+            total += p;
+        }
+        snap.param_count = total;
+        Ok(())
+    }
+
+    fn plan_incremental(
+        &self,
+        overlay: &PruneOverlay,
+        buf: &mut PlanBuffers,
+    ) -> Result<(), GraphError> {
+        let n = self.ops.len();
+        buf.shape_changed.clear();
+        buf.shape_changed.resize(n, false);
+        let snap = &mut buf.snap;
+        let mut total = snap.param_count;
+        for id in 0..n {
+            let slot = self.conv_slot[id];
+            let width_changed = slot != u32::MAX
+                && overlay.widths[slot as usize] != buf.widths[slot as usize];
+            let input_changed = self
+                .node_inputs(id)
+                .iter()
+                .any(|&i| buf.shape_changed[i]);
+            if !(width_changed || input_changed) {
+                continue;
+            }
+            // Recompute this node. Its own output may still be unchanged
+            // (e.g. a conv whose *input* narrowed: out_c is fixed by the
+            // overlay) — then downstream propagation stops, but its
+            // ConvInfo / parameter contribution must refresh regardless.
+            let new_shape = node_output_shape(
+                id,
+                self.node_name(id),
+                &self.ops[id],
+                self.node_inputs(id),
+                &snap.shapes,
+                self.width_override(id, overlay),
+            )?;
+            if new_shape != snap.shapes[id] {
+                snap.shapes[id] = new_shape;
+                buf.shape_changed[id] = true;
+            }
+            if slot != u32::MAX {
+                snap.convs[slot as usize] = conv_info_from_shapes(
+                    id,
+                    &self.ops[id],
+                    self.node_inputs(id),
+                    &snap.shapes,
+                )
+                .expect("conv table only lists conv nodes");
+            }
+            let p = node_param_count(id, &self.ops[id], self.node_inputs(id), &snap.shapes);
+            total = total - snap.node_params[id] + p;
+            snap.node_params[id] = p;
+        }
+        snap.param_count = total;
+        buf.widths.copy_from_slice(&overlay.widths);
+        Ok(())
+    }
+
+    /// View over buffers last filled by [`GraphArena::plan_into`] on this
+    /// arena.
+    pub fn view_buffers<'a>(&'a self, buf: &'a PlanBuffers) -> OverlayPlan<'a> {
+        assert_eq!(
+            buf.arena_id,
+            Some(self.id),
+            "buffers were not compiled for this arena"
+        );
+        OverlayPlan {
+            arena: self,
+            snap: &buf.snap,
+        }
+    }
+
+    /// View over a detached [`PlanSnapshot`] taken from this arena's
+    /// buffers (how the profiler shares one plan per level across its
+    /// worker pool).
+    pub fn view<'a>(&'a self, snap: &'a PlanSnapshot) -> OverlayPlan<'a> {
+        assert_eq!(
+            snap.arena_id, self.id,
+            "snapshot was not compiled for this arena"
+        );
+        OverlayPlan { arena: self, snap }
+    }
+
+    /// Materialize (arena, overlay) back into a plain [`Graph`] — test /
+    /// interop escape hatch, **not** on any hot path (the whole point of
+    /// the overlay is to never do this per candidate).
+    pub fn to_graph(&self, overlay: &PruneOverlay) -> Graph {
+        assert_eq!(
+            overlay.arena_id, self.id,
+            "overlay belongs to a different arena"
+        );
+        let mut nodes = Vec::with_capacity(self.ops.len());
+        for id in 0..self.ops.len() {
+            let mut op = self.ops[id].clone();
+            if let Op::Conv2d { out_c, .. } = &mut op {
+                *out_c = overlay.widths[self.conv_slot[id] as usize];
+            }
+            nodes.push(Node {
+                id,
+                name: self.node_name(id).to_string(),
+                op,
+                inputs: self.node_inputs(id).to_vec(),
+            });
+        }
+        Graph {
+            name: self.name.clone(),
+            nodes,
+            output: self.output,
+        }
+    }
+}
+
+/// Per-conv output widths over a [`GraphArena`] — the entire state of a
+/// pruned candidate. Producing one *is* pruning on the fast path (see
+/// [`crate::pruning::prune_overlay`]); no graph is cloned or mutated.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PruneOverlay {
+    arena_id: u64,
+    widths: Vec<usize>,
+}
+
+impl PruneOverlay {
+    /// Effective `out_c` per conv slot (depthwise slots carry the nominal
+    /// base width; their effective channels follow the input, exactly as
+    /// in the graph path).
+    pub fn widths(&self) -> &[usize] {
+        &self.widths
+    }
+
+    /// Set one conv slot's width.
+    pub fn set_width(&mut self, slot: usize, width: usize) {
+        assert!(width >= 1, "cannot prune a conv to zero filters");
+        self.widths[slot] = width;
+    }
+
+    /// Rebind to `arena` leaving the width vector empty for the caller to
+    /// fill completely (e.g. `SubnetConfig::fill_conv_widths`) — one
+    /// overlay allocation serves candidates across many arenas with no
+    /// identity-width copy (deliberately *not* an identity rebind: for a
+    /// fresh identity overlay use [`GraphArena::identity_overlay`]).
+    pub fn rebind_empty(&mut self, arena: &GraphArena) {
+        self.arena_id = arena.id;
+        self.widths.clear();
+    }
+
+    /// Direct width-vector access for callers that overwrite every slot
+    /// (the OFA engine writes a candidate's full width sequence). Length
+    /// must end up equal to the arena's conv count — enforced by
+    /// [`GraphArena::plan_into`] / [`GraphArena::fingerprint`].
+    pub fn widths_mut(&mut self) -> &mut Vec<usize> {
+        &mut self.widths
+    }
+
+    /// Id of the arena this overlay was built for.
+    pub fn arena_id(&self) -> u64 {
+        self.arena_id
+    }
+}
+
+/// A detached analysis snapshot (shapes, conv summaries, per-node and
+/// total parameter counts) of one (arena, overlay) pair. Cheap to clone;
+/// the profiler takes one per pruning level so its worker pool can read
+/// them concurrently while the buffers move on.
+#[derive(Clone, Debug, Default)]
+pub struct PlanSnapshot {
+    arena_id: u64,
+    shapes: Vec<Shape>,
+    convs: Vec<ConvInfo>,
+    node_params: Vec<usize>,
+    param_count: usize,
+}
+
+/// Caller-owned scratch for overlay plan rebuilds: reused across a whole
+/// generation or campaign shard, so steady-state candidate evaluation
+/// performs no heap allocation. Holds the last overlay's widths (the
+/// incremental diff base) and the current [`PlanSnapshot`].
+#[derive(Clone, Debug, Default)]
+pub struct PlanBuffers {
+    arena_id: Option<u64>,
+    widths: Vec<usize>,
+    snap: PlanSnapshot,
+    shape_changed: Vec<bool>,
+}
+
+impl PlanBuffers {
+    pub fn new() -> PlanBuffers {
+        PlanBuffers::default()
+    }
+
+    /// Detach a clone of the current analysis (see [`PlanSnapshot`]).
+    pub fn snapshot(&self) -> PlanSnapshot {
+        self.snap.clone()
+    }
+
+    /// Forget any held analysis (the next `plan_into` runs a full build).
+    pub fn invalidate(&mut self) {
+        self.arena_id = None;
+    }
+}
+
+/// Read-only analysis view of one (arena, overlay) pair — the overlay
+/// path's counterpart of [`NetworkPlan`](super::plan::NetworkPlan),
+/// implementing the same [`PlanView`] trait so the simulator and feature
+/// extractor are oblivious to which one they are reading.
+#[derive(Clone, Copy, Debug)]
+pub struct OverlayPlan<'a> {
+    arena: &'a GraphArena,
+    snap: &'a PlanSnapshot,
+}
+
+impl<'a> OverlayPlan<'a> {
+    /// The arena this view reads from.
+    pub fn arena(&self) -> &'a GraphArena {
+        self.arena
+    }
+
+    /// Model size in MB at fp32.
+    pub fn model_size_mb(&self) -> f64 {
+        self.snap.param_count as f64 * 4.0 / (1024.0 * 1024.0)
+    }
+}
+
+impl PlanView for OverlayPlan<'_> {
+    fn n_nodes(&self) -> usize {
+        self.snap.shapes.len()
+    }
+
+    fn op(&self, id: NodeId) -> &Op {
+        &self.arena.ops[id]
+    }
+
+    fn inputs(&self, id: NodeId) -> &[NodeId] {
+        self.arena.node_inputs(id)
+    }
+
+    fn shapes(&self) -> &[Shape] {
+        &self.snap.shapes
+    }
+
+    fn conv_infos(&self) -> &[ConvInfo] {
+        &self.snap.convs
+    }
+
+    fn param_count(&self) -> usize {
+        self.snap.param_count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::graph_fingerprint;
+    use crate::ir::NetworkPlan;
+    use crate::models;
+    use crate::pruning::{prune, prune_overlay, Strategy};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn base_view_matches_network_plan() {
+        let g = models::resnet18(1000);
+        let arena = GraphArena::compile(&g).unwrap();
+        let plan = NetworkPlan::build(&g).unwrap();
+        let view = arena.base_view();
+        assert_eq!(view.shapes(), PlanView::shapes(&plan));
+        assert_eq!(view.conv_infos(), PlanView::conv_infos(&plan));
+        assert_eq!(PlanView::param_count(&view), PlanView::param_count(&plan));
+        assert_eq!(view.n_nodes(), g.len());
+        for id in 0..g.len() {
+            assert_eq!(view.op(id), &g.nodes[id].op);
+            assert_eq!(view.inputs(id), g.nodes[id].inputs.as_slice());
+        }
+    }
+
+    #[test]
+    fn identity_overlay_fingerprint_matches_graph() {
+        let g = models::squeezenet(1000);
+        let arena = GraphArena::compile(&g).unwrap();
+        let ov = arena.identity_overlay();
+        assert_eq!(arena.fingerprint(&ov), graph_fingerprint(&g));
+    }
+
+    #[test]
+    fn overlay_plan_and_fingerprint_match_pruned_graph() {
+        let g = models::mobilenet_v2(1000);
+        let arena = GraphArena::compile(&g).unwrap();
+        let mut buf = PlanBuffers::new();
+        for level in [0.0, 0.3, 0.7] {
+            let mut rng_a = Pcg64::new(42);
+            let mut rng_b = Pcg64::new(42);
+            let pruned = prune(&g, Strategy::L1Norm, level, &mut rng_a);
+            let ov = prune_overlay(&arena, Strategy::L1Norm, level, &mut rng_b);
+            assert_eq!(
+                rng_a.next_u64(),
+                rng_b.next_u64(),
+                "RNG streams diverged at level {level}"
+            );
+            arena.plan_into(&ov, &mut buf).unwrap();
+            let view = arena.view_buffers(&buf);
+            let plan = NetworkPlan::build(&pruned).unwrap();
+            assert_eq!(view.shapes(), PlanView::shapes(&plan), "level {level}");
+            assert_eq!(view.conv_infos(), PlanView::conv_infos(&plan));
+            assert_eq!(PlanView::param_count(&view), PlanView::param_count(&plan));
+            assert_eq!(arena.fingerprint(&ov), graph_fingerprint(&pruned));
+        }
+    }
+
+    #[test]
+    fn incremental_equals_full_rebuild() {
+        let g = models::resnet50(1000);
+        let arena = GraphArena::compile(&g).unwrap();
+        let mut incremental = PlanBuffers::new();
+        for (seed, level) in [(1u64, 0.2), (2, 0.5), (3, 0.1), (4, 0.8)] {
+            let mut rng = Pcg64::new(seed);
+            let ov = prune_overlay(&arena, Strategy::Random, level, &mut rng);
+            arena.plan_into(&ov, &mut incremental).unwrap();
+            let mut fresh = PlanBuffers::new();
+            arena.plan_into(&ov, &mut fresh).unwrap();
+            let a = arena.view_buffers(&incremental);
+            let b = arena.view_buffers(&fresh);
+            assert_eq!(a.shapes(), b.shapes());
+            assert_eq!(a.conv_infos(), b.conv_infos());
+            assert_eq!(PlanView::param_count(&a), PlanView::param_count(&b));
+        }
+    }
+
+    #[test]
+    fn to_graph_round_trips_structure() {
+        let g = models::nin(1000);
+        let arena = GraphArena::compile(&g).unwrap();
+        let mut rng = Pcg64::new(5);
+        let ov = prune_overlay(&arena, Strategy::Random, 0.5, &mut rng);
+        let mut rng2 = Pcg64::new(5);
+        let pruned = prune(&g, Strategy::Random, 0.5, &mut rng2);
+        let back = arena.to_graph(&ov);
+        assert_eq!(back.nodes.len(), pruned.nodes.len());
+        assert_eq!(back.output, pruned.output);
+        for (a, b) in back.nodes.iter().zip(&pruned.nodes) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.op, b.op);
+            assert_eq!(a.inputs, b.inputs);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "different arena")]
+    fn cross_arena_overlay_rejected() {
+        let a = GraphArena::compile(&models::alexnet(1000)).unwrap();
+        let b = GraphArena::compile(&models::alexnet(1000)).unwrap();
+        let ov = a.identity_overlay();
+        let mut buf = PlanBuffers::new();
+        let _ = b.plan_into(&ov, &mut buf);
+    }
+
+    #[test]
+    fn error_in_rebuild_invalidates_buffers() {
+        let g = models::resnet18(1000);
+        let arena = GraphArena::compile(&g).unwrap();
+        let mut buf = PlanBuffers::new();
+        let ov = arena.identity_overlay();
+        arena.plan_into(&ov, &mut buf).unwrap();
+        // Break one member of a residual group: the Add arm must reject
+        // the channel mismatch, and the buffers must invalidate.
+        let mut bad = arena.identity_overlay();
+        let slot = arena.conv_slot_of(arena.conv_ids()[0]).unwrap();
+        bad.set_width(slot, 7);
+        assert!(arena.plan_into(&bad, &mut buf).is_err());
+        // Next plan (full rebuild) still works.
+        arena.plan_into(&ov, &mut buf).unwrap();
+        assert_eq!(
+            PlanView::param_count(&arena.view_buffers(&buf)),
+            g.param_count().unwrap()
+        );
+    }
+}

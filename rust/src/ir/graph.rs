@@ -153,6 +153,13 @@ impl Graph {
     }
 
     /// Infer per-node output shapes; validates the graph as it goes.
+    ///
+    /// Per-node semantics live in [`node_output_shape`] — the single
+    /// kernel shared with the overlay fast path
+    /// ([`GraphArena`](super::arena::GraphArena)), so the two inference
+    /// paths cannot drift. The multi-input (`Add`/`Concat`) arms validate
+    /// by direct iteration over the input shapes — no temporary
+    /// allocations on the success path (§Perf).
     pub fn infer_shapes(&self) -> Result<Vec<Shape>, GraphError> {
         if self.nodes.is_empty() {
             return Err(GraphError::Empty);
@@ -164,177 +171,8 @@ impl Graph {
                     return Err(GraphError::Order(node.id, node.name.clone(), i));
                 }
             }
-            let unary = |want: &'static str| -> Result<Shape, GraphError> {
-                if node.inputs.len() != 1 {
-                    Err(GraphError::Arity(
-                        node.id,
-                        node.name.clone(),
-                        want,
-                        node.inputs.len(),
-                    ))
-                } else {
-                    Ok(shapes[node.inputs[0]])
-                }
-            };
-            let shape = match &node.op {
-                Op::Input { c, h, w } => {
-                    if !node.inputs.is_empty() {
-                        return Err(GraphError::Arity(
-                            node.id,
-                            node.name.clone(),
-                            "0",
-                            node.inputs.len(),
-                        ));
-                    }
-                    Shape::chw(*c, *h, *w)
-                }
-                Op::Conv2d {
-                    out_c,
-                    k,
-                    s,
-                    p,
-                    groups,
-                    ..
-                } => {
-                    let input = unary("1")?;
-                    let (c, h) = match input {
-                        Shape::Chw { c, h, w } => {
-                            if h != w {
-                                return Err(GraphError::Invalid(
-                                    node.id,
-                                    node.name.clone(),
-                                    format!("non-square input {h}x{w}"),
-                                ));
-                            }
-                            (c, h)
-                        }
-                        Shape::Flat { .. } => {
-                            return Err(GraphError::Invalid(
-                                node.id,
-                                node.name.clone(),
-                                "conv over flat tensor".into(),
-                            ))
-                        }
-                    };
-                    let g = groups.resolve(c);
-                    if g == 0 || c % g != 0 {
-                        return Err(GraphError::Invalid(
-                            node.id,
-                            node.name.clone(),
-                            format!("channels {c} not divisible by groups {g}"),
-                        ));
-                    }
-                    // Depthwise convs tie out channels to in channels.
-                    let n = match groups {
-                        Groups::Depthwise => c,
-                        Groups::Fixed(_) => *out_c,
-                    };
-                    if n % g != 0 {
-                        return Err(GraphError::Invalid(
-                            node.id,
-                            node.name.clone(),
-                            format!("filters {n} not divisible by groups {g}"),
-                        ));
-                    }
-                    let oh = conv_out_spatial(h, *k, *s, *p);
-                    Shape::chw(n, oh, oh)
-                }
-                Op::MaxPool { k, s, p, ceil } | Op::AvgPool { k, s, p, ceil } => {
-                    let input = unary("1")?;
-                    match input {
-                        Shape::Chw { c, h, .. } => {
-                            let oh = if *ceil {
-                                pool_out_spatial_ceil(h, *k, *s, *p)
-                            } else {
-                                conv_out_spatial(h, *k, *s, *p)
-                            };
-                            Shape::chw(c, oh, oh)
-                        }
-                        Shape::Flat { .. } => {
-                            return Err(GraphError::Invalid(
-                                node.id,
-                                node.name.clone(),
-                                "pool over flat tensor".into(),
-                            ))
-                        }
-                    }
-                }
-                Op::GlobalAvgPool => {
-                    let input = unary("1")?;
-                    Shape::chw(input.channels(), 1, 1)
-                }
-                Op::BatchNorm | Op::Activation(_) | Op::Dropout(_) => unary("1")?,
-                Op::Flatten => {
-                    let input = unary("1")?;
-                    Shape::Flat {
-                        n: input.numel(),
-                    }
-                }
-                Op::Linear { out, .. } => {
-                    let input = unary("1")?;
-                    match input {
-                        Shape::Flat { .. } => Shape::Flat { n: *out },
-                        Shape::Chw { .. } => {
-                            return Err(GraphError::Invalid(
-                                node.id,
-                                node.name.clone(),
-                                "linear requires flattened input".into(),
-                            ))
-                        }
-                    }
-                }
-                Op::Add => {
-                    if node.inputs.len() < 2 {
-                        return Err(GraphError::Arity(
-                            node.id,
-                            node.name.clone(),
-                            ">=2",
-                            node.inputs.len(),
-                        ));
-                    }
-                    let ins: Vec<Shape> =
-                        node.inputs.iter().map(|&i| shapes[i]).collect();
-                    let chans: Vec<usize> = ins.iter().map(|s| s.channels()).collect();
-                    if chans.windows(2).any(|w| w[0] != w[1]) {
-                        return Err(GraphError::ChannelMismatch(
-                            node.id,
-                            node.name.clone(),
-                            chans,
-                        ));
-                    }
-                    let sps: Vec<usize> = ins.iter().map(|s| s.spatial()).collect();
-                    if sps.windows(2).any(|w| w[0] != w[1]) {
-                        return Err(GraphError::SpatialMismatch(
-                            node.id,
-                            node.name.clone(),
-                            sps,
-                        ));
-                    }
-                    ins[0]
-                }
-                Op::Concat => {
-                    if node.inputs.len() < 2 {
-                        return Err(GraphError::Arity(
-                            node.id,
-                            node.name.clone(),
-                            ">=2",
-                            node.inputs.len(),
-                        ));
-                    }
-                    let ins: Vec<Shape> =
-                        node.inputs.iter().map(|&i| shapes[i]).collect();
-                    let sps: Vec<usize> = ins.iter().map(|s| s.spatial()).collect();
-                    if sps.windows(2).any(|w| w[0] != w[1]) {
-                        return Err(GraphError::SpatialMismatch(
-                            node.id,
-                            node.name.clone(),
-                            sps,
-                        ));
-                    }
-                    let c: usize = ins.iter().map(|s| s.channels()).sum();
-                    Shape::chw(c, ins[0].spatial(), ins[0].spatial())
-                }
-            };
+            let shape =
+                node_output_shape(node.id, &node.name, &node.op, &node.inputs, &shapes, None)?;
             shapes.push(shape);
         }
         Ok(shapes)
@@ -366,62 +204,249 @@ impl Graph {
     }
 }
 
+/// Output shape of one node from its op, inputs and the already-inferred
+/// shapes of earlier nodes — the single per-node inference kernel shared by
+/// [`Graph::infer_shapes`] and the overlay fast path
+/// (`GraphArena::plan_into`), so the two cannot drift.
+///
+/// `out_c_override` substitutes the conv's filter count without mutating
+/// the op — how a [`PruneOverlay`](super::arena::PruneOverlay) expresses
+/// pruned widths. Pass `None` to read the op's own `out_c`.
+///
+/// The multi-input arms validate by direct iteration (all-equal-to-first
+/// is equivalent to pairwise-adjacent equality); the error-payload vectors
+/// are only built on the failure path, so the hot path never allocates.
+pub(crate) fn node_output_shape(
+    id: NodeId,
+    name: &str,
+    op: &Op,
+    inputs: &[NodeId],
+    shapes: &[Shape],
+    out_c_override: Option<usize>,
+) -> Result<Shape, GraphError> {
+    let unary = |want: &'static str| -> Result<Shape, GraphError> {
+        if inputs.len() != 1 {
+            Err(GraphError::Arity(id, name.to_string(), want, inputs.len()))
+        } else {
+            Ok(shapes[inputs[0]])
+        }
+    };
+    Ok(match op {
+        Op::Input { c, h, w } => {
+            if !inputs.is_empty() {
+                return Err(GraphError::Arity(id, name.to_string(), "0", inputs.len()));
+            }
+            Shape::chw(*c, *h, *w)
+        }
+        Op::Conv2d {
+            out_c,
+            k,
+            s,
+            p,
+            groups,
+            ..
+        } => {
+            let input = unary("1")?;
+            let (c, h) = match input {
+                Shape::Chw { c, h, w } => {
+                    if h != w {
+                        return Err(GraphError::Invalid(
+                            id,
+                            name.to_string(),
+                            format!("non-square input {h}x{w}"),
+                        ));
+                    }
+                    (c, h)
+                }
+                Shape::Flat { .. } => {
+                    return Err(GraphError::Invalid(
+                        id,
+                        name.to_string(),
+                        "conv over flat tensor".into(),
+                    ))
+                }
+            };
+            let g = groups.resolve(c);
+            if g == 0 || c % g != 0 {
+                return Err(GraphError::Invalid(
+                    id,
+                    name.to_string(),
+                    format!("channels {c} not divisible by groups {g}"),
+                ));
+            }
+            // Depthwise convs tie out channels to in channels.
+            let n = match groups {
+                Groups::Depthwise => c,
+                Groups::Fixed(_) => out_c_override.unwrap_or(*out_c),
+            };
+            if n % g != 0 {
+                return Err(GraphError::Invalid(
+                    id,
+                    name.to_string(),
+                    format!("filters {n} not divisible by groups {g}"),
+                ));
+            }
+            let oh = conv_out_spatial(h, *k, *s, *p);
+            Shape::chw(n, oh, oh)
+        }
+        Op::MaxPool { k, s, p, ceil } | Op::AvgPool { k, s, p, ceil } => {
+            let input = unary("1")?;
+            match input {
+                Shape::Chw { c, h, .. } => {
+                    let oh = if *ceil {
+                        pool_out_spatial_ceil(h, *k, *s, *p)
+                    } else {
+                        conv_out_spatial(h, *k, *s, *p)
+                    };
+                    Shape::chw(c, oh, oh)
+                }
+                Shape::Flat { .. } => {
+                    return Err(GraphError::Invalid(
+                        id,
+                        name.to_string(),
+                        "pool over flat tensor".into(),
+                    ))
+                }
+            }
+        }
+        Op::GlobalAvgPool => {
+            let input = unary("1")?;
+            Shape::chw(input.channels(), 1, 1)
+        }
+        Op::BatchNorm | Op::Activation(_) | Op::Dropout(_) => unary("1")?,
+        Op::Flatten => {
+            let input = unary("1")?;
+            Shape::Flat { n: input.numel() }
+        }
+        Op::Linear { out, .. } => {
+            let input = unary("1")?;
+            match input {
+                Shape::Flat { .. } => Shape::Flat { n: *out },
+                Shape::Chw { .. } => {
+                    return Err(GraphError::Invalid(
+                        id,
+                        name.to_string(),
+                        "linear requires flattened input".into(),
+                    ))
+                }
+            }
+        }
+        Op::Add => {
+            if inputs.len() < 2 {
+                return Err(GraphError::Arity(id, name.to_string(), ">=2", inputs.len()));
+            }
+            let c0 = shapes[inputs[0]].channels();
+            if inputs.iter().any(|&i| shapes[i].channels() != c0) {
+                return Err(GraphError::ChannelMismatch(
+                    id,
+                    name.to_string(),
+                    inputs.iter().map(|&i| shapes[i].channels()).collect(),
+                ));
+            }
+            let s0 = shapes[inputs[0]].spatial();
+            if inputs.iter().any(|&i| shapes[i].spatial() != s0) {
+                return Err(GraphError::SpatialMismatch(
+                    id,
+                    name.to_string(),
+                    inputs.iter().map(|&i| shapes[i].spatial()).collect(),
+                ));
+            }
+            shapes[inputs[0]]
+        }
+        Op::Concat => {
+            if inputs.len() < 2 {
+                return Err(GraphError::Arity(id, name.to_string(), ">=2", inputs.len()));
+            }
+            let s0 = shapes[inputs[0]].spatial();
+            if inputs.iter().any(|&i| shapes[i].spatial() != s0) {
+                return Err(GraphError::SpatialMismatch(
+                    id,
+                    name.to_string(),
+                    inputs.iter().map(|&i| shapes[i].spatial()).collect(),
+                ));
+            }
+            let c: usize = inputs.iter().map(|&i| shapes[i].channels()).sum();
+            Shape::chw(c, s0, s0)
+        }
+    })
+}
+
+/// Conv summary of one node from pre-inferred shapes, or `None` for
+/// non-conv ops — the per-node implementation behind
+/// [`conv_infos_from_shapes`] and the overlay fast path.
+pub(crate) fn conv_info_from_shapes(
+    id: NodeId,
+    op: &Op,
+    inputs: &[NodeId],
+    shapes: &[Shape],
+) -> Option<ConvInfo> {
+    if let Op::Conv2d {
+        k, s, p, groups, ..
+    } = op
+    {
+        let in_shape = shapes[inputs[0]];
+        let out_shape = shapes[id];
+        let m = in_shape.channels();
+        Some(ConvInfo {
+            node: id,
+            n: out_shape.channels(),
+            m,
+            k: *k,
+            s: *s,
+            p: *p,
+            g: groups.resolve(m),
+            ip: in_shape.spatial(),
+            op: out_shape.spatial(),
+        })
+    } else {
+        None
+    }
+}
+
 /// Conv summaries from pre-inferred shapes — the single implementation
 /// shared by [`Graph::conv_infos`] and `NetworkPlan::build`, so the two
 /// paths cannot drift.
 pub(crate) fn conv_infos_from_shapes(graph: &Graph, shapes: &[Shape]) -> Vec<ConvInfo> {
-    let mut out = Vec::new();
-    for node in &graph.nodes {
-        if let Op::Conv2d {
-            k, s, p, groups, ..
-        } = &node.op
-        {
-            let in_shape = shapes[node.inputs[0]];
-            let out_shape = shapes[node.id];
-            let m = in_shape.channels();
-            out.push(ConvInfo {
-                node: node.id,
-                n: out_shape.channels(),
-                m,
-                k: *k,
-                s: *s,
-                p: *p,
-                g: groups.resolve(m),
-                ip: in_shape.spatial(),
-                op: out_shape.spatial(),
-            });
+    graph
+        .nodes
+        .iter()
+        .filter_map(|node| conv_info_from_shapes(node.id, &node.op, &node.inputs, shapes))
+        .collect()
+}
+
+/// Parameter contribution of one node from pre-inferred shapes (conv
+/// weights+bias, BN affine+running stats, linear weights+bias; zero for
+/// everything else) — the per-node implementation behind
+/// [`param_count_from_shapes`] and the overlay fast path's incremental
+/// parameter updates.
+pub(crate) fn node_param_count(id: NodeId, op: &Op, inputs: &[NodeId], shapes: &[Shape]) -> usize {
+    match op {
+        Op::Conv2d {
+            bias, groups, k, ..
+        } => {
+            let m = shapes[inputs[0]].channels();
+            let n = shapes[id].channels();
+            let g = groups.resolve(m);
+            n * (m / g) * k * k + if *bias { n } else { 0 }
         }
+        // weight, bias, running mean, running var
+        Op::BatchNorm => 4 * shapes[id].channels(),
+        Op::Linear { out, bias } => {
+            let inf = shapes[inputs[0]].numel();
+            inf * out + if *bias { *out } else { 0 }
+        }
+        _ => 0,
     }
-    out
 }
 
 /// Parameter count from pre-inferred shapes — the single implementation
 /// shared by [`Graph::param_count`] and `NetworkPlan::build`.
 pub(crate) fn param_count_from_shapes(graph: &Graph, shapes: &[Shape]) -> usize {
-    let mut total = 0usize;
-    for node in &graph.nodes {
-        match &node.op {
-            Op::Conv2d { bias, groups, k, .. } => {
-                let m = shapes[node.inputs[0]].channels();
-                let n = shapes[node.id].channels();
-                let g = groups.resolve(m);
-                total += n * (m / g) * k * k;
-                if *bias {
-                    total += n;
-                }
-            }
-            Op::BatchNorm => {
-                // weight, bias, running mean, running var
-                total += 4 * shapes[node.id].channels();
-            }
-            Op::Linear { out, bias } => {
-                let inf = shapes[node.inputs[0]].numel();
-                total += inf * out + if *bias { *out } else { 0 };
-            }
-            _ => {}
-        }
-    }
-    total
+    graph
+        .nodes
+        .iter()
+        .map(|node| node_param_count(node.id, &node.op, &node.inputs, shapes))
+        .sum()
 }
 
 impl fmt::Display for Graph {

@@ -9,15 +9,24 @@
 //! Derived analyses (shapes, conv summaries, parameter counts) are compiled
 //! once into a [`NetworkPlan`] and shared by every consumer; see
 //! [`plan`] for the invalidation rule (prune ⇒ rebuild plan).
+//!
+//! Hot paths that evaluate many *pruned variants* of one base network go
+//! one level further: [`arena`] compiles the base graph once into a
+//! [`GraphArena`], expresses each candidate as a [`PruneOverlay`] and
+//! rebuilds analyses incrementally into reusable [`PlanBuffers`] — no
+//! graph clone, no full re-inference, no per-candidate allocation. Both
+//! analysis forms are consumed through the [`PlanView`] trait.
 
+pub mod arena;
 pub mod builder;
 pub mod graph;
 pub mod op;
 pub mod plan;
 pub mod shapes;
 
+pub use arena::{GraphArena, OverlayPlan, PlanBuffers, PlanSnapshot, PruneOverlay};
 pub use builder::GraphBuilder;
 pub use graph::{ConvInfo, Graph, GraphError, Node, NodeId};
 pub use op::{Act, Groups, Op};
-pub use plan::NetworkPlan;
+pub use plan::{NetworkPlan, PlanView};
 pub use shapes::{conv_out_spatial, pool_out_spatial_ceil, Shape};

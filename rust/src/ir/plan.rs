@@ -27,7 +27,64 @@
 use super::graph::{
     conv_infos_from_shapes, param_count_from_shapes, ConvInfo, Graph, GraphError, NodeId,
 };
+use super::op::Op;
 use super::shapes::Shape;
+
+/// Read-only access to a compiled network analysis: topology (ops +
+/// wiring) plus the derived shapes, conv summaries and parameter count.
+///
+/// Two implementations exist: [`NetworkPlan`] (a snapshot of a concrete
+/// [`Graph`]) and [`OverlayPlan`](super::arena::OverlayPlan) (an arena +
+/// pruning-overlay view that never materializes a graph). Consumers — the
+/// device simulator, the feature extractor, the profiler — are generic
+/// over this trait, so both paths run the very same code and stay
+/// bit-identical by construction.
+///
+/// Note: under an overlay, `op(id)`'s `Conv2d::out_c` is the *base*
+/// network's nominal filter count; effective channel counts must be read
+/// from `shapes()` / `conv_infos()` (which every consumer already does —
+/// `out_c` alone determines nothing once depthwise ties and overlays
+/// exist).
+pub trait PlanView {
+    /// Node count of the underlying topology.
+    fn n_nodes(&self) -> usize;
+    /// Operator of one node (see the note on `Conv2d::out_c` above).
+    fn op(&self, id: NodeId) -> &Op;
+    /// Input node ids of one node.
+    fn inputs(&self, id: NodeId) -> &[NodeId];
+    /// Inferred per-node output shapes (parallel to node ids).
+    fn shapes(&self) -> &[Shape];
+    /// Per-convolution summaries, in topological order.
+    fn conv_infos(&self) -> &[ConvInfo];
+    /// Total parameter count.
+    fn param_count(&self) -> usize;
+}
+
+impl<'g> PlanView for NetworkPlan<'g> {
+    fn n_nodes(&self) -> usize {
+        self.shapes.len()
+    }
+
+    fn op(&self, id: NodeId) -> &Op {
+        &self.graph.nodes[id].op
+    }
+
+    fn inputs(&self, id: NodeId) -> &[NodeId] {
+        &self.graph.nodes[id].inputs
+    }
+
+    fn shapes(&self) -> &[Shape] {
+        &self.shapes
+    }
+
+    fn conv_infos(&self) -> &[ConvInfo] {
+        &self.convs
+    }
+
+    fn param_count(&self) -> usize {
+        self.param_count
+    }
+}
 
 /// One-pass compiled analysis of a [`Graph`]: shapes, conv summaries and
 /// parameter counts, computed together and cached for reuse.

@@ -88,8 +88,11 @@ pub trait GenerationOracle {
 
 /// Adapts a per-candidate closure to [`GenerationOracle`]: builds each
 /// candidate's graph and compiled [`NetworkPlan`] and hands both to the
-/// closure. This is the uncached reference path (and how tests plug the
-/// simulator in as ground truth).
+/// closure. This is the uncached **clone+rebuild reference path**, kept
+/// deliberately naive: the engine's zero-allocation arena/overlay miss
+/// path must stay bit-identical to it (asserted by
+/// `rust/tests/engine_equivalence.rs` and `overlay_equivalence.rs`), and
+/// it is how tests plug the simulator in as ground truth.
 pub struct PlanOracle<F> {
     predict: F,
 }
@@ -257,7 +260,8 @@ pub fn evolutionary_search(
     }
 
     population.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-    let (best, best_fitness, best_attrs) = population[0].clone();
+    // All three fields are `Copy` — no need to clone the winner's tuple.
+    let (best, best_fitness, best_attrs) = population[0];
     let cache = match (stats_before, oracle.cache_stats()) {
         (Some(before), Some(after)) => Some(after.since(&before)),
         _ => None,

@@ -100,21 +100,79 @@ impl SubnetConfig {
         out
     }
 
+    /// Stem conv width for this configuration's width multiplier.
+    fn stem_width(&self) -> usize {
+        make_divisible(64.0 * WIDTH_CHOICES[self.width], 8)
+    }
+
+    /// `(out_c, mid_c)` of stage `si` under this configuration's width
+    /// multiplier and expand ratio — the single width formula shared by
+    /// [`SubnetConfig::build`] and [`SubnetConfig::fill_conv_widths`], so
+    /// the graph builder and the overlay fast path cannot drift.
+    fn stage_dims(&self, si: usize) -> (usize, usize) {
+        let w_mult = WIDTH_CHOICES[self.width];
+        let out_c = make_divisible(STAGE_WIDTHS[si] as f64 * w_mult, 8);
+        let mid_c = make_divisible(out_c as f64 * EXPAND_CHOICES[self.expand[si]], 8);
+        (out_c, mid_c)
+    }
+
+    /// This configuration's conv `out_c` sequence, in the exact
+    /// topological order [`SubnetConfig::build`] adds convolutions
+    /// (stem.0, stem.1, then per block conv1/conv2/conv3 and, for the
+    /// first block of a stage, the projection). Writing these widths into
+    /// a [`PruneOverlay`](crate::ir::PruneOverlay) over the depth-key
+    /// arena reproduces the built graph's analysis without building it —
+    /// the engine's zero-allocation miss path.
+    pub fn fill_conv_widths(&self, out: &mut Vec<usize>) {
+        out.clear();
+        let stem_w = self.stem_width();
+        out.push(stem_w);
+        out.push(stem_w);
+        for (si, &base_blocks) in BASE_DEPTHS.iter().enumerate() {
+            let blocks = self.depth[si].min(base_blocks);
+            let (out_c, mid_c) = self.stage_dims(si);
+            for bi in 0..blocks {
+                out.push(mid_c); // conv1
+                out.push(mid_c); // conv2
+                out.push(out_c); // conv3
+                if bi == 0 {
+                    out.push(out_c); // projection shortcut
+                }
+            }
+        }
+    }
+
+    /// The arena cache key: only the depth genes change the graph's
+    /// *structure* (node count / wiring); expand and width only move conv
+    /// widths, which overlays express.
+    pub fn depth_key(&self) -> [usize; 4] {
+        self.depth
+    }
+
+    /// A canonical configuration with the given depths — the base network
+    /// an arena is compiled from. Which expand/width genes it carries is
+    /// irrelevant: candidates overwrite every conv width via the overlay.
+    pub fn depth_representative(depth: [usize; 4]) -> SubnetConfig {
+        SubnetConfig {
+            depth,
+            expand: [0; 4],
+            width: 0,
+        }
+    }
+
     /// Build the sub-network IR graph (ImageNet geometry, 1000 classes).
     pub fn build(&self) -> Graph {
-        let w_mult = WIDTH_CHOICES[self.width];
         let mut g = Graph::new(format!("ofa-resnet50-{self:?}"));
         let x = g.input(3, 224, 224);
         // OFA-ResNet50 stem: two 3x3 convs instead of one 7x7 ("slightly
         // different connectivity" vs plain ResNet50).
-        let stem_w = make_divisible(64.0 * w_mult, 8);
+        let stem_w = self.stem_width();
         let s1 = g.conv_bn_act("stem.0", x, stem_w, 3, 2, 1, Act::Relu);
         let s2 = g.conv_bn_act("stem.1", s1, stem_w, 3, 1, 1, Act::Relu);
         let mut cur = g.maxpool("stem.pool", s2, 3, 2, 1);
         for (si, &base_blocks) in BASE_DEPTHS.iter().enumerate() {
             let blocks = self.depth[si].min(base_blocks);
-            let out_c = make_divisible(STAGE_WIDTHS[si] as f64 * w_mult, 8);
-            let mid_c = make_divisible(out_c as f64 * EXPAND_CHOICES[self.expand[si]], 8);
+            let (out_c, mid_c) = self.stage_dims(si);
             for bi in 0..blocks {
                 let stride = if si > 0 && bi == 0 { 2 } else { 1 };
                 let name = format!("stage{si}.block{bi}");
@@ -207,6 +265,37 @@ mod tests {
             }
         }
         assert!(saw_a && saw_b);
+    }
+
+    #[test]
+    fn conv_widths_match_built_graph() {
+        // The overlay width sequence must reproduce the built graph's conv
+        // out_c values in topological order — for the extremes and a wide
+        // random sample of the space.
+        let mut rng = Pcg64::new(0x0fa);
+        let mut configs = vec![SubnetConfig::min(), SubnetConfig::max()];
+        configs.extend((0..100).map(|_| SubnetConfig::sample(&mut rng)));
+        let mut widths = Vec::new();
+        for c in configs {
+            c.fill_conv_widths(&mut widths);
+            let g = c.build();
+            let built: Vec<usize> = g
+                .nodes
+                .iter()
+                .filter_map(|n| match &n.op {
+                    crate::ir::Op::Conv2d { out_c, .. } => Some(*out_c),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(widths, built, "width sequence drifted for {c:?}");
+            // Same depths ⇒ same structure as the arena representative.
+            let rep = SubnetConfig::depth_representative(c.depth_key()).build();
+            assert_eq!(rep.nodes.len(), g.nodes.len());
+            for (a, b) in rep.nodes.iter().zip(&g.nodes) {
+                assert_eq!(a.op.kind(), b.op.kind());
+                assert_eq!(a.inputs, b.inputs);
+            }
+        }
     }
 
     #[test]

@@ -3,17 +3,19 @@
 //! the (simulated) target device across pruning levels, pruning strategies
 //! and batch sizes, paired with the analytical feature vector.
 //!
-//! Execution model: pruning runs once per level (sequentially, on the same
+//! Execution model: the base graph is compiled once into a
+//! [`GraphArena`]; pruning runs once per level (sequentially, on the same
 //! per-level RNG stream as always, so pruned topologies stay reproducible
-//! and reconstructible by consumers such as the DNNMem comparison); each
-//! pruned graph is compiled into one [`NetworkPlan`] shared by all of its
-//! batch sizes; and the flat (level × batch-size) work units are drained by
-//! a worker pool, so parallelism is bounded by the unit count (e.g. 125)
-//! rather than the level count (5). Every work unit resumes its level's
-//! measurement stream at the exact offset the sequential order would have
-//! reached (each measurement consumes a fixed number of noise draws), so
-//! datasets are **bit-identical** to [`profile_sequential`], the original
-//! per-level implementation kept as the determinism oracle.
+//! and reconstructible by consumers such as the DNNMem comparison) as a
+//! `PruneOverlay` whose analysis is rebuilt *incrementally* into shared
+//! plan buffers — no graph clone, no from-scratch shape inference; and the
+//! flat (level × batch-size) work units are drained by a worker pool, so
+//! parallelism is bounded by the unit count (e.g. 125) rather than the
+//! level count (5). Every work unit resumes its level's measurement
+//! stream at the exact offset the sequential order would have reached
+//! (each measurement consumes a fixed number of noise draws), so datasets
+//! are **bit-identical** to [`profile_sequential`], the original
+//! per-level clone+rebuild implementation kept as the determinism oracle.
 
 pub mod dataset;
 
@@ -21,8 +23,8 @@ pub use dataset::{Dataset, ProfilePoint};
 
 use crate::device::Simulator;
 use crate::features::network_features_from_plan;
-use crate::ir::{Graph, NetworkPlan};
-use crate::pruning::{prune, Strategy};
+use crate::ir::{Graph, GraphArena, PlanBuffers, PlanSnapshot, PlanView};
+use crate::pruning::{prune, prune_overlay, Strategy};
 use crate::util::rng::{hash_seed, Pcg64};
 
 /// The paper's 25 profiled batch sizes (App. A): powers of two to 64, then
@@ -113,17 +115,23 @@ fn parse_workers(raw: Option<&str>) -> Option<usize> {
 /// Profile a network per the job spec: for every (level, bs), prune,
 /// extract features, and average `runs` noisy simulated measurements.
 ///
-/// Pruning and plan compilation happen once per level; the flat
+/// The base graph is compiled once into a [`GraphArena`]; each level's
+/// pruning is a [`PruneOverlay`](crate::ir::PruneOverlay) on the
+/// historical per-level RNG stream, and its analysis is rebuilt
+/// *incrementally* into shared [`PlanBuffers`] (level N+1 diffs against
+/// level N — no graph clone, no from-scratch inference). The flat
 /// (level, bs) work units then run on a scoped worker pool, each unit
-/// reusing its level's [`NetworkPlan`] and resuming the level's
+/// reading its level's detached [`PlanSnapshot`] and resuming the level's
 /// measurement stream at its sequential offset — output is bit-identical
-/// to [`profile_sequential`].
+/// to [`profile_sequential`], the clone+rebuild oracle.
 pub fn profile(sim: &Simulator, job: &ProfileJob) -> Dataset {
-    // One pruned topology per level, on the historical per-level stream
-    // (consumers reconstruct these graphs from the same derivation). The
-    // post-prune RNG state is kept: it is the start of the level's
-    // measurement stream.
-    let pruned: Vec<(f64, Graph, Pcg64)> = job
+    let arena = GraphArena::compile(job.graph).expect("valid base graph");
+    let mut buffers = PlanBuffers::new();
+    // One pruning overlay + analysis snapshot per level, on the historical
+    // per-level stream (consumers reconstruct these topologies from the
+    // same derivation). The post-prune RNG state is kept: it is the start
+    // of the level's measurement stream.
+    let pruned: Vec<(f64, PlanSnapshot, Pcg64)> = job
         .levels
         .iter()
         .map(|&level| {
@@ -131,14 +139,12 @@ pub fn profile(sim: &Simulator, job: &ProfileJob) -> Dataset {
                 job.seed,
                 level_stream(job.network, job.strategy, level),
             );
-            let g = prune(job.graph, job.strategy, level, &mut rng);
-            (level, g, rng)
+            let overlay = prune_overlay(&arena, job.strategy, level, &mut rng);
+            arena
+                .plan_into(&overlay, &mut buffers)
+                .expect("valid pruned overlay");
+            (level, buffers.snapshot(), rng)
         })
-        .collect();
-    // One compiled plan per pruned graph, shared across all batch sizes.
-    let plans: Vec<NetworkPlan> = pruned
-        .iter()
-        .map(|(_, g, _)| NetworkPlan::build(g).expect("valid pruned graph"))
         .collect();
 
     // Flat (level, bs) work units drained work-stealing style.
@@ -148,13 +154,13 @@ pub fn profile(sim: &Simulator, job: &ProfileJob) -> Dataset {
     let workers = worker_width(units.len());
     let mut results = crate::util::pool::drain_indexed(units.len(), workers, |i| {
         let (li, bi) = units[i];
-        let (level, _, ref base_rng) = pruned[li];
+        let (level, ref snap, ref base_rng) = pruned[li];
         profile_unit(
             sim,
             job.network,
             job.strategy,
             job.runs,
-            &plans[li],
+            &arena.view(snap),
             level,
             base_rng,
             bi,
@@ -216,14 +222,16 @@ pub(crate) fn level_stream(network: &str, strategy: Strategy, level: f64) -> u64
 /// `base_rng` is the level stream just after pruning; the unit
 /// fast-forwards past the draws earlier batch sizes consume, so any
 /// worker — thread or spawned campaign process — can run it anywhere, in
-/// any order, and reproduce the sequential values bit for bit.
+/// any order, and reproduce the sequential values bit for bit. Generic
+/// over [`PlanView`], so the campaign driver's overlay plans and any
+/// legacy `NetworkPlan` feed the identical code.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn profile_unit(
+pub(crate) fn profile_unit<P: PlanView>(
     sim: &Simulator,
     network: &str,
     strategy: Strategy,
     runs: usize,
-    plan: &NetworkPlan<'_>,
+    plan: &P,
     level: f64,
     base_rng: &Pcg64,
     bs_index: usize,

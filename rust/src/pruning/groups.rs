@@ -8,7 +8,7 @@
 //! pin the channel count of every contributing conv, making them
 //! unprunable (conservative, and sufficient for the zoo).
 
-use crate::ir::{Graph, Groups, NodeId, Op};
+use crate::ir::{Graph, Groups, NodeId, Op, Shape};
 use std::collections::BTreeMap;
 
 /// Union-find over channel groups.
@@ -58,6 +58,20 @@ pub struct PruneGroup {
 /// 1×1 classifier conv whose out-channels are the class count — SqueezeNet
 /// and NiN).
 pub fn prune_groups(graph: &Graph, protected: &[NodeId]) -> Vec<PruneGroup> {
+    let shapes = graph
+        .infer_shapes()
+        .expect("prune_groups requires a valid graph");
+    prune_groups_from_shapes(graph, protected, &shapes)
+}
+
+/// As [`prune_groups`] from pre-inferred shapes — lets callers that
+/// already ran shape inference (`GraphArena::compile`) skip the second
+/// pass.
+pub(crate) fn prune_groups_from_shapes(
+    graph: &Graph,
+    protected: &[NodeId],
+    shapes: &[Shape],
+) -> Vec<PruneGroup> {
     let n = graph.len();
     let mut uf = Uf::new(n);
     // Group representative per node: the node that *defines* the channel
@@ -123,9 +137,6 @@ pub fn prune_groups(graph: &Graph, protected: &[NodeId]) -> Vec<PruneGroup> {
 
     // Collapse union-find and bucket convs by root.
     let conv_ids = graph.conv_ids();
-    let shapes = graph
-        .infer_shapes()
-        .expect("prune_groups requires a valid graph");
     let n_convs = conv_ids.len().max(1);
     let conv_order: BTreeMap<NodeId, usize> = conv_ids
         .iter()

@@ -1,16 +1,26 @@
 //! Structured filter pruning (the paper's topology-variation mechanism,
 //! standing in for the ADaPT tool). A [`Strategy`] distributes a global
-//! pruning level over dependency-consistent groups of convolutions; the
-//! result is a *new* graph with reduced filter counts and re-inferred
-//! shapes.
+//! pruning level over dependency-consistent groups of convolutions.
+//!
+//! Two equivalent producers exist: [`prune`] returns a *new* graph with
+//! reduced filter counts (the clone+rebuild reference path), while
+//! [`prune_overlay`] writes the same widths into a
+//! [`PruneOverlay`](crate::ir::PruneOverlay) over a compiled
+//! [`GraphArena`](crate::ir::GraphArena) — no clone, no mutation, and the
+//! dependency analysis (`protected_convs` + `prune_groups`) is read from
+//! the arena's once-per-base-network cache instead of being recomputed on
+//! every call. Both consume the RNG stream identically, so overlay-pruned
+//! analyses are bit-identical to graph-pruned ones
+//! (`rust/tests/overlay_equivalence.rs`).
 
 pub mod groups;
 pub mod strategy;
 
 pub use groups::{groups_consistent, prune_groups, PruneGroup};
+pub(crate) use groups::prune_groups_from_shapes;
 pub use strategy::{Profile, Strategy, ALL_PROFILES};
 
-use crate::ir::{Graph, NodeId, Op};
+use crate::ir::{Graph, GraphArena, NodeId, Op, PruneOverlay};
 use crate::util::rng::Pcg64;
 
 /// Conv node ids that must keep their filter count: final classifier convs
@@ -75,6 +85,40 @@ pub fn prune(graph: &Graph, strategy: Strategy, level: f64, rng: &mut Pcg64) -> 
     );
     debug_assert!(out.infer_shapes().is_ok());
     out
+}
+
+/// Structured pruning on the overlay fast path: the same per-group width
+/// decisions as [`prune`] — the identical RNG draws, in the identical
+/// group order — written into a [`PruneOverlay`] instead of a cloned and
+/// mutated graph. The dependency analysis comes from the arena's
+/// compile-time cache, so nothing here walks the graph.
+pub fn prune_overlay(
+    arena: &GraphArena,
+    strategy: Strategy,
+    level: f64,
+    rng: &mut Pcg64,
+) -> PruneOverlay {
+    let mut overlay = arena.identity_overlay();
+    if level <= 0.0 {
+        return overlay;
+    }
+    for group in arena.prune_groups() {
+        if !group.prunable {
+            continue;
+        }
+        let removed = strategy.removed_filters(group.filters, group.depth, level, rng);
+        if removed == 0 {
+            continue;
+        }
+        let kept = (group.filters - removed).max(1);
+        for &conv in &group.convs {
+            let slot = arena
+                .conv_slot_of(conv)
+                .expect("prune groups only list conv nodes");
+            overlay.set_width(slot, kept);
+        }
+    }
+    overlay
 }
 
 /// Fraction of conv weight parameters actually removed (diagnostic).
@@ -165,6 +209,32 @@ mod tests {
             let count = p.param_count().unwrap();
             assert!(count < prev, "level {level}: {count} !< {prev}");
             prev = count;
+        }
+    }
+
+    #[test]
+    fn overlay_widths_match_graph_pruning() {
+        use crate::ir::{GraphArena, Op};
+        for name in ["squeezenet", "resnet18", "mobilenetv2"] {
+            let g = models::by_name(name).unwrap();
+            let arena = GraphArena::compile(&g).unwrap();
+            for (si, strategy) in [Strategy::Random, Strategy::L1Norm].iter().enumerate() {
+                for level in [0.0, 0.5, 0.9] {
+                    let mut ra = Pcg64::new(50 + si as u64);
+                    let mut rb = ra.clone();
+                    let p = prune(&g, *strategy, level, &mut ra);
+                    let ov = prune_overlay(&arena, *strategy, level, &mut rb);
+                    for (slot, &cid) in arena.conv_ids().iter().enumerate() {
+                        if let Op::Conv2d { out_c, .. } = &p.nodes[cid].op {
+                            assert_eq!(
+                                ov.widths()[slot],
+                                *out_c,
+                                "{name} {strategy:?} @{level} conv {cid}"
+                            );
+                        }
+                    }
+                }
+            }
         }
     }
 

@@ -1,0 +1,71 @@
+//! FNV-1a fingerprint primitives — the single hashing substrate behind
+//! every 64-bit topology fingerprint in the toolflow
+//! ([`crate::engine::cache::config_fingerprint`],
+//! [`crate::engine::cache::graph_fingerprint`] and the arena overlay
+//! fingerprint `GraphArena::fingerprint`). Keeping the primitives in one
+//! place is what lets the overlay path hash *exactly* the byte stream the
+//! materialized-graph path hashes, so the two fingerprints are equal by
+//! construction (asserted across zoo × strategies × levels by
+//! `rust/tests/overlay_equivalence.rs`).
+
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+pub const FNV_PRIME: u64 = 0x100_0000_01b3;
+
+/// Fold `bytes` into the running hash `h`.
+#[inline]
+pub fn fnv_bytes(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Fold a `u64` (little-endian bytes) into the running hash.
+#[inline]
+pub fn fnv_u64(h: u64, v: u64) -> u64 {
+    fnv_bytes(h, &v.to_le_bytes())
+}
+
+/// Fold the decimal ASCII rendering of `v` into the running hash —
+/// byte-identical to hashing `v.to_string()` without the allocation (the
+/// overlay fingerprint substitutes conv widths into a precompiled byte
+/// program this way).
+#[inline]
+pub fn fnv_decimal(h: u64, mut v: usize) -> u64 {
+    let mut buf = [0u8; 20];
+    let mut i = buf.len();
+    loop {
+        i -= 1;
+        buf[i] = b'0' + (v % 10) as u8;
+        v /= 10;
+        if v == 0 {
+            break;
+        }
+    }
+    fnv_bytes(h, &buf[i..])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decimal_matches_to_string() {
+        for v in [0usize, 1, 9, 10, 64, 999, 1000, 123_456_789, usize::MAX] {
+            assert_eq!(
+                fnv_decimal(FNV_OFFSET, v),
+                fnv_bytes(FNV_OFFSET, v.to_string().as_bytes()),
+                "decimal hash mismatch at {v}"
+            );
+        }
+    }
+
+    #[test]
+    fn bytes_and_u64_compose() {
+        let a = fnv_u64(fnv_bytes(FNV_OFFSET, b"x/"), 7);
+        let b = fnv_u64(fnv_bytes(FNV_OFFSET, b"x/"), 7);
+        assert_eq!(a, b);
+        assert_ne!(a, fnv_u64(fnv_bytes(FNV_OFFSET, b"y/"), 7));
+    }
+}

@@ -4,6 +4,7 @@
 //! in the offline build environment — see DESIGN.md §1.
 
 pub mod bench_harness;
+pub mod fingerprint;
 pub mod json;
 pub mod pool;
 pub mod prop;

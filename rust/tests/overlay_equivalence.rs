@@ -1,0 +1,261 @@
+//! Oracle suite for the zero-allocation evaluation fast path: everything
+//! computed through (GraphArena, PruneOverlay, incremental plan rebuilds)
+//! must be **bit-identical** to the clone+rebuild reference path
+//! (`prune` → `NetworkPlan::build` → features / simulator /
+//! `graph_fingerprint`), across the model zoo × every pruning strategy ×
+//! levels {0, 0.25, 0.75}, plus the OFA candidate path and a campaign
+//! re-run.
+
+use perf4sight::campaign::{self, CampaignSpec};
+use perf4sight::device::Simulator;
+use perf4sight::engine::{graph_fingerprint, PredictionEngine};
+use perf4sight::features::{
+    forward_masked, network_features_from_plan, network_features_into, NUM_FEATURES,
+};
+use perf4sight::forest::{Forest, ForestConfig};
+use perf4sight::ir::{GraphArena, NetworkPlan, PlanBuffers, PlanView};
+use perf4sight::models;
+use perf4sight::ofa::{
+    evolutionary_search, Constraints, EsConfig, PlanOracle, Subset, SubnetConfig,
+};
+use perf4sight::profiler::{profile_sequential, Dataset, ProfileJob};
+use perf4sight::pruning::{prune, prune_overlay, Strategy, ALL_PROFILES};
+use perf4sight::util::rng::Pcg64;
+
+const LEVELS: [f64; 3] = [0.0, 0.25, 0.75];
+
+fn all_strategies() -> Vec<Strategy> {
+    let mut s = vec![Strategy::Random, Strategy::L1Norm];
+    s.extend(ALL_PROFILES.iter().map(|&p| Strategy::Weighted(p)));
+    s
+}
+
+/// Shapes, conv summaries, parameter counts, feature rows and structural
+/// fingerprints agree between the overlay path and clone+rebuild, for the
+/// whole zoo × all strategies × the issue's level set — with one shared
+/// `PlanBuffers` so most rebuilds take the incremental route.
+#[test]
+fn overlay_analysis_bit_identical_across_zoo() {
+    for name in models::ZOO {
+        let g = models::by_name(name).unwrap();
+        let arena = GraphArena::compile(&g).unwrap();
+        let mut buffers = PlanBuffers::new();
+        for (si, &strategy) in all_strategies().iter().enumerate() {
+            for &level in &LEVELS {
+                let mut rng_graph = Pcg64::new(0x5eed + si as u64);
+                let mut rng_overlay = rng_graph.clone();
+                let pruned = prune(&g, strategy, level, &mut rng_graph);
+                let overlay = prune_overlay(&arena, strategy, level, &mut rng_overlay);
+                assert_eq!(
+                    rng_graph.next_u64(),
+                    rng_overlay.next_u64(),
+                    "{name}/{strategy:?}@{level}: RNG streams diverged"
+                );
+                let plan = NetworkPlan::build(&pruned).unwrap();
+                arena.plan_into(&overlay, &mut buffers).unwrap();
+                let view = arena.view_buffers(&buffers);
+                let ctx = format!("{name}/{strategy:?}@{level}");
+                assert_eq!(view.shapes(), PlanView::shapes(&plan), "{ctx}: shapes");
+                assert_eq!(
+                    view.conv_infos(),
+                    PlanView::conv_infos(&plan),
+                    "{ctx}: conv infos"
+                );
+                assert_eq!(
+                    PlanView::param_count(&view),
+                    PlanView::param_count(&plan),
+                    "{ctx}: params"
+                );
+                assert_eq!(
+                    arena.fingerprint(&overlay),
+                    graph_fingerprint(&pruned),
+                    "{ctx}: fingerprint"
+                );
+                // Feature rows, both allocating and scratch-buffer variants.
+                let mut row = Vec::new();
+                for bs in [1usize, 32] {
+                    let reference = network_features_from_plan(&plan, bs);
+                    network_features_into(view.conv_infos(), bs, &mut row);
+                    assert_eq!(reference, row, "{ctx}: features bs={bs}");
+                }
+                // Materialized structure round-trips (names, ops, wiring).
+                let back = arena.to_graph(&overlay);
+                assert_eq!(back.output, pruned.output);
+                for (a, b) in back.nodes.iter().zip(&pruned.nodes) {
+                    assert_eq!((&a.name, &a.op, &a.inputs), (&b.name, &b.op, &b.inputs));
+                }
+            }
+        }
+    }
+}
+
+/// Simulated Γ/Φ/γ/φ — noise-free and with seeded measurement noise —
+/// agree bitwise between an overlay view and the materialized plan.
+#[test]
+fn simulator_attributes_bit_identical_over_overlay() {
+    let sim = Simulator::tx2();
+    for name in ["squeezenet", "resnet18", "mobilenetv2"] {
+        let g = models::by_name(name).unwrap();
+        let arena = GraphArena::compile(&g).unwrap();
+        let mut buffers = PlanBuffers::new();
+        for &strategy in &[Strategy::Random, Strategy::L1Norm] {
+            for &level in &LEVELS {
+                let mut rng_a = Pcg64::new(77);
+                let mut rng_b = rng_a.clone();
+                let pruned = prune(&g, strategy, level, &mut rng_a);
+                let overlay = prune_overlay(&arena, strategy, level, &mut rng_b);
+                let plan = NetworkPlan::build(&pruned).unwrap();
+                arena.plan_into(&overlay, &mut buffers).unwrap();
+                let view = arena.view_buffers(&buffers);
+                for bs in [1usize, 32] {
+                    let t_ref = sim.train_step_plan(&plan, bs, None);
+                    let t_ovl = sim.train_step_plan(&view, bs, None);
+                    assert_eq!(t_ref.gamma_mb.to_bits(), t_ovl.gamma_mb.to_bits());
+                    assert_eq!(t_ref.phi_ms.to_bits(), t_ovl.phi_ms.to_bits());
+                    let i_ref = sim.inference_plan(&plan, bs, None);
+                    let i_ovl = sim.inference_plan(&view, bs, None);
+                    assert_eq!(i_ref.gamma_mb.to_bits(), i_ovl.gamma_mb.to_bits());
+                    assert_eq!(i_ref.phi_ms.to_bits(), i_ovl.phi_ms.to_bits());
+                }
+                // Noise draws consume the identical stream.
+                let mut n_a = Pcg64::new(9);
+                let mut n_b = Pcg64::new(9);
+                let t_ref = sim.train_step_plan(&plan, 16, Some(&mut n_a));
+                let t_ovl = sim.train_step_plan(&view, 16, Some(&mut n_b));
+                assert_eq!(t_ref.gamma_mb.to_bits(), t_ovl.gamma_mb.to_bits());
+                assert_eq!(t_ref.phi_ms.to_bits(), t_ovl.phi_ms.to_bits());
+            }
+        }
+    }
+}
+
+/// The OFA fast path: per-depth-key arenas + candidate width overlays
+/// reproduce the clone+rebuild feature rows and capacities for a wide
+/// random sample of the space.
+#[test]
+fn ofa_candidate_rows_match_clone_rebuild() {
+    use perf4sight::ofa::capacity_from_convs;
+    let mut rng = Pcg64::new(0x0fa5);
+    let mut configs = vec![SubnetConfig::min(), SubnetConfig::max()];
+    configs.extend((0..40).map(|_| SubnetConfig::sample(&mut rng)));
+    let mut buffers = PlanBuffers::new();
+    let mut row = Vec::new();
+    for c in configs {
+        // Clone+rebuild reference.
+        let g = c.build();
+        let plan = NetworkPlan::build(&g).unwrap();
+        let ref_train = network_features_from_plan(&plan, 32);
+        let ref_infer = forward_masked(&network_features_from_plan(&plan, 1));
+        let ref_capacity = capacity_from_convs(PlanView::conv_infos(&plan));
+        // Overlay fast path (what the engine's miss path runs).
+        let rep = SubnetConfig::depth_representative(c.depth_key()).build();
+        let arena = GraphArena::compile(&rep).unwrap();
+        let mut overlay = arena.identity_overlay();
+        c.fill_conv_widths(overlay.widths_mut());
+        arena.plan_into(&overlay, &mut buffers).unwrap();
+        let view = arena.view_buffers(&buffers);
+        network_features_into(view.conv_infos(), 32, &mut row);
+        assert_eq!(ref_train, row, "train row drifted for {c:?}");
+        let mut infer = Vec::new();
+        network_features_into(view.conv_infos(), 1, &mut infer);
+        perf4sight::features::forward_mask_in_place(&mut infer);
+        assert_eq!(ref_infer, infer, "infer row drifted for {c:?}");
+        let capacity = capacity_from_convs(view.conv_infos());
+        assert_eq!(ref_capacity.to_bits(), capacity.to_bits());
+        assert_eq!(row.len(), NUM_FEATURES);
+    }
+}
+
+/// End-to-end search: the engine (arena fast path, cache on) must return
+/// an `EsResult` identical to the clone+rebuild `PlanOracle` reference
+/// driven by the same forests.
+#[test]
+fn search_through_fast_path_is_bit_identical() {
+    // A synthetic forest serving all three attribute roles (the serving
+    // path is under test, not model quality).
+    let mut rng = Pcg64::new(0xf0e5);
+    let x: Vec<Vec<f64>> = (0..60)
+        .map(|_| (0..NUM_FEATURES).map(|_| rng.uniform(0.0, 1e6)).collect())
+        .collect();
+    let y: Vec<f64> = x.iter().map(|r| r[1] / 1e3 + r[4] / 1e4 + 60.0).collect();
+    let forest = Forest::fit(
+        &x,
+        &y,
+        &ForestConfig {
+            n_trees: 12,
+            max_depth: 6,
+            ..Default::default()
+        },
+    );
+    let compiled = forest.compile();
+    let cfg = EsConfig {
+        population: 16,
+        iterations: 5,
+        seed: 0xabc,
+        ..Default::default()
+    };
+    let cons = Constraints::unconstrained();
+    let mut engine = PredictionEngine::new(&forest, &forest, &forest);
+    let fast = evolutionary_search(&cons, &cfg, Subset::City, &mut engine);
+    let mut reference = PlanOracle::new(|_c: &SubnetConfig, plan: &NetworkPlan| {
+        let f_train = network_features_from_plan(plan, 32);
+        let f_infer = forward_masked(&network_features_from_plan(plan, 1));
+        perf4sight::ofa::Attributes {
+            gamma_train_mb: compiled.predict_row(&f_train),
+            gamma_infer_mb: compiled.predict_row(&f_infer),
+            phi_infer_ms: compiled.predict_row(&f_infer),
+        }
+    });
+    let slow = evolutionary_search(&cons, &cfg, Subset::City, &mut reference);
+    assert_eq!(fast.best, slow.best);
+    assert_eq!(fast.best_fitness.to_bits(), slow.best_fitness.to_bits());
+    assert_eq!(
+        fast.best_attrs.gamma_train_mb.to_bits(),
+        slow.best_attrs.gamma_train_mb.to_bits()
+    );
+    assert_eq!(fast.samples, slow.samples);
+    // The engine memoises; a repeated run over the same stream is all hits.
+    let again = evolutionary_search(&cons, &cfg, Subset::City, &mut engine);
+    assert_eq!(again.best, fast.best);
+    assert_eq!(again.cache.unwrap().misses, 0);
+}
+
+/// Campaign re-run through the overlay path: the sharded executor and the
+/// monolithic campaign both reproduce the sequential clone+rebuild oracle
+/// byte for byte (dataset JSON).
+#[test]
+fn campaign_merge_bit_identical_through_overlays() {
+    let spec = CampaignSpec {
+        networks: vec!["squeezenet".into(), "mnasnet".into()],
+        strategies: vec![Strategy::Random, Strategy::L1Norm],
+        levels: vec![0.0, 0.25, 0.75],
+        batch_sizes: vec![4, 16],
+        runs: 2,
+        seed: 0x9e1f,
+        device: "tx2".into(),
+    };
+    // Reference: the original per-level sequential implementation (direct
+    // graph paths, no arenas anywhere).
+    let sim = spec.simulator().unwrap();
+    let mut reference = Dataset::default();
+    for network in &spec.networks {
+        let graph = models::by_name(network).unwrap();
+        for &strategy in &spec.strategies {
+            let job = ProfileJob {
+                network,
+                graph: &graph,
+                strategy,
+                levels: &spec.levels,
+                batch_sizes: &spec.batch_sizes,
+                runs: spec.runs,
+                seed: spec.seed,
+            };
+            reference.extend(profile_sequential(&sim, &job));
+        }
+    }
+    let reference_json = reference.to_json().to_string();
+    let monolithic = campaign::profile_campaign(&spec).unwrap();
+    assert_eq!(reference_json, monolithic.to_json().to_string());
+    let sharded = campaign::collect(&spec).unwrap();
+    assert_eq!(reference_json, sharded.to_json().to_string());
+}
