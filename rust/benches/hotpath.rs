@@ -15,10 +15,14 @@ use perf4sight::features::{forward_masked, network_features, network_features_fr
 use perf4sight::forest::Forest;
 use perf4sight::ir::{GraphArena, NetworkPlan, PlanBuffers, PlanView};
 use perf4sight::models;
-use perf4sight::ofa::{capacity_from_convs, GenerationOracle, SubnetConfig};
+use perf4sight::ofa::{
+    capacity_from_convs, evolutionary_search, Constraints, EsConfig, GenerationOracle,
+    SubnetConfig, Subset,
+};
 use perf4sight::profiler::{profile, ProfileJob};
 use perf4sight::pruning::{prune, prune_overlay, Strategy};
 use perf4sight::runtime::{ForestExecutor, Runtime};
+use perf4sight::serve::{PredictionService, ServeConfig, Tenant};
 use perf4sight::util::bench_harness::{bench, section};
 use perf4sight::util::json::Json;
 use perf4sight::util::rng::Pcg64;
@@ -289,12 +293,89 @@ fn main() {
         std::hint::black_box(campaign::collect(&camp).unwrap());
     });
 
+    section("serving throughput — 8-tenant coalescing vs 8 serial searches");
+
+    // Whole-search wall clock, not micro-iterations: N complete
+    // evolutionary searches run serially on fresh engines vs concurrently
+    // as tenants of one shared service. Disjoint seeds measure the
+    // scheduling overhead ceiling (acceptance floor: ≥0.9× serial
+    // aggregate throughput); identical seeds measure the cross-tenant
+    // cache-sharing win. Both legs also assert the bit-identity
+    // guarantee end to end.
+    let es_serve = EsConfig {
+        population: 24,
+        iterations: 6,
+        ..Default::default()
+    };
+    let cons = Constraints::unconstrained();
+    let run_serial = |seeds: &[u64]| {
+        let started = std::time::Instant::now();
+        let bytes: Vec<Vec<u8>> = seeds
+            .iter()
+            .map(|&seed| {
+                let mut engine = PredictionEngine::new(&forest, &forest, &forest);
+                let es = EsConfig {
+                    seed,
+                    ..es_serve.clone()
+                };
+                evolutionary_search(&cons, &es, Subset::City, &mut engine).deterministic_bytes()
+            })
+            .collect();
+        (started.elapsed(), bytes)
+    };
+    let run_served = |seeds: &[u64]| {
+        let engine = PredictionEngine::new(&forest, &forest, &forest);
+        let service = PredictionService::spawn(engine, &ServeConfig::default());
+        let tenants: Vec<Tenant> = (0..seeds.len()).map(|_| service.tenant()).collect();
+        let started = std::time::Instant::now();
+        let bytes: Vec<Vec<u8>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = tenants
+                .into_iter()
+                .zip(seeds)
+                .map(|(mut tenant, &seed)| {
+                    let es = EsConfig {
+                        seed,
+                        ..es_serve.clone()
+                    };
+                    scope.spawn(move || {
+                        evolutionary_search(&cons, &es, Subset::City, &mut tenant)
+                            .deterministic_bytes()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let wall = started.elapsed();
+        service.shutdown();
+        (wall, bytes)
+    };
+
+    let disjoint: Vec<u64> = (0..8).map(|i| 1000 + i).collect();
+    let (disjoint_serial, serial_bytes) = run_serial(&disjoint);
+    let (disjoint_served, served_bytes) = run_served(&disjoint);
+    assert_eq!(serial_bytes, served_bytes, "disjoint: served results must be bit-identical");
+    let disjoint_ratio = disjoint_serial.as_secs_f64() / disjoint_served.as_secs_f64();
+    println!(
+        "  -> disjoint workloads: serial {:.2?}, served {:.2?} — {:.2}x aggregate throughput",
+        disjoint_serial, disjoint_served, disjoint_ratio
+    );
+
+    let overlapping = [4242u64; 8];
+    let (overlap_serial, serial_bytes) = run_serial(&overlapping);
+    let (overlap_served, served_bytes) = run_served(&overlapping);
+    assert_eq!(serial_bytes, served_bytes, "overlapping: served results must be bit-identical");
+    let overlap_speedup = overlap_serial.as_secs_f64() / overlap_served.as_secs_f64();
+    println!(
+        "  -> overlapping workloads: serial {:.2?}, served {:.2?} — {:.2}x (shared cache)",
+        overlap_serial, overlap_served, overlap_speedup
+    );
+
     // Machine-readable perf-trajectory summary. Written to target/ so
     // local runs never dirty the working tree; CI parses it, enforces the
     // regression gate and uploads it as the BENCH_hotpath artifact. To
     // refresh the checked-in repo-root seed, copy it over deliberately.
     let summary = Json::obj(vec![
-        ("schema", Json::Str("perf4sight/hotpath-bench/v1".into())),
+        ("schema", Json::Str("perf4sight/hotpath-bench/v2".into())),
         (
             "cold_cache_unique_candidates",
             Json::obj(vec![
@@ -310,6 +391,20 @@ fn main() {
                 ("legacy_ms", Json::Num(prep_legacy.mean_ms())),
                 ("overlay_ms", Json::Num(prep_overlay.mean_ms())),
                 ("speedup", Json::Num(prep_legacy.mean_ns / prep_overlay.mean_ns)),
+            ]),
+        ),
+        (
+            "serving_throughput",
+            Json::obj(vec![
+                ("tenants", Json::Num(8.0)),
+                ("population", Json::Num(es_serve.population as f64)),
+                ("iterations", Json::Num(es_serve.iterations as f64)),
+                ("disjoint_serial_s", Json::Num(disjoint_serial.as_secs_f64())),
+                ("disjoint_served_s", Json::Num(disjoint_served.as_secs_f64())),
+                ("disjoint_throughput_ratio", Json::Num(disjoint_ratio)),
+                ("overlapping_serial_s", Json::Num(overlap_serial.as_secs_f64())),
+                ("overlapping_served_s", Json::Num(overlap_served.as_secs_f64())),
+                ("overlapping_speedup", Json::Num(overlap_speedup)),
             ]),
         ),
     ]);

@@ -86,6 +86,12 @@ pub struct ToolflowConfig {
     /// Campaign shard count (`[campaign] shards`); 0 = auto (one shard
     /// per worker).
     pub campaign_shards: usize,
+    /// Serving-queue admission bound (`[serve] queue_capacity`):
+    /// generations that may wait before tenant submits block.
+    pub serve_queue_capacity: usize,
+    /// Most requests coalesced into one engine generation per serving
+    /// drain (`[serve] max_coalesce`).
+    pub serve_max_coalesce: usize,
 }
 
 impl Default for ToolflowConfig {
@@ -99,6 +105,8 @@ impl Default for ToolflowConfig {
             data_dir: "data".into(),
             campaign_workers: 0,
             campaign_shards: 0,
+            serve_queue_capacity: 64,
+            serve_max_coalesce: 16,
         }
     }
 }
@@ -124,6 +132,8 @@ impl ToolflowConfig {
             data_dir: raw.string("paths.data", &d.data_dir),
             campaign_workers: raw.usize("campaign.workers", d.campaign_workers),
             campaign_shards: raw.usize("campaign.shards", d.campaign_shards),
+            serve_queue_capacity: raw.usize("serve.queue_capacity", d.serve_queue_capacity),
+            serve_max_coalesce: raw.usize("serve.max_coalesce", d.serve_max_coalesce),
         }
     }
 
@@ -153,6 +163,10 @@ runs = 5
 workers = 3
 shards = 6
 
+[serve]
+queue_capacity = 32
+max_coalesce = 8
+
 [paths]
 artifacts = "build/artifacts"
 "#;
@@ -178,8 +192,13 @@ artifacts = "build/artifacts"
         assert_eq!(cfg.artifacts_dir, "build/artifacts");
         assert_eq!(cfg.campaign_workers, 3);
         assert_eq!(cfg.campaign_shards, 6);
+        assert_eq!(cfg.serve_queue_capacity, 32);
+        assert_eq!(cfg.serve_max_coalesce, 8);
         // untouched keys keep defaults
         assert_eq!(cfg.data_dir, "data");
+        let d = ToolflowConfig::default();
+        assert_eq!(d.serve_queue_capacity, 64);
+        assert_eq!(d.serve_max_coalesce, 16);
     }
 
     #[test]

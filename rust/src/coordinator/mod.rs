@@ -19,6 +19,7 @@ use crate::forest::Forest;
 use crate::ofa::{Constraints, EsConfig, Subset};
 use crate::profiler::{profile, Dataset, ProfileJob, PAPER_BATCH_SIZES, TRAIN_LEVELS};
 use crate::pruning::Strategy;
+use crate::serve::{PredictionService, ServeConfig, TenantStats};
 use crate::util::json::Json;
 
 const USAGE: &str = "\
@@ -48,6 +49,12 @@ COMMANDS:
   search     [--device tx2] [--subset city|off-road|motorway|country-side]
              [--gamma-max MB] [--gamma-infer-max MB] [--phi-max MS]
              [--population 100] [--iterations 500] [--subnets 100] [--seed S]
+             [--tenants N [--verify-serial] [--queue-capacity 64] [--coalesce 16]]
+             (--tenants N runs N concurrent searches, seeds S..S+N, as
+              tenants of one shared prediction service — cross-tenant
+              batch coalescing over one engine cache. --verify-serial
+              re-runs each serially and fails unless results are
+              byte-identical.)
   train-demo [--steps 100] [--lr 0.1] [--artifacts DIR] [--seed S]
   experiment fig3|fig4|fig5|table2|trainset|topology|dnnmem|ofa-models|ablation|cross-device|all
              [--seed S] [--quick]
@@ -421,6 +428,11 @@ fn cmd_search(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
     };
     let subnets = args.usize_or("subnets", 40)?;
     let seed = args.u64_or("seed", cfg.seed)?;
+    // Validate up front — a bad tenant count must not cost a model fit.
+    let tenants = args.usize_opt("tenants")?;
+    if tenants == Some(0) {
+        return Err("--tenants must be ≥ 1".into());
+    }
     println!("fitting OFA attribute models ({subnets} sampled sub-networks)…");
     let models = experiments::ofa_models::run(&sim, subnets, seed);
     experiments::ofa_models::print(&models.report);
@@ -440,6 +452,9 @@ fn cmd_search(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
         seed,
         ..Default::default()
     };
+    if let Some(n) = tenants {
+        return cmd_search_served(args, cfg, &models, &cons, &es_cfg, subset, n);
+    }
     println!("running evolutionary search ({} × {})…", es_cfg.population, es_cfg.iterations);
     let result = crate::ofa::evolutionary_search(&cons, &es_cfg, subset, &mut engine);
     let naive_h = result.samples as f64 * crate::device::PROFILE_COST_S / 3600.0;
@@ -473,6 +488,129 @@ fn cmd_search(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
         naive_h,
         naive_h * 3600.0 / result.elapsed.as_secs_f64().max(1e-9)
     );
+    Ok(())
+}
+
+/// `search --tenants N`: run N concurrent evolutionary searches (seeds
+/// `seed..seed+N`) as tenants of one [`PredictionService`] sharing a
+/// single engine — cross-tenant batch coalescing, one fingerprint cache.
+/// `--verify-serial` re-runs every search serially on a fresh engine and
+/// fails loudly unless the served results are byte-identical.
+fn cmd_search_served(
+    args: &Args,
+    cfg: &ToolflowConfig,
+    models: &experiments::ofa_models::OfaModels,
+    cons: &Constraints,
+    es_cfg: &EsConfig,
+    subset: Subset,
+    n_tenants: usize,
+) -> Result<(), String> {
+    let serve_cfg = ServeConfig {
+        queue_capacity: args.usize_or("queue-capacity", cfg.serve_queue_capacity)?,
+        max_coalesce: args.usize_or("coalesce", cfg.serve_max_coalesce)?,
+    };
+    println!(
+        "serving {} concurrent searches ({} × {}) through one shared engine (queue {}, coalesce {})…",
+        n_tenants,
+        es_cfg.population,
+        es_cfg.iterations,
+        serve_cfg.queue_capacity,
+        serve_cfg.max_coalesce
+    );
+    let service = PredictionService::spawn(models.engine(), &serve_cfg);
+    // Mint every tenant here, in order: ids (and the stats table) stay
+    // deterministic whatever the search threads do.
+    let tenants: Vec<crate::serve::Tenant> = (0..n_tenants).map(|_| service.tenant()).collect();
+    let started = std::time::Instant::now();
+    let results: Vec<crate::ofa::EsResult> = std::thread::scope(|scope| {
+        let handles: Vec<_> = tenants
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut tenant)| {
+                let es_i = EsConfig {
+                    seed: es_cfg.seed + i as u64,
+                    ..es_cfg.clone()
+                };
+                scope.spawn(move || {
+                    crate::ofa::evolutionary_search(cons, &es_i, subset, &mut tenant)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("search thread panicked"))
+            .collect()
+    });
+    let wall = started.elapsed();
+    let cache = service.cache_stats();
+    let stats = service.shutdown();
+
+    let header = ["tenant", "seed", "best acc %", "samples", "hit %", "mean wait µs", "max wait µs"];
+    let body: Vec<Vec<String>> = results
+        .iter()
+        .zip(&stats)
+        .enumerate()
+        .map(|(i, (r, s))| {
+            vec![
+                format!("{i}"),
+                format!("{}", es_cfg.seed + i as u64),
+                format!("{:.1}", r.best_fitness),
+                format!("{}", r.samples),
+                format!("{:.1}", 100.0 * s.hit_rate()),
+                format!("{:.1}", s.mean_wait_ns() / 1e3),
+                format!("{:.1}", s.max_wait_ns as f64 / 1e3),
+            ]
+        })
+        .collect();
+    crate::util::bench_harness::table(&header, &body);
+
+    let agg = TenantStats::aggregate(&stats);
+    let total_samples: usize = results.iter().map(|r| r.samples).sum();
+    println!(
+        "aggregate: {} samples across {} tenants in {:.2?} — {:.0} estimates/s",
+        total_samples,
+        n_tenants,
+        wall,
+        total_samples as f64 / wall.as_secs_f64().max(1e-9)
+    );
+    println!(
+        "shared cache: {} hits / {} misses ({:.1}% hit rate, {} entries); provenance: {} memo hits, {} in-flight duplicates, {} evaluated",
+        cache.hits,
+        cache.misses,
+        100.0 * cache.hit_rate(),
+        cache.entries,
+        agg.cache_hits,
+        agg.batch_hits,
+        agg.evaluated
+    );
+    let best = results
+        .iter()
+        .max_by(|a, b| a.best_fitness.partial_cmp(&b.best_fitness).unwrap())
+        .expect("at least one tenant");
+    println!("best sub-network across tenants: {:?}", best.best);
+    println!("predicted accuracy ({}): {:.1}%", subset.name(), best.best_fitness);
+    println!("predicted attributes: {:?}", best.best_attrs);
+
+    if args.flag("verify-serial") {
+        println!("verifying against {n_tenants} serial single-caller runs…");
+        for (i, served) in results.iter().enumerate() {
+            let mut engine = models.engine();
+            let es_i = EsConfig {
+                seed: es_cfg.seed + i as u64,
+                ..es_cfg.clone()
+            };
+            let serial = crate::ofa::evolutionary_search(cons, &es_i, subset, &mut engine);
+            if serial.deterministic_bytes() != served.deterministic_bytes() {
+                return Err(format!(
+                    "tenant {i} (seed {}) diverged from its serial run: served best {:?}, serial best {:?}",
+                    es_i.seed, served.best, serial.best
+                ));
+            }
+        }
+        println!(
+            "bit-identity verified: {n_tenants} served results match their serial runs byte for byte"
+        );
+    }
     Ok(())
 }
 

@@ -27,6 +27,17 @@
 //! never runs full shape inference from scratch, and never allocates a
 //! feature row. Invalidation is unchanged: prune ⇒ new overlay ⇒ new
 //! fingerprint ⇒ miss.
+//!
+//! Since PR 6 the engine is **shareable**: an engine value is a handle
+//! onto an `Arc`-shared core (the three compiled forests plus an
+//! interior-mutable fingerprint cache behind a `Mutex`), with only the
+//! evaluation scratch private to the handle. [`PredictionEngine::fork`]
+//! yields further handles onto the same cache — the substrate of the
+//! multi-tenant serving layer in [`crate::serve`], which coalesces queries
+//! from many concurrent clients into the same generation-batched calls.
+//! One `evaluate_generation` is a single cache transaction (the lock is
+//! held across lookup, evaluation and insert), so counters stay exact
+//! under concurrency: `hits + misses` always equals the queries submitted.
 
 pub mod cache;
 pub mod compiled;
@@ -35,6 +46,7 @@ pub use cache::{config_fingerprint, graph_fingerprint, CacheStats, FingerprintCa
 pub use compiled::CompiledForest;
 
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use crate::features::{forward_mask_in_place, network_features_into, NUM_FEATURES};
 use crate::forest::Forest;
@@ -48,7 +60,22 @@ pub const TRAIN_BS: usize = 32;
 /// `SubnetConfig`s, so paper-scale searches never evict.
 pub const DEFAULT_CACHE_CAPACITY: usize = 32_768;
 
-/// Reusable per-engine evaluation state for the zero-allocation miss
+/// How one query of a generation was answered — the provenance the
+/// serving layer needs to attribute hits and misses to individual
+/// tenants (the cache's own counters aggregate over every handle).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueryOutcome {
+    /// Answered from the shared fingerprint memo.
+    CacheHit,
+    /// Duplicate of an in-flight miss in the same coalesced generation
+    /// (possibly submitted by a *different* tenant) — served from the
+    /// fresh results without a second evaluation.
+    BatchHit,
+    /// Ran the batched predictors (a cache miss).
+    Evaluated,
+}
+
+/// Reusable per-handle evaluation state for the zero-allocation miss
 /// path: one compiled [`GraphArena`] per OFA depth key (only the four
 /// depth genes change the graph *structure*; expand/width genes are pure
 /// conv-width overlays), a rebindable [`PruneOverlay`], incremental
@@ -68,12 +95,24 @@ struct EvalScratch {
     infer_flat: Vec<f64>,
 }
 
-/// Batched, cache-aware server for (Γ, γ, φ) queries (see module docs).
-pub struct PredictionEngine {
+/// The `Send + Sync` core every engine handle shares: the three compiled
+/// attribute models (immutable after construction) and the fingerprint
+/// memo behind its lock.
+struct EngineShared {
     gamma_train: CompiledForest,
     gamma_infer: CompiledForest,
     phi_infer: CompiledForest,
-    cache: FingerprintCache,
+    cache: Mutex<FingerprintCache>,
+}
+
+/// Batched, cache-aware server for (Γ, γ, φ) queries (see module docs).
+///
+/// An engine value is a *handle*: [`PredictionEngine::fork`] produces
+/// further handles onto the same compiled forests and shared cache, each
+/// with private evaluation scratch, so handles can serve from different
+/// threads (they are `Send`) while pooling memo entries and counters.
+pub struct PredictionEngine {
+    shared: Arc<EngineShared>,
     scratch: EvalScratch,
 }
 
@@ -90,31 +129,53 @@ impl PredictionEngine {
             );
         }
         PredictionEngine {
-            gamma_train: CompiledForest::compile(gamma_train),
-            gamma_infer: CompiledForest::compile(gamma_infer),
-            phi_infer: CompiledForest::compile(phi_infer),
-            cache: FingerprintCache::new(DEFAULT_CACHE_CAPACITY),
+            shared: Arc::new(EngineShared {
+                gamma_train: CompiledForest::compile(gamma_train),
+                gamma_infer: CompiledForest::compile(gamma_infer),
+                phi_infer: CompiledForest::compile(phi_infer),
+                cache: Mutex::new(FingerprintCache::new(DEFAULT_CACHE_CAPACITY)),
+            }),
             scratch: EvalScratch::default(),
         }
     }
 
     /// Replace the memo with one of the given capacity. `0` disables
     /// caching entirely — the reference configuration the equivalence
-    /// suite compares against.
-    pub fn with_cache_capacity(mut self, capacity: usize) -> PredictionEngine {
-        self.cache = FingerprintCache::new(capacity);
+    /// suite compares against. Meant for construction time: forked
+    /// handles share the cache, so a replacement resets their memo (and
+    /// its counters) too.
+    pub fn with_cache_capacity(self, capacity: usize) -> PredictionEngine {
+        *self.lock_cache() = FingerprintCache::new(capacity);
         self
     }
 
-    /// Current cache counters.
+    /// A second handle onto the same compiled forests and shared
+    /// fingerprint cache, with fresh private scratch. Forked handles can
+    /// evaluate from other threads; each `evaluate_generation` is one
+    /// atomic cache transaction, so the shared counters stay exact.
+    pub fn fork(&self) -> PredictionEngine {
+        PredictionEngine {
+            shared: Arc::clone(&self.shared),
+            scratch: EvalScratch::default(),
+        }
+    }
+
+    fn lock_cache(&self) -> std::sync::MutexGuard<'_, FingerprintCache> {
+        self.shared.cache.lock().expect("engine cache poisoned")
+    }
+
+    /// Current cache counters (shared across every forked handle).
     pub fn stats(&self) -> CacheStats {
-        self.cache.stats()
+        self.lock_cache().stats()
     }
 
     /// The memoised feature rows `(f_train, f_infer)` of a previously
-    /// evaluated candidate, if still cached.
-    pub fn cached_feature_rows(&self, config: &SubnetConfig) -> Option<(&[f64], &[f64])> {
-        self.cache.rows(config_fingerprint(config), config)
+    /// evaluated candidate, if still cached. Returns owned copies — the
+    /// rows live behind the shared cache lock.
+    pub fn cached_feature_rows(&self, config: &SubnetConfig) -> Option<(Vec<f64>, Vec<f64>)> {
+        self.lock_cache()
+            .rows(config_fingerprint(config), config)
+            .map(|(t, i)| (t.to_vec(), i.to_vec()))
     }
 
     /// Answer Γ/γ/φ for `candidates` in three batched traversals via the
@@ -154,9 +215,9 @@ impl PredictionEngine {
             scratch.infer_flat.extend_from_slice(&scratch.row);
             capacities.push(capacity_from_convs(view.conv_infos()));
         }
-        let gamma_t = self.gamma_train.predict_rows_flat(&scratch.train_flat);
-        let gamma_i = self.gamma_infer.predict_rows_flat(&scratch.infer_flat);
-        let phi_i = self.phi_infer.predict_rows_flat(&scratch.infer_flat);
+        let gamma_t = self.shared.gamma_train.predict_rows_flat(&scratch.train_flat);
+        let gamma_i = self.shared.gamma_infer.predict_rows_flat(&scratch.infer_flat);
+        let phi_i = self.shared.phi_infer.predict_rows_flat(&scratch.infer_flat);
         capacities
             .iter()
             .enumerate()
@@ -170,24 +231,37 @@ impl PredictionEngine {
             })
             .collect()
     }
-}
 
-impl GenerationOracle for PredictionEngine {
-    /// Serve one generation: cache hits are answered by lookup, the unique
-    /// misses are evaluated together (three `predict_rows` calls), and
-    /// batch-local duplicates are filled from the fresh results.
-    fn evaluate_generation(&mut self, candidates: &[SubnetConfig]) -> Vec<CandidateEval> {
+    /// [`GenerationOracle::evaluate_generation`] plus per-query
+    /// provenance: how each candidate was answered (shared-memo hit,
+    /// in-flight duplicate, or a real evaluation). The serving layer uses
+    /// the outcomes to keep per-tenant hit/miss counters; plain callers
+    /// use the untraced trait method.
+    ///
+    /// The shared cache is locked for the whole call — one generation is
+    /// one atomic cache transaction, so concurrent forked handles cannot
+    /// interleave lookups and inserts mid-generation and the counters
+    /// keep their single-caller meaning.
+    pub fn evaluate_generation_traced(
+        &mut self,
+        candidates: &[SubnetConfig],
+    ) -> (Vec<CandidateEval>, Vec<QueryOutcome>) {
         if candidates.is_empty() {
-            return Vec::new();
+            return (Vec::new(), Vec::new());
         }
-        if self.cache.capacity() == 0 {
+        // The guard borrows a local clone of the Arc, leaving `self` free
+        // for `compute_batch` (which never touches the cache).
+        let shared = Arc::clone(&self.shared);
+        let mut cache = shared.cache.lock().expect("engine cache poisoned");
+        if cache.capacity() == 0 {
             // Cache disabled: every request is an evaluation.
             let evals = self.compute_batch(candidates);
-            self.cache.note_misses(candidates.len() as u64);
-            return evals;
+            cache.note_misses(candidates.len() as u64);
+            return (evals, vec![QueryOutcome::Evaluated; candidates.len()]);
         }
         let fps: Vec<u64> = candidates.iter().map(config_fingerprint).collect();
         let mut out: Vec<Option<CandidateEval>> = vec![None; candidates.len()];
+        let mut outcomes = vec![QueryOutcome::Evaluated; candidates.len()];
         // Unique misses, in first-appearance order. Dedup compares the full
         // config, not just the fingerprint, mirroring the cache's collision
         // guard: a 64-bit collision costs a second evaluation, never a
@@ -195,8 +269,9 @@ impl GenerationOracle for PredictionEngine {
         let mut miss_slots: HashMap<u64, Vec<usize>> = HashMap::new();
         let mut miss_idx: Vec<usize> = Vec::new();
         for (i, (&fp, c)) in fps.iter().zip(candidates).enumerate() {
-            if let Some(eval) = self.cache.get(fp, c) {
+            if let Some(eval) = cache.get(fp, c) {
                 out[i] = Some(eval);
+                outcomes[i] = QueryOutcome::CacheHit;
             } else {
                 let slots = miss_slots.entry(fp).or_default();
                 if !slots.iter().any(|&s| candidates[miss_idx[s]] == *c) {
@@ -207,7 +282,7 @@ impl GenerationOracle for PredictionEngine {
         }
         let missing: Vec<SubnetConfig> = miss_idx.iter().map(|&i| candidates[i]).collect();
         let evals = self.compute_batch(&missing);
-        self.cache.note_misses(missing.len() as u64);
+        cache.note_misses(missing.len() as u64);
         // Memoise each fresh evaluation; its rows sit in the flat scratch
         // at `slot * NUM_FEATURES` (the only per-candidate allocations
         // left are the cache's own copies).
@@ -216,7 +291,7 @@ impl GenerationOracle for PredictionEngine {
                 .to_vec();
             let f_infer = self.scratch.infer_flat[slot * NUM_FEATURES..(slot + 1) * NUM_FEATURES]
                 .to_vec();
-            self.cache.insert(fps[i], &candidates[i], eval, f_train, f_infer);
+            cache.insert(fps[i], &candidates[i], eval, f_train, f_infer);
         }
         // Fill batch-local duplicates from the freshly computed slots.
         let mut batch_hits = 0u64;
@@ -229,17 +304,29 @@ impl GenerationOracle for PredictionEngine {
                 out[i] = Some(evals[slot]);
                 if miss_idx[slot] != i {
                     batch_hits += 1;
+                    outcomes[i] = QueryOutcome::BatchHit;
                 }
             }
         }
-        self.cache.note_batch_hits(batch_hits);
-        out.into_iter()
+        cache.note_batch_hits(batch_hits);
+        let resolved = out
+            .into_iter()
             .map(|e| e.expect("every candidate resolved"))
-            .collect()
+            .collect();
+        (resolved, outcomes)
+    }
+}
+
+impl GenerationOracle for PredictionEngine {
+    /// Serve one generation: cache hits are answered by lookup, the unique
+    /// misses are evaluated together (three `predict_rows` calls), and
+    /// batch-local duplicates are filled from the fresh results.
+    fn evaluate_generation(&mut self, candidates: &[SubnetConfig]) -> Vec<CandidateEval> {
+        self.evaluate_generation_traced(candidates).0
     }
 
     fn cache_stats(&self) -> Option<CacheStats> {
-        Some(self.cache.stats())
+        Some(self.stats())
     }
 }
 
@@ -316,5 +403,42 @@ mod tests {
         let s = eng.stats();
         assert_eq!(s.entries, 2);
         assert_eq!(s.evictions, 1);
+    }
+
+    #[test]
+    fn engine_handles_are_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<PredictionEngine>();
+    }
+
+    #[test]
+    fn forked_handles_share_cache_and_counters() {
+        let mut a = tiny_engine(64);
+        let c = SubnetConfig::min();
+        let first = a.evaluate_generation(&[c])[0];
+        // A fork sees the memo entry the original handle produced…
+        let mut b = a.fork();
+        let second = b.evaluate_generation(&[c])[0];
+        assert_eq!(first, second);
+        let s = a.stats();
+        assert_eq!((s.hits, s.misses), (1, 1), "fork answered from the shared memo");
+        // …and both handles read the same counters.
+        assert_eq!(a.stats(), b.stats());
+        assert!(b.cached_feature_rows(&c).is_some());
+    }
+
+    #[test]
+    fn traced_outcomes_match_counter_semantics() {
+        let mut eng = tiny_engine(64);
+        let (a, b) = (SubnetConfig::min(), SubnetConfig::max());
+        let (_, outcomes) = eng.evaluate_generation_traced(&[a, a, b]);
+        assert_eq!(
+            outcomes,
+            vec![QueryOutcome::Evaluated, QueryOutcome::BatchHit, QueryOutcome::Evaluated]
+        );
+        let (_, outcomes) = eng.evaluate_generation_traced(&[b, a]);
+        assert_eq!(outcomes, vec![QueryOutcome::CacheHit, QueryOutcome::CacheHit]);
+        let s = eng.stats();
+        assert_eq!((s.hits, s.misses), (3, 2));
     }
 }

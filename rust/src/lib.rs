@@ -27,4 +27,5 @@ pub mod ofa;
 pub mod profiler;
 pub mod pruning;
 pub mod runtime;
+pub mod serve;
 pub mod util;

@@ -159,6 +159,36 @@ pub struct EsResult {
     pub elapsed: Duration,
 }
 
+impl EsResult {
+    /// Canonical byte encoding of everything the search *decided*: the
+    /// winning genes, its fitness and attribute estimates (exact f64
+    /// bits), and the sample count. Two runs that made identical
+    /// decisions encode identically.
+    ///
+    /// Deliberately excludes `elapsed`, `cache` and `unique_evaluations`:
+    /// those describe how the oracle *served* the run (wall clock, shared
+    /// cache traffic), which legitimately differs between a serial engine
+    /// and a multi-tenant service. This is the equality the serving
+    /// layer's bit-identity guarantee is stated in — see
+    /// [`crate::serve`] and `rust/tests/serve_identity.rs`.
+    pub fn deterministic_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(14 * 8);
+        for d in self.best.depth {
+            out.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        for e in self.best.expand {
+            out.extend_from_slice(&(e as u64).to_le_bytes());
+        }
+        out.extend_from_slice(&(self.best.width as u64).to_le_bytes());
+        out.extend_from_slice(&self.best_fitness.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.best_attrs.gamma_train_mb.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.best_attrs.gamma_infer_mb.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.best_attrs.phi_infer_ms.to_bits().to_le_bytes());
+        out.extend_from_slice(&(self.samples as u64).to_le_bytes());
+        out
+    }
+}
+
 /// Run the evolutionary search.
 ///
 /// Each generation's candidates are evaluated in bulk through `oracle`
@@ -383,5 +413,28 @@ mod tests {
         );
         assert_eq!(a.best, b.best);
         assert_eq!(a.samples, b.samples);
+        assert_eq!(a.deterministic_bytes(), b.deterministic_bytes());
+    }
+
+    #[test]
+    fn deterministic_bytes_ignore_serving_metadata() {
+        let sim = Simulator::tx2();
+        let r = evolutionary_search(
+            &Constraints::unconstrained(),
+            &small_cfg(6),
+            Subset::City,
+            &mut PlanOracle::new(sim_predict(&sim)),
+        );
+        // Serving metadata (elapsed, cache traffic, unique evaluations)
+        // must not affect the encoding…
+        let mut served = r.clone();
+        served.elapsed = Duration::from_secs(1234);
+        served.unique_evaluations = 0;
+        served.cache = Some(CacheStats::default());
+        assert_eq!(r.deterministic_bytes(), served.deterministic_bytes());
+        // …but any decision field must.
+        let mut other = r.clone();
+        other.best_fitness += 1.0;
+        assert_ne!(r.deterministic_bytes(), other.deterministic_bytes());
     }
 }

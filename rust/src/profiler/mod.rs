@@ -100,16 +100,34 @@ pub fn worker_width(cap: usize) -> usize {
 
 /// The `PERF4SIGHT_WORKERS` override when set to a positive integer —
 /// the single parsing point shared by [`worker_width`] and the campaign
-/// driver's worker resolution.
+/// driver's worker resolution. A malformed value is **not** silently
+/// ignored: it falls back to auto width but warns on stderr (once per
+/// process), so a typo like `PERF4SIGHT_WORKERS=8x` cannot quietly
+/// change which parallelism a "pinned" CI run actually used.
 pub(crate) fn env_workers() -> Option<usize> {
-    parse_workers(std::env::var("PERF4SIGHT_WORKERS").ok().as_deref())
+    match parse_workers(std::env::var("PERF4SIGHT_WORKERS").ok().as_deref()) {
+        Ok(n) => n,
+        Err(err) => {
+            static WARN_ONCE: std::sync::Once = std::sync::Once::new();
+            WARN_ONCE.call_once(|| eprintln!("warning: {err}; using auto worker width"));
+            None
+        }
+    }
 }
 
 /// Pure parsing logic behind [`env_workers`], split out for tests
 /// (reading the real env var would race across the parallel test runner).
-fn parse_workers(raw: Option<&str>) -> Option<usize> {
-    raw.and_then(|v| v.trim().parse::<usize>().ok())
-        .filter(|&n| n > 0)
+/// `Ok(None)` means unset (auto width); a set-but-malformed value is a
+/// named error, never a silent fallback.
+fn parse_workers(raw: Option<&str>) -> Result<Option<usize>, String> {
+    let Some(raw) = raw else { return Ok(None) };
+    match raw.trim().parse::<usize>() {
+        Ok(0) => Err("PERF4SIGHT_WORKERS must be a positive integer, got 0".to_string()),
+        Ok(n) => Ok(Some(n)),
+        Err(_) => Err(format!(
+            "PERF4SIGHT_WORKERS must be a positive integer, got {raw:?}"
+        )),
+    }
 }
 
 /// Profile a network per the job spec: for every (level, bs), prune,
@@ -291,13 +309,18 @@ mod tests {
 
     #[test]
     fn worker_env_parsing_and_clamp() {
-        // Override applies when parseable and positive; junk and zero
-        // fall back to auto.
-        assert_eq!(parse_workers(Some("2")), Some(2));
-        assert_eq!(parse_workers(Some(" 3 ")), Some(3));
-        assert_eq!(parse_workers(Some("zippy")), None);
-        assert_eq!(parse_workers(Some("0")), None);
-        assert_eq!(parse_workers(None), None);
+        // Override applies when parseable and positive; unset means auto.
+        assert_eq!(parse_workers(Some("2")), Ok(Some(2)));
+        assert_eq!(parse_workers(Some(" 3 ")), Ok(Some(3)));
+        assert_eq!(parse_workers(None), Ok(None));
+        // Junk and zero are *named* errors, not a silent fallback.
+        let junk = parse_workers(Some("zippy")).unwrap_err();
+        assert!(junk.contains("PERF4SIGHT_WORKERS"), "{junk}");
+        assert!(junk.contains("zippy"), "{junk}");
+        let zero = parse_workers(Some("0")).unwrap_err();
+        assert!(zero.contains("positive"), "{zero}");
+        assert!(parse_workers(Some("-1")).is_err());
+        assert!(parse_workers(Some("")).is_err());
         // worker_width clamps to [1, cap] whatever the env says.
         assert!(worker_width(4) <= 4);
         assert_eq!(worker_width(0), 1);

@@ -1,0 +1,381 @@
+//! Async multi-tenant prediction service — cross-client batch coalescing
+//! over one shared [`PredictionEngine`].
+//!
+//! perf4sight's value is rapid identification of trainable
+//! configurations, which in practice means many concurrent consumers —
+//! evolutionary searches, CLI sweeps, campaign fits — hammering the same
+//! Γ/γ/φ predictors. The engine (PR 2/5) is batched and cached but
+//! strictly single-caller; this module is the serving seam that lets N
+//! clients share it without forfeiting batching or cache reuse:
+//!
+//! ```text
+//!  Tenant 0 ─┐  submit(generation)            ┌──────────────────────┐
+//!  Tenant 1 ─┼─▶ BoundedQueue ─▶ serving loop │ coalesce requests    │
+//!    …       │   (admission     (one thread)  │ dedup in-flight fps  │
+//!  Tenant N ─┘    control)                    │ 3 batched traversals │
+//!      ▲                                      │ shared memo cache    │
+//!      └────────── per-request reply ◀────────┴──────────────────────┘
+//! ```
+//!
+//! Each client holds a [`Tenant`] handle and submits whole generations of
+//! [`SubnetConfig`] queries; [`Tenant`] implements
+//! [`GenerationOracle`], so [`evolutionary_search`](crate::ofa) runs
+//! **unmodified** on top of the service. The serving loop drains the
+//! bounded queue (a full queue blocks `submit` — backpressure), coalesces
+//! everything queued into one engine generation, and the engine's
+//! batch-local dedup then collapses identical in-flight candidates
+//! *across tenants* into a single evaluation before the shortfall-sized
+//! [`predict_rows_flat`](crate::engine::CompiledForest::predict_rows_flat)
+//! batches run. Results fan back out per request, and per-tenant
+//! hit/miss/latency counters ([`TenantStats`]) are kept from the engine's
+//! traced outcomes.
+//!
+//! **Bit-identity guarantee.** Every query is answered by the same pure
+//! per-candidate computation whatever batch it lands in, so N concurrent
+//! searches through one service return results byte-identical to N serial
+//! single-caller runs ([`EsResult::deterministic_bytes`](crate::ofa::EsResult::deterministic_bytes);
+//! asserted for N ∈ {1, 4, 8} by `rust/tests/serve_identity.rs` and by
+//! CI's serve-smoke job). To keep that guarantee, [`Tenant::cache_stats`]
+//! deliberately reports `None`: the shared cache's counters depend on
+//! co-tenant traffic, and must not leak into a tenant's `EsResult`.
+
+pub mod stats;
+
+pub use stats::TenantStats;
+
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::engine::{CacheStats, PredictionEngine, QueryOutcome};
+use crate::ofa::{CandidateEval, GenerationOracle, SubnetConfig};
+use crate::util::queue::BoundedQueue;
+
+/// Serving-loop knobs.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Generations that may wait in the queue before `submit` blocks
+    /// (admission control). Tenants block on their reply between
+    /// submissions, so the backlog is also bounded by the tenant count.
+    pub queue_capacity: usize,
+    /// Most requests coalesced into one engine generation per drain.
+    pub max_coalesce: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            queue_capacity: 64,
+            max_coalesce: 16,
+        }
+    }
+}
+
+/// One queued generation: who asked, what, when, and where the answer
+/// goes.
+struct Request {
+    tenant: usize,
+    candidates: Vec<SubnetConfig>,
+    enqueued: Instant,
+    reply: mpsc::Sender<Vec<CandidateEval>>,
+}
+
+/// State shared between the service handle, its tenants and the serving
+/// loop.
+struct ServiceShared {
+    queue: BoundedQueue<Request>,
+    stats: Mutex<Vec<TenantStats>>,
+}
+
+/// Handle to a running prediction service: spawns the serving loop,
+/// mints [`Tenant`]s, reports stats, and joins the loop on
+/// shutdown/drop. See module docs.
+pub struct PredictionService {
+    shared: Arc<ServiceShared>,
+    /// Stats-only fork of the served engine (same shared cache).
+    probe: PredictionEngine,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl PredictionService {
+    /// Move `engine` into a freshly spawned serving loop. The engine's
+    /// cache (including anything already memoised) becomes the service's
+    /// shared cache.
+    pub fn spawn(engine: PredictionEngine, cfg: &ServeConfig) -> PredictionService {
+        let shared = Arc::new(ServiceShared {
+            queue: BoundedQueue::new(cfg.queue_capacity),
+            stats: Mutex::new(Vec::new()),
+        });
+        let probe = engine.fork();
+        let loop_shared = Arc::clone(&shared);
+        let max_coalesce = cfg.max_coalesce.max(1);
+        let worker = std::thread::Builder::new()
+            .name("p4s-serve".into())
+            .spawn(move || serve_loop(engine, loop_shared, max_coalesce))
+            .expect("spawning the serving loop");
+        PredictionService {
+            shared,
+            probe,
+            worker: Some(worker),
+        }
+    }
+
+    /// Mint a tenant handle. Tenants are cheap; mint one per concurrent
+    /// client (ids are dense and stable, in mint order).
+    pub fn tenant(&self) -> Tenant {
+        let mut stats = self.shared.stats.lock().unwrap();
+        stats.push(TenantStats::default());
+        Tenant {
+            shared: Arc::clone(&self.shared),
+            id: stats.len() - 1,
+        }
+    }
+
+    /// Snapshot of every tenant's counters, indexed by tenant id.
+    pub fn tenant_stats(&self) -> Vec<TenantStats> {
+        self.shared.stats.lock().unwrap().clone()
+    }
+
+    /// Counters of the shared engine cache (aggregate over all tenants).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.probe.stats()
+    }
+
+    /// Generations currently waiting in the queue (diagnostics).
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.len()
+    }
+
+    /// Stop admitting work, serve the backlog, join the loop, and return
+    /// the final per-tenant counters. Call after every client finished —
+    /// a tenant submitting afterwards panics (its service is gone).
+    pub fn shutdown(mut self) -> Vec<TenantStats> {
+        self.close_and_join();
+        self.tenant_stats()
+    }
+
+    fn close_and_join(&mut self) {
+        self.shared.queue.close();
+        if let Some(handle) = self.worker.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for PredictionService {
+    fn drop(&mut self) {
+        self.close_and_join();
+    }
+}
+
+/// A client handle onto a [`PredictionService`]. Implements
+/// [`GenerationOracle`], so an `evolutionary_search` takes a `&mut
+/// Tenant` exactly where it would take a `&mut PredictionEngine`.
+pub struct Tenant {
+    shared: Arc<ServiceShared>,
+    id: usize,
+}
+
+impl Tenant {
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// Submit one generation and block until the serving loop answers.
+    /// Blocks earlier on a full queue (admission control). Panics if the
+    /// service was shut down while this tenant is still active — that is
+    /// a lifecycle bug, not a recoverable condition.
+    pub fn submit(&self, candidates: &[SubnetConfig]) -> Vec<CandidateEval> {
+        if candidates.is_empty() {
+            return Vec::new();
+        }
+        let (reply, answer) = mpsc::channel();
+        let request = Request {
+            tenant: self.id,
+            candidates: candidates.to_vec(),
+            enqueued: Instant::now(),
+            reply,
+        };
+        if self.shared.queue.push(request).is_err() {
+            panic!("prediction service shut down with tenant {} still active", self.id);
+        }
+        answer.recv().expect("serving loop dropped a reply channel")
+    }
+
+    /// This tenant's counters so far.
+    pub fn stats(&self) -> TenantStats {
+        self.shared.stats.lock().unwrap()[self.id]
+    }
+}
+
+impl GenerationOracle for Tenant {
+    fn evaluate_generation(&mut self, candidates: &[SubnetConfig]) -> Vec<CandidateEval> {
+        self.submit(candidates)
+    }
+
+    /// Deliberately `None`: the shared cache's counters depend on
+    /// co-tenant traffic, and reporting them here would make a tenant's
+    /// `EsResult` (its `cache`/`unique_evaluations` fields) depend on
+    /// scheduling — breaking the serial-vs-concurrent bit-identity
+    /// guarantee. Per-tenant serving counters live in
+    /// [`Tenant::stats`]; the aggregate cache view in
+    /// [`PredictionService::cache_stats`].
+    fn cache_stats(&self) -> Option<CacheStats> {
+        None
+    }
+}
+
+/// The scheduler: drain everything queued (blocking for the first
+/// request), coalesce into one engine generation, fan results back out,
+/// attribute outcomes to tenants. Exits when the queue is closed and
+/// empty.
+fn serve_loop(mut engine: PredictionEngine, shared: Arc<ServiceShared>, max_coalesce: usize) {
+    loop {
+        let requests = shared.queue.drain(max_coalesce);
+        if requests.is_empty() {
+            break;
+        }
+        let total: usize = requests.iter().map(|r| r.candidates.len()).sum();
+        let mut coalesced = Vec::with_capacity(total);
+        for r in &requests {
+            coalesced.extend_from_slice(&r.candidates);
+        }
+        // One shared-cache transaction for the whole cross-tenant batch:
+        // in-flight duplicates collapse to one evaluation, misses run in
+        // three shortfall-sized batched traversals.
+        let (evals, outcomes) = engine.evaluate_generation_traced(&coalesced);
+        let served = Instant::now();
+        let mut stats = shared.stats.lock().unwrap();
+        let mut start = 0usize;
+        for r in requests {
+            let end = start + r.candidates.len();
+            let t = &mut stats[r.tenant];
+            t.generations += 1;
+            t.queries += r.candidates.len() as u64;
+            for outcome in &outcomes[start..end] {
+                match outcome {
+                    QueryOutcome::CacheHit => t.cache_hits += 1,
+                    QueryOutcome::BatchHit => t.batch_hits += 1,
+                    QueryOutcome::Evaluated => t.evaluated += 1,
+                }
+            }
+            let wait_ns = served.duration_since(r.enqueued).as_nanos() as u64;
+            t.wait_ns += wait_ns;
+            t.max_wait_ns = t.max_wait_ns.max(wait_ns);
+            // A tenant that vanished mid-request must not stop the loop;
+            // the send result is deliberately ignored.
+            let _ = r.reply.send(evals[start..end].to_vec());
+            start = end;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::NUM_FEATURES;
+    use crate::forest::{Forest, ForestConfig};
+    use crate::util::rng::Pcg64;
+
+    /// Engine over one synthetic forest (serving-layer behaviour only;
+    /// model quality is tested in `experiments::ofa_models`).
+    fn tiny_engine() -> PredictionEngine {
+        let mut rng = Pcg64::new(0x5e17e);
+        let x: Vec<Vec<f64>> = (0..40)
+            .map(|_| (0..NUM_FEATURES).map(|_| rng.uniform(0.0, 1e6)).collect())
+            .collect();
+        let y: Vec<f64> = x.iter().map(|r| r[1] / 1e3 + r[3] / 1e4 + 100.0).collect();
+        let f = Forest::fit(
+            &x,
+            &y,
+            &ForestConfig {
+                n_trees: 8,
+                max_depth: 6,
+                ..Default::default()
+            },
+        );
+        PredictionEngine::new(&f, &f, &f)
+    }
+
+    fn sample_generation(seed: u64, n: usize) -> Vec<SubnetConfig> {
+        let mut rng = Pcg64::new(seed);
+        (0..n).map(|_| SubnetConfig::sample(&mut rng)).collect()
+    }
+
+    #[test]
+    fn service_answers_match_direct_engine_bitwise() {
+        let engine = tiny_engine();
+        // Independent cache-less engine — not a fork, which would share
+        // (and here disable) the service's cache.
+        let mut reference = tiny_engine().with_cache_capacity(0);
+        let generation = sample_generation(1, 24);
+        let expected = reference.evaluate_generation(&generation);
+        let service = PredictionService::spawn(engine, &ServeConfig::default());
+        let mut tenant = service.tenant();
+        let got = tenant.evaluate_generation(&generation);
+        assert_eq!(expected, got, "served answers must be bit-identical");
+        assert!(tenant.cache_stats().is_none(), "tenants must not leak cache stats");
+        service.shutdown();
+    }
+
+    #[test]
+    fn per_tenant_stats_account_every_query() {
+        let service = PredictionService::spawn(tiny_engine(), &ServeConfig::default());
+        let a = service.tenant();
+        let b = service.tenant();
+        let generation = sample_generation(2, 16);
+        a.submit(&generation);
+        // Same workload again from the other tenant: answered entirely
+        // without evaluation (cross-tenant cache sharing).
+        b.submit(&generation);
+        let stats = service.shutdown();
+        assert_eq!(stats.len(), 2);
+        let (sa, sb) = (stats[0], stats[1]);
+        assert_eq!(sa.queries, 16);
+        assert_eq!(sa.hits() + sa.evaluated, sa.queries);
+        assert_eq!(sb.queries, 16);
+        assert_eq!(sb.evaluated, 0, "tenant b rides tenant a's cache");
+        assert_eq!(sb.hits(), 16);
+        assert!(sa.generations == 1 && sb.generations == 1);
+        assert!(sa.max_wait_ns > 0 && sb.max_wait_ns > 0);
+    }
+
+    #[test]
+    fn duplicates_within_one_submission_are_batch_hits() {
+        let service = PredictionService::spawn(tiny_engine(), &ServeConfig::default());
+        let tenant = service.tenant();
+        let mut generation = sample_generation(3, 8);
+        let dup = generation[0];
+        generation.push(dup);
+        let evals = tenant.submit(&generation);
+        assert_eq!(evals[0], evals[8], "duplicate answered from the in-flight batch");
+        let s = tenant.stats();
+        assert_eq!(s.queries, 9);
+        assert_eq!(s.batch_hits, 1);
+        assert_eq!(s.evaluated, 8);
+        service.shutdown();
+    }
+
+    #[test]
+    fn empty_submission_is_fine() {
+        let service = PredictionService::spawn(tiny_engine(), &ServeConfig::default());
+        let tenant = service.tenant();
+        assert!(tenant.submit(&[]).is_empty());
+        let stats = service.shutdown();
+        assert_eq!(stats[0], TenantStats::default());
+    }
+
+    #[test]
+    fn aggregate_cache_stats_visible_through_service() {
+        let service = PredictionService::spawn(tiny_engine(), &ServeConfig::default());
+        let tenant = service.tenant();
+        let generation = sample_generation(4, 12);
+        tenant.submit(&generation);
+        tenant.submit(&generation);
+        let cs = service.cache_stats();
+        assert_eq!(cs.requests(), 24);
+        assert_eq!(cs.misses, 12);
+        assert_eq!(cs.hits, 12);
+        service.shutdown();
+    }
+}

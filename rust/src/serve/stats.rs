@@ -1,0 +1,107 @@
+//! Per-tenant serving statistics, kept by the serving loop from the
+//! engine's traced query outcomes (see
+//! [`PredictionEngine::evaluate_generation_traced`](crate::engine::PredictionEngine::evaluate_generation_traced)).
+//!
+//! The shared cache's own [`CacheStats`](crate::engine::CacheStats)
+//! aggregate over *every* client; these counters attribute each query to
+//! the tenant that submitted it, which is what capacity planning for a
+//! multi-tenant deployment needs — who is hot, who rides whose cache, and
+//! how long requests sit in the queue.
+
+/// Counters for one [`Tenant`](crate::serve::Tenant) handle.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TenantStats {
+    /// Generations (submit calls) served.
+    pub generations: u64,
+    /// Candidate queries submitted across all generations.
+    pub queries: u64,
+    /// Queries answered from the shared fingerprint memo.
+    pub cache_hits: u64,
+    /// Queries answered from an in-flight duplicate in the same coalesced
+    /// batch — possibly one submitted by a *different* tenant.
+    pub batch_hits: u64,
+    /// Queries that ran the batched predictors (cache misses).
+    pub evaluated: u64,
+    /// Total submit→served latency across generations, nanoseconds.
+    pub wait_ns: u64,
+    /// Worst single-generation submit→served latency, nanoseconds.
+    pub max_wait_ns: u64,
+}
+
+impl TenantStats {
+    /// Queries answered without running the predictors.
+    pub fn hits(&self) -> u64 {
+        self.cache_hits + self.batch_hits
+    }
+
+    /// Fraction of queries answered without evaluation, in [0, 1].
+    pub fn hit_rate(&self) -> f64 {
+        if self.queries == 0 {
+            0.0
+        } else {
+            self.hits() as f64 / self.queries as f64
+        }
+    }
+
+    /// Mean submit→served latency per generation, nanoseconds.
+    pub fn mean_wait_ns(&self) -> f64 {
+        if self.generations == 0 {
+            0.0
+        } else {
+            self.wait_ns as f64 / self.generations as f64
+        }
+    }
+
+    /// Fleet totals across tenants (`max_wait_ns` is the overall worst).
+    pub fn aggregate(all: &[TenantStats]) -> TenantStats {
+        let mut sum = TenantStats::default();
+        for t in all {
+            sum.generations += t.generations;
+            sum.queries += t.queries;
+            sum.cache_hits += t.cache_hits;
+            sum.batch_hits += t.batch_hits;
+            sum.evaluated += t.evaluated;
+            sum.wait_ns += t.wait_ns;
+            sum.max_wait_ns = sum.max_wait_ns.max(t.max_wait_ns);
+        }
+        sum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates_and_aggregation() {
+        let a = TenantStats {
+            generations: 2,
+            queries: 10,
+            cache_hits: 4,
+            batch_hits: 2,
+            evaluated: 4,
+            wait_ns: 2_000,
+            max_wait_ns: 1_500,
+        };
+        let b = TenantStats {
+            generations: 1,
+            queries: 5,
+            cache_hits: 0,
+            batch_hits: 0,
+            evaluated: 5,
+            wait_ns: 700,
+            max_wait_ns: 700,
+        };
+        assert_eq!(a.hits(), 6);
+        assert!((a.hit_rate() - 0.6).abs() < 1e-12);
+        assert!((a.mean_wait_ns() - 1_000.0).abs() < 1e-12);
+        let sum = TenantStats::aggregate(&[a, b]);
+        assert_eq!(sum.generations, 3);
+        assert_eq!(sum.queries, 15);
+        assert_eq!(sum.evaluated, 9);
+        assert_eq!(sum.max_wait_ns, 1_500);
+        let zero = TenantStats::default();
+        assert_eq!(zero.hit_rate(), 0.0);
+        assert_eq!(zero.mean_wait_ns(), 0.0);
+    }
+}

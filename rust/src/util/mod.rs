@@ -8,5 +8,6 @@ pub mod fingerprint;
 pub mod json;
 pub mod pool;
 pub mod prop;
+pub mod queue;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,163 @@
+//! Bounded blocking submission queue — the channel plumbing of the
+//! serving layer ([`crate::serve`]).
+//!
+//! `std::sync::mpsc` cannot express the scheduler's two needs in one
+//! primitive: a *blocking* bounded push (admission control — a producer
+//! that outruns the consumer waits instead of growing the queue without
+//! bound) and an atomic *drain* of the whole backlog (the serving loop
+//! coalesces every queued request into one batched evaluation). This is
+//! a dependency-free Mutex+Condvar implementation of exactly those two
+//! operations, multi-producer / single-consumer by convention.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded MPSC queue with blocking `push` (backpressure) and batch
+/// `drain` (coalescing). See module docs.
+pub struct BoundedQueue<T> {
+    capacity: usize,
+    state: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+impl<T> BoundedQueue<T> {
+    /// A queue admitting at most `capacity` items (clamped to ≥ 1).
+    pub fn new(capacity: usize) -> BoundedQueue<T> {
+        BoundedQueue {
+            capacity: capacity.max(1),
+            state: Mutex::new(State {
+                items: VecDeque::new(),
+                closed: false,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Queued items right now (racy by nature; diagnostics only).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enqueue `item`, blocking while the queue is full — the
+    /// backpressure that keeps producers from outrunning the consumer.
+    /// Returns the item back if the queue was closed (then or while
+    /// waiting), so the caller can report the rejection.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if s.closed {
+                return Err(item);
+            }
+            if s.items.len() < self.capacity {
+                s.items.push_back(item);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            s = self.not_full.wait(s).unwrap();
+        }
+    }
+
+    /// Dequeue up to `max` items, blocking until at least one is
+    /// available. Returns an empty vec only when the queue is closed
+    /// *and* fully drained — the consumer's termination signal. Items
+    /// come out in push order.
+    pub fn drain(&self, max: usize) -> Vec<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if !s.items.is_empty() {
+                let take = max.clamp(1, s.items.len());
+                let out: Vec<T> = s.items.drain(..take).collect();
+                self.not_full.notify_all();
+                return out;
+            }
+            if s.closed {
+                return Vec::new();
+            }
+            s = self.not_empty.wait(s).unwrap();
+        }
+    }
+
+    /// Close the queue: pending `push` calls fail, already-queued items
+    /// remain drainable, and `drain` returns empty once the backlog is
+    /// gone.
+    pub fn close(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn push_then_drain_preserves_order() {
+        let q = BoundedQueue::new(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.len(), 5);
+        assert_eq!(q.drain(3), vec![0, 1, 2]);
+        assert_eq!(q.drain(usize::MAX), vec![3, 4]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn full_queue_blocks_push_until_drained() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(0usize).unwrap();
+        let q2 = Arc::clone(&q);
+        let pusher = std::thread::spawn(move || q2.push(1).is_ok());
+        // The pusher must wait on the full queue until we make room.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(q.drain(1), vec![0]);
+        assert!(pusher.join().unwrap());
+        assert_eq!(q.drain(1), vec![1]);
+    }
+
+    #[test]
+    fn close_rejects_pushes_but_drains_backlog() {
+        let q = BoundedQueue::new(4);
+        q.push(7).unwrap();
+        q.close();
+        assert_eq!(q.push(8), Err(8));
+        assert_eq!(q.drain(4), vec![7]);
+        assert!(q.drain(4).is_empty(), "closed and empty terminates drain");
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumer() {
+        let q = Arc::new(BoundedQueue::<usize>::new(4));
+        let q2 = Arc::clone(&q);
+        let consumer = std::thread::spawn(move || q2.drain(4));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert!(consumer.join().unwrap().is_empty());
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped() {
+        let q = BoundedQueue::new(0);
+        assert_eq!(q.capacity(), 1);
+        q.push(1).unwrap();
+        assert_eq!(q.drain(1), vec![1]);
+    }
+}

@@ -80,6 +80,20 @@ fn errors_are_clean_not_panics() {
 }
 
 #[test]
+fn served_search_verifies_against_serial_via_cli() {
+    // Two concurrent searches as tenants of one shared prediction
+    // service; --verify-serial makes the command itself fail unless each
+    // result is byte-identical to a serial single-caller run.
+    run(
+        "search --tenants 2 --verify-serial --subnets 8 --population 10 \
+         --iterations 3 --seed 7 --queue-capacity 8 --coalesce 4",
+    )
+    .unwrap();
+    // Invalid tenant counts are rejected before the model fit.
+    assert!(run("search --tenants 0 --subnets 8").is_err());
+}
+
+#[test]
 fn quick_experiment_via_cli() {
     // The fastest experiment end-to-end through the CLI dispatch.
     run("experiment ablation --network squeezenet --seed 5").unwrap();

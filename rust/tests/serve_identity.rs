@@ -1,0 +1,237 @@
+//! The serving layer's headline guarantee (see `rust/src/serve/`): N
+//! concurrent evolutionary searches running as tenants of one shared
+//! [`PredictionService`] produce results **byte-identical** to N serial
+//! single-caller runs — whatever cross-tenant batch coalescing, in-flight
+//! deduplication and cache sharing happened along the way. Plus the
+//! cache-counter exactness the coalescing relies on: under concurrent
+//! forked handles, `hits + misses` always equals the queries submitted
+//! and counters only ever move forward.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use perf4sight::engine::{CacheStats, PredictionEngine};
+use perf4sight::features::NUM_FEATURES;
+use perf4sight::forest::{Forest, ForestConfig};
+use perf4sight::ofa::{
+    evolutionary_search, Constraints, EsConfig, GenerationOracle, SubnetConfig, Subset,
+};
+use perf4sight::serve::{PredictionService, ServeConfig, Tenant, TenantStats};
+use perf4sight::util::rng::Pcg64;
+
+/// One synthetic forest serving all three attribute roles — the serving
+/// layer is attribute-agnostic; model quality is tested elsewhere.
+fn tiny_forest() -> Forest {
+    let mut rng = Pcg64::new(0x1de27);
+    let x: Vec<Vec<f64>> = (0..40)
+        .map(|_| (0..NUM_FEATURES).map(|_| rng.uniform(0.0, 1e6)).collect())
+        .collect();
+    let y: Vec<f64> = x.iter().map(|r| r[1] / 1e3 + r[3] / 1e4 + 100.0).collect();
+    Forest::fit(
+        &x,
+        &y,
+        &ForestConfig {
+            n_trees: 8,
+            max_depth: 6,
+            ..Default::default()
+        },
+    )
+}
+
+fn engine_of(f: &Forest) -> PredictionEngine {
+    PredictionEngine::new(f, f, f)
+}
+
+fn small_es(seed: u64) -> EsConfig {
+    EsConfig {
+        population: 10,
+        iterations: 4,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// Serial references on fresh engines vs N concurrent tenants of one
+/// service, compared through `EsResult::deterministic_bytes`.
+fn assert_identity_for(n: usize) {
+    let forest = tiny_forest();
+    let cons = Constraints::unconstrained();
+    let base_seed = 0x51d;
+    let serial: Vec<Vec<u8>> = (0..n)
+        .map(|i| {
+            let mut engine = engine_of(&forest);
+            let es = small_es(base_seed + i as u64);
+            evolutionary_search(&cons, &es, Subset::City, &mut engine).deterministic_bytes()
+        })
+        .collect();
+    // Deliberately awkward serving knobs: a tiny queue plus a coalesce
+    // window that never fits all tenants forces generations to split and
+    // mix across drains.
+    let serve_cfg = ServeConfig {
+        queue_capacity: 2,
+        max_coalesce: 3,
+    };
+    let service = PredictionService::spawn(engine_of(&forest), &serve_cfg);
+    let tenants: Vec<Tenant> = (0..n).map(|_| service.tenant()).collect();
+    let served: Vec<Vec<u8>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = tenants
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut tenant)| {
+                let es = small_es(base_seed + i as u64);
+                scope.spawn(move || {
+                    let r = evolutionary_search(&cons, &es, Subset::City, &mut tenant);
+                    r.deterministic_bytes()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("search thread panicked"))
+            .collect()
+    });
+    let stats = service.shutdown();
+    assert_eq!(serial, served, "served results must be byte-identical to serial runs");
+    assert_eq!(stats.len(), n);
+    for s in &stats {
+        assert!(s.queries > 0);
+        assert_eq!(s.hits() + s.evaluated, s.queries);
+    }
+}
+
+#[test]
+fn one_tenant_is_bit_identical_to_serial() {
+    assert_identity_for(1);
+}
+
+#[test]
+fn four_tenants_are_bit_identical_to_serial() {
+    assert_identity_for(4);
+}
+
+#[test]
+fn eight_tenants_are_bit_identical_to_serial() {
+    assert_identity_for(8);
+}
+
+#[test]
+fn overlapping_tenants_share_every_evaluation() {
+    // Four tenants run the *same* search (same seed): whatever the
+    // interleaving, the shared cache + in-flight dedup must evaluate each
+    // distinct candidate exactly once across the whole fleet.
+    let forest = tiny_forest();
+    let cons = Constraints::unconstrained();
+    let es = small_es(0xabc);
+    let mut reference = engine_of(&forest);
+    let serial = evolutionary_search(&cons, &es, Subset::City, &mut reference);
+    let service = PredictionService::spawn(engine_of(&forest), &ServeConfig::default());
+    let tenants: Vec<Tenant> = (0..4).map(|_| service.tenant()).collect();
+    let served: Vec<Vec<u8>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = tenants
+            .into_iter()
+            .map(|mut tenant| {
+                let es = es.clone();
+                scope.spawn(move || {
+                    let r = evolutionary_search(&cons, &es, Subset::City, &mut tenant);
+                    r.deterministic_bytes()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("search thread panicked"))
+            .collect()
+    });
+    for bytes in &served {
+        assert_eq!(*bytes, serial.deterministic_bytes());
+    }
+    let stats = service.shutdown();
+    let agg = TenantStats::aggregate(&stats);
+    assert_eq!(agg.queries, 4 * serial.samples as u64);
+    assert_eq!(
+        agg.evaluated,
+        serial.unique_evaluations as u64,
+        "each distinct candidate evaluated once across all four tenants"
+    );
+}
+
+#[test]
+fn cache_stats_exact_and_monotone_under_concurrent_forks() {
+    const THREADS: usize = 6;
+    const GENERATIONS: usize = 12;
+    const GEN_SIZE: usize = 10;
+    let total_queries = (THREADS * GENERATIONS * GEN_SIZE) as u64;
+    // Small capacity so the workload (hundreds of mostly-distinct
+    // configs) must evict.
+    let forest = tiny_forest();
+    let engine = engine_of(&forest).with_cache_capacity(32);
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let sampler_engine = engine.fork();
+        let stop_ref = &stop;
+        scope.spawn(move || {
+            let mut last = CacheStats::default();
+            while !stop_ref.load(Ordering::Relaxed) {
+                let s = sampler_engine.stats();
+                assert!(s.hits >= last.hits, "hits went backwards");
+                assert!(s.misses >= last.misses, "misses went backwards");
+                assert!(s.evictions >= last.evictions, "evictions went backwards");
+                assert!(
+                    s.hits + s.misses <= total_queries,
+                    "counted more queries than were submitted"
+                );
+                last = s;
+                std::thread::yield_now();
+            }
+        });
+        let workers: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let mut eng = engine.fork();
+                scope.spawn(move || {
+                    let mut rng = Pcg64::new(0xbeef + t as u64);
+                    for _ in 0..GENERATIONS {
+                        let generation: Vec<SubnetConfig> =
+                            (0..GEN_SIZE).map(|_| SubnetConfig::sample(&mut rng)).collect();
+                        let evals = eng.evaluate_generation(&generation);
+                        assert_eq!(evals.len(), GEN_SIZE);
+                    }
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().expect("worker panicked");
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+    let s = engine.stats();
+    assert_eq!(
+        s.hits + s.misses,
+        total_queries,
+        "every submitted query accounted as exactly one hit or miss"
+    );
+    assert!(s.evictions > 0, "capacity 32 must evict under this workload");
+    assert!(s.entries <= 32);
+}
+
+#[test]
+fn tenant_stats_attribute_cross_tenant_traffic() {
+    // Sequential submissions (deterministic drains): tenant a evaluates,
+    // tenant b rides the shared cache entirely.
+    let forest = tiny_forest();
+    let service = PredictionService::spawn(engine_of(&forest), &ServeConfig::default());
+    let a = service.tenant();
+    let b = service.tenant();
+    let mut rng = Pcg64::new(9);
+    let generation: Vec<SubnetConfig> = (0..20).map(|_| SubnetConfig::sample(&mut rng)).collect();
+    a.submit(&generation);
+    b.submit(&generation);
+    let sa = a.stats();
+    let sb = b.stats();
+    assert_eq!(sa.queries, 20);
+    assert!(sa.evaluated > 0);
+    assert_eq!(sb.queries, 20);
+    assert_eq!(sb.evaluated, 0, "tenant b must be served from tenant a's work");
+    assert_eq!(sb.hits(), 20);
+    let cache = service.cache_stats();
+    assert_eq!(cache.hits + cache.misses, 40);
+    service.shutdown();
+}
