@@ -67,8 +67,10 @@ fn main() -> anyhow::Result<()> {
 
     println!("\n=== 2. fit Γ/Φ forests ===");
     let cfg = export_forest_config();
-    let fg = Forest::fit(&train.x(), &train.y_gamma(), &cfg);
-    let fp = Forest::fit(&train.x(), &train.y_phi(), &cfg);
+    // Presort the merged campaign once; both target fits share the matrix.
+    let m = train.train_matrix().unwrap();
+    let fg = Forest::fit_matrix(&m, &train.y_gamma(), &cfg).unwrap();
+    let fp = Forest::fit_matrix(&m, &train.y_phi(), &cfg).unwrap();
 
     println!("\n=== 3. held-out evaluation ===");
     for (name, test) in [("resnet18/rand", &test_a), ("squeezenet/L1", &test_b)] {

@@ -26,10 +26,12 @@ fn main() {
     let dataset = profile(&sim, &ProfileJob::new("resnet18", &resnet18));
     println!("  {} datapoints (5 pruning levels × 25 batch sizes)", dataset.len());
 
-    // 3. Fit the Γ and Φ random forests on the analytical features.
+    // 3. Fit the Γ and Φ random forests on the analytical features. The
+    //    presorted train matrix is built once and shared by both fits.
     let cfg = export_forest_config();
-    let gamma_model = Forest::fit(&dataset.x(), &dataset.y_gamma(), &cfg);
-    let phi_model = Forest::fit(&dataset.x(), &dataset.y_phi(), &cfg);
+    let m = dataset.train_matrix().unwrap();
+    let gamma_model = Forest::fit_matrix(&m, &dataset.y_gamma(), &cfg).unwrap();
+    let phi_model = Forest::fit_matrix(&m, &dataset.y_phi(), &cfg).unwrap();
 
     // 4. Predict an *unseen* topology: 40% L1-norm pruning, batch size 48.
     //    One compiled NetworkPlan serves both the analytical features and

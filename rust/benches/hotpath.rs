@@ -12,7 +12,7 @@ use perf4sight::campaign::{self, CampaignSpec};
 use perf4sight::device::Simulator;
 use perf4sight::engine::PredictionEngine;
 use perf4sight::features::{forward_masked, network_features, network_features_from_plan};
-use perf4sight::forest::Forest;
+use perf4sight::forest::{Forest, TrainMatrix};
 use perf4sight::ir::{GraphArena, NetworkPlan, PlanBuffers, PlanView};
 use perf4sight::models;
 use perf4sight::ofa::{
@@ -96,23 +96,60 @@ fn main() {
         ));
     });
 
-    // Fit a representative forest for prediction benchmarks.
-    let train = profile(&sim, &ProfileJob::new("resnet50", &g50));
+    // Fit a representative forest for prediction benchmarks — and measure
+    // model fitting itself at zoo scale: two networks' profiles merged
+    // (250 points × 57 features) under the export config (64 trees,
+    // depth ≤ 14), the shape `cmd_fit` and the experiments actually run.
+    let mut train = profile(&sim, &ProfileJob::new("resnet50", &g50));
+    train.extend(profile(&sim, &ProfileJob::new("mobilenet_v2", &gmb)));
     let cfg = perf4sight::runtime::forest_exec::export_forest_config();
     let train_x = train.x();
     let train_y = train.y_gamma();
-    let forest = Forest::fit(&train_x, &train_y, &cfg);
+    let forest = Forest::fit(&train_x, &train_y, &cfg).unwrap();
     let row = network_features(&g50, 32).unwrap();
 
-    section("forest fitting — parallel vs sequential (64 trees, 125 points)");
+    section("model fitting — presorted-column fast path vs per-node-sort reference");
 
-    bench("Forest::fit (parallel, scoped threads)", 1500, || {
-        std::hint::black_box(Forest::fit(&train_x, &train_y, &cfg));
-    });
+    // Bit-identity sanity before timing anything: both fast entry points
+    // must equal the seed algorithm (full oracle: tests/fit_equivalence.rs).
+    {
+        let reference = Forest::fit_reference(&train_x, &train_y, &cfg).unwrap();
+        let seq = Forest::fit_sequential(&train_x, &train_y, &cfg).unwrap();
+        assert!(
+            reference.trees == forest.trees && seq.trees == forest.trees,
+            "fast path diverged from the reference — fix before trusting timings"
+        );
+    }
 
-    bench("Forest::fit_sequential (reference)", 1500, || {
-        std::hint::black_box(Forest::fit_sequential(&train_x, &train_y, &cfg));
+    let fit_reference = bench("Forest::fit_reference (seed per-node sorts)", 2500, || {
+        std::hint::black_box(Forest::fit_reference(&train_x, &train_y, &cfg).unwrap());
     });
+    let fit_fast_seq = bench("Forest::fit_sequential (TrainMatrix fast path)", 2500, || {
+        std::hint::black_box(Forest::fit_sequential(&train_x, &train_y, &cfg).unwrap());
+    });
+    let fit_fast_par = bench("Forest::fit (fast path, scoped threads)", 2500, || {
+        std::hint::black_box(Forest::fit(&train_x, &train_y, &cfg).unwrap());
+    });
+    // The presort is paid once per *dataset*, not per fit: refitting a
+    // second target from the prebuilt matrix skips it entirely (the Γ+Φ
+    // pattern in cmd_fit and the experiments).
+    let matrix = TrainMatrix::from_rows(&train_x).unwrap();
+    let fit_presort = bench("TrainMatrix::from_rows (presort, once per dataset)", 600, || {
+        std::hint::black_box(TrainMatrix::from_rows(&train_x).unwrap());
+    });
+    let fit_shared = bench("Forest::fit_matrix_sequential (prebuilt matrix)", 2500, || {
+        std::hint::black_box(Forest::fit_matrix_sequential(&matrix, &train_y, &cfg).unwrap());
+    });
+    let fit_seq_speedup = fit_reference.mean_ns / fit_fast_seq.mean_ns;
+    let fit_par_speedup = fit_reference.mean_ns / fit_fast_par.mean_ns;
+    println!(
+        "  -> fit speedup vs reference: sequential {:.2}x, parallel {:.2}x \
+         (presort {:.2} ms; shared-matrix refit {:.2} ms)",
+        fit_seq_speedup,
+        fit_par_speedup,
+        fit_presort.mean_ms(),
+        fit_shared.mean_ms()
+    );
 
     section("forest prediction");
 
@@ -375,7 +412,22 @@ fn main() {
     // regression gate and uploads it as the BENCH_hotpath artifact. To
     // refresh the checked-in repo-root seed, copy it over deliberately.
     let summary = Json::obj(vec![
-        ("schema", Json::Str("perf4sight/hotpath-bench/v2".into())),
+        ("schema", Json::Str("perf4sight/hotpath-bench/v3".into())),
+        (
+            "model_fitting",
+            Json::obj(vec![
+                ("points", Json::Num(train_x.len() as f64)),
+                ("features", Json::Num(train_x[0].len() as f64)),
+                ("trees", Json::Num(cfg.n_trees as f64)),
+                ("reference_ms", Json::Num(fit_reference.mean_ms())),
+                ("fast_sequential_ms", Json::Num(fit_fast_seq.mean_ms())),
+                ("fast_parallel_ms", Json::Num(fit_fast_par.mean_ms())),
+                ("presort_ms", Json::Num(fit_presort.mean_ms())),
+                ("shared_matrix_refit_ms", Json::Num(fit_shared.mean_ms())),
+                ("sequential_speedup", Json::Num(fit_seq_speedup)),
+                ("parallel_speedup", Json::Num(fit_par_speedup)),
+            ]),
+        ),
         (
             "cold_cache_unique_candidates",
             Json::obj(vec![

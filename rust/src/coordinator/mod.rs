@@ -316,7 +316,10 @@ fn cmd_fit(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
         "phi" => ds.y_phi(),
         other => return Err(format!("--target must be gamma|phi, got {other}")),
     };
-    let forest = Forest::fit(&ds.x(), &y, &cfg.forest);
+    // Presort once (column-major + per-feature order), fit from the
+    // borrowed view — no row-major copies of the merged dataset.
+    let m = ds.train_matrix().map_err(|e| e.to_string())?;
+    let forest = Forest::fit_matrix(&m, &y, &cfg.forest).map_err(|e| e.to_string())?;
     let train_err = forest.mape(&ds.x(), &y);
     let out = args.get("out").ok_or("--out required")?;
     if let Some(dir) = Path::new(out).parent() {

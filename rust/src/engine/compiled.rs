@@ -280,7 +280,8 @@ mod tests {
                 n_trees: 24,
                 ..Default::default()
             },
-        );
+        )
+        .unwrap();
         let c = CompiledForest::compile(&f);
         let batched = c.predict_rows(&x);
         assert_eq!(batched.len(), x.len());
@@ -294,7 +295,7 @@ mod tests {
     #[test]
     fn empty_batch_is_fine() {
         let (x, y) = synth(50, 12);
-        let c = CompiledForest::compile(&Forest::fit(&x, &y, &ForestConfig::default()));
+        let c = CompiledForest::compile(&Forest::fit(&x, &y, &ForestConfig::default()).unwrap());
         assert!(c.predict_rows(&[]).is_empty());
         assert!(c.predict_rows_flat(&[]).is_empty());
     }
@@ -309,7 +310,8 @@ mod tests {
                 n_trees: 16,
                 ..Default::default()
             },
-        );
+        )
+        .unwrap();
         let c = CompiledForest::compile(&f);
         // Enough rows to force the multi-worker path in both variants.
         let rows: Vec<Vec<f64>> = (0..600).map(|i| x[i % x.len()].clone()).collect();
@@ -332,7 +334,8 @@ mod tests {
                 n_trees: 10,
                 ..Default::default()
             },
-        );
+        )
+        .unwrap();
         let c = CompiledForest::compile(&f);
         // 1000 rows forces the multi-worker path on any multicore box.
         let rows: Vec<Vec<f64>> = (0..1000).map(|i| x[i % x.len()].clone()).collect();
@@ -353,7 +356,8 @@ mod tests {
                 max_depth: 9,
                 ..Default::default()
             },
-        );
+        )
+        .unwrap();
         let t = CompiledForest::compile(&f).to_tensors();
         for row in x.iter().take(25) {
             let a = f.predict(row);

@@ -352,7 +352,8 @@ mod tests {
                 max_depth: 6,
                 ..Default::default()
             },
-        );
+        )
+        .unwrap();
         PredictionEngine::new(&f, &f, &f).with_cache_capacity(cache_capacity)
     }
 

@@ -8,7 +8,7 @@
 
 use crate::device::Simulator;
 use crate::features::{feature_families, Family, NUM_FEATURES};
-use crate::forest::Forest;
+use crate::forest::{Forest, TrainMatrix};
 use crate::profiler::train_test_split;
 use crate::pruning::Strategy;
 use crate::util::bench_harness::{section, table};
@@ -60,8 +60,10 @@ pub fn run(sim: &Simulator, network: &str, seed: u64) -> AblationReport {
     for (name, family) in cases {
         let xtr = knockout(&train.x(), family);
         let xte = knockout(&test.x(), family);
-        let fg = Forest::fit(&xtr, &train.y_gamma(), &cfg);
-        let fp = Forest::fit(&xtr, &train.y_phi(), &cfg);
+        // One presorted matrix per knockout serves both target fits.
+        let m = TrainMatrix::from_rows(&xtr).expect("finite knockout features");
+        let fg = Forest::fit_matrix(&m, &train.y_gamma(), &cfg).expect("Γ fit");
+        let fp = Forest::fit_matrix(&m, &train.y_phi(), &cfg).expect("Φ fit");
         // Held-out predictions go through the engine's batched layout
         // (bit-identical to the scalar `Forest::mape` path).
         rows.push(AblationRow {

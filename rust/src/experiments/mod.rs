@@ -24,12 +24,14 @@ pub fn experiment_forest_config() -> ForestConfig {
     crate::runtime::forest_exec::export_forest_config()
 }
 
-/// Fit the paper's two models (Γ and Φ) on a profiled dataset.
+/// Fit the paper's two models (Γ and Φ) on a profiled dataset. The
+/// presorted [`TrainMatrix`](crate::forest::TrainMatrix) is built once and
+/// shared by both fits.
 pub fn fit_gamma_phi(train: &Dataset) -> (Forest, Forest) {
     let cfg = experiment_forest_config();
-    let x = train.x();
-    let fg = Forest::fit(&x, &train.y_gamma(), &cfg);
-    let fp = Forest::fit(&x, &train.y_phi(), &cfg);
+    let m = train.train_matrix().expect("profiled features must be finite");
+    let fg = Forest::fit_matrix(&m, &train.y_gamma(), &cfg).expect("Γ fit");
+    let fp = Forest::fit_matrix(&m, &train.y_phi(), &cfg).expect("Φ fit");
     (fg, fp)
 }
 

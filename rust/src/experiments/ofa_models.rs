@@ -10,7 +10,7 @@ use crate::campaign::{self, CampaignSpec};
 use crate::device::Simulator;
 use crate::engine::PredictionEngine;
 use crate::features::{network_features_from_plan, NUM_FEATURES};
-use crate::forest::Forest;
+use crate::forest::{Forest, TrainMatrix};
 use crate::ir::NetworkPlan;
 use crate::ofa::SubnetConfig;
 use crate::profiler::{PAPER_BATCH_SIZES, TRAIN_LEVELS};
@@ -83,8 +83,10 @@ pub fn run(sim: &Simulator, subnets: usize, seed: u64) -> OfaModels {
         }
     }
     let cfg = experiment_forest_config();
-    let gamma_infer = Forest::fit(&xg, &yg, &cfg);
-    let phi_infer = Forest::fit(&xg, &yp, &cfg);
+    // Both attribute models share one presorted matrix over the same rows.
+    let m = TrainMatrix::from_rows(&xg).expect("finite OFA features");
+    let gamma_infer = Forest::fit_matrix(&m, &yg, &cfg).expect("γ fit");
+    let phi_infer = Forest::fit_matrix(&m, &yp, &cfg).expect("φ fit");
 
     // Test on the remaining subnets: collect every row, then answer each
     // model with one batched traversal through its compiled form (bit-

@@ -4,8 +4,10 @@
 //! bagging, per-split feature subsampling, JSON persistence, and export to
 //! the padded tensor layout consumed by the L1 Pallas inference kernel.
 
+pub mod train;
 pub mod tree;
 
+pub use train::{FitError, FitScratch, TrainMatrix};
 pub use tree::{Tree, TreeConfig, TreeNode};
 
 use crate::util::json::Json;
@@ -40,6 +42,32 @@ impl Default for ForestConfig {
     }
 }
 
+impl ForestConfig {
+    /// Reject configs that would previously have clamped silently or
+    /// panicked deep inside fitting. Run automatically by every fit entry
+    /// point.
+    pub fn validate(&self) -> Result<(), FitError> {
+        if self.n_trees == 0 {
+            return Err(FitError::InvalidConfig(
+                "n_trees must be at least 1".into(),
+            ));
+        }
+        // Negated comparison so NaN fails too.
+        if !(self.feature_fraction > 0.0 && self.feature_fraction <= 1.0) {
+            return Err(FitError::InvalidConfig(format!(
+                "feature_fraction must be in (0, 1], got {}",
+                self.feature_fraction
+            )));
+        }
+        if self.min_samples_leaf == 0 {
+            return Err(FitError::InvalidConfig(
+                "min_samples_leaf must be at least 1".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// A fitted random forest.
 #[derive(Clone, Debug)]
 pub struct Forest {
@@ -49,16 +77,45 @@ pub struct Forest {
 }
 
 impl Forest {
-    /// Fit on row-major `x` (n × d) against `y` (n), training trees in
-    /// parallel on scoped threads.
+    /// Fit on row-major `x` (n × d) against `y` (n): compile the training
+    /// set into a [`TrainMatrix`] (one presort per feature) and train
+    /// trees in parallel on scoped threads over the presorted-column fast
+    /// path. Rejects malformed inputs (shape, non-finite values, bad
+    /// config) with a named [`FitError`] before any work starts.
     ///
     /// Every per-tree RNG is forked from the seed generator up front, in
     /// the same sequential order [`Forest::fit_sequential`] uses, so each
-    /// tree's randomness is independent of scheduling and the result is
-    /// bit-identical to the sequential reference (asserted by
-    /// `rust/tests/plan_equivalence.rs`).
-    pub fn fit(x: &[Vec<f64>], y: &[f64], config: &ForestConfig) -> Forest {
-        let (tree_cfg, rngs, n, d) = Self::prepare(x, y, config);
+    /// tree's randomness is independent of scheduling. Both run the fast
+    /// path and both are node-for-node bit-identical to the retained
+    /// per-node-sort algorithm, [`Forest::fit_reference`] (asserted by
+    /// `rust/tests/fit_equivalence.rs` and `rust/tests/plan_equivalence.rs`).
+    pub fn fit(x: &[Vec<f64>], y: &[f64], config: &ForestConfig) -> Result<Forest, FitError> {
+        let m = TrainMatrix::from_rows(x)?;
+        Self::fit_matrix(&m, y, config)
+    }
+
+    /// Single-threaded [`Forest::fit`] (same fast path, no thread pool).
+    /// Kept as the scheduling-determinism oracle for the parallel path and
+    /// for profiling comparisons.
+    pub fn fit_sequential(
+        x: &[Vec<f64>],
+        y: &[f64],
+        config: &ForestConfig,
+    ) -> Result<Forest, FitError> {
+        let m = TrainMatrix::from_rows(x)?;
+        Self::fit_matrix_sequential(&m, y, config)
+    }
+
+    /// Fit from an already-compiled [`TrainMatrix`] (parallel). The matrix
+    /// is target-agnostic, so callers fitting several targets on one
+    /// dataset — Γ and Φ in `cmd_fit` and the experiments — presort once
+    /// and fit many times.
+    pub fn fit_matrix(
+        m: &TrainMatrix,
+        y: &[f64],
+        config: &ForestConfig,
+    ) -> Result<Forest, FitError> {
+        let (tree_cfg, rngs) = Self::prepare(m, y, config)?;
         let workers = std::thread::available_parallelism()
             .map(|p| p.get())
             .unwrap_or(1)
@@ -76,10 +133,13 @@ impl Forest {
                 .into_iter()
                 .map(|chunk| {
                     scope.spawn(move || {
+                        // One scratch per worker: after the first tree
+                        // sizes it, node expansion allocates nothing.
+                        let mut scratch = FitScratch::new();
                         chunk
                             .into_iter()
                             .map(|(i, mut rng)| {
-                                (i, Self::fit_one_tree(x, y, n, bootstrap, tree_cfg, &mut rng))
+                                (i, scratch.fit_tree(m, y, bootstrap, tree_cfg, &mut rng))
                             })
                             .collect::<Vec<_>>()
                     })
@@ -91,54 +151,91 @@ impl Forest {
                 .collect()
         });
         fitted.sort_by_key(|&(i, _)| i);
-        Forest {
+        Ok(Forest {
             trees: fitted.into_iter().map(|(_, t)| t).collect(),
-            n_features: d,
+            n_features: m.n_features(),
             config: config.clone(),
-        }
+        })
     }
 
-    /// Single-threaded reference implementation of [`Forest::fit`] (the
-    /// original algorithm). Kept as the determinism oracle for the
-    /// parallel path and for profiling comparisons.
-    pub fn fit_sequential(x: &[Vec<f64>], y: &[f64], config: &ForestConfig) -> Forest {
-        let (tree_cfg, rngs, n, d) = Self::prepare(x, y, config);
+    /// Single-threaded [`Forest::fit_matrix`].
+    pub fn fit_matrix_sequential(
+        m: &TrainMatrix,
+        y: &[f64],
+        config: &ForestConfig,
+    ) -> Result<Forest, FitError> {
+        let (tree_cfg, rngs) = Self::prepare(m, y, config)?;
+        let mut scratch = FitScratch::new();
         let trees: Vec<Tree> = rngs
             .into_iter()
-            .map(|mut rng| Self::fit_one_tree(x, y, n, config.bootstrap, &tree_cfg, &mut rng))
+            .map(|mut rng| scratch.fit_tree(m, y, config.bootstrap, &tree_cfg, &mut rng))
             .collect();
-        Forest {
+        Ok(Forest {
             trees,
-            n_features: d,
+            n_features: m.n_features(),
             config: config.clone(),
-        }
+        })
     }
 
-    /// Shared fit setup: validate inputs, derive the tree config, and fork
-    /// one RNG per tree from the seed generator (sequential order).
-    fn prepare(
+    /// The seed per-node-sort algorithm, retained as the bit-identity
+    /// oracle for the presorted-column fast path: same RNG fork order,
+    /// same bootstrap draws (sorted into the shared canonical order), one
+    /// stable `total_cmp` sort per candidate feature per node.
+    pub fn fit_reference(
         x: &[Vec<f64>],
         y: &[f64],
         config: &ForestConfig,
-    ) -> (TreeConfig, Vec<Pcg64>, usize, usize) {
-        assert_eq!(x.len(), y.len());
-        assert!(!x.is_empty(), "empty training set");
-        let d = x[0].len();
-        let n = x.len();
+    ) -> Result<Forest, FitError> {
+        let (n, d) = train::validate_rows(x)?;
+        config.validate()?;
+        train::validate_targets(n, y)?;
+        let tree_cfg = Self::tree_config(d, config);
+        let mut rng = Pcg64::new(config.seed);
+        let trees: Vec<Tree> = (0..config.n_trees)
+            .map(|_| {
+                let mut rng = rng.fork();
+                Self::fit_one_tree_reference(x, y, n, config.bootstrap, &tree_cfg, &mut rng)
+            })
+            .collect();
+        Ok(Forest {
+            trees,
+            n_features: d,
+            config: config.clone(),
+        })
+    }
+
+    /// Shared fit setup: validate config and targets, derive the tree
+    /// config, and fork one RNG per tree from the seed generator
+    /// (sequential order — identical across all fit entry points).
+    fn prepare(
+        m: &TrainMatrix,
+        y: &[f64],
+        config: &ForestConfig,
+    ) -> Result<(TreeConfig, Vec<Pcg64>), FitError> {
+        config.validate()?;
+        m.validate_targets(y)?;
+        let tree_cfg = Self::tree_config(m.n_features(), config);
+        let mut rng = Pcg64::new(config.seed);
+        let rngs: Vec<Pcg64> = (0..config.n_trees).map(|_| rng.fork()).collect();
+        Ok((tree_cfg, rngs))
+    }
+
+    fn tree_config(d: usize, config: &ForestConfig) -> TreeConfig {
         let max_features = ((d as f64 * config.feature_fraction).ceil() as usize).clamp(1, d);
-        let tree_cfg = TreeConfig {
+        TreeConfig {
             max_depth: config.max_depth,
             min_samples_leaf: config.min_samples_leaf,
             min_samples_split: config.min_samples_split,
             max_features: Some(max_features),
-        };
-        let mut rng = Pcg64::new(config.seed);
-        let rngs: Vec<Pcg64> = (0..config.n_trees).map(|_| rng.fork()).collect();
-        (tree_cfg, rngs, n, d)
+        }
     }
 
-    /// Fit one tree from its private RNG (bootstrap draw + split sampling).
-    fn fit_one_tree(
+    /// Fit one reference tree from its private RNG (bootstrap draw + split
+    /// sampling). The bootstrap draw is sorted ascending — the canonical
+    /// sample order shared with the fast path's multiplicity counts; the
+    /// draw itself consumes the RNG in the original order, so both paths
+    /// see identical generator states.
+    fn fit_one_tree_reference(
         x: &[Vec<f64>],
         y: &[f64],
         n: usize,
@@ -146,11 +243,12 @@ impl Forest {
         tree_cfg: &TreeConfig,
         rng: &mut Pcg64,
     ) -> Tree {
-        let indices: Vec<usize> = if bootstrap {
+        let mut indices: Vec<usize> = if bootstrap {
             (0..n).map(|_| rng.gen_range(n)).collect()
         } else {
             (0..n).collect()
         };
+        indices.sort_unstable();
         Tree::fit(x, y, &indices, tree_cfg, rng)
     }
 
@@ -441,7 +539,7 @@ mod tests {
             n_trees: 30,
             ..Default::default()
         };
-        let f = Forest::fit(&x, &y, &cfg);
+        let f = Forest::fit(&x, &y, &cfg).unwrap();
         let pred = f.predict_batch(&xt);
         let r2 = stats::r_squared(&pred, &yt);
         assert!(r2 > 0.95, "r2 = {r2}");
@@ -455,15 +553,73 @@ mod tests {
             seed: 42,
             ..Default::default()
         };
-        let f1 = Forest::fit(&x, &y, &cfg);
-        let f2 = Forest::fit(&x, &y, &cfg);
+        let f1 = Forest::fit(&x, &y, &cfg).unwrap();
+        let f2 = Forest::fit(&x, &y, &cfg).unwrap();
         assert_eq!(f1.predict(&x[0]), f2.predict(&x[0]));
+    }
+
+    #[test]
+    fn fit_rejects_invalid_configs_and_inputs() {
+        let (x, y) = synth(30, 20);
+        let bad_trees = ForestConfig {
+            n_trees: 0,
+            ..Default::default()
+        };
+        assert!(matches!(
+            Forest::fit(&x, &y, &bad_trees),
+            Err(FitError::InvalidConfig(_))
+        ));
+        for ff in [0.0, -0.5, 1.5, f64::NAN] {
+            let bad_ff = ForestConfig {
+                feature_fraction: ff,
+                ..Default::default()
+            };
+            assert!(matches!(
+                Forest::fit(&x, &y, &bad_ff),
+                Err(FitError::InvalidConfig(_))
+            ));
+        }
+        let bad_leaf = ForestConfig {
+            min_samples_leaf: 0,
+            ..Default::default()
+        };
+        assert!(matches!(
+            Forest::fit(&x, &y, &bad_leaf),
+            Err(FitError::InvalidConfig(_))
+        ));
+        // The reference path applies the same validation.
+        assert!(matches!(
+            Forest::fit_reference(&x, &y, &bad_leaf),
+            Err(FitError::InvalidConfig(_))
+        ));
+
+        let cfg = ForestConfig::default();
+        assert_eq!(
+            Forest::fit(&[], &[], &cfg).unwrap_err(),
+            FitError::EmptyTrainingSet
+        );
+        let mut x_nan = x.clone();
+        x_nan[3][1] = f64::NAN;
+        assert!(matches!(
+            Forest::fit(&x_nan, &y, &cfg),
+            Err(FitError::NonFiniteFeature { row: 3, feature: 1, .. })
+        ));
+        let mut y_inf = y.clone();
+        y_inf[5] = f64::NEG_INFINITY;
+        assert!(matches!(
+            Forest::fit(&x, &y_inf, &cfg),
+            Err(FitError::NonFiniteTarget { row: 5, .. })
+        ));
+        assert!(matches!(
+            Forest::fit(&x, &y[..y.len() - 1], &cfg),
+            Err(FitError::TargetLength { .. })
+        ));
     }
 
     #[test]
     fn predictions_bounded_by_target_range() {
         let (x, y) = synth(200, 4);
-        let f = Forest::fit(&x, &y, &ForestConfig::default());
+        let f = Forest::fit(&x, &y, &ForestConfig::default()).unwrap();
         let lo = y.iter().cloned().fold(f64::MAX, f64::min);
         let hi = y.iter().cloned().fold(f64::MIN, f64::max);
         for row in &x {
@@ -479,7 +635,7 @@ mod tests {
             n_trees: 10,
             ..Default::default()
         };
-        let f = Forest::fit(&x, &y, &cfg);
+        let f = Forest::fit(&x, &y, &cfg).unwrap();
         let j = f.to_json().to_string();
         let f2 = Forest::from_json(&Json::parse(&j).unwrap()).unwrap();
         for row in x.iter().take(20) {
@@ -495,7 +651,7 @@ mod tests {
             max_depth: 9,
             ..Default::default()
         };
-        let f = Forest::fit(&x, &y, &cfg);
+        let f = Forest::fit(&x, &y, &cfg).unwrap();
         let t = f.to_tensors();
         assert!(t.depth <= 10);
         for row in x.iter().take(30) {
@@ -518,7 +674,8 @@ mod tests {
                 n_trees: 6,
                 ..Default::default()
             },
-        );
+        )
+        .unwrap();
         let mut t = f.to_tensors();
         let before: Vec<f64> = x.iter().take(10).map(|r| t.predict(r, t.depth)).collect();
         t.pad_nodes_to(t.n_nodes + 37);
@@ -536,7 +693,8 @@ mod tests {
                 n_trees: 4,
                 ..Default::default()
             },
-        );
+        )
+        .unwrap();
         let t = f.to_tensors();
         for row in x.iter().take(10) {
             assert_eq!(t.predict(row, t.depth), t.predict(row, t.depth + 5));
@@ -553,7 +711,8 @@ mod tests {
                 n_trees: 20,
                 ..Default::default()
             },
-        );
+        )
+        .unwrap();
         let imp = f.feature_importance();
         assert_eq!(imp.len(), 3);
         // x0 drives most of the variance.
@@ -569,7 +728,7 @@ mod tests {
         for v in &mut y {
             *v += 100.0;
         }
-        let f = Forest::fit(&x, &y, &ForestConfig::default());
+        let f = Forest::fit(&x, &y, &ForestConfig::default()).unwrap();
         let err = f.mape(&x, &y);
         assert!(err < 3.0, "train MAPE = {err}");
     }

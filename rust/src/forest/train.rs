@@ -1,0 +1,627 @@
+//! Presorted-column training fast path.
+//!
+//! The seed tree builder re-sorted a node's index list for **every
+//! candidate feature at every node** (O(nodes × features × n log n)
+//! comparison sorts through row-major `Vec<Vec<f64>>` indirection) and
+//! allocated fresh `sorted`/`left`/`right` vectors per node. This module
+//! applies the arena/overlay playbook to model fitting: compile the
+//! training set once into a [`TrainMatrix`] — column-major feature storage
+//! plus one presorted index array per feature — share it read-only across
+//! all trees and threads, and expand nodes with nothing but linear scans
+//! over reusable per-thread [`FitScratch`] buffers.
+//!
+//! # Determinism contract
+//!
+//! `Forest::fit` on this path is **node-for-node bit-identical** to the
+//! retained per-node-sort reference (`Forest::fit_reference`), asserted by
+//! `rust/tests/fit_equivalence.rs`. Floating-point accumulation order is
+//! part of that contract, so both paths scan a node's samples in one
+//! canonical order:
+//!
+//! - a node's sample multiset is enumerated in **ascending row id** order,
+//!   bootstrap duplicates adjacent (the reference sorts its bootstrap draw;
+//!   this path keeps per-row multiplicity counts);
+//! - a candidate feature's samples are scanned in **(feature value, row
+//!   id)** order — `f64::total_cmp`, ties broken by row id (the reference
+//!   stable-sorts the ascending list afresh per candidate; this path
+//!   filters the globally presorted column by node membership);
+//! - score ties keep the first candidate in sampled order and the earliest
+//!   scan position (strict `<` on the SSE), exactly as the reference loop.
+//!
+//! Partitioning a node's per-feature index segments stably by split side
+//! preserves both orders for the children, so no re-sorting ever happens
+//! after the single presort in [`TrainMatrix`] construction.
+
+use crate::forest::tree::{Tree, TreeConfig, TreeNode};
+use crate::util::rng::Pcg64;
+
+/// Why a forest could not be fitted. Raised up front — fitting never
+/// panics mid-sort on malformed inputs or silently clamps a bad config.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum FitError {
+    #[error("empty training set")]
+    EmptyTrainingSet,
+    #[error("training rows have zero features")]
+    NoFeatures,
+    #[error("training row {row} has {len} features, expected {expected}")]
+    RaggedRow {
+        row: usize,
+        len: usize,
+        expected: usize,
+    },
+    #[error("feature matrix has {rows} rows but target vector has {targets}")]
+    TargetLength { rows: usize, targets: usize },
+    #[error("non-finite feature value {value} at row {row}, feature {feature}")]
+    NonFiniteFeature {
+        row: usize,
+        feature: usize,
+        value: f64,
+    },
+    #[error("non-finite target value {value} at row {row}")]
+    NonFiniteTarget { row: usize, value: f64 },
+    #[error("invalid forest config: {0}")]
+    InvalidConfig(String),
+}
+
+/// A training set compiled for fast tree construction: column-major
+/// feature storage plus one stable presorted row-index array per feature
+/// (`f64::total_cmp`, ties by row id). Built once per fit — or once per
+/// *dataset*: the matrix is target-agnostic, so one matrix serves the Γ
+/// fit, the Φ fit and any future attribute forest
+/// ([`Forest::fit_matrix`](crate::forest::Forest::fit_matrix)).
+///
+/// Shared read-only across all trees and worker threads.
+#[derive(Clone, Debug)]
+pub struct TrainMatrix {
+    n: usize,
+    d: usize,
+    /// Column-major values: `cols[f * n + i]` = feature `f` of row `i`.
+    cols: Vec<f64>,
+    /// Presorted row ids: `order[f * n ..][..n]` lists rows in
+    /// (value, row id) order for feature `f`.
+    order: Vec<u32>,
+}
+
+impl TrainMatrix {
+    /// Compile a row-major feature matrix. Validates shape and rejects
+    /// non-finite values with a named error.
+    pub fn from_rows(x: &[Vec<f64>]) -> Result<TrainMatrix, FitError> {
+        Self::from_row_iter(x.iter().map(|r| r.as_slice()))
+    }
+
+    /// Compile from borrowed feature rows without materialising a
+    /// row-major copy (the `Dataset::x()` clone the seed fit paid twice
+    /// per experiment).
+    pub fn from_row_iter<'a, I>(rows: I) -> Result<TrainMatrix, FitError>
+    where
+        I: ExactSizeIterator<Item = &'a [f64]>,
+    {
+        let n = rows.len();
+        if n == 0 {
+            return Err(FitError::EmptyTrainingSet);
+        }
+        assert!(n <= u32::MAX as usize, "training set exceeds u32 row ids");
+        let mut d = 0usize;
+        let mut cols: Vec<f64> = Vec::new();
+        for (i, row) in rows.enumerate() {
+            if i == 0 {
+                d = row.len();
+                if d == 0 {
+                    return Err(FitError::NoFeatures);
+                }
+                cols = vec![0.0; d * n];
+            } else if row.len() != d {
+                return Err(FitError::RaggedRow {
+                    row: i,
+                    len: row.len(),
+                    expected: d,
+                });
+            }
+            for (f, &v) in row.iter().enumerate() {
+                if !v.is_finite() {
+                    return Err(FitError::NonFiniteFeature {
+                        row: i,
+                        feature: f,
+                        value: v,
+                    });
+                }
+                cols[f * n + i] = v;
+            }
+        }
+        let mut order = vec![0u32; d * n];
+        for f in 0..d {
+            let col = &cols[f * n..(f + 1) * n];
+            let seg = &mut order[f * n..(f + 1) * n];
+            for (k, slot) in seg.iter_mut().enumerate() {
+                *slot = k as u32;
+            }
+            // Stable sort over ascending row ids ⇒ (value, row id) order.
+            seg.sort_by(|&a, &b| col[a as usize].total_cmp(&col[b as usize]));
+        }
+        Ok(TrainMatrix { n, d, cols, order })
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.d
+    }
+
+    /// Feature column `f` as a contiguous slice (indexed by row id).
+    pub fn col(&self, f: usize) -> &[f64] {
+        &self.cols[f * self.n..(f + 1) * self.n]
+    }
+
+    /// Row ids in (value, row id) order for feature `f`.
+    pub fn order(&self, f: usize) -> &[u32] {
+        &self.order[f * self.n..(f + 1) * self.n]
+    }
+
+    /// Check a target vector against this matrix (length + finiteness).
+    pub fn validate_targets(&self, y: &[f64]) -> Result<(), FitError> {
+        validate_targets(self.n, y)
+    }
+}
+
+/// Validate a row-major feature matrix without compiling it (the reference
+/// path's entry check — same errors as [`TrainMatrix::from_rows`]).
+pub(crate) fn validate_rows(x: &[Vec<f64>]) -> Result<(usize, usize), FitError> {
+    if x.is_empty() {
+        return Err(FitError::EmptyTrainingSet);
+    }
+    let d = x[0].len();
+    if d == 0 {
+        return Err(FitError::NoFeatures);
+    }
+    for (i, row) in x.iter().enumerate() {
+        if row.len() != d {
+            return Err(FitError::RaggedRow {
+                row: i,
+                len: row.len(),
+                expected: d,
+            });
+        }
+        for (f, &v) in row.iter().enumerate() {
+            if !v.is_finite() {
+                return Err(FitError::NonFiniteFeature {
+                    row: i,
+                    feature: f,
+                    value: v,
+                });
+            }
+        }
+    }
+    Ok((x.len(), d))
+}
+
+pub(crate) fn validate_targets(n: usize, y: &[f64]) -> Result<(), FitError> {
+    if y.len() != n {
+        return Err(FitError::TargetLength {
+            rows: n,
+            targets: y.len(),
+        });
+    }
+    for (i, &v) in y.iter().enumerate() {
+        if !v.is_finite() {
+            return Err(FitError::NonFiniteTarget { row: i, value: v });
+        }
+    }
+    Ok(())
+}
+
+/// Reusable per-thread buffers for tree construction. After the first tree
+/// sizes them, steady-state node expansion allocates nothing: membership
+/// marks, partition buffers and the candidate-feature shuffle all live
+/// here, and bootstrap duplicate rows are per-row multiplicity counts
+/// rather than duplicated indices.
+#[derive(Default)]
+pub struct FitScratch {
+    /// Bootstrap multiplicity per row (0 ⇒ not a member of this tree).
+    counts: Vec<u32>,
+    /// `(d + 1)` row-id arrays of stride `n`: slot `f` holds the tree's
+    /// member rows in feature-`f` presorted order, slot `d` ("identity")
+    /// holds them in ascending row-id order. A node is a `[lo, hi)`
+    /// segment of every slot; splits stable-partition the segments in
+    /// place so children need no sorting.
+    arrays: Vec<u32>,
+    /// Stable-partition spill buffer (right-side rows of one segment).
+    tmp: Vec<u32>,
+    /// Split side per row for the node currently being partitioned.
+    goes_left: Vec<bool>,
+    /// Candidate-feature shuffle buffer (replays `Pcg64::sample_indices`
+    /// draw-for-draw without its per-node allocation).
+    feats: Vec<usize>,
+}
+
+impl FitScratch {
+    pub fn new() -> FitScratch {
+        FitScratch::default()
+    }
+
+    fn ensure(&mut self, n: usize, d: usize) {
+        self.counts.resize(n, 0);
+        self.arrays.resize((d + 1) * n, 0);
+        self.tmp.resize(n, 0);
+        self.goes_left.resize(n, false);
+        self.feats.resize(d, 0);
+    }
+
+    /// Fit one tree on the fast path. Consumes the RNG draw-for-draw like
+    /// the reference (`n` bootstrap draws, then `sample_indices`-shaped
+    /// candidate draws per node) and produces bit-identical nodes.
+    pub fn fit_tree(
+        &mut self,
+        m: &TrainMatrix,
+        y: &[f64],
+        bootstrap: bool,
+        cfg: &TreeConfig,
+        rng: &mut Pcg64,
+    ) -> Tree {
+        let n = m.n_rows();
+        let d = m.n_features();
+        self.ensure(n, d);
+
+        // Per-row multiplicities: the bootstrap draw order is irrelevant
+        // once counted — the canonical enumeration (ascending row id,
+        // duplicates adjacent) matches the reference's sorted draw.
+        let u = if bootstrap {
+            self.counts.iter_mut().for_each(|c| *c = 0);
+            for _ in 0..n {
+                self.counts[rng.gen_range(n)] += 1;
+            }
+            // Seed the root segments: each presorted column filtered by
+            // the membership mask, plus the ascending identity slot.
+            let mut u = 0usize;
+            for f in 0..d {
+                let mut k = f * n;
+                for &r in m.order(f) {
+                    if self.counts[r as usize] > 0 {
+                        self.arrays[k] = r;
+                        k += 1;
+                    }
+                }
+                u = k - f * n;
+            }
+            let mut k = d * n;
+            for r in 0..n as u32 {
+                if self.counts[r as usize] > 0 {
+                    self.arrays[k] = r;
+                    k += 1;
+                }
+            }
+            debug_assert_eq!(k - d * n, u);
+            u
+        } else {
+            self.counts.iter_mut().for_each(|c| *c = 1);
+            for f in 0..d {
+                self.arrays[f * n..(f + 1) * n].copy_from_slice(m.order(f));
+            }
+            for (k, slot) in self.arrays[d * n..(d + 1) * n].iter_mut().enumerate() {
+                *slot = k as u32;
+            }
+            n
+        };
+
+        let mut nodes = Vec::new();
+        let mut ctx = TreeCtx {
+            m,
+            y,
+            cfg,
+            counts: &self.counts,
+            arrays: &mut self.arrays,
+            tmp: &mut self.tmp,
+            goes_left: &mut self.goes_left,
+            feats: &mut self.feats,
+            stride: n,
+            d,
+        };
+        build_fast(&mut ctx, 0, u, n, 0, rng, &mut nodes);
+        Tree { nodes }
+    }
+}
+
+/// Borrowed working state for one tree build (splits the scratch fields so
+/// the recursive builder can hold disjoint mutable views).
+struct TreeCtx<'a> {
+    m: &'a TrainMatrix,
+    y: &'a [f64],
+    cfg: &'a TreeConfig,
+    counts: &'a [u32],
+    arrays: &'a mut [u32],
+    tmp: &'a mut [u32],
+    goes_left: &'a mut [bool],
+    feats: &'a mut [usize],
+    stride: usize,
+    d: usize,
+}
+
+fn push_leaf(nodes: &mut Vec<TreeNode>, mean: f64) -> u32 {
+    let id = nodes.len() as u32;
+    nodes.push(TreeNode {
+        feature: u32::MAX,
+        threshold: f64::INFINITY,
+        left: id,
+        right: id,
+        value: mean,
+    });
+    id
+}
+
+/// Expand the node covering segment `[lo, hi)` (distinct member rows;
+/// `n_samples` counts bootstrap duplicates). Mirrors the reference `build`
+/// decision-for-decision: same leaf conditions, same RNG consumption, same
+/// scan order, same floating-point expression sequence — returning the
+/// same node ids in the same DFS pre-order.
+#[allow(clippy::too_many_arguments)]
+fn build_fast(
+    ctx: &mut TreeCtx,
+    lo: usize,
+    hi: usize,
+    n_samples: usize,
+    depth: usize,
+    rng: &mut Pcg64,
+    nodes: &mut Vec<TreeNode>,
+) -> u32 {
+    let (m, y, cfg) = (ctx.m, ctx.y, ctx.cfg);
+    let (stride, d) = (ctx.stride, ctx.d);
+    let id_base = d * stride;
+
+    // Node mean in canonical order (ascending row id, duplicates adjacent)
+    // — the reference's `indices.iter().map(|&i| y[i]).sum()` sequence.
+    let mut sum = 0.0;
+    for k in lo..hi {
+        let r = ctx.arrays[id_base + k] as usize;
+        let yv = y[r];
+        for _ in 0..ctx.counts[r] {
+            sum += yv;
+        }
+    }
+    let mean = sum / n_samples as f64;
+
+    if depth >= cfg.max_depth
+        || n_samples < cfg.min_samples_split
+        || n_samples < 2 * cfg.min_samples_leaf
+    {
+        return push_leaf(nodes, mean);
+    }
+
+    // Candidate feature subset — replays `rng.sample_indices(d, k)`
+    // draw-for-draw into the reusable shuffle buffer (and, like the
+    // reference, consumes no randomness when every feature is a candidate).
+    let n_candidates = cfg.max_features.unwrap_or(d).clamp(1, d);
+    for (f, slot) in ctx.feats.iter_mut().enumerate() {
+        *slot = f;
+    }
+    if n_candidates < d {
+        for i in 0..n_candidates {
+            let j = i + rng.gen_range(d - i);
+            ctx.feats.swap(i, j);
+        }
+    }
+
+    // Variance-minimising split: one forward scan per candidate over its
+    // presorted segment. Ties (equal SSE, equal feature values) resolve
+    // exactly as the reference's stable per-node sort does.
+    let mut best: Option<(usize, f64, f64)> = None; // (feature, threshold, score)
+    for ci in 0..n_candidates {
+        let f = ctx.feats[ci];
+        let col = m.col(f);
+        let base = f * stride;
+
+        // Totals accumulate in scan order, exactly like the reference
+        // summing its per-candidate sorted index list.
+        let mut total_sum = 0.0;
+        let mut total_sq = 0.0;
+        for k in lo..hi {
+            let r = ctx.arrays[base + k] as usize;
+            let yv = y[r];
+            for _ in 0..ctx.counts[r] {
+                total_sum += yv;
+                total_sq += yv * yv;
+            }
+        }
+        let nf = n_samples as f64;
+
+        let mut left_sum = 0.0;
+        let mut left_sq = 0.0;
+        let mut taken = 0usize; // samples consumed, duplicates included
+        for k in lo..hi {
+            let r = ctx.arrays[base + k] as usize;
+            let yv = y[r];
+            for _ in 0..ctx.counts[r] {
+                left_sum += yv;
+                left_sq += yv * yv;
+            }
+            taken += ctx.counts[r] as usize;
+            // Duplicates of one row share a feature value, so only the
+            // last copy can host a split — the reference `continue`s
+            // through the earlier copies on its equal-values check.
+            if k + 1 == hi {
+                break; // final sample: the reference breaks at nr == 0
+            }
+            if taken < cfg.min_samples_leaf || n_samples - taken < cfg.min_samples_leaf {
+                continue;
+            }
+            let xv = col[r];
+            let xn = col[ctx.arrays[base + k + 1] as usize];
+            if xv == xn {
+                continue; // can't split between equal feature values
+            }
+            // Weighted SSE of the two children — the reference's exact
+            // expression sequence, term for term.
+            let nl = taken as f64;
+            let nr = nf - nl;
+            let right_sum = total_sum - left_sum;
+            let right_sq = total_sq - left_sq;
+            let sse = (left_sq - left_sum * left_sum / nl)
+                + (right_sq - right_sum * right_sum / nr);
+            if best.map_or(true, |(_, _, s)| sse < s) {
+                best = Some((f, 0.5 * (xv + xn), sse));
+            }
+        }
+    }
+
+    let Some((feature, threshold, _)) = best else {
+        return push_leaf(nodes, mean);
+    };
+
+    // Mark split sides once per member row, counting rows and samples per
+    // side; a one-sided split (midpoint rounding onto a boundary value)
+    // degrades to a leaf exactly like the reference's empty-child check.
+    let fcol = m.col(feature);
+    let mut left_rows = 0usize;
+    let mut left_samples = 0usize;
+    for k in lo..hi {
+        let r = ctx.arrays[id_base + k] as usize;
+        let gl = fcol[r] <= threshold;
+        ctx.goes_left[r] = gl;
+        if gl {
+            left_rows += 1;
+            left_samples += ctx.counts[r] as usize;
+        }
+    }
+    if left_samples == 0 || left_samples == n_samples {
+        return push_leaf(nodes, mean);
+    }
+
+    // Stable-partition every segment (all features + identity) so both
+    // children stay in presorted / ascending order.
+    for a in 0..=d {
+        let base = a * stride;
+        let mut w = lo;
+        let mut t = 0usize;
+        for k in lo..hi {
+            let r = ctx.arrays[base + k];
+            if ctx.goes_left[r as usize] {
+                ctx.arrays[base + w] = r; // w <= k: never clobbers unread slots
+                w += 1;
+            } else {
+                ctx.tmp[t] = r;
+                t += 1;
+            }
+        }
+        ctx.arrays[base + w..base + hi].copy_from_slice(&ctx.tmp[..t]);
+    }
+
+    let id = nodes.len() as u32;
+    nodes.push(TreeNode {
+        feature: feature as u32,
+        threshold,
+        left: 0,
+        right: 0,
+        value: mean,
+    });
+    let mid = lo + left_rows;
+    let l = build_fast(ctx, lo, mid, left_samples, depth + 1, rng, nodes);
+    let r = build_fast(
+        ctx,
+        mid,
+        hi,
+        n_samples - left_samples,
+        depth + 1,
+        rng,
+        nodes,
+    );
+    nodes[id as usize].left = l;
+    nodes[id as usize].right = r;
+    id
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_compiles_columns_and_presorted_order() {
+        let x = vec![
+            vec![3.0, 10.0],
+            vec![1.0, 30.0],
+            vec![2.0, 20.0],
+            vec![1.0, 20.0],
+        ];
+        let m = TrainMatrix::from_rows(&x).unwrap();
+        assert_eq!(m.n_rows(), 4);
+        assert_eq!(m.n_features(), 2);
+        assert_eq!(m.col(0), &[3.0, 1.0, 2.0, 1.0]);
+        assert_eq!(m.col(1), &[10.0, 30.0, 20.0, 20.0]);
+        // (value, row id) order: equal values keep ascending row ids.
+        assert_eq!(m.order(0), &[1, 3, 2, 0]);
+        assert_eq!(m.order(1), &[0, 2, 3, 1]);
+    }
+
+    #[test]
+    fn matrix_rejects_malformed_input() {
+        assert_eq!(
+            TrainMatrix::from_rows(&[]).unwrap_err(),
+            FitError::EmptyTrainingSet
+        );
+        assert_eq!(
+            TrainMatrix::from_rows(&[vec![]]).unwrap_err(),
+            FitError::NoFeatures
+        );
+        let ragged = vec![vec![1.0, 2.0], vec![1.0]];
+        assert!(matches!(
+            TrainMatrix::from_rows(&ragged).unwrap_err(),
+            FitError::RaggedRow {
+                row: 1,
+                len: 1,
+                expected: 2
+            }
+        ));
+        let nan = vec![vec![1.0, f64::NAN]];
+        assert!(matches!(
+            TrainMatrix::from_rows(&nan).unwrap_err(),
+            FitError::NonFiniteFeature {
+                row: 0,
+                feature: 1,
+                ..
+            }
+        ));
+        let m = TrainMatrix::from_rows(&[vec![1.0], vec![2.0]]).unwrap();
+        assert!(matches!(
+            m.validate_targets(&[1.0]).unwrap_err(),
+            FitError::TargetLength {
+                rows: 2,
+                targets: 1
+            }
+        ));
+        assert!(matches!(
+            m.validate_targets(&[1.0, f64::INFINITY]).unwrap_err(),
+            FitError::NonFiniteTarget { row: 1, .. }
+        ));
+    }
+
+    #[test]
+    fn fast_tree_matches_reference_tree_without_bootstrap() {
+        // Direct Tree-level check; the forest-level oracle lives in
+        // rust/tests/fit_equivalence.rs.
+        let x: Vec<Vec<f64>> = (0..40)
+            .map(|i| vec![(i % 7) as f64, (i % 3) as f64, i as f64 * 0.25])
+            .collect();
+        let y: Vec<f64> = x.iter().map(|r| 2.0 * r[0] - r[1] + r[2]).collect();
+        let m = TrainMatrix::from_rows(&x).unwrap();
+        let cfg = TreeConfig {
+            max_depth: 6,
+            max_features: Some(2),
+            ..Default::default()
+        };
+        let mut scratch = FitScratch::new();
+        let mut rng_fast = Pcg64::new(99);
+        let fast = scratch.fit_tree(&m, &y, false, &cfg, &mut rng_fast);
+        let idx: Vec<usize> = (0..x.len()).collect();
+        let mut rng_ref = Pcg64::new(99);
+        let reference = Tree::fit(&x, &y, &idx, &cfg, &mut rng_ref);
+        assert_eq!(fast.nodes.len(), reference.nodes.len());
+        for (a, b) in fast.nodes.iter().zip(&reference.nodes) {
+            assert_eq!(a.feature, b.feature);
+            assert_eq!(a.threshold.to_bits(), b.threshold.to_bits());
+            assert_eq!(a.left, b.left);
+            assert_eq!(a.right, b.right);
+            assert_eq!(a.value.to_bits(), b.value.to_bits());
+        }
+        // Identical RNG consumption: both generators sit at the same point.
+        assert_eq!(rng_fast.next_u64(), rng_ref.next_u64());
+    }
+}

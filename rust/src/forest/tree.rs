@@ -56,6 +56,12 @@ pub struct Tree {
 
 impl Tree {
     /// Fit a tree on `x[indices]` (row-major `n × d`) against `y[indices]`.
+    ///
+    /// This is the per-node-sort *reference* builder. `indices` must be in
+    /// canonical order — ascending row id, bootstrap duplicates adjacent —
+    /// which is the sample enumeration order the presorted-column fast
+    /// path ([`FitScratch::fit_tree`](crate::forest::FitScratch)) shares;
+    /// `Forest::fit_reference` sorts its bootstrap draw before calling in.
     pub fn fit(
         x: &[Vec<f64>],
         y: &[f64],
@@ -148,7 +154,15 @@ fn build(
     let mut best: Option<(usize, f64, f64)> = None; // (feature, threshold, score)
     let mut sorted = indices.to_vec();
     for &f in &candidates {
-        sorted.sort_by(|&a, &b| x[a][f].partial_cmp(&x[b][f]).unwrap());
+        // Fresh stable sort per candidate from the node's canonical order
+        // (ascending row id, bootstrap duplicates adjacent) ⇒ scan order
+        // is exactly (feature value, row id). The presorted-column fast
+        // path (`forest::train`) reproduces this order by filtering its
+        // global presort, which is what makes the two paths bit-identical.
+        // `total_cmp` keeps the comparator total; non-finite values are
+        // rejected before fitting starts (`FitError::NonFiniteFeature`).
+        sorted.copy_from_slice(indices);
+        sorted.sort_by(|&a, &b| x[a][f].total_cmp(&x[b][f]));
         let total_sum: f64 = sorted.iter().map(|&i| y[i]).sum();
         let total_sq: f64 = sorted.iter().map(|&i| y[i] * y[i]).sum();
         let n = sorted.len() as f64;

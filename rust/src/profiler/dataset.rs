@@ -2,6 +2,7 @@
 //! and CSV persistence, and train-matrix extraction.
 
 use crate::features::feature_names;
+use crate::forest::{FitError, TrainMatrix};
 use crate::util::json::Json;
 use std::path::Path;
 
@@ -45,9 +46,19 @@ impl Dataset {
         self.points.extend(other.points);
     }
 
-    /// Feature matrix (row-major).
+    /// Feature matrix (row-major). Copies every row — prediction-time
+    /// callers that only need a fit should use [`Dataset::train_matrix`].
     pub fn x(&self) -> Vec<Vec<f64>> {
         self.points.iter().map(|p| p.features.clone()).collect()
+    }
+
+    /// Compile the features for fitting: column-major storage plus one
+    /// presorted index array per feature, built straight from the borrowed
+    /// point rows (no row-major copy). The matrix is target-agnostic —
+    /// build it once and fit both the Γ and Φ forests from it
+    /// ([`Forest::fit_matrix`](crate::forest::Forest::fit_matrix)).
+    pub fn train_matrix(&self) -> Result<TrainMatrix, FitError> {
+        TrainMatrix::from_row_iter(self.points.iter().map(|p| p.features.as_slice()))
     }
 
     /// Γ targets.
@@ -260,6 +271,20 @@ mod tests {
         assert_eq!(ds.x().len(), 2);
         assert_eq!(ds.y_gamma(), vec![100.0, 200.0]);
         assert_eq!(ds.y_phi(), vec![50.0, 100.0]);
+    }
+
+    #[test]
+    fn train_matrix_mirrors_x() {
+        let mut a = point("a", 2, 100.0);
+        a.features[3] = 7.5;
+        let ds = Dataset::new(vec![a, point("b", 4, 200.0)]);
+        let m = ds.train_matrix().unwrap();
+        let x = ds.x();
+        assert_eq!(m.n_rows(), 2);
+        assert_eq!(m.n_features(), NUM_FEATURES);
+        for f in 0..NUM_FEATURES {
+            assert_eq!(m.col(f), &[x[0][f], x[1][f]]);
+        }
     }
 
     #[test]

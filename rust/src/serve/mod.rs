@@ -293,7 +293,8 @@ mod tests {
                 max_depth: 6,
                 ..Default::default()
             },
-        );
+        )
+        .unwrap();
         PredictionEngine::new(&f, &f, &f)
     }
 

@@ -27,7 +27,7 @@ fn batched_predict_rows_bit_identical_to_scalar_on_zoo_models() {
         let (train, test) = train_test_split(&sim, name, &g, strategy, 21);
         let rows = test.x();
         for target in [train.y_gamma(), train.y_phi()] {
-            let forest = Forest::fit(&train.x(), &target, &experiment_forest_config());
+            let forest = Forest::fit(&train.x(), &target, &experiment_forest_config()).unwrap();
             let compiled = forest.compile();
             assert!(compiled_fits_artifact(&compiled), "{name}: artifact shape");
             let batched = compiled.predict_rows(&rows);
@@ -50,7 +50,7 @@ fn padded_tensor_batched_path_matches_per_row_reference() {
     let sim = Simulator::tx2();
     let g = models::by_name("squeezenet").unwrap();
     let (train, test) = train_test_split(&sim, "squeezenet", &g, Strategy::Random, 22);
-    let forest = Forest::fit(&train.x(), &train.y_gamma(), &experiment_forest_config());
+    let forest = Forest::fit(&train.x(), &train.y_gamma(), &experiment_forest_config()).unwrap();
     let t = forest.to_tensors();
     let rows = test.x();
     let batched = t.predict_rows(&rows, t.depth);

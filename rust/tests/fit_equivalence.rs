@@ -1,0 +1,185 @@
+//! The training fast path's headline guarantee (see `rust/src/forest/train.rs`):
+//! `Forest::fit` and `Forest::fit_sequential` — which both run on the
+//! presorted-column `TrainMatrix` path — produce forests **node-for-node
+//! bit-identical** to `Forest::fit_reference`, the retained seed algorithm
+//! that re-sorts every candidate feature at every node. Every `TreeNode`
+//! field is compared exactly (`f64::to_bits` on `threshold` and `value`),
+//! across zoo-profiled datasets, bootstrap on/off, feature subsampling,
+//! and tie-heavy/duplicate-value columns where only the canonical
+//! (value, row id) scan order keeps the two paths aligned.
+
+use perf4sight::device::Simulator;
+use perf4sight::forest::{Forest, ForestConfig, TrainMatrix};
+use perf4sight::models;
+use perf4sight::profiler::{profile, ProfileJob};
+use perf4sight::util::rng::Pcg64;
+
+fn assert_bit_identical(fast: &Forest, reference: &Forest, what: &str) {
+    assert_eq!(
+        fast.trees.len(),
+        reference.trees.len(),
+        "{what}: tree count diverges"
+    );
+    assert_eq!(fast.n_features, reference.n_features, "{what}: n_features");
+    for (t, (a, b)) in fast.trees.iter().zip(&reference.trees).enumerate() {
+        assert_eq!(
+            a.nodes.len(),
+            b.nodes.len(),
+            "{what}: tree {t} node count diverges"
+        );
+        for (i, (na, nb)) in a.nodes.iter().zip(&b.nodes).enumerate() {
+            assert_eq!(na.feature, nb.feature, "{what}: tree {t} node {i} feature");
+            assert_eq!(
+                na.threshold.to_bits(),
+                nb.threshold.to_bits(),
+                "{what}: tree {t} node {i} threshold {} vs {}",
+                na.threshold,
+                nb.threshold
+            );
+            assert_eq!(na.left, nb.left, "{what}: tree {t} node {i} left");
+            assert_eq!(na.right, nb.right, "{what}: tree {t} node {i} right");
+            assert_eq!(
+                na.value.to_bits(),
+                nb.value.to_bits(),
+                "{what}: tree {t} node {i} value {} vs {}",
+                na.value,
+                nb.value
+            );
+        }
+    }
+}
+
+/// All three fast entry points (parallel, sequential, prebuilt matrix)
+/// against the reference, on one problem.
+fn check_all_paths(x: &[Vec<f64>], y: &[f64], cfg: &ForestConfig, what: &str) {
+    let reference = Forest::fit_reference(x, y, cfg).unwrap();
+    let par = Forest::fit(x, y, cfg).unwrap();
+    let seq = Forest::fit_sequential(x, y, cfg).unwrap();
+    let m = TrainMatrix::from_rows(x).unwrap();
+    let via_matrix = Forest::fit_matrix(&m, y, cfg).unwrap();
+    assert_bit_identical(&par, &reference, &format!("{what} [parallel]"));
+    assert_bit_identical(&seq, &reference, &format!("{what} [sequential]"));
+    assert_bit_identical(&via_matrix, &reference, &format!("{what} [matrix]"));
+}
+
+/// Bootstrap on/off × feature_fraction {1/3, 1.0} at a given seed.
+fn check_grid(x: &[Vec<f64>], y: &[f64], n_trees: usize, seed: u64, what: &str) {
+    for bootstrap in [true, false] {
+        for ff in [1.0 / 3.0, 1.0] {
+            let cfg = ForestConfig {
+                n_trees,
+                bootstrap,
+                feature_fraction: ff,
+                seed,
+                ..Default::default()
+            };
+            check_all_paths(
+                x,
+                y,
+                &cfg,
+                &format!("{what} bootstrap={bootstrap} ff={ff:.2}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn zoo_profiles_fit_bit_identical_across_paths() {
+    // Real profiler datasets (5 pruning levels × 25 batch sizes, 57
+    // analytical features) for two zoo networks — the exact workload
+    // `cmd_fit` and the experiments run.
+    let sim = Simulator::tx2();
+    for (name, seed) in [("resnet18", 0x2001u64), ("squeezenet", 0x2002)] {
+        let g = models::by_name(name).unwrap();
+        let ds = profile(&sim, &ProfileJob::new(name, &g));
+        check_grid(&ds.x(), &ds.y_gamma(), 8, seed, &format!("{name}/Γ"));
+        // Φ on one config keeps the suite fast while covering both targets.
+        let cfg = ForestConfig {
+            n_trees: 6,
+            seed: seed ^ 0xff,
+            ..Default::default()
+        };
+        check_all_paths(&ds.x(), &ds.y_phi(), &cfg, &format!("{name}/Φ"));
+    }
+}
+
+#[test]
+fn tie_heavy_and_duplicate_columns_fit_bit_identical() {
+    // Adversarial columns for the canonical-order contract: a constant
+    // column, a two-value column, a 0.0/-0.0 mix, coarse discrete grids,
+    // and every row duplicated — splits land between tied runs and the
+    // scan order within ties is all that separates the two paths.
+    let mut rng = Pcg64::new(0x7137);
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for i in 0..90 {
+        let row = vec![
+            (i % 4) as f64,
+            3.0,
+            if i % 2 == 0 { 0.0 } else { -0.0 },
+            (rng.gen_range(3) as f64) * 0.5,
+            rng.uniform(-2.0, 2.0),
+            (i % 2) as f64,
+        ];
+        let target = (i % 8) as f64 + 2.0 * row[0] - row[3] + 0.25 * row[4];
+        // Exact duplicate of every (row, target) pair.
+        x.push(row.clone());
+        y.push(target);
+        x.push(row);
+        y.push(target);
+    }
+    check_grid(&x, &y, 12, 0x3003, "tie-heavy");
+
+    // min_samples_leaf / min_samples_split interact with duplicate runs in
+    // the scan's integer guards — exercise them off their defaults.
+    let cfg = ForestConfig {
+        n_trees: 10,
+        min_samples_leaf: 3,
+        min_samples_split: 7,
+        max_depth: 9,
+        feature_fraction: 0.4,
+        seed: 0x3004,
+        ..Default::default()
+    };
+    check_all_paths(&x, &y, &cfg, "tie-heavy min_leaf=3 min_split=7");
+}
+
+#[test]
+fn random_problems_fit_bit_identical() {
+    // A spread of shapes: tall/thin, short/wide, single feature, and a
+    // target with plateaus (equal-SSE score ties).
+    let mut rng = Pcg64::new(0xabcd);
+    for (case, (n, d)) in [(0usize, (250usize, 4usize)), (1, (40, 20)), (2, (64, 1))]
+        .into_iter()
+    {
+        let x: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.uniform(-1e3, 1e3)).collect())
+            .collect();
+        let y: Vec<f64> = x
+            .iter()
+            .map(|r| (r[0] / 100.0).round() * 10.0 + r[d - 1] * 0.01)
+            .collect();
+        check_grid(&x, &y, 8, 0x4000 + case as u64, &format!("random shape {case}"));
+    }
+}
+
+#[test]
+fn fast_path_reuses_one_matrix_across_targets() {
+    // The matrix is target-agnostic: fitting Γ then Φ from one presorted
+    // matrix must equal fitting each from scratch.
+    let sim = Simulator::tx2();
+    let g = models::by_name("alexnet").unwrap();
+    let ds = profile(&sim, &ProfileJob::new("alexnet", &g));
+    let cfg = ForestConfig {
+        n_trees: 6,
+        seed: 0x5005,
+        ..Default::default()
+    };
+    let m = ds.train_matrix().unwrap();
+    let fg_shared = Forest::fit_matrix(&m, &ds.y_gamma(), &cfg).unwrap();
+    let fp_shared = Forest::fit_matrix(&m, &ds.y_phi(), &cfg).unwrap();
+    let fg_fresh = Forest::fit(&ds.x(), &ds.y_gamma(), &cfg).unwrap();
+    let fp_fresh = Forest::fit(&ds.x(), &ds.y_phi(), &cfg).unwrap();
+    assert_bit_identical(&fg_shared, &fg_fresh, "shared-matrix Γ");
+    assert_bit_identical(&fp_shared, &fp_fresh, "shared-matrix Φ");
+}

@@ -186,7 +186,8 @@ fn search_through_fast_path_is_bit_identical() {
             max_depth: 6,
             ..Default::default()
         },
-    );
+    )
+    .unwrap();
     let compiled = forest.compile();
     let cfg = EsConfig {
         population: 16,

@@ -145,8 +145,8 @@ fn parallel_forest_fit_matches_sequential_reference() {
             seed: 0xf0e57 ^ n_trees as u64,
             ..Default::default()
         };
-        let par = Forest::fit(&x, &y, &cfg);
-        let seq = Forest::fit_sequential(&x, &y, &cfg);
+        let par = Forest::fit(&x, &y, &cfg).unwrap();
+        let seq = Forest::fit_sequential(&x, &y, &cfg).unwrap();
         assert_eq!(par.trees.len(), seq.trees.len());
         for (i, (a, b)) in par.trees.iter().zip(&seq.trees).enumerate() {
             assert_eq!(a.nodes, b.nodes, "n_trees={n_trees}: tree {i} diverges");

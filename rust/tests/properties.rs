@@ -163,7 +163,8 @@ fn prop_forest_tensor_roundtrip_matches_native() {
                     seed,
                     ..Default::default()
                 },
-            );
+            )
+            .unwrap();
             let t = forest.to_tensors();
             for row in x.iter().take(25) {
                 let a = forest.predict(row);
@@ -198,7 +199,8 @@ fn prop_forest_json_roundtrip() {
                     seed,
                     ..Default::default()
                 },
-            );
+            )
+            .unwrap();
             let j = f.to_json().to_string();
             let f2 = Forest::from_json(&perf4sight::util::json::Json::parse(&j)?)?;
             for row in x.iter().take(10) {
@@ -323,10 +325,114 @@ fn failure_injection_runtime_errors_are_reported() {
             &x,
             &y,
             &perf4sight::runtime::forest_exec::export_forest_config(),
-        );
+        )
+        .unwrap();
         let err = perf4sight::runtime::ForestExecutor::new(&rt, &forest)
             .err()
             .expect("must reject 3-feature forest");
         assert!(err.to_string().contains("features"));
+    }
+}
+
+/// Random (n, d, config) fits: the presorted-column fast path must equal
+/// the per-node-sort reference node-for-node, bit for bit (see
+/// `rust/tests/fit_equivalence.rs` for the structured grid; this sweeps
+/// the shape/hyperparameter space randomly).
+#[test]
+fn prop_fit_fast_matches_reference_node_for_node() {
+    check_no_shrink(
+        0xf17,
+        25,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Pcg64::new(seed);
+            let n = 20 + rng.gen_range(120);
+            let d = 1 + rng.gen_range(10);
+            // Quantised values make equal-feature ties common.
+            let quant = [1.0, 0.25, 1e-3][rng.gen_range(3)];
+            let x: Vec<Vec<f64>> = (0..n)
+                .map(|_| {
+                    (0..d)
+                        .map(|_| (rng.uniform(-50.0, 50.0) / quant).round() * quant)
+                        .collect()
+                })
+                .collect();
+            let y: Vec<f64> = x
+                .iter()
+                .map(|r| r.iter().enumerate().map(|(j, v)| v * (j + 1) as f64).sum())
+                .collect();
+            let cfg = ForestConfig {
+                n_trees: 1 + rng.gen_range(6),
+                max_depth: 2 + rng.gen_range(10),
+                min_samples_leaf: 1 + rng.gen_range(3),
+                min_samples_split: 2 + rng.gen_range(5),
+                feature_fraction: [1.0 / 3.0, 0.5, 1.0][rng.gen_range(3)],
+                bootstrap: rng.gen_range(2) == 0,
+                seed: rng.next_u64(),
+            };
+            let fast = Forest::fit(&x, &y, &cfg).map_err(|e| e.to_string())?;
+            let reference = Forest::fit_reference(&x, &y, &cfg).map_err(|e| e.to_string())?;
+            ensure(fast.trees.len() == reference.trees.len(), "tree count")?;
+            for (a, b) in fast.trees.iter().zip(&reference.trees) {
+                ensure(a.nodes.len() == b.nodes.len(), "node count")?;
+                for (na, nb) in a.nodes.iter().zip(&b.nodes) {
+                    ensure(na.feature == nb.feature, "feature")?;
+                    ensure(
+                        na.threshold.to_bits() == nb.threshold.to_bits(),
+                        format!("threshold {} != {}", na.threshold, nb.threshold),
+                    )?;
+                    ensure(na.left == nb.left && na.right == nb.right, "children")?;
+                    ensure(
+                        na.value.to_bits() == nb.value.to_bits(),
+                        format!("value {} != {}", na.value, nb.value),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Regression: tie-heavy and duplicate columns, where only the canonical
+/// (value, row id) scan order keeps fast and reference aligned.
+#[test]
+fn fit_tie_and_duplicate_columns_regression() {
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for i in 0..120 {
+        // Constant column, binary column, 0.0/-0.0 mix, coarse grid.
+        x.push(vec![
+            7.0,
+            (i % 2) as f64,
+            if i % 3 == 0 { -0.0 } else { 0.0 },
+            (i % 5) as f64,
+        ]);
+        y.push((i % 6) as f64 * 3.0 + (i % 2) as f64);
+    }
+    // Duplicate the back half of the rows verbatim.
+    for i in 60..120 {
+        x.push(x[i].clone());
+        y.push(y[i]);
+    }
+    for bootstrap in [true, false] {
+        let cfg = ForestConfig {
+            n_trees: 9,
+            max_depth: 8,
+            bootstrap,
+            feature_fraction: 0.5,
+            seed: 0x71e5,
+            ..Default::default()
+        };
+        let fast = Forest::fit(&x, &y, &cfg).unwrap();
+        let reference = Forest::fit_reference(&x, &y, &cfg).unwrap();
+        for (t, (a, b)) in fast.trees.iter().zip(&reference.trees).enumerate() {
+            assert_eq!(a.nodes.len(), b.nodes.len(), "tree {t} size");
+            for (i, (na, nb)) in a.nodes.iter().zip(&b.nodes).enumerate() {
+                assert_eq!(na.feature, nb.feature, "tree {t} node {i}");
+                assert_eq!(na.threshold.to_bits(), nb.threshold.to_bits(), "tree {t} node {i}");
+                assert_eq!((na.left, na.right), (nb.left, nb.right), "tree {t} node {i}");
+                assert_eq!(na.value.to_bits(), nb.value.to_bits(), "tree {t} node {i}");
+            }
+        }
     }
 }

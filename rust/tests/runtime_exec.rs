@@ -29,7 +29,7 @@ fn synth_forest() -> (Forest, Vec<Vec<f64>>) {
         .iter()
         .map(|r| 1000.0 + 2e-3 * r[3] + if r[10] > 5e5 { 400.0 } else { 0.0 })
         .collect();
-    let f = Forest::fit(&x, &y, &export_forest_config());
+    let f = Forest::fit(&x, &y, &export_forest_config()).unwrap();
     (f, x)
 }
 

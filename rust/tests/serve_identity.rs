@@ -35,6 +35,7 @@ fn tiny_forest() -> Forest {
             ..Default::default()
         },
     )
+    .unwrap()
 }
 
 fn engine_of(f: &Forest) -> PredictionEngine {

@@ -25,8 +25,10 @@ fn same_network_prediction_errors_are_paper_like() {
     let g = models::squeezenet(1000);
     let (train, test) = train_test_split(&sim, "squeezenet", &g, Strategy::Random, 11);
 
-    let fg = Forest::fit(&train.x(), &train.y_gamma(), &forest_cfg());
-    let fp = Forest::fit(&train.x(), &train.y_phi(), &forest_cfg());
+    // One presorted matrix serves both target fits.
+    let m = train.train_matrix().unwrap();
+    let fg = Forest::fit_matrix(&m, &train.y_gamma(), &forest_cfg()).unwrap();
+    let fp = Forest::fit_matrix(&m, &train.y_phi(), &forest_cfg()).unwrap();
     let gerr = fg.mape(&test.x(), &test.y_gamma());
     let perr = fp.mape(&test.x(), &test.y_phi());
     println!("squeezenet: gamma err {gerr:.2}%  phi err {perr:.2}%");
@@ -42,7 +44,7 @@ fn l1_test_strategy_only_slightly_worse() {
     let (train, test_rand) = train_test_split(&sim, "resnet18", &g, Strategy::Random, 13);
     let (_, test_l1) = train_test_split(&sim, "resnet18", &g, Strategy::L1Norm, 13);
 
-    let fg = Forest::fit(&train.x(), &train.y_gamma(), &forest_cfg());
+    let fg = Forest::fit(&train.x(), &train.y_gamma(), &forest_cfg()).unwrap();
     let e_rand = fg.mape(&test_rand.x(), &test_rand.y_gamma());
     let e_l1 = fg.mape(&test_l1.x(), &test_l1.y_gamma());
     println!("resnet18 Γ: rand {e_rand:.2}%  l1 {e_l1:.2}%");
@@ -69,8 +71,8 @@ fn single_level_training_set_is_much_worse() {
     let train5 = profile(&sim, &five_levels);
     let test = profile(&sim, &test_job);
 
-    let f1 = Forest::fit(&train1.x(), &train1.y_gamma(), &forest_cfg());
-    let f5 = Forest::fit(&train5.x(), &train5.y_gamma(), &forest_cfg());
+    let f1 = Forest::fit(&train1.x(), &train1.y_gamma(), &forest_cfg()).unwrap();
+    let f5 = Forest::fit(&train5.x(), &train5.y_gamma(), &forest_cfg()).unwrap();
     let e1 = f1.mape(&test.x(), &test.y_gamma());
     let e5 = f5.mape(&test.x(), &test.y_gamma());
     println!("alexnet Γ: |T|=1 err {e1:.2}%  |T|=5 err {e5:.2}%");
