@@ -38,6 +38,7 @@ fn main() -> anyhow::Result<()> {
     let base = CampaignSpec {
         networks: vec!["resnet18".into(), "squeezenet".into()],
         strategies: vec![Strategy::Random],
+        regimes: vec![perf4sight::device::TrainRegime::Vanilla],
         levels: TRAIN_LEVELS.to_vec(),
         batch_sizes: PAPER_BATCH_SIZES.to_vec(),
         runs: 3,

@@ -1,0 +1,12 @@
+//! Regenerates the training-regime generalisation sweep: one Γ/Φ forest
+//! pair fitted across vanilla / checkpointed / frozen training on the
+//! widened campaign grid, scored per (network, regime) on held-out levels.
+
+use perf4sight::device::Simulator;
+use perf4sight::experiments::regimes;
+
+fn main() {
+    let sim = Simulator::tx2();
+    let report = regimes::run(&sim, 0x6_2);
+    regimes::print(&report);
+}

@@ -317,6 +317,7 @@ fn main() {
     let camp = CampaignSpec {
         networks: vec!["squeezenet".into(), "mnasnet".into()],
         strategies: vec![Strategy::Random],
+        regimes: vec![perf4sight::device::TrainRegime::Vanilla],
         levels: vec![0.0, 0.5],
         batch_sizes: vec![4, 16, 32],
         runs: 1,

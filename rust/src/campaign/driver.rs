@@ -90,6 +90,11 @@ pub fn execute_shard(spec: &CampaignSpec, shard: &ShardPlan) -> Result<Vec<Profi
             current = Some((head.net_index, arena));
         }
         let (_, arena) = current.as_ref().expect("arena compiled above");
+        // The RNG stream is keyed on (network, strategy, level) only —
+        // regimes deliberately share the level's pruning and noise draws,
+        // exactly like the sequential profiler, so the group key gains the
+        // regime index (regime-specific measurement entry points) while the
+        // stream derivation stays unchanged.
         let mut rng = Pcg64::with_stream(
             spec.seed,
             level_stream(head.network, head.strategy, head.level),
@@ -101,13 +106,19 @@ pub fn execute_shard(spec: &CampaignSpec, shard: &ShardPlan) -> Result<Vec<Profi
         let plan = arena.view_buffers(&buffers);
         while i < shard.units.len() {
             let u = spec.unit(shard.units[i]);
-            if (u.net_index, u.strategy_index, u.level_index)
-                != (head.net_index, head.strategy_index, head.level_index)
+            if (u.net_index, u.strategy_index, u.regime_index, u.level_index)
+                != (
+                    head.net_index,
+                    head.strategy_index,
+                    head.regime_index,
+                    head.level_index,
+                )
             {
                 break;
             }
             points.push(profile_unit(
-                &sim, u.network, u.strategy, spec.runs, &plan, u.level, &rng, u.bs_index, u.bs,
+                &sim, u.network, u.strategy, u.regime, spec.runs, &plan, u.level, &rng,
+                u.bs_index, u.bs,
             ));
             i += 1;
         }

@@ -75,19 +75,22 @@ pub fn merge(spec: &CampaignSpec, dir: &Path) -> Result<Dataset, String> {
             let unit = spec.unit(uid);
             if point.network != unit.network
                 || point.strategy != unit.strategy.name()
+                || point.regime != unit.regime.name()
                 || point.level != unit.level
                 || point.bs != unit.bs
             {
                 return Err(format!(
-                    "{}: point for unit {uid} is ({}, {}, level {}, bs {}) but the spec \
-                     expects ({}, {}, level {}, bs {})",
+                    "{}: point for unit {uid} is ({}, {}, {}, level {}, bs {}) but the spec \
+                     expects ({}, {}, {}, level {}, bs {})",
                     mpath.display(),
                     point.network,
                     point.strategy,
+                    point.regime,
                     point.level,
                     point.bs,
                     unit.network,
                     unit.strategy.name(),
+                    unit.regime.name(),
                     unit.level,
                     unit.bs
                 ));

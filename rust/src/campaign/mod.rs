@@ -38,8 +38,8 @@ use crate::profiler::{profile, worker_width, Dataset, ProfileJob};
 use crate::util::pool::drain_indexed;
 
 /// The single-process reference path: one [`profile`] call per
-/// (network, strategy) pair in spec order. This is the oracle every
-/// sharded execution must reproduce bitwise.
+/// (network, strategy, regime) triple in spec order. This is the oracle
+/// every sharded execution must reproduce bitwise.
 pub fn profile_campaign(spec: &CampaignSpec) -> Result<Dataset, String> {
     spec.validate()?;
     let sim = spec.simulator()?;
@@ -48,16 +48,19 @@ pub fn profile_campaign(spec: &CampaignSpec) -> Result<Dataset, String> {
         let graph = crate::models::by_name(network)
             .ok_or_else(|| format!("unknown network {network:?}"))?;
         for &strategy in &spec.strategies {
-            let job = ProfileJob {
-                network,
-                graph: &graph,
-                strategy,
-                levels: &spec.levels,
-                batch_sizes: &spec.batch_sizes,
-                runs: spec.runs,
-                seed: spec.seed,
-            };
-            out.extend(profile(&sim, &job));
+            for &regime in &spec.regimes {
+                let job = ProfileJob {
+                    network,
+                    graph: &graph,
+                    strategy,
+                    regime,
+                    levels: &spec.levels,
+                    batch_sizes: &spec.batch_sizes,
+                    runs: spec.runs,
+                    seed: spec.seed,
+                };
+                out.extend(profile(&sim, &job));
+            }
         }
     }
     Ok(out)
@@ -109,6 +112,7 @@ mod tests {
         CampaignSpec {
             networks: vec!["squeezenet".into()],
             strategies: vec![Strategy::Random],
+            regimes: vec![crate::device::TrainRegime::Vanilla],
             levels: vec![0.0, 0.5],
             batch_sizes: vec![4, 16],
             runs: 1,
@@ -123,6 +127,24 @@ mod tests {
         let a = profile_campaign(&spec).unwrap();
         let b = collect(&spec).unwrap();
         assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+
+    #[test]
+    fn collect_matches_reference_bitwise_with_regime_axis() {
+        use crate::device::TrainRegime;
+        let mut spec = tiny_spec();
+        spec.regimes = vec![
+            TrainRegime::Vanilla,
+            TrainRegime::Checkpointed { segments: 4 },
+            TrainRegime::Frozen { trainable_suffix: 2 },
+        ];
+        let a = profile_campaign(&spec).unwrap();
+        let b = collect(&spec).unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        // Every regime actually appears in the output.
+        for r in &spec.regimes {
+            assert!(a.points.iter().any(|p| p.regime == r.name()), "{}", r.name());
+        }
     }
 
     #[test]

@@ -11,7 +11,7 @@
 
 use std::path::Path;
 
-use crate::device::{DeviceSpec, Simulator};
+use crate::device::{DeviceSpec, Simulator, TrainRegime};
 use crate::pruning::Strategy;
 use crate::util::json::Json;
 use crate::util::rng::hash_seed;
@@ -19,13 +19,17 @@ use crate::util::rng::hash_seed;
 /// File name of the serialised spec inside a campaign output directory.
 pub const SPEC_FILE: &str = "spec.json";
 
-/// The full profiling campaign: every (network × strategy × level × batch
-/// size) point to measure, plus the measurement parameters. Serialisable,
-/// fingerprintable, and shardable — the unit of work distribution.
+/// The full profiling campaign: every (network × strategy × regime × level
+/// × batch size) point to measure, plus the measurement parameters.
+/// Serialisable, fingerprintable, and shardable — the unit of work
+/// distribution.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CampaignSpec {
     pub networks: Vec<String>,
     pub strategies: Vec<Strategy>,
+    /// Training regimes to sweep. `[Vanilla]` reproduces the historical
+    /// grid (and the historical spec JSON / fingerprint bytes).
+    pub regimes: Vec<TrainRegime>,
     pub levels: Vec<f64>,
     pub batch_sizes: Vec<usize>,
     /// Noisy measurements averaged per datapoint.
@@ -45,10 +49,12 @@ pub struct CampaignUnit<'a> {
     pub id: usize,
     pub network: &'a str,
     pub strategy: Strategy,
+    pub regime: TrainRegime,
     pub level: f64,
     pub bs: usize,
     pub net_index: usize,
     pub strategy_index: usize,
+    pub regime_index: usize,
     pub level_index: usize,
     /// Position of `bs` within the spec's batch-size list — the RNG
     /// fast-forward offset within the level's measurement stream.
@@ -80,6 +86,12 @@ impl CampaignSpec {
         }
         if self.strategies.is_empty() {
             return Err("campaign spec: no strategies".into());
+        }
+        if self.regimes.is_empty() {
+            return Err("campaign spec: no training regimes".into());
+        }
+        for r in &self.regimes {
+            r.validate().map_err(|e| format!("campaign spec: {e}"))?;
         }
         if self.levels.is_empty() {
             return Err("campaign spec: no levels".into());
@@ -116,28 +128,36 @@ impl CampaignSpec {
 
     /// Total number of work units in the grid.
     pub fn total_units(&self) -> usize {
-        self.networks.len() * self.strategies.len() * self.levels.len() * self.batch_sizes.len()
+        self.networks.len()
+            * self.strategies.len()
+            * self.regimes.len()
+            * self.levels.len()
+            * self.batch_sizes.len()
     }
 
     /// Resolve unit `id` in the canonical order (network-major, then
-    /// strategy, then level, batch size minor).
+    /// strategy, then regime, then level, batch size minor).
     pub fn unit(&self, id: usize) -> CampaignUnit<'_> {
         assert!(id < self.total_units(), "unit id {id} out of range");
         let b = self.batch_sizes.len();
         let l = self.levels.len();
+        let r = self.regimes.len();
         let s = self.strategies.len();
         let bs_index = id % b;
         let level_index = (id / b) % l;
-        let strategy_index = (id / (b * l)) % s;
-        let net_index = id / (b * l * s);
+        let regime_index = (id / (b * l)) % r;
+        let strategy_index = (id / (b * l * r)) % s;
+        let net_index = id / (b * l * r * s);
         CampaignUnit {
             id,
             network: &self.networks[net_index],
             strategy: self.strategies[strategy_index],
+            regime: self.regimes[regime_index],
             level: self.levels[level_index],
             bs: self.batch_sizes[bs_index],
             net_index,
             strategy_index,
+            regime_index,
             level_index,
             bs_index,
         }
@@ -173,7 +193,7 @@ impl CampaignSpec {
     // ---------- persistence ----------
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("networks", Json::arr_str(&self.networks)),
             (
                 "strategies",
@@ -185,13 +205,24 @@ impl CampaignSpec {
                         .collect::<Vec<_>>(),
                 ),
             ),
+        ];
+        // A vanilla-only sweep serialises without the key so historical
+        // spec files and fingerprints stay byte-identical (resumable dirs).
+        if self.regimes != [TrainRegime::Vanilla] {
+            fields.push((
+                "regimes",
+                Json::arr_str(&self.regimes.iter().map(|r| r.name()).collect::<Vec<_>>()),
+            ));
+        }
+        fields.extend([
             ("levels", Json::arr_f64(&self.levels)),
             ("batch_sizes", Json::arr_usize(&self.batch_sizes)),
             ("runs", Json::Num(self.runs as f64)),
             // Hex string: u64 seeds are not exactly representable as f64.
             ("seed", Json::Str(format!("{:016x}", self.seed))),
             ("device", Json::Str(self.device.clone())),
-        ])
+        ]);
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<CampaignSpec, String> {
@@ -214,6 +245,18 @@ impl CampaignSpec {
                     .ok_or_else(|| format!("campaign spec: unknown strategy {s:?}"))
             })
             .collect::<Result<Vec<_>, _>>()?;
+        // Missing key ⇒ pre-regime spec ⇒ vanilla-only sweep.
+        let regimes = if j.get("regimes").is_some() {
+            str_list("regimes")?
+                .iter()
+                .map(|r| {
+                    TrainRegime::from_name(r)
+                        .ok_or_else(|| format!("campaign spec: unknown training regime {r:?}"))
+                })
+                .collect::<Result<Vec<_>, _>>()?
+        } else {
+            vec![TrainRegime::Vanilla]
+        };
         let batch_sizes = j
             .get("batch_sizes")
             .and_then(Json::as_arr)
@@ -236,6 +279,7 @@ impl CampaignSpec {
         Ok(CampaignSpec {
             networks: str_list("networks")?,
             strategies,
+            regimes,
             levels: j
                 .get("levels")
                 .and_then(Json::f64_vec)
@@ -276,6 +320,7 @@ mod tests {
         CampaignSpec {
             networks: vec!["squeezenet".into(), "mnasnet".into()],
             strategies: vec![Strategy::Random, Strategy::L1Norm],
+            regimes: vec![TrainRegime::Vanilla],
             levels: vec![0.0, 0.3, 0.5],
             batch_sizes: vec![4, 16],
             runs: 2,
@@ -286,23 +331,36 @@ mod tests {
 
     #[test]
     fn canonical_order_matches_nested_loops() {
-        let s = spec();
-        assert_eq!(s.total_units(), 2 * 2 * 3 * 2);
+        let mut s = spec();
+        s.regimes = vec![
+            TrainRegime::Vanilla,
+            TrainRegime::Checkpointed { segments: 4 },
+        ];
+        assert_eq!(s.total_units(), 2 * 2 * 2 * 3 * 2);
         let mut id = 0;
         for (ni, net) in s.networks.iter().enumerate() {
             for (si, &strat) in s.strategies.iter().enumerate() {
-                for (li, &level) in s.levels.iter().enumerate() {
-                    for (bi, &bs) in s.batch_sizes.iter().enumerate() {
-                        let u = s.unit(id);
-                        assert_eq!(u.network, net);
-                        assert_eq!(u.strategy, strat);
-                        assert_eq!(u.level, level);
-                        assert_eq!(u.bs, bs);
-                        assert_eq!(
-                            (u.net_index, u.strategy_index, u.level_index, u.bs_index),
-                            (ni, si, li, bi)
-                        );
-                        id += 1;
+                for (ri, &regime) in s.regimes.iter().enumerate() {
+                    for (li, &level) in s.levels.iter().enumerate() {
+                        for (bi, &bs) in s.batch_sizes.iter().enumerate() {
+                            let u = s.unit(id);
+                            assert_eq!(u.network, net);
+                            assert_eq!(u.strategy, strat);
+                            assert_eq!(u.regime, regime);
+                            assert_eq!(u.level, level);
+                            assert_eq!(u.bs, bs);
+                            assert_eq!(
+                                (
+                                    u.net_index,
+                                    u.strategy_index,
+                                    u.regime_index,
+                                    u.level_index,
+                                    u.bs_index
+                                ),
+                                (ni, si, ri, li, bi)
+                            );
+                            id += 1;
+                        }
                     }
                 }
             }
@@ -351,6 +409,35 @@ mod tests {
     }
 
     #[test]
+    fn vanilla_spec_json_and_fingerprint_match_pre_regime_bytes() {
+        // The serialised form of a vanilla-only spec must not mention
+        // regimes at all — old campaign directories stay resumable.
+        let s = spec();
+        let j = s.to_json().to_string();
+        assert!(!j.contains("regimes"), "{j}");
+        // A pre-regime spec file (no "regimes" key) loads as vanilla-only
+        // and round-trips to the same fingerprint.
+        let back = CampaignSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.regimes, vec![TrainRegime::Vanilla]);
+        assert_eq!(back.fingerprint(), s.fingerprint());
+    }
+
+    #[test]
+    fn regime_axis_round_trips_and_changes_fingerprint() {
+        let base = spec();
+        let mut swept = base.clone();
+        swept.regimes = vec![
+            TrainRegime::Vanilla,
+            TrainRegime::Checkpointed { segments: 4 },
+            TrainRegime::Frozen { trainable_suffix: 2 },
+        ];
+        assert_ne!(swept.fingerprint(), base.fingerprint());
+        let back = CampaignSpec::from_json(&swept.to_json()).unwrap();
+        assert_eq!(back, swept);
+        assert_eq!(back.fingerprint(), swept.fingerprint());
+    }
+
+    #[test]
     fn validate_rejects_bad_specs() {
         let mut s = spec();
         s.networks = vec!["lenet".into()];
@@ -363,6 +450,12 @@ mod tests {
         assert!(s.validate().is_err());
         let mut s = spec();
         s.batch_sizes.clear();
+        assert!(s.validate().is_err());
+        let mut s = spec();
+        s.regimes.clear();
+        assert!(s.validate().is_err());
+        let mut s = spec();
+        s.regimes = vec![TrainRegime::Checkpointed { segments: 0 }];
         assert!(s.validate().is_err());
         assert!(spec().validate().is_ok());
     }

@@ -1,7 +1,46 @@
 //! Minimal argument parser (clap is unavailable offline): positional
 //! subcommand + `--key value` / `--flag` options.
+//!
+//! Every malformed invocation surfaces as a named [`CliError`] — never a
+//! panic. The historical hazard: a value-taking flag as the *final* token
+//! (`predict --bs`) used to route through an `iter.next().unwrap()`; it now
+//! records the flag sentinel and the typed getters report
+//! [`CliError::MissingValue`] when they reach it.
 
 use std::collections::BTreeMap;
+use std::fmt;
+
+/// Structured CLI-parsing failure. Converts into the coordinator's
+/// `Result<_, String>` error channel via `From`, so `?` works unchanged at
+/// every call site while tests can match on the variant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CliError {
+    /// A bare `--` token with no option name.
+    BareDoubleDash,
+    /// A value-taking option reached without a value (e.g. `predict --bs`
+    /// as the final token, or `--bs --verbose`).
+    MissingValue { flag: String },
+    /// An option value that failed to parse as the expected type.
+    Invalid { flag: String, message: String },
+}
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CliError::BareDoubleDash => f.write_str("bare `--` not supported"),
+            CliError::MissingValue { flag } => write!(f, "--{flag} expects a value"),
+            CliError::Invalid { flag, message } => write!(f, "--{flag}: {message}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl From<CliError> for String {
+    fn from(e: CliError) -> String {
+        e.to_string()
+    }
+}
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
@@ -12,13 +51,13 @@ pub struct Args {
 
 impl Args {
     /// Parse an iterator of raw args (not including argv[0]).
-    pub fn parse(raw: impl IntoIterator<Item = String>) -> Result<Args, String> {
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Result<Args, CliError> {
         let mut out = Args::default();
         let mut iter = raw.into_iter().peekable();
         while let Some(arg) = iter.next() {
             if let Some(key) = arg.strip_prefix("--") {
                 if key.is_empty() {
-                    return Err("bare `--` not supported".into());
+                    return Err(CliError::BareDoubleDash);
                 }
                 if let Some((k, v)) = key.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
@@ -27,7 +66,11 @@ impl Args {
                     .map(|next| !next.starts_with("--"))
                     .unwrap_or(false)
                 {
-                    let v = iter.next().unwrap();
+                    // peek() said a value follows, but never unwrap the
+                    // draw: report the flag by name if the iterator lies.
+                    let v = iter.next().ok_or_else(|| CliError::MissingValue {
+                        flag: key.to_string(),
+                    })?;
                     out.options.insert(key.to_string(), v);
                 } else {
                     out.options.insert(key.to_string(), "true".to_string());
@@ -51,54 +94,76 @@ impl Args {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
 
-    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, String> {
+    /// Parse one option value, mapping a parse failure on the bare-flag
+    /// sentinel (`"true"`, recorded when no value followed the flag) to
+    /// [`CliError::MissingValue`] — `predict --bs` means the value is
+    /// missing, not that "true" is a malformed number.
+    fn typed<T: std::str::FromStr>(&self, key: &str, v: &str) -> Result<T, CliError>
+    where
+        T::Err: fmt::Display,
+    {
+        v.parse().map_err(|e: T::Err| {
+            if v == "true" && self.get(key) == Some("true") {
+                CliError::MissingValue {
+                    flag: key.to_string(),
+                }
+            } else {
+                CliError::Invalid {
+                    flag: key.to_string(),
+                    message: e.to_string(),
+                }
+            }
+        })
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, CliError> {
         match self.get(key) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+            Some(v) => self.typed(key, v),
         }
     }
 
-    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, CliError> {
         match self.get(key) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+            Some(v) => self.typed(key, v),
         }
     }
 
     /// Parse an optional usize option (`Ok(None)` when absent).
-    pub fn usize_opt(&self, key: &str) -> Result<Option<usize>, String> {
+    pub fn usize_opt(&self, key: &str) -> Result<Option<usize>, CliError> {
         match self.get(key) {
             None => Ok(None),
-            Some(v) => v.parse().map(Some).map_err(|e| format!("--{key}: {e}")),
+            Some(v) => self.typed(key, v).map(Some),
         }
     }
 
-    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, String> {
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, CliError> {
         match self.get(key) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+            Some(v) => self.typed(key, v),
         }
     }
 
     /// Parse a comma-separated f64 list option.
-    pub fn f64_list(&self, key: &str) -> Result<Option<Vec<f64>>, String> {
+    pub fn f64_list(&self, key: &str) -> Result<Option<Vec<f64>>, CliError> {
         match self.get(key) {
             None => Ok(None),
             Some(v) => v
                 .split(',')
-                .map(|s| s.trim().parse::<f64>().map_err(|e| format!("--{key}: {e}")))
+                .map(|s| self.typed(key, s.trim()))
                 .collect::<Result<Vec<_>, _>>()
                 .map(Some),
         }
     }
 
     /// Parse a comma-separated usize list option.
-    pub fn usize_list(&self, key: &str) -> Result<Option<Vec<usize>>, String> {
+    pub fn usize_list(&self, key: &str) -> Result<Option<Vec<usize>>, CliError> {
         match self.get(key) {
             None => Ok(None),
             Some(v) => v
                 .split(',')
-                .map(|s| s.trim().parse::<usize>().map_err(|e| format!("--{key}: {e}")))
+                .map(|s| self.typed(key, s.trim()))
                 .collect::<Result<Vec<_>, _>>()
                 .map(Some),
         }
@@ -143,7 +208,42 @@ mod tests {
     #[test]
     fn bad_number_is_error() {
         let a = parse("x --bs abc");
-        assert!(a.usize_or("bs", 1).is_err());
+        let err = a.usize_or("bs", 1).unwrap_err();
+        assert!(matches!(&err, CliError::Invalid { flag, .. } if flag == "bs"), "{err}");
+        assert!(err.to_string().starts_with("--bs: "), "{err}");
+    }
+
+    #[test]
+    fn value_flag_as_final_token_is_missing_value_not_a_panic() {
+        // The historical `iter.next().unwrap()` hazard: a value-taking
+        // flag with nothing after it. Parsing must succeed (the flag
+        // records the sentinel) and the typed getters must report a
+        // named MissingValue, not a confusing number-parse error.
+        for cmdline in ["predict --bs", "profile --runs", "x --bs --verbose"] {
+            let a = Args::parse(cmdline.split_whitespace().map(String::from)).unwrap();
+            let err = a.usize_or(cmdline.split("--").nth(1).unwrap().trim(), 1).unwrap_err();
+            assert!(
+                matches!(&err, CliError::MissingValue { .. }),
+                "{cmdline:?}: {err}"
+            );
+        }
+        let a = parse("predict --bs");
+        assert_eq!(a.usize_or("bs", 1), Err(CliError::MissingValue { flag: "bs".into() }));
+        assert_eq!(a.usize_list("bs").unwrap_err().to_string(), "--bs expects a value");
+        // An explicit `--flag true` for a *numeric* option is still the
+        // missing-value case (the sentinel is indistinguishable), but
+        // boolean flags keep working.
+        assert!(parse("x --verbose").flag("verbose"));
+    }
+
+    #[test]
+    fn bare_double_dash_is_a_named_error() {
+        let err = Args::parse(["--".to_string()]).unwrap_err();
+        assert_eq!(err, CliError::BareDoubleDash);
+        assert_eq!(err.to_string(), "bare `--` not supported");
+        // Still converts into the coordinator's String error channel.
+        let s: String = err.into();
+        assert_eq!(s, "bare `--` not supported");
     }
 
     #[test]

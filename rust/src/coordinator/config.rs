@@ -86,6 +86,10 @@ pub struct ToolflowConfig {
     /// Campaign shard count (`[campaign] shards`); 0 = auto (one shard
     /// per worker).
     pub campaign_shards: usize,
+    /// Default training-regime sweep (`[campaign] regimes`): a comma list
+    /// of regime names (`vanilla`, `ckpt:N`, `frozen:N`). Overridden by
+    /// the CLI `--regimes`; parsed and validated at campaign start.
+    pub campaign_regimes: String,
     /// Serving-queue admission bound (`[serve] queue_capacity`):
     /// generations that may wait before tenant submits block.
     pub serve_queue_capacity: usize,
@@ -105,6 +109,7 @@ impl Default for ToolflowConfig {
             data_dir: "data".into(),
             campaign_workers: 0,
             campaign_shards: 0,
+            campaign_regimes: "vanilla".into(),
             serve_queue_capacity: 64,
             serve_max_coalesce: 16,
         }
@@ -132,6 +137,7 @@ impl ToolflowConfig {
             data_dir: raw.string("paths.data", &d.data_dir),
             campaign_workers: raw.usize("campaign.workers", d.campaign_workers),
             campaign_shards: raw.usize("campaign.shards", d.campaign_shards),
+            campaign_regimes: raw.string("campaign.regimes", &d.campaign_regimes),
             serve_queue_capacity: raw.usize("serve.queue_capacity", d.serve_queue_capacity),
             serve_max_coalesce: raw.usize("serve.max_coalesce", d.serve_max_coalesce),
         }
@@ -162,6 +168,7 @@ runs = 5
 [campaign]
 workers = 3
 shards = 6
+regimes = "vanilla,ckpt:4"
 
 [serve]
 queue_capacity = 32
@@ -192,6 +199,7 @@ artifacts = "build/artifacts"
         assert_eq!(cfg.artifacts_dir, "build/artifacts");
         assert_eq!(cfg.campaign_workers, 3);
         assert_eq!(cfg.campaign_shards, 6);
+        assert_eq!(cfg.campaign_regimes, "vanilla,ckpt:4");
         assert_eq!(cfg.serve_queue_capacity, 32);
         assert_eq!(cfg.serve_max_coalesce, 8);
         // untouched keys keep defaults
@@ -199,6 +207,7 @@ artifacts = "build/artifacts"
         let d = ToolflowConfig::default();
         assert_eq!(d.serve_queue_capacity, 64);
         assert_eq!(d.serve_max_coalesce, 16);
+        assert_eq!(d.campaign_regimes, "vanilla");
     }
 
     #[test]

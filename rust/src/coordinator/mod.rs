@@ -6,15 +6,15 @@
 pub mod cli;
 pub mod config;
 
-pub use cli::Args;
+pub use cli::{Args, CliError};
 pub use config::{RawConfig, ToolflowConfig};
 
 use std::path::{Path, PathBuf};
 
 use crate::campaign::{self, CampaignSpec, DriverConfig, ExecMode};
-use crate::device::{DeviceSpec, Simulator};
+use crate::device::{DeviceSpec, Simulator, TrainRegime};
 use crate::experiments;
-use crate::features::network_features_from_plan;
+use crate::features::network_features_from_plan_regime;
 use crate::forest::Forest;
 use crate::ofa::{Constraints, EsConfig, Subset};
 use crate::profiler::{profile, Dataset, ProfileJob, PAPER_BATCH_SIZES, TRAIN_LEVELS};
@@ -30,12 +30,13 @@ USAGE: perf4sight <command> [--options]
 COMMANDS:
   zoo                               list the network zoo
   profile    --network N [--device tx2] [--strategy random|l1norm]
-             [--levels 0,0.3,..] [--batch-sizes 2,4,..] [--runs 3]
-             [--seed S] --out FILE.json
+             [--regime vanilla|ckpt:N|frozen:N] [--levels 0,0.3,..]
+             [--batch-sizes 2,4,..] [--runs 3] [--seed S] --out FILE.json
              (or: --shards K --shard-index I --out-dir DIR to run one
               campaign shard and write shard-I.json + its manifest)
   campaign   --networks N1,N2[,..] --out-dir DIR [--strategies random,l1norm]
-             [--levels 0,0.3,..] [--batch-sizes 2,4,..] [--runs 3] [--seed S]
+             [--regimes vanilla,ckpt:4,frozen:2] [--levels 0,0.3,..]
+             [--batch-sizes 2,4,..] [--runs 3] [--seed S]
              [--device tx2] [--shards K] [--workers W] [--in-process]
              [--merge-only] [--format json|csv] [--out FILE]
              (spawns W worker processes that drain K shards work-stealing
@@ -44,7 +45,8 @@ COMMANDS:
               Re-running resumes: complete shards are skipped.)
   fit        --data FILE.json[,FILE2..] --target gamma|phi --out MODEL.json
   predict    --model MODEL.json --network N [--level 0.3,0.5,..] [--bs 2,4,..]
-             [--strategy random] [--device tx2] [--seed S]
+             [--strategy random] [--regime vanilla|ckpt:N|frozen:N]
+             [--device tx2] [--seed S]
              (comma lists sweep level × bs in one batched engine call)
   search     [--device tx2] [--subset city|off-road|motorway|country-side]
              [--gamma-max MB] [--gamma-infer-max MB] [--phi-max MS]
@@ -56,7 +58,7 @@ COMMANDS:
               re-runs each serially and fails unless results are
               byte-identical.)
   train-demo [--steps 100] [--lr 0.1] [--artifacts DIR] [--seed S]
-  experiment fig3|fig4|fig5|table2|trainset|topology|dnnmem|ofa-models|ablation|cross-device|all
+  experiment fig3|fig4|fig5|table2|trainset|regimes|topology|dnnmem|ofa-models|ablation|cross-device|all
              [--seed S] [--quick]
   help
 
@@ -98,6 +100,17 @@ fn simulator(args: &Args, cfg: &ToolflowConfig) -> Result<Simulator, String> {
         .ok_or_else(|| format!("unknown device {name:?} (tx2, xavier, 2080ti)"))
 }
 
+/// `--regime NAME` (profile / predict): a single training regime,
+/// defaulting to vanilla.
+fn regime_arg(args: &Args) -> Result<TrainRegime, String> {
+    match args.get("regime") {
+        None => Ok(TrainRegime::Vanilla),
+        Some(name) => TrainRegime::from_name(name).ok_or_else(|| {
+            format!("unknown training regime {name:?} (expected vanilla, ckpt:N or frozen:N)")
+        }),
+    }
+}
+
 fn strategy_of(name: &str) -> Result<Strategy, String> {
     Strategy::from_name(name).ok_or_else(|| format!("unknown strategy {name:?}"))
 }
@@ -128,6 +141,7 @@ fn cmd_profile(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
         .unwrap_or_else(|| PAPER_BATCH_SIZES.to_vec());
     let runs = args.usize_or("runs", cfg.runs)?;
     let seed = args.u64_or("seed", cfg.seed)?;
+    let regime = regime_arg(args)?;
 
     // Shard mode: run one shard of the single-network campaign grid and
     // checkpoint it (shard-I.json + manifest) for a later `campaign
@@ -143,6 +157,7 @@ fn cmd_profile(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
         let spec = CampaignSpec {
             networks: vec![network.to_string()],
             strategies: vec![strategy],
+            regimes: vec![regime],
             levels,
             batch_sizes,
             runs,
@@ -172,6 +187,7 @@ fn cmd_profile(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
         network,
         graph: &graph,
         strategy,
+        regime,
         levels: &levels,
         batch_sizes: &batch_sizes,
         runs,
@@ -218,9 +234,11 @@ fn cmd_campaign(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
                 .map(|s| strategy_of(s.trim()))
                 .collect::<Result<Vec<_>, _>>()?,
         };
+        let regimes = TrainRegime::parse_list(&args.get_or("regimes", &cfg.campaign_regimes))?;
         let spec = CampaignSpec {
             networks,
             strategies,
+            regimes,
             levels: args.f64_list("levels")?.unwrap_or_else(|| TRAIN_LEVELS.to_vec()),
             batch_sizes: args
                 .usize_list("batch-sizes")?
@@ -358,6 +376,7 @@ fn cmd_predict(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
         return Err("--level and --bs need at least one value".into());
     }
     let strategy = strategy_of(&args.get_or("strategy", "random"))?;
+    let regime = regime_arg(args)?;
     let seed = args.u64_or("seed", cfg.seed)?;
     // One pruned topology + compiled plan per level (prune ⇒ rebuild plan;
     // each level prunes the original graph from a fresh seeded RNG, so a
@@ -376,7 +395,7 @@ fn cmd_predict(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
     let mut rows = Vec::with_capacity(levels.len() * batch_sizes.len());
     for plan in &plans {
         for &bs in &batch_sizes {
-            rows.push(network_features_from_plan(plan, bs));
+            rows.push(network_features_from_plan_regime(plan, bs, regime));
         }
     }
     let preds = forest.compile().predict_rows(&rows);
@@ -400,7 +419,7 @@ fn cmd_predict(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
                 format!("{:.1}", preds[li * batch_sizes.len() + bi]),
             ];
             if let Some(sim) = &truth_sim {
-                let m = sim.train_step_plan(plan, bs, None);
+                let m = sim.train_step_plan_regime(plan, bs, regime, None);
                 cells.push(format!("{:.1}", m.gamma_mb));
                 cells.push(format!("{:.1}", m.phi_ms));
             }
@@ -588,7 +607,9 @@ fn cmd_search_served(
     );
     let best = results
         .iter()
-        .max_by(|a, b| a.best_fitness.partial_cmp(&b.best_fitness).unwrap())
+        // total_cmp: same order as partial_cmp on the finite fitness
+        // values produced here, and no panic if one ever goes NaN.
+        .max_by(|a, b| a.best_fitness.total_cmp(&b.best_fitness))
         .expect("at least one tenant");
     println!("best sub-network across tenants: {:?}", best.best);
     println!("predicted accuracy ({}): {:.1}%", subset.name(), best.best_fitness);
@@ -648,7 +669,7 @@ fn cmd_experiment(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
     let which = args
         .positional
         .get(1)
-        .ok_or("experiment name required (fig3|fig4|fig5|table2|trainset|topology|dnnmem|ofa-models|ablation|cross-device|all)")?
+        .ok_or("experiment name required (fig3|fig4|fig5|table2|trainset|regimes|topology|dnnmem|ofa-models|ablation|cross-device|all)")?
         .as_str();
     let sim = simulator(args, cfg)?;
     let seed = args.u64_or("seed", cfg.seed)?;
@@ -663,6 +684,7 @@ fn cmd_experiment(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
                 seed,
             )),
             "dnnmem" => experiments::dnnmem_cmp::print(&experiments::dnnmem_cmp::run(seed)),
+            "regimes" => experiments::regimes::print(&experiments::regimes::run(&sim, seed)),
             "fig4" => experiments::fig4::print(&experiments::fig4::run(&sim, seed)),
             "fig5" => experiments::fig5::print(&experiments::fig5::run(&sim, seed)),
             "ofa-models" => {
@@ -697,8 +719,8 @@ fn cmd_experiment(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
     };
     if which == "all" {
         for name in [
-            "fig3", "trainset", "topology", "dnnmem", "fig4", "fig5", "ofa-models", "table2",
-            "ablation", "cross-device",
+            "fig3", "trainset", "regimes", "topology", "dnnmem", "fig4", "fig5", "ofa-models",
+            "table2", "ablation", "cross-device",
         ] {
             run_one(name)?;
         }

@@ -5,9 +5,11 @@
 
 pub mod allocator;
 pub mod cudnn;
+pub mod regime;
 pub mod simulator;
 pub mod spec;
 
 pub use cudnn::{Algo, Choice, ConvOp};
+pub use regime::TrainRegime;
 pub use simulator::{InferMeasurement, MemoryBreakdown, Simulator, TrainMeasurement, PROFILE_COST_S};
 pub use spec::DeviceSpec;

@@ -1,0 +1,159 @@
+//! Training-regime knobs: the memory-reduced training configurations that
+//! make edge retraining viable (NeuroFlux-style gradient checkpointing and
+//! frozen-backbone / partial-backprop fine-tuning). A [`TrainRegime`] is a
+//! campaign axis exactly like a pruning [`Strategy`](crate::pruning::Strategy):
+//! it has a stable string name (`vanilla`, `ckpt:N`, `frozen:N`) used in CLI
+//! flags, dataset rows and campaign specs, and [`TrainRegime::Vanilla`] is
+//! guaranteed to reproduce the pre-regime simulator numbers bit-identically.
+
+use std::fmt;
+
+/// How the simulated training step is executed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum TrainRegime {
+    /// Plain fp32 training: every activation retained for backward, every
+    /// layer trainable. This is the regime the paper profiles.
+    #[default]
+    Vanilla,
+    /// Gradient checkpointing over `segments` contiguous graph segments:
+    /// only segment-boundary activations stay resident between forward and
+    /// backward; each segment's interior is re-materialised by re-running
+    /// its forward during the backward pass. Memory drops (Γ), latency
+    /// rises by one extra forward sweep (Φ).
+    Checkpointed {
+        /// Number of contiguous checkpoint segments (≥ 1). `1` checkpoints
+        /// the whole network behind a single boundary.
+        segments: usize,
+    },
+    /// Frozen-backbone fine-tuning: only the last `trainable_suffix`
+    /// convolutions (and everything downstream of the first of them) train.
+    /// Frozen layers run forward only — no weight/data gradients, no
+    /// optimizer state, no saved activations. Both Γ and Φ drop.
+    Frozen {
+        /// Number of trailing trainable convolutions (≥ 1). A suffix that
+        /// covers every convolution degenerates to [`TrainRegime::Vanilla`].
+        trainable_suffix: usize,
+    },
+}
+
+impl TrainRegime {
+    /// Stable identifier used in CLI flags, dataset rows, campaign specs
+    /// and fingerprints.
+    pub fn name(&self) -> String {
+        match self {
+            TrainRegime::Vanilla => "vanilla".to_string(),
+            TrainRegime::Checkpointed { segments } => format!("ckpt:{segments}"),
+            TrainRegime::Frozen { trainable_suffix } => format!("frozen:{trainable_suffix}"),
+        }
+    }
+
+    /// Inverse of [`TrainRegime::name`]. Returns `None` for unknown names
+    /// or out-of-range parameters (`ckpt:0`, `frozen:0`).
+    pub fn from_name(name: &str) -> Option<TrainRegime> {
+        if name == "vanilla" {
+            return Some(TrainRegime::Vanilla);
+        }
+        if let Some(n) = name.strip_prefix("ckpt:") {
+            return n
+                .parse::<usize>()
+                .ok()
+                .filter(|&s| s >= 1)
+                .map(|segments| TrainRegime::Checkpointed { segments });
+        }
+        if let Some(n) = name.strip_prefix("frozen:") {
+            return n
+                .parse::<usize>()
+                .ok()
+                .filter(|&s| s >= 1)
+                .map(|trainable_suffix| TrainRegime::Frozen { trainable_suffix });
+        }
+        None
+    }
+
+    /// Parse a comma-separated regime list (CLI `--regimes`, `[campaign]`
+    /// config). Whitespace around entries is ignored.
+    pub fn parse_list(list: &str) -> Result<Vec<TrainRegime>, String> {
+        list.split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                TrainRegime::from_name(s).ok_or_else(|| {
+                    format!("unknown training regime {s:?} (expected vanilla, ckpt:N or frozen:N)")
+                })
+            })
+            .collect()
+    }
+
+    pub fn is_vanilla(&self) -> bool {
+        matches!(self, TrainRegime::Vanilla)
+    }
+
+    /// Reject degenerate parameters (zero segments / zero trainable layers).
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            TrainRegime::Vanilla => Ok(()),
+            TrainRegime::Checkpointed { segments } if *segments == 0 => {
+                Err("ckpt regime needs at least 1 segment".to_string())
+            }
+            TrainRegime::Frozen { trainable_suffix } if *trainable_suffix == 0 => {
+                Err("frozen regime needs at least 1 trainable convolution".to_string())
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+impl fmt::Display for TrainRegime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for r in [
+            TrainRegime::Vanilla,
+            TrainRegime::Checkpointed { segments: 1 },
+            TrainRegime::Checkpointed { segments: 4 },
+            TrainRegime::Frozen { trainable_suffix: 2 },
+            TrainRegime::Frozen { trainable_suffix: 17 },
+        ] {
+            assert_eq!(TrainRegime::from_name(&r.name()), Some(r));
+            assert!(r.validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn bad_names_rejected() {
+        for bad in [
+            "", "Vanilla", "ckpt", "ckpt:", "ckpt:0", "ckpt:-1", "ckpt:x", "frozen", "frozen:0",
+            "frozen:1.5", "fp16",
+        ] {
+            assert_eq!(TrainRegime::from_name(bad), None, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn list_parsing() {
+        let rs = TrainRegime::parse_list("vanilla, ckpt:4 ,frozen:2").unwrap();
+        assert_eq!(
+            rs,
+            vec![
+                TrainRegime::Vanilla,
+                TrainRegime::Checkpointed { segments: 4 },
+                TrainRegime::Frozen { trainable_suffix: 2 },
+            ]
+        );
+        assert!(TrainRegime::parse_list("vanilla,nope").is_err());
+    }
+
+    #[test]
+    fn zero_parameters_fail_validation() {
+        assert!(TrainRegime::Checkpointed { segments: 0 }.validate().is_err());
+        assert!(TrainRegime::Frozen { trainable_suffix: 0 }.validate().is_err());
+    }
+}

@@ -32,6 +32,7 @@ use crate::util::rng::Pcg64;
 
 use super::allocator::{pool_reserved, round_block};
 use super::cudnn::{choose, ConvOp};
+use super::regime::TrainRegime;
 use super::spec::DeviceSpec;
 
 const BYTES: f64 = 4.0;
@@ -337,6 +338,474 @@ impl Simulator {
         t
     }
 
+    // ---- training-regime-aware entry points -----------------------------
+    //
+    // `TrainRegime::Vanilla` delegates to the unmodified methods above, so
+    // vanilla measurements are bit-identical to the pre-regime simulator
+    // (pinned by rust/tests/regime_equivalence.rs). The other regimes reuse
+    // the same retention / kernel-choice / roofline machinery with the
+    // regime's schedule applied.
+
+    /// As [`Simulator::train_step`] under a [`TrainRegime`].
+    pub fn train_step_regime(
+        &self,
+        graph: &Graph,
+        bs: usize,
+        regime: TrainRegime,
+        rng: Option<&mut Pcg64>,
+    ) -> Result<TrainMeasurement, GraphError> {
+        Ok(self.train_step_plan_regime(&NetworkPlan::build(graph)?, bs, regime, rng))
+    }
+
+    /// As [`Simulator::train_step_plan`] under a [`TrainRegime`]. Noise
+    /// draws happen in the same order as the vanilla entry point, so an RNG
+    /// stream advances identically whichever regime it measures.
+    pub fn train_step_plan_regime<P: PlanView>(
+        &self,
+        plan: &P,
+        bs: usize,
+        regime: TrainRegime,
+        mut rng: Option<&mut Pcg64>,
+    ) -> TrainMeasurement {
+        let mem = self.train_memory_breakdown_plan_regime(plan, bs, regime);
+        let phi = self.train_latency_ms_plan_regime(plan, bs, regime);
+        let (g_noise, p_noise) = match rng.as_deref_mut() {
+            Some(r) => (r.jitter(0.008), r.jitter(0.015)),
+            None => (1.0, 1.0),
+        };
+        TrainMeasurement {
+            gamma_mb: mem.total_mb() * g_noise,
+            phi_ms: phi * p_noise,
+        }
+    }
+
+    /// Γ components (noise-free) under a [`TrainRegime`].
+    pub fn train_memory_breakdown_plan_regime<P: PlanView>(
+        &self,
+        plan: &P,
+        bs: usize,
+        regime: TrainRegime,
+    ) -> MemoryBreakdown {
+        match regime {
+            TrainRegime::Vanilla => self.train_memory_breakdown_plan(plan, bs),
+            TrainRegime::Checkpointed { segments } => {
+                self.train_memory_breakdown_ckpt(plan, bs, segments)
+            }
+            TrainRegime::Frozen { trainable_suffix } => {
+                self.train_memory_breakdown_frozen(plan, bs, trainable_suffix)
+            }
+        }
+    }
+
+    /// Φ (noise-free) under a [`TrainRegime`].
+    pub fn train_latency_ms_plan_regime<P: PlanView>(
+        &self,
+        plan: &P,
+        bs: usize,
+        regime: TrainRegime,
+    ) -> f64 {
+        match regime {
+            TrainRegime::Vanilla => self.train_latency_ms_plan(plan, bs),
+            // Checkpointing keeps the backward schedule intact and adds one
+            // full re-materialising forward sweep: each segment's interior
+            // is re-run exactly once during backward, so the extra work is
+            // one forward pass regardless of the segment count.
+            TrainRegime::Checkpointed { .. } => {
+                self.train_latency_ms_plan(plan, bs) + self.forward_sweep_ms(plan, bs)
+            }
+            TrainRegime::Frozen { trainable_suffix } => {
+                self.train_latency_ms_frozen(plan, bs, trainable_suffix)
+            }
+        }
+    }
+
+    /// Γ components for frozen-backbone fine-tuning: only the trailing
+    /// `trainable_suffix` convolutions (and everything downstream of the
+    /// first of them) keep autograd retention, optimizer state and backward
+    /// workspaces. A suffix covering every convolution degenerates to the
+    /// vanilla computation (and is arithmetically identical to it).
+    fn train_memory_breakdown_frozen<P: PlanView>(
+        &self,
+        plan: &P,
+        bs: usize,
+        trainable_suffix: usize,
+    ) -> MemoryBreakdown {
+        let n_nodes = plan.n_nodes();
+        let shapes = plan.shapes();
+        let convs = plan.conv_infos();
+        let bsf = bs as f64;
+        let (first_trainable, cutoff) = frozen_boundary(plan, trainable_suffix);
+
+        // Weights all stay resident (frozen layers still run forward), but
+        // gradient + momentum buffers exist only for trainable parameters.
+        let params = plan.param_count() as f64;
+        let params_mb = pool_reserved([params * BYTES]) / MB;
+        let optimizer_mb = if cutoff == 0 {
+            2.0 * params_mb
+        } else {
+            let trainable = trainable_param_count(plan, cutoff) as f64;
+            2.0 * pool_reserved([trainable * BYTES]) / MB
+        };
+
+        // Autograd retention starts at the trainable cutoff: frozen layers
+        // save nothing for backward. A trainable consumer may still retain
+        // the frozen region's last output (its own input).
+        let mut retained = vec![false; n_nodes];
+        let mut extra_blocks: Vec<f64> = Vec::new();
+        for id in cutoff..n_nodes {
+            match plan.op(id) {
+                Op::Conv2d { .. } | Op::Linear { .. } => {
+                    retained[plan.inputs(id)[0]] = true;
+                }
+                Op::BatchNorm => {
+                    retained[plan.inputs(id)[0]] = true;
+                    let c = shapes[id].channels() as f64;
+                    extra_blocks.push(2.0 * c * BYTES);
+                }
+                Op::Activation(_) => {
+                    retained[id] = true;
+                }
+                Op::MaxPool { .. } => {
+                    let elems = bsf * shapes[id].numel() as f64;
+                    extra_blocks.push(elems * 8.0);
+                }
+                Op::Dropout(_) => {
+                    let elems = bsf * shapes[id].numel() as f64;
+                    extra_blocks.push(elems);
+                }
+                Op::Add | Op::Concat | Op::AvgPool { .. } | Op::GlobalAvgPool
+                | Op::Flatten | Op::Input { .. } => {}
+            }
+        }
+        let act_blocks = (0..n_nodes)
+            .filter(|&i| retained[i])
+            .map(|i| bsf * shapes[i].numel() as f64 * BYTES)
+            .chain(extra_blocks.iter().copied());
+        let activations_mb = pool_reserved(act_blocks) / MB;
+
+        // Workspace: frozen convs run forward only, and the first trainable
+        // conv needs no bwd_data (nothing upstream receives gradients —
+        // with nothing frozen this reduces to the vanilla i == 0 skip).
+        let mut ws_peak = 0.0f64;
+        for (i, c) in convs.iter().enumerate() {
+            for op in [ConvOp::Fwd, ConvOp::BwdFilter, ConvOp::BwdData] {
+                if op == ConvOp::BwdFilter && i < first_trainable {
+                    continue;
+                }
+                if op == ConvOp::BwdData && i <= first_trainable {
+                    continue;
+                }
+                let ch = choose(&self.spec, c, op, bs);
+                ws_peak = ws_peak.max(ch.workspace_bytes);
+            }
+        }
+        let workspace_mb = round_block(ws_peak) / MB;
+
+        // Transient (grad_out + grad_in) pairs exist only where backward
+        // actually runs.
+        let mut transient = 0.0f64;
+        for id in cutoff..n_nodes {
+            let out = bsf * shapes[id].numel() as f64;
+            let inp: f64 = plan
+                .inputs(id)
+                .iter()
+                .map(|&i| bsf * shapes[i].numel() as f64)
+                .sum();
+            transient = transient.max((out + inp) * BYTES);
+        }
+        let transient_mb = round_block(transient) / MB;
+
+        let in_numel = shapes[0].numel() as f64;
+        let io_mb = if self.spec.unified {
+            (2.0 * bsf * in_numel * BYTES) / MB + 260.0
+        } else {
+            (bsf * in_numel * BYTES) / MB
+        };
+
+        MemoryBreakdown {
+            framework_mb: self.spec.framework_base_train_mb,
+            params_mb,
+            optimizer_mb,
+            activations_mb,
+            workspace_mb,
+            transient_mb,
+            io_mb,
+        }
+    }
+
+    /// Γ components under gradient checkpointing: between forward and
+    /// backward only the segment-boundary outputs (the checkpoints) stay
+    /// resident; one segment's interior retention is re-materialised at a
+    /// time during backward, so the live peak is boundaries + the heaviest
+    /// single segment. Weights, optimizer, workspace, transient and io are
+    /// unchanged — the same kernels run, just more than once.
+    fn train_memory_breakdown_ckpt<P: PlanView>(
+        &self,
+        plan: &P,
+        bs: usize,
+        segments: usize,
+    ) -> MemoryBreakdown {
+        let n_nodes = plan.n_nodes();
+        let shapes = plan.shapes();
+        let convs = plan.conv_infos();
+        let bsf = bs as f64;
+
+        let params = plan.param_count() as f64;
+        let params_mb = pool_reserved([params * BYTES]) / MB;
+        let optimizer_mb = 2.0 * params_mb;
+
+        // Vanilla retention bookkeeping, with every auxiliary block tagged
+        // by the node that produced it so it can be assigned to a segment.
+        let mut retained = vec![false; n_nodes];
+        let mut extra_blocks: Vec<(usize, f64)> = Vec::new();
+        for id in 0..n_nodes {
+            match plan.op(id) {
+                Op::Conv2d { .. } | Op::Linear { .. } => {
+                    retained[plan.inputs(id)[0]] = true;
+                }
+                Op::BatchNorm => {
+                    retained[plan.inputs(id)[0]] = true;
+                    let c = shapes[id].channels() as f64;
+                    extra_blocks.push((id, 2.0 * c * BYTES));
+                }
+                Op::Activation(_) => {
+                    retained[id] = true;
+                }
+                Op::MaxPool { .. } => {
+                    let elems = bsf * shapes[id].numel() as f64;
+                    extra_blocks.push((id, elems * 8.0));
+                }
+                Op::Dropout(_) => {
+                    let elems = bsf * shapes[id].numel() as f64;
+                    extra_blocks.push((id, elems));
+                }
+                Op::Add | Op::Concat | Op::AvgPool { .. } | Op::GlobalAvgPool
+                | Op::Flatten | Op::Input { .. } => {}
+            }
+        }
+
+        // Balanced contiguous segmentation by node id: node `id` belongs to
+        // segment `id·S/n`. Note S = 1 stores a boundary and still
+        // re-materialises everything at once — real memory savings start at
+        // S ≥ 2, exactly as with torch.utils.checkpoint.
+        let s = segments.clamp(1, n_nodes);
+        let seg_of = |id: usize| id * s / n_nodes;
+        let block = |id: usize| bsf * shapes[id].numel() as f64 * BYTES;
+        let mut seg_raw = vec![0.0f64; s];
+        for (id, &r) in retained.iter().enumerate() {
+            if r {
+                seg_raw[seg_of(id)] += block(id);
+            }
+        }
+        for &(id, b) in &extra_blocks {
+            seg_raw[seg_of(id)] += b;
+        }
+        let mut peak_seg = 0usize;
+        for (k, &raw) in seg_raw.iter().enumerate() {
+            if raw > seg_raw[peak_seg] {
+                peak_seg = k;
+            }
+        }
+        // A checkpoint that is also retained inside the peak segment counts
+        // twice — once stored, once re-materialised — which is the
+        // conservative (allocator's-eye) view.
+        let boundaries =
+            (0..n_nodes).filter(|&id| id + 1 == n_nodes || seg_of(id + 1) != seg_of(id));
+        let act_blocks = boundaries
+            .map(block)
+            .chain(
+                (0..n_nodes)
+                    .filter(|&id| retained[id] && seg_of(id) == peak_seg)
+                    .map(block),
+            )
+            .chain(
+                extra_blocks
+                    .iter()
+                    .filter(|&&(id, _)| seg_of(id) == peak_seg)
+                    .map(|&(_, b)| b),
+            );
+        let activations_mb = pool_reserved(act_blocks) / MB;
+
+        let mut ws_peak = 0.0f64;
+        for (i, c) in convs.iter().enumerate() {
+            for op in [ConvOp::Fwd, ConvOp::BwdFilter, ConvOp::BwdData] {
+                if op == ConvOp::BwdData && i == 0 {
+                    continue;
+                }
+                let ch = choose(&self.spec, c, op, bs);
+                ws_peak = ws_peak.max(ch.workspace_bytes);
+            }
+        }
+        let workspace_mb = round_block(ws_peak) / MB;
+
+        let mut transient = 0.0f64;
+        for id in 0..n_nodes {
+            let out = bsf * shapes[id].numel() as f64;
+            let inp: f64 = plan
+                .inputs(id)
+                .iter()
+                .map(|&i| bsf * shapes[i].numel() as f64)
+                .sum();
+            transient = transient.max((out + inp) * BYTES);
+        }
+        let transient_mb = round_block(transient) / MB;
+
+        let in_numel = shapes[0].numel() as f64;
+        let io_mb = if self.spec.unified {
+            (2.0 * bsf * in_numel * BYTES) / MB + 260.0
+        } else {
+            (bsf * in_numel * BYTES) / MB
+        };
+
+        MemoryBreakdown {
+            framework_mb: self.spec.framework_base_train_mb,
+            params_mb,
+            optimizer_mb,
+            activations_mb,
+            workspace_mb,
+            transient_mb,
+            io_mb,
+        }
+    }
+
+    /// Φ for frozen-backbone fine-tuning: frozen convs skip bwd_filter and
+    /// bwd_data kernels, frozen pointwise nodes pay only their forward
+    /// traffic share, and the optimizer touches trainable parameters only.
+    fn train_latency_ms_frozen<P: PlanView>(
+        &self,
+        plan: &P,
+        bs: usize,
+        trainable_suffix: usize,
+    ) -> f64 {
+        let n_nodes = plan.n_nodes();
+        let shapes = plan.shapes();
+        let convs = plan.conv_infos();
+        let bsf = bs as f64;
+        let bw = self.spec.mem_bw_gbps * 1e9 * self.spec.bw_efficiency;
+        let launch_ms = self.spec.launch_overhead_us / 1e3;
+        let (first_trainable, cutoff) = frozen_boundary(plan, trainable_suffix);
+        let mut t = self.spec.step_overhead_ms;
+
+        // The first trainable conv needs no bwd_data: nothing upstream
+        // receives gradients (reduces to the vanilla i == 0 skip when
+        // nothing is frozen).
+        for (i, c) in convs.iter().enumerate() {
+            t += choose(&self.spec, c, ConvOp::Fwd, bs).time_ms;
+            if i >= first_trainable {
+                t += choose(&self.spec, c, ConvOp::BwdFilter, bs).time_ms;
+                if i != 0 && i != first_trainable {
+                    t += choose(&self.spec, c, ConvOp::BwdData, bs).time_ms;
+                }
+            }
+        }
+
+        let traffic = |factor: f64, elems: f64, launches: f64| {
+            factor * elems * BYTES / bw * 1e3 + launches * launch_ms
+        };
+        for id in 0..n_nodes {
+            let elems = bsf * shapes[id].numel() as f64;
+            t += if id < cutoff {
+                self.fwd_node_ms(plan, id, bsf, bw, launch_ms)
+            } else {
+                match plan.op(id) {
+                    Op::BatchNorm => traffic(3.0 + 5.0, elems, 2.0),
+                    Op::Activation(_) => traffic(2.0 + 3.0, elems, 2.0),
+                    Op::MaxPool { .. } | Op::AvgPool { .. } => {
+                        let in_elems = bsf * shapes[plan.inputs(id)[0]].numel() as f64;
+                        traffic(2.0, in_elems + elems, 2.0)
+                    }
+                    Op::GlobalAvgPool => {
+                        let in_elems = bsf * shapes[plan.inputs(id)[0]].numel() as f64;
+                        traffic(1.0, in_elems, 2.0)
+                    }
+                    Op::Add => traffic(3.0, elems, 1.0),
+                    Op::Concat => traffic(2.0 + 2.0, elems, 2.0),
+                    Op::Dropout(_) => traffic(2.0 + 2.0, elems, 2.0),
+                    Op::Linear { out, .. } => {
+                        let inf = shapes[plan.inputs(id)[0]].numel() as f64;
+                        let macs = bsf * inf * *out as f64;
+                        let flops = 3.0 * 2.0 * macs;
+                        let t_c = flops / (self.spec.peak_gflops() * 1e9 * 0.35) * 1e3;
+                        let weight_bytes = inf * *out as f64 * BYTES;
+                        let t_m = 3.0 * weight_bytes / bw * 1e3;
+                        t_c.max(t_m) + 3.0 * launch_ms
+                    }
+                    Op::Input { .. } | Op::Flatten | Op::Conv2d { .. } => 0.0,
+                }
+            };
+        }
+
+        let params = if cutoff == 0 {
+            plan.param_count()
+        } else {
+            trainable_param_count(plan, cutoff)
+        } as f64;
+        t += 5.0 * params * BYTES / bw * 1e3 + launch_ms * 3.0;
+        t
+    }
+
+    /// One full forward pass (conv kernels + every other node's forward
+    /// traffic share), without dispatch or step overheads — the extra work
+    /// a checkpointed backward performs to re-materialise activations.
+    fn forward_sweep_ms<P: PlanView>(&self, plan: &P, bs: usize) -> f64 {
+        let n_nodes = plan.n_nodes();
+        let convs = plan.conv_infos();
+        let bsf = bs as f64;
+        let bw = self.spec.mem_bw_gbps * 1e9 * self.spec.bw_efficiency;
+        let launch_ms = self.spec.launch_overhead_us / 1e3;
+        let mut t = 0.0;
+        for c in convs {
+            t += choose(&self.spec, c, ConvOp::Fwd, bs).time_ms;
+        }
+        for id in 0..n_nodes {
+            t += self.fwd_node_ms(plan, id, bsf, bw, launch_ms);
+        }
+        t
+    }
+
+    /// Forward-pass share of one non-conv node's bandwidth-bound cost —
+    /// used for frozen (forward-only) regions and checkpoint re-forwards.
+    /// Each arm is the forward slice of the corresponding arm in
+    /// [`Simulator::train_latency_ms_plan`], so it never exceeds it.
+    fn fwd_node_ms<P: PlanView>(
+        &self,
+        plan: &P,
+        id: usize,
+        bsf: f64,
+        bw: f64,
+        launch_ms: f64,
+    ) -> f64 {
+        let shapes = plan.shapes();
+        let elems = bsf * shapes[id].numel() as f64;
+        let traffic = |factor: f64, elems: f64, launches: f64| {
+            factor * elems * BYTES / bw * 1e3 + launches * launch_ms
+        };
+        match plan.op(id) {
+            Op::BatchNorm => traffic(3.0, elems, 1.0),
+            Op::Activation(_) => traffic(2.0, elems, 1.0),
+            Op::MaxPool { .. } | Op::AvgPool { .. } => {
+                let in_elems = bsf * shapes[plan.inputs(id)[0]].numel() as f64;
+                traffic(1.0, in_elems + elems, 1.0)
+            }
+            Op::GlobalAvgPool => {
+                let in_elems = bsf * shapes[plan.inputs(id)[0]].numel() as f64;
+                traffic(0.5, in_elems, 1.0)
+            }
+            Op::Add => traffic(3.0, elems, 1.0),
+            Op::Concat => traffic(2.0, elems, 1.0),
+            Op::Dropout(_) => traffic(2.0, elems, 1.0),
+            Op::Linear { out, .. } => {
+                let inf = shapes[plan.inputs(id)[0]].numel() as f64;
+                let macs = bsf * inf * *out as f64;
+                let t_c = 2.0 * macs / (self.spec.peak_gflops() * 1e9 * 0.35) * 1e3;
+                let weight_bytes = inf * *out as f64 * BYTES;
+                let t_m = weight_bytes / bw * 1e3;
+                t_c.max(t_m) + launch_ms
+            }
+            Op::Input { .. } | Op::Flatten | Op::Conv2d { .. } => 0.0,
+        }
+    }
+
     /// Inference memory γ (noise-free).
     pub fn infer_memory_mb(&self, graph: &Graph, bs: usize) -> Result<f64, GraphError> {
         Ok(self.infer_memory_mb_plan(&NetworkPlan::build(graph)?, bs))
@@ -355,7 +824,9 @@ impl Simulator {
             .iter()
             .map(|s| bsf * s.numel() as f64 * BYTES)
             .collect();
-        sizes.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        // total_cmp: NaN-safe, and identical to the previous partial_cmp
+        // order on the finite non-negative sizes produced here.
+        sizes.sort_by(|a, b| b.total_cmp(a));
         let act_mb = pool_reserved(sizes.into_iter().take(2)) / MB;
         let mut ws_peak = 0.0f64;
         for c in convs {
@@ -414,6 +885,28 @@ impl Simulator {
         }
         t
     }
+}
+
+/// First trainable conv index and the node-id cutoff of the trainable
+/// region under a frozen regime. A suffix covering every convolution (or a
+/// conv-free graph) yields cutoff 0 — the whole graph trains, i.e. vanilla.
+fn frozen_boundary<P: PlanView>(plan: &P, trainable_suffix: usize) -> (usize, usize) {
+    let convs = plan.conv_infos();
+    let first_trainable = convs.len().saturating_sub(trainable_suffix);
+    let cutoff = if first_trainable == 0 {
+        0
+    } else {
+        convs[first_trainable].node
+    };
+    (first_trainable, cutoff)
+}
+
+/// Parameters owned by nodes at or after `cutoff` (the trainable region).
+fn trainable_param_count<P: PlanView>(plan: &P, cutoff: usize) -> usize {
+    let shapes = plan.shapes();
+    (cutoff..plan.n_nodes())
+        .map(|id| crate::ir::graph::node_param_count(id, plan.op(id), plan.inputs(id), shapes))
+        .sum()
 }
 
 #[cfg(test)]
@@ -529,5 +1022,92 @@ mod tests {
         let m = sim.train_step(&g, 16, None).unwrap();
         assert!((b.total_mb() - m.gamma_mb).abs() < 1e-6);
         assert!(b.activations_mb > 0.0 && b.workspace_mb >= 0.0);
+    }
+
+    #[test]
+    fn vanilla_regime_is_bit_identical() {
+        let sim = Simulator::tx2();
+        let g = models::resnet18(1000);
+        let plan = g.plan().unwrap();
+        for bs in [4usize, 32] {
+            let base = sim.train_step_plan(&plan, bs, None);
+            let via = sim.train_step_plan_regime(&plan, bs, TrainRegime::Vanilla, None);
+            assert_eq!(base.gamma_mb.to_bits(), via.gamma_mb.to_bits());
+            assert_eq!(base.phi_ms.to_bits(), via.phi_ms.to_bits());
+        }
+    }
+
+    #[test]
+    fn checkpointing_trades_memory_for_latency() {
+        let sim = Simulator::tx2();
+        for g in [models::resnet18(1000), models::mobilenet_v2(1000)] {
+            let plan = g.plan().unwrap();
+            let v = sim.train_step_plan(&plan, 32, None);
+            for segments in [2usize, 4] {
+                let c = sim.train_step_plan_regime(
+                    &plan,
+                    32,
+                    TrainRegime::Checkpointed { segments },
+                    None,
+                );
+                assert!(c.gamma_mb < v.gamma_mb, "{}: Γ {} !< {}", g.name, c.gamma_mb, v.gamma_mb);
+                assert!(c.phi_ms > v.phi_ms, "{}: Φ {} !> {}", g.name, c.phi_ms, v.phi_ms);
+            }
+        }
+    }
+
+    #[test]
+    fn freezing_lowers_memory_and_latency() {
+        let sim = Simulator::tx2();
+        for g in [models::resnet18(1000), models::mobilenet_v2(1000)] {
+            let plan = g.plan().unwrap();
+            let v = sim.train_step_plan(&plan, 32, None);
+            let f = sim.train_step_plan_regime(
+                &plan,
+                32,
+                TrainRegime::Frozen { trainable_suffix: 3 },
+                None,
+            );
+            assert!(f.gamma_mb < v.gamma_mb, "{}: Γ {} !< {}", g.name, f.gamma_mb, v.gamma_mb);
+            assert!(f.phi_ms < v.phi_ms, "{}: Φ {} !< {}", g.name, f.phi_ms, v.phi_ms);
+        }
+    }
+
+    #[test]
+    fn full_trainable_suffix_degenerates_to_vanilla() {
+        let sim = Simulator::tx2();
+        let g = models::squeezenet(1000);
+        let plan = g.plan().unwrap();
+        let n_convs = plan.conv_infos().len();
+        let v = sim.train_step_plan(&plan, 16, None);
+        let f = sim.train_step_plan_regime(
+            &plan,
+            16,
+            TrainRegime::Frozen {
+                trainable_suffix: n_convs,
+            },
+            None,
+        );
+        assert_eq!(v.gamma_mb.to_bits(), f.gamma_mb.to_bits());
+        assert_eq!(v.phi_ms.to_bits(), f.phi_ms.to_bits());
+    }
+
+    #[test]
+    fn regime_noise_draws_match_vanilla_stream() {
+        // Whatever the regime, a measurement consumes the same RNG draws —
+        // the profiler's resumable unit streams rely on this.
+        let sim = Simulator::tx2();
+        let g = models::squeezenet(1000);
+        let plan = g.plan().unwrap();
+        let mut r1 = Pcg64::new(21);
+        let mut r2 = Pcg64::new(21);
+        sim.train_step_plan(&plan, 8, Some(&mut r1));
+        sim.train_step_plan_regime(
+            &plan,
+            8,
+            TrainRegime::Checkpointed { segments: 4 },
+            Some(&mut r2),
+        );
+        assert_eq!(r1.next_u64(), r2.next_u64());
     }
 }

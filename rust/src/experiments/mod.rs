@@ -10,6 +10,7 @@ pub mod fig3;
 pub mod fig4;
 pub mod fig5;
 pub mod ofa_models;
+pub mod regimes;
 pub mod table2;
 pub mod topology;
 pub mod trainset;

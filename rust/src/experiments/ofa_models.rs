@@ -113,6 +113,7 @@ pub fn run(sim: &Simulator, subnets: usize, seed: u64) -> OfaModels {
     let train = campaign::collect(&CampaignSpec {
         networks: vec!["resnet50".into()],
         strategies: vec![Strategy::Random],
+        regimes: vec![crate::device::TrainRegime::Vanilla],
         levels: TRAIN_LEVELS.to_vec(),
         batch_sizes: PAPER_BATCH_SIZES.to_vec(),
         runs: 3,

@@ -1,0 +1,141 @@
+//! Training-regime generalisation — the paper's Γ/Φ modelling recipe on
+//! the grid widened by the training-regime axis (network × strategy ×
+//! level × batch size × regime).
+//!
+//! One pair of forests is fitted on the *mixed* dataset covering vanilla
+//! training, gradient checkpointing and frozen-backbone fine-tuning; the
+//! report shows the per-(network, regime) held-out-level errors. The claim
+//! under test: regime-aware features keep the models inside the paper's
+//! accuracy bands (Γ ≲ 9%, Φ ≲ 15%) without per-regime specialisation.
+
+use crate::campaign::{self, CampaignSpec};
+use crate::device::{Simulator, TrainRegime};
+use crate::profiler::{test_levels, PAPER_BATCH_SIZES, TRAIN_LEVELS};
+use crate::pruning::Strategy;
+use crate::util::bench_harness::{section, table};
+
+use super::fit_gamma_phi;
+
+/// The regime sweep the experiment profiles: plain training, 4-segment
+/// gradient checkpointing, 3-layer frozen-backbone fine-tuning.
+pub fn experiment_regimes() -> Vec<TrainRegime> {
+    vec![
+        TrainRegime::Vanilla,
+        TrainRegime::Checkpointed { segments: 4 },
+        TrainRegime::Frozen { trainable_suffix: 3 },
+    ]
+}
+
+/// Held-out-level errors for one (network, regime) cell.
+#[derive(Clone, Debug)]
+pub struct RegimeRow {
+    pub network: String,
+    pub regime: String,
+    pub gamma_err_pct: f64,
+    pub phi_err_pct: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct RegimesReport {
+    pub rows: Vec<RegimeRow>,
+    pub mean_gamma_err_pct: f64,
+    pub mean_phi_err_pct: f64,
+}
+
+fn spec(networks: &[&str], levels: Vec<f64>, seed: u64, device: &str) -> CampaignSpec {
+    CampaignSpec {
+        networks: networks.iter().map(|s| s.to_string()).collect(),
+        strategies: vec![Strategy::Random],
+        regimes: experiment_regimes(),
+        levels,
+        batch_sizes: PAPER_BATCH_SIZES.to_vec(),
+        runs: 3,
+        seed,
+        device: device.into(),
+    }
+}
+
+/// Profile the widened grid, fit one Γ and one Φ forest on the mixed
+/// training levels, and score each (network, regime) cell on held-out
+/// pruning levels from an independent seed stream.
+pub fn run(sim: &Simulator, seed: u64) -> RegimesReport {
+    let networks = ["resnet18", "mobilenetv2"];
+    let device = sim.spec.name;
+    let train = campaign::collect(&spec(&networks, TRAIN_LEVELS.to_vec(), seed, device))
+        .expect("regime training campaign");
+    let test = campaign::collect(&spec(&networks, test_levels(), seed ^ 0x7e57, device))
+        .expect("regime test campaign");
+    let (fg, fp) = fit_gamma_phi(&train);
+    let mut rows = Vec::new();
+    for network in networks {
+        for regime in experiment_regimes() {
+            let cell = test.filter(|p| p.network == network && p.regime == regime.name());
+            rows.push(RegimeRow {
+                network: network.to_string(),
+                regime: regime.name(),
+                gamma_err_pct: fg.mape(&cell.x(), &cell.y_gamma()),
+                phi_err_pct: fp.mape(&cell.x(), &cell.y_phi()),
+            });
+        }
+    }
+    let n = rows.len().max(1) as f64;
+    RegimesReport {
+        mean_gamma_err_pct: rows.iter().map(|r| r.gamma_err_pct).sum::<f64>() / n,
+        mean_phi_err_pct: rows.iter().map(|r| r.phi_err_pct).sum::<f64>() / n,
+        rows,
+    }
+}
+
+pub fn print(report: &RegimesReport) {
+    section("training-regime generalisation — one model over vanilla/ckpt/frozen");
+    table(
+        &["network", "regime", "Γ err %", "Φ err %"],
+        &report
+            .rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.network.clone(),
+                    r.regime.clone(),
+                    format!("{:.2}", r.gamma_err_pct),
+                    format!("{:.2}", r.phi_err_pct),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    println!(
+        "\nmean: Γ {:.2}%  Φ {:.2}%  (paper bands: Γ ≲ 9%, Φ ≲ 15%)",
+        report.mean_gamma_err_pct, report.mean_phi_err_pct
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixed_regime_forest_stays_in_paper_accuracy_bands() {
+        // Single-network version of the experiment (squeezenet keeps the
+        // runtime test-sized): fit on the full regime × level × bs training
+        // grid, score on held-out levels. Thresholds match the zoo-wide
+        // bounds pinned in tests/toolflow.rs.
+        let device = "tx2";
+        let train =
+            campaign::collect(&spec(&["squeezenet"], TRAIN_LEVELS.to_vec(), 77, device)).unwrap();
+        let test =
+            campaign::collect(&spec(&["squeezenet"], test_levels(), 77 ^ 0x7e57, device)).unwrap();
+        assert_eq!(
+            train.len(),
+            TRAIN_LEVELS.len() * PAPER_BATCH_SIZES.len() * experiment_regimes().len()
+        );
+        let (fg, fp) = fit_gamma_phi(&train);
+        for regime in experiment_regimes() {
+            let cell = test.filter(|p| p.regime == regime.name());
+            assert!(!cell.is_empty(), "{}", regime.name());
+            let g = fg.mape(&cell.x(), &cell.y_gamma());
+            let p = fp.mape(&cell.x(), &cell.y_phi());
+            assert!(g < 9.15, "Γ error {g:.2}% out of band for {}", regime.name());
+            assert!(p < 14.7, "Φ error {p:.2}% out of band for {}", regime.name());
+        }
+    }
+}

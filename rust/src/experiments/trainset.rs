@@ -41,6 +41,7 @@ pub fn run(sim: &Simulator, seed: u64) -> TrainsetReport {
     let spec = |s: u64| CampaignSpec {
         networks: vec!["alexnet".into()],
         strategies: vec![Strategy::Random],
+        regimes: vec![crate::device::TrainRegime::Vanilla],
         levels: all_levels(),
         batch_sizes: PAPER_BATCH_SIZES.to_vec(),
         runs: 3,
@@ -127,6 +128,7 @@ mod tests {
         let spec = CampaignSpec {
             networks: vec!["squeezenet".into()],
             strategies: vec![Strategy::Random],
+            regimes: vec![crate::device::TrainRegime::Vanilla],
             levels: vec![0.0, 0.3, 0.6],
             batch_sizes: vec![4, 16],
             runs: 1,

@@ -13,6 +13,7 @@
 //! (App. B.2.4), so the nominal 42-feature list expands to 56 columns; the
 //! batch size itself is prepended as column 0 for a total of 57.
 
+use crate::device::TrainRegime;
 use crate::ir::{ConvInfo, Graph, GraphError, PlanView};
 
 /// Feature families — used by the ablation experiment (E9) to knock out
@@ -311,6 +312,91 @@ fn network_features_into_slice(convs: &[ConvInfo], bs: usize, out: &mut [f64]) {
     out[0] = bs as f64; // bs is a scalar input, not a sum
 }
 
+// Tensor-block column indices (columns 1–5), used by the regime transforms
+// below; pinned to [`feature_names`] by `regime_feature_indices_match_names`.
+const IDX_MEM_W: usize = 1;
+const IDX_MEM_W_GRAD: usize = 2;
+const IDX_MEM_IFM_GRAD: usize = 3;
+const IDX_MEM_OFM_GRAD: usize = 4;
+const IDX_MEM_TENSORS_SUM: usize = 5;
+
+/// As [`network_features_from_plan`] under a [`TrainRegime`] — the regime
+/// modulates how each convolution's analytical terms accumulate instead of
+/// adding columns, so the forest artifact shape ([`NUM_FEATURES`]) is
+/// unchanged. `Vanilla` runs the exact unmodified accumulation and is
+/// bit-identical to [`network_features_from_plan`].
+pub fn network_features_from_plan_regime<P: PlanView>(
+    plan: &P,
+    bs: usize,
+    regime: TrainRegime,
+) -> Vec<f64> {
+    network_features_from_convs_regime(plan.conv_infos(), bs, regime)
+}
+
+/// As [`network_features_from_convs`] under a [`TrainRegime`].
+///
+/// - `Checkpointed { segments }`: per layer, the stored activation-gradient
+///   blocks (`mem_ifm_grad`, `mem_ofm_grad`) shrink by the segment count
+///   (only one segment's worth is live at a time) and every forward-pass
+///   column doubles (checkpoint re-materialisation re-runs forward);
+///   `mem_tensors_sum` is recomputed from the transformed components.
+/// - `Frozen { trainable_suffix }`: frozen convolutions contribute only
+///   their forward-pass columns (weights stay resident, nothing backward
+///   exists); trainable ones accumulate unchanged. A suffix covering every
+///   convolution is bit-identical to vanilla.
+pub fn network_features_from_convs_regime(
+    convs: &[ConvInfo],
+    bs: usize,
+    regime: TrainRegime,
+) -> Vec<f64> {
+    match regime {
+        TrainRegime::Vanilla => network_features_from_convs(convs, bs),
+        TrainRegime::Checkpointed { segments } => {
+            let s = segments.max(1) as f64;
+            let mask = forward_mask_cached();
+            let mut total = vec![0.0f64; NUM_FEATURES];
+            for c in convs {
+                let mut lf = layer_features_arr(c, bs);
+                lf[IDX_MEM_IFM_GRAD] /= s;
+                lf[IDX_MEM_OFM_GRAD] /= s;
+                for (v, &keep) in lf.iter_mut().zip(mask) {
+                    if keep {
+                        *v *= 2.0;
+                    }
+                }
+                lf[IDX_MEM_TENSORS_SUM] = lf[IDX_MEM_W]
+                    + lf[IDX_MEM_W_GRAD]
+                    + lf[IDX_MEM_IFM_GRAD]
+                    + lf[IDX_MEM_OFM_GRAD];
+                for (a, v) in total.iter_mut().zip(lf) {
+                    *a += v;
+                }
+            }
+            total[0] = bs as f64;
+            total
+        }
+        TrainRegime::Frozen { trainable_suffix } => {
+            let first_trainable = convs.len().saturating_sub(trainable_suffix);
+            let mask = forward_mask_cached();
+            let mut total = vec![0.0f64; NUM_FEATURES];
+            for (i, c) in convs.iter().enumerate() {
+                if i >= first_trainable {
+                    accumulate_layer_features(c, bs, &mut total);
+                } else {
+                    let lf = layer_features_arr(c, bs);
+                    for ((a, v), &keep) in total.iter_mut().zip(lf).zip(mask) {
+                        if keep {
+                            *a += v;
+                        }
+                    }
+                }
+            }
+            total[0] = bs as f64;
+            total
+        }
+    }
+}
+
 /// Inference-stage features: forward-pass terms only (Sec. 6.4 trains the
 /// γ/φ models "using only the features corresponding to the forward pass").
 /// Returns (names, values) restricted to fwd columns.
@@ -509,6 +595,91 @@ mod tests {
         assert!(kept >= 8, "too few forward features: {kept}");
         let f = vec![1.0; NUM_FEATURES];
         assert_eq!(mask_features(&f, &mask).len(), kept);
+    }
+
+    #[test]
+    fn regime_feature_indices_match_names() {
+        let names = feature_names();
+        assert_eq!(names[IDX_MEM_W], "mem_w");
+        assert_eq!(names[IDX_MEM_W_GRAD], "mem_w_grad");
+        assert_eq!(names[IDX_MEM_IFM_GRAD], "mem_ifm_grad");
+        assert_eq!(names[IDX_MEM_OFM_GRAD], "mem_ofm_grad");
+        assert_eq!(names[IDX_MEM_TENSORS_SUM], "mem_tensors_sum");
+    }
+
+    #[test]
+    fn vanilla_regime_features_bit_identical() {
+        use crate::device::TrainRegime;
+        let g = crate::models::resnet18(1000);
+        let plan = g.plan().unwrap();
+        for bs in [1usize, 32] {
+            let base = network_features_from_plan(&plan, bs);
+            let via = network_features_from_plan_regime(&plan, bs, TrainRegime::Vanilla);
+            assert_eq!(base, via);
+        }
+    }
+
+    #[test]
+    fn full_trainable_suffix_features_match_vanilla() {
+        use crate::device::TrainRegime;
+        let g = crate::models::squeezenet(1000);
+        let plan = g.plan().unwrap();
+        let n = plan.conv_infos().len();
+        assert_eq!(
+            network_features_from_plan(&plan, 16),
+            network_features_from_plan_regime(
+                &plan,
+                16,
+                TrainRegime::Frozen { trainable_suffix: n }
+            )
+        );
+    }
+
+    #[test]
+    fn checkpoint_features_scale_grad_columns_and_double_fwd() {
+        use crate::device::TrainRegime;
+        let c = sample_conv();
+        let v = network_features_from_convs_regime(&[c], 2, TrainRegime::Vanilla);
+        let ck = network_features_from_convs_regime(
+            &[c],
+            2,
+            TrainRegime::Checkpointed { segments: 4 },
+        );
+        let names = feature_names();
+        let at = |f: &[f64], name: &str| f[names.iter().position(|n| n == name).unwrap()];
+        assert_eq!(at(&ck, "mem_ifm_grad"), at(&v, "mem_ifm_grad") / 4.0);
+        assert_eq!(at(&ck, "mem_ofm_grad"), at(&v, "mem_ofm_grad") / 4.0);
+        // mem_w is a forward column → doubled
+        assert_eq!(at(&ck, "mem_w"), 2.0 * at(&v, "mem_w"));
+        // backward op counts untouched
+        assert_eq!(at(&ck, "mm_ops_bwdx"), at(&v, "mm_ops_bwdx"));
+        // the tensor sum tracks the transformed components
+        assert_eq!(
+            at(&ck, "mem_tensors_sum"),
+            at(&ck, "mem_w") + at(&ck, "mem_w_grad") + at(&ck, "mem_ifm_grad")
+                + at(&ck, "mem_ofm_grad")
+        );
+        assert_eq!(ck[0], 2.0, "bs column stays the scalar batch size");
+    }
+
+    #[test]
+    fn frozen_features_drop_backward_columns_of_frozen_convs() {
+        use crate::device::TrainRegime;
+        let g = crate::models::resnet18(1000);
+        let plan = g.plan().unwrap();
+        let v = network_features_from_plan(&plan, 8);
+        let f = network_features_from_plan_regime(
+            &plan,
+            8,
+            TrainRegime::Frozen { trainable_suffix: 2 },
+        );
+        let names = feature_names();
+        let at = |row: &[f64], name: &str| row[names.iter().position(|n| n == name).unwrap()];
+        // backward magnitudes shrink strictly, forward sums are unchanged
+        assert!(at(&f, "mm_ops_bwdx") < at(&v, "mm_ops_bwdx"));
+        assert!(at(&f, "mem_w_grad") < at(&v, "mem_w_grad"));
+        assert_eq!(at(&f, "mem_w"), at(&v, "mem_w"));
+        assert_eq!(at(&f, "mm_ops_fwd"), at(&v, "mm_ops_fwd"));
     }
 
     #[test]

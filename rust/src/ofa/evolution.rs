@@ -255,8 +255,11 @@ pub fn evolutionary_search(
     // constraint sets.
     let sample_cap = cfg.population * (cfg.iterations + 2) * 4;
     'iterations: for _iter in 0..cfg.iterations {
-        // Keep the fittest parents.
-        population.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        // Keep the fittest parents. total_cmp: descending, same order as
+        // partial_cmp on the finite fitness values the oracle produces,
+        // and a NaN estimate gets a deterministic rank instead of
+        // panicking mid-search.
+        population.sort_by(|a, b| b.1.total_cmp(&a.1));
         population.truncate(n_parents.min(population.len()));
         // Refill with mutations + crossovers of parents, one generation
         // chunk at a time.
@@ -289,7 +292,7 @@ pub fn evolutionary_search(
         }
     }
 
-    population.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    population.sort_by(|a, b| b.1.total_cmp(&a.1));
     // All three fields are `Copy` — no need to clone the winner's tuple.
     let (best, best_fitness, best_attrs) = population[0];
     let cache = match (stats_before, oracle.cache_stats()) {
@@ -312,6 +315,23 @@ pub fn evolutionary_search(
 mod tests {
     use super::*;
     use crate::device::Simulator;
+
+    #[test]
+    fn descending_fitness_sort_is_nan_safe_and_order_preserving() {
+        // The selection sort must (a) not panic on NaN and (b) keep the
+        // exact descending order partial_cmp produced on finite values.
+        let finite = [93.5, 91.25, 93.5, 88.0, 95.125];
+        let mut reference = finite.to_vec();
+        reference.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let mut total = finite.to_vec();
+        total.sort_by(|a, b| b.total_cmp(a));
+        for (r, t) in reference.iter().zip(&total) {
+            assert_eq!(r.to_bits(), t.to_bits());
+        }
+        let mut with_nan = vec![93.5, f64::NAN, 88.0];
+        with_nan.sort_by(|a, b| b.total_cmp(a));
+        assert_eq!(with_nan.iter().filter(|x| x.is_nan()).count(), 1);
+    }
 
     fn sim_predict(
         sim: &Simulator,

@@ -11,6 +11,10 @@ use std::path::Path;
 pub struct ProfilePoint {
     pub network: String,
     pub strategy: String,
+    /// Training regime name ([`TrainRegime::name`](crate::device::TrainRegime::name)):
+    /// `vanilla`, `ckpt:N` or `frozen:N`. Serialized only when non-vanilla,
+    /// so vanilla datasets keep their historical (v1) JSON/CSV bytes.
+    pub regime: String,
     /// Pruning level in [0,1).
     pub level: f64,
     pub bs: usize,
@@ -90,15 +94,23 @@ impl Dataset {
                     self.points
                         .iter()
                         .map(|p| {
-                            Json::obj(vec![
+                            let mut fields = vec![
                                 ("network", Json::Str(p.network.clone())),
                                 ("strategy", Json::Str(p.strategy.clone())),
+                            ];
+                            // v1 back-compat: vanilla rows keep their
+                            // historical bytes (no regime key).
+                            if p.regime != "vanilla" {
+                                fields.push(("regime", Json::Str(p.regime.clone())));
+                            }
+                            fields.extend([
                                 ("level", Json::Num(p.level)),
                                 ("bs", Json::Num(p.bs as f64)),
                                 ("features", Json::arr_f64(&p.features)),
                                 ("gamma_mb", Json::Num(p.gamma_mb)),
                                 ("phi_ms", Json::Num(p.phi_ms)),
-                            ])
+                            ]);
+                            Json::obj(fields)
                         })
                         .collect(),
                 ),
@@ -120,6 +132,11 @@ impl Dataset {
                     .get("strategy")
                     .and_then(Json::as_str)
                     .ok_or("strategy")?
+                    .to_string(),
+                regime: pj
+                    .get("regime")
+                    .and_then(Json::as_str)
+                    .unwrap_or("vanilla")
                     .to_string(),
                 level: pj.get("level").and_then(Json::as_f64).ok_or("level")?,
                 bs: pj.get("bs").and_then(Json::as_usize).ok_or("bs")?,
@@ -155,19 +172,35 @@ impl Dataset {
     }
 
     /// CSV dump (header + rows) for external analysis / plotting.
+    ///
+    /// All-vanilla datasets emit the historical v1 header (no `regime`
+    /// column, bytes identical to pre-regime builds); any non-vanilla row
+    /// upgrades the whole dump to the v2 header with `regime` third.
     pub fn to_csv(&self) -> String {
+        let with_regime = self.points.iter().any(|p| p.regime != "vanilla");
         let mut out = String::new();
-        out.push_str("network,strategy,level,bs,gamma_mb,phi_ms");
+        if with_regime {
+            out.push_str("network,strategy,regime,level,bs,gamma_mb,phi_ms");
+        } else {
+            out.push_str("network,strategy,level,bs,gamma_mb,phi_ms");
+        }
         for n in feature_names() {
             out.push(',');
             out.push_str(&n);
         }
         out.push('\n');
         for p in &self.points {
-            out.push_str(&format!(
-                "{},{},{},{},{},{}",
-                p.network, p.strategy, p.level, p.bs, p.gamma_mb, p.phi_ms
-            ));
+            if with_regime {
+                out.push_str(&format!(
+                    "{},{},{},{},{},{},{}",
+                    p.network, p.strategy, p.regime, p.level, p.bs, p.gamma_mb, p.phi_ms
+                ));
+            } else {
+                out.push_str(&format!(
+                    "{},{},{},{},{},{}",
+                    p.network, p.strategy, p.level, p.bs, p.gamma_mb, p.phi_ms
+                ));
+            }
             for f in &p.features {
                 out.push_str(&format!(",{f}"));
             }
@@ -178,17 +211,26 @@ impl Dataset {
 
     /// Inverse of [`Dataset::to_csv`]: floats round-trip bitwise (`{}` on
     /// f64 prints the shortest representation that parses back exactly).
-    /// Used by the campaign `--format csv` output path.
+    /// Accepts both the v1 (regime-less) and v2 headers; v1 rows load as
+    /// `vanilla`. Used by the campaign `--format csv` output path.
     pub fn from_csv(text: &str) -> Result<Dataset, String> {
-        let expected_cols = 6 + feature_names().len();
+        const V1_META: [&str; 6] = ["network", "strategy", "level", "bs", "gamma_mb", "phi_ms"];
+        const V2_META: [&str; 7] = [
+            "network", "strategy", "regime", "level", "bs", "gamma_mb", "phi_ms",
+        ];
+        let n_features = feature_names().len();
         let mut lines = text.lines();
         let header = lines.next().ok_or("empty CSV")?;
         let head: Vec<&str> = header.split(',').collect();
-        if head.len() != expected_cols
-            || head[..6] != ["network", "strategy", "level", "bs", "gamma_mb", "phi_ms"]
-        {
+        let with_regime = if head.len() == V2_META.len() + n_features && head[..7] == V2_META {
+            true
+        } else if head.len() == V1_META.len() + n_features && head[..6] == V1_META {
+            false
+        } else {
             return Err(format!("unexpected CSV header: {header}"));
-        }
+        };
+        let meta = if with_regime { 7 } else { 6 };
+        let expected_cols = meta + n_features;
         let mut points = Vec::new();
         for (i, line) in lines.enumerate() {
             if line.trim().is_empty() {
@@ -207,18 +249,24 @@ impl Dataset {
                     .parse::<f64>()
                     .map_err(|e| format!("CSV line {}: column {}: {e}", i + 2, c + 1))
             };
+            let o = meta - 6; // offset of the post-regime columns
             points.push(ProfilePoint {
                 network: cols[0].to_string(),
                 strategy: cols[1].to_string(),
-                level: f64_at(2)?,
-                bs: cols[3]
+                regime: if with_regime {
+                    cols[2].to_string()
+                } else {
+                    "vanilla".to_string()
+                },
+                level: f64_at(2 + o)?,
+                bs: cols[3 + o]
                     .parse()
                     .map_err(|e| format!("CSV line {}: bs: {e}", i + 2))?,
-                features: (6..expected_cols)
+                features: (meta..expected_cols)
                     .map(f64_at)
                     .collect::<Result<Vec<_>, _>>()?,
-                gamma_mb: f64_at(4)?,
-                phi_ms: f64_at(5)?,
+                gamma_mb: f64_at(4 + o)?,
+                phi_ms: f64_at(5 + o)?,
             });
         }
         Ok(Dataset::new(points))
@@ -257,6 +305,7 @@ mod tests {
         ProfilePoint {
             network: net.into(),
             strategy: "random".into(),
+            regime: "vanilla".into(),
             level: 0.3,
             bs,
             features: vec![1.0; NUM_FEATURES],
@@ -362,6 +411,47 @@ mod tests {
         let back = Dataset::from_csv(&ds.to_csv()).unwrap();
         // Bitwise identity, JSON bytes included.
         assert_eq!(back.to_json().to_string(), ds.to_json().to_string());
+    }
+
+    #[test]
+    fn vanilla_points_serialize_without_regime_key() {
+        // v1 back-compat: an all-vanilla dataset must produce byte-for-byte
+        // the same JSON and CSV as pre-regime builds.
+        let ds = Dataset::new(vec![point("a", 2, 1.0)]);
+        assert!(!ds.to_json().to_string().contains("regime"));
+        assert!(ds.to_csv().starts_with("network,strategy,level,bs"));
+    }
+
+    #[test]
+    fn regime_roundtrips_json_and_csv() {
+        let mut a = point("resnet18", 8, 321.5);
+        a.regime = "ckpt:4".into();
+        let mut b = point("resnet18", 8, 290.25);
+        b.regime = "frozen:2".into();
+        let ds = Dataset::new(vec![a, b, point("plain", 2, 1.0)]);
+
+        let j = ds.to_json().to_string();
+        let back = Dataset::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.points[0].regime, "ckpt:4");
+        assert_eq!(back.points[2].regime, "vanilla");
+        assert_eq!(back.to_json().to_string(), j);
+
+        let csv = ds.to_csv();
+        assert!(csv.starts_with("network,strategy,regime,level,bs"));
+        let back = Dataset::from_csv(&csv).unwrap();
+        assert_eq!(back.points[1].regime, "frozen:2");
+        assert_eq!(back.to_csv(), csv);
+    }
+
+    #[test]
+    fn v1_csv_still_loads_with_vanilla_regime() {
+        // A regime-less dump (all points vanilla) uses the v1 header; loading
+        // it defaults every row to vanilla and re-serializes to the same bytes.
+        let ds = Dataset::new(vec![point("a", 2, 1.0), point("b", 4, 2.0)]);
+        let v1 = ds.to_csv();
+        let back = Dataset::from_csv(&v1).unwrap();
+        assert!(back.points.iter().all(|p| p.regime == "vanilla"));
+        assert_eq!(back.to_csv(), v1);
     }
 
     #[test]

@@ -21,8 +21,8 @@ pub mod dataset;
 
 pub use dataset::{Dataset, ProfilePoint};
 
-use crate::device::Simulator;
-use crate::features::network_features_from_plan;
+use crate::device::{Simulator, TrainRegime};
+use crate::features::network_features_from_plan_regime;
 use crate::ir::{Graph, GraphArena, PlanBuffers, PlanSnapshot, PlanView};
 use crate::pruning::{prune, prune_overlay, Strategy};
 use crate::util::rng::{hash_seed, Pcg64};
@@ -56,6 +56,11 @@ pub struct ProfileJob<'a> {
     pub network: &'a str,
     pub graph: &'a Graph,
     pub strategy: Strategy,
+    /// Training regime measured (vanilla, checkpointed, frozen). The
+    /// regime shares the level's pruning/noise RNG stream — the pruned
+    /// topology and draw schedule are regime-independent, so vanilla
+    /// datasets stay bit-identical to the pre-regime profiler.
+    pub regime: TrainRegime,
     pub levels: &'a [f64],
     pub batch_sizes: &'a [usize],
     /// Noisy measurements averaged per datapoint (the paper averages
@@ -72,6 +77,7 @@ impl<'a> ProfileJob<'a> {
             network,
             graph,
             strategy: Strategy::Random,
+            regime: TrainRegime::Vanilla,
             levels: &TRAIN_LEVELS,
             batch_sizes: &PAPER_BATCH_SIZES,
             runs: 3,
@@ -177,6 +183,7 @@ pub fn profile(sim: &Simulator, job: &ProfileJob) -> Dataset {
             sim,
             job.network,
             job.strategy,
+            job.regime,
             job.runs,
             &arena.view(snap),
             level,
@@ -193,7 +200,9 @@ pub fn profile(sim: &Simulator, job: &ProfileJob) -> Dataset {
 /// The original single-thread-per-level implementation, kept as the
 /// determinism oracle for [`profile`]: one RNG stream per level drives
 /// pruning and then every measurement in batch-size order, with the
-/// direct-graph (non-plan) analysis paths.
+/// direct-graph (non-plan) analysis paths. With `TrainRegime::Vanilla`
+/// the regime entry points delegate to the unmodified pre-regime code,
+/// so this remains the historical reference byte for byte.
 pub fn profile_sequential(sim: &Simulator, job: &ProfileJob) -> Dataset {
     let mut points = Vec::new();
     for &level in job.levels {
@@ -203,13 +212,14 @@ pub fn profile_sequential(sim: &Simulator, job: &ProfileJob) -> Dataset {
         );
         let pruned = prune(job.graph, job.strategy, level, &mut rng);
         for &bs in job.batch_sizes {
+            let convs = pruned.conv_infos().expect("valid pruned graph");
             let features =
-                crate::features::network_features(&pruned, bs).expect("valid pruned graph");
+                crate::features::network_features_from_convs_regime(&convs, bs, job.regime);
             let mut gamma = 0.0;
             let mut phi = 0.0;
             for _ in 0..job.runs.max(1) {
                 let m = sim
-                    .train_step(&pruned, bs, Some(&mut rng))
+                    .train_step_regime(&pruned, bs, job.regime, Some(&mut rng))
                     .expect("simulation");
                 gamma += m.gamma_mb;
                 phi += m.phi_ms;
@@ -218,6 +228,7 @@ pub fn profile_sequential(sim: &Simulator, job: &ProfileJob) -> Dataset {
             points.push(ProfilePoint {
                 network: job.network.to_string(),
                 strategy: job.strategy.name(),
+                regime: job.regime.name(),
                 level,
                 bs,
                 features,
@@ -248,6 +259,7 @@ pub(crate) fn profile_unit<P: PlanView>(
     sim: &Simulator,
     network: &str,
     strategy: Strategy,
+    regime: TrainRegime,
     runs: usize,
     plan: &P,
     level: f64,
@@ -258,17 +270,18 @@ pub(crate) fn profile_unit<P: PlanView>(
     let runs = runs.max(1);
     let mut rng = base_rng.clone();
     rng.advance(bs_index as u64 * runs as u64 * NOISE_DRAWS_PER_MEASUREMENT);
-    let features = network_features_from_plan(plan, bs);
+    let features = network_features_from_plan_regime(plan, bs, regime);
     let mut gamma = 0.0;
     let mut phi = 0.0;
     for _ in 0..runs {
-        let m = sim.train_step_plan(plan, bs, Some(&mut rng));
+        let m = sim.train_step_plan_regime(plan, bs, regime, Some(&mut rng));
         gamma += m.gamma_mb;
         phi += m.phi_ms;
     }
     ProfilePoint {
         network: network.to_string(),
         strategy: strategy.name(),
+        regime: regime.name(),
         level,
         bs,
         features,
@@ -378,6 +391,35 @@ mod tests {
             assert_eq!(a.features, b.features, "level {} bs {}", a.level, a.bs);
             assert_eq!(a.gamma_mb, b.gamma_mb, "level {} bs {}", a.level, a.bs);
             assert_eq!(a.phi_ms, b.phi_ms, "level {} bs {}", a.level, a.bs);
+        }
+    }
+
+    #[test]
+    fn regime_profile_matches_sequential_reference() {
+        // The flat schedule must reproduce the sequential reference for
+        // non-vanilla regimes too — same pruned topologies, same draws.
+        let sim = Simulator::tx2();
+        let g = models::squeezenet(1000);
+        for regime in [
+            TrainRegime::Checkpointed { segments: 4 },
+            TrainRegime::Frozen { trainable_suffix: 3 },
+        ] {
+            let job = ProfileJob {
+                regime,
+                levels: &[0.0, 0.5],
+                batch_sizes: &[4, 16],
+                runs: 2,
+                ..ProfileJob::new("squeezenet", &g)
+            };
+            let flat = profile(&sim, &job);
+            let seq = profile_sequential(&sim, &job);
+            assert_eq!(flat.len(), seq.len());
+            for (a, b) in flat.points.iter().zip(&seq.points) {
+                assert_eq!(a.regime, regime.name());
+                assert_eq!(a.features, b.features);
+                assert_eq!(a.gamma_mb, b.gamma_mb);
+                assert_eq!(a.phi_ms, b.phi_ms);
+            }
         }
     }
 

@@ -24,7 +24,10 @@ pub fn median(xs: &[f64]) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: identical order to partial_cmp on finite inputs, and a
+    // NaN in a noisy measurement series degrades the estimate instead of
+    // panicking mid-experiment.
+    v.sort_by(f64::total_cmp);
     let n = v.len();
     if n % 2 == 1 {
         v[n / 2]
@@ -39,7 +42,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -176,5 +179,25 @@ mod tests {
     fn rmse_zero_for_exact() {
         let t = [1.0, 2.0];
         assert_eq!(rmse(&t, &t), 0.0);
+    }
+
+    #[test]
+    fn median_and_percentile_survive_nan_and_pin_finite_order() {
+        // NaN inputs must not panic (the pre-total_cmp sort did).
+        let with_nan = [3.0, f64::NAN, 1.0];
+        let _ = median(&with_nan);
+        let _ = percentile(&with_nan, 50.0);
+        // On finite inputs — ties, negative zero included — the order
+        // total_cmp produces matches the reference partial_cmp sort
+        // bit-for-bit, so every downstream statistic is unchanged.
+        let xs = [2.0, -0.0, 2.0, 0.0, -1.5, 3.25, 0.0];
+        let mut reference = xs.to_vec();
+        reference.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut total = xs.to_vec();
+        total.sort_by(f64::total_cmp);
+        for (r, t) in reference.iter().zip(&total) {
+            assert_eq!(r.to_bits(), t.to_bits());
+        }
+        assert_eq!(median(&xs).to_bits(), 0.0f64.to_bits());
     }
 }

@@ -25,6 +25,7 @@ fn small_spec(networks: &[&str], seed: u64) -> CampaignSpec {
     CampaignSpec {
         networks: networks.iter().map(|s| s.to_string()).collect(),
         strategies: vec![Strategy::Random, Strategy::L1Norm],
+        regimes: vec![perf4sight::device::TrainRegime::Vanilla],
         levels: vec![0.0, 0.4],
         batch_sizes: vec![4, 16],
         runs: 2,
@@ -64,6 +65,7 @@ fn merged_shards_bit_identical_for_shard_counts_1_3_7() {
                 network: "squeezenet",
                 graph: &graph,
                 strategy,
+                regime: perf4sight::device::TrainRegime::Vanilla,
                 levels: &spec.levels,
                 batch_sizes: &spec.batch_sizes,
                 runs: spec.runs,

@@ -229,6 +229,7 @@ fn campaign_merge_bit_identical_through_overlays() {
     let spec = CampaignSpec {
         networks: vec!["squeezenet".into(), "mnasnet".into()],
         strategies: vec![Strategy::Random, Strategy::L1Norm],
+        regimes: vec![perf4sight::device::TrainRegime::Vanilla],
         levels: vec![0.0, 0.25, 0.75],
         batch_sizes: vec![4, 16],
         runs: 2,
@@ -246,6 +247,7 @@ fn campaign_merge_bit_identical_through_overlays() {
                 network,
                 graph: &graph,
                 strategy,
+                regime: perf4sight::device::TrainRegime::Vanilla,
                 levels: &spec.levels,
                 batch_sizes: &spec.batch_sizes,
                 runs: spec.runs,

@@ -1,0 +1,146 @@
+//! Training-regime oracle suite.
+//!
+//! The regime axis is additive: `TrainRegime::Vanilla` must reproduce the
+//! pre-regime simulator, profiler and dataset bytes bit for bit across the
+//! whole zoo, while `Checkpointed` / `Frozen` move Γ and Φ in the
+//! physically required directions. Also pins the v1 (regime-less) dataset
+//! CSV schema via a checked-in fixture.
+
+use perf4sight::device::{Simulator, TrainRegime};
+use perf4sight::profiler::{profile, Dataset, ProfileJob};
+use perf4sight::util::rng::Pcg64;
+
+#[test]
+fn vanilla_regime_is_bit_identical_across_the_zoo() {
+    let sim = Simulator::tx2();
+    for name in perf4sight::models::ZOO {
+        let graph = perf4sight::models::by_name(name).unwrap();
+        let plan = graph.plan().unwrap();
+        for bs in [4usize, 32] {
+            // Noise-free measurements.
+            let a = sim.train_step_plan(&plan, bs, None);
+            let b = sim.train_step_plan_regime(&plan, bs, TrainRegime::Vanilla, None);
+            assert_eq!(a.gamma_mb.to_bits(), b.gamma_mb.to_bits(), "{name} bs={bs}");
+            assert_eq!(a.phi_ms.to_bits(), b.phi_ms.to_bits(), "{name} bs={bs}");
+            // Noisy measurements: identical draws from identical streams.
+            let mut r1 = Pcg64::new(0x517e ^ bs as u64);
+            let mut r2 = Pcg64::new(0x517e ^ bs as u64);
+            let a = sim.train_step_plan(&plan, bs, Some(&mut r1));
+            let b = sim.train_step_plan_regime(&plan, bs, TrainRegime::Vanilla, Some(&mut r2));
+            assert_eq!(a.gamma_mb.to_bits(), b.gamma_mb.to_bits(), "{name} bs={bs}");
+            assert_eq!(a.phi_ms.to_bits(), b.phi_ms.to_bits(), "{name} bs={bs}");
+            // Both paths consumed the same number of draws.
+            assert_eq!(r1.next_u64(), r2.next_u64(), "{name} bs={bs}");
+        }
+    }
+}
+
+#[test]
+fn vanilla_profile_dataset_keeps_v1_bytes() {
+    // A vanilla profiling job serialises without any regime markers: the
+    // JSON has no "regime" key and the CSV keeps the historical header.
+    let graph = perf4sight::models::by_name("squeezenet").unwrap();
+    let ds = profile(
+        &Simulator::tx2(),
+        &ProfileJob {
+            levels: &[0.0, 0.5],
+            batch_sizes: &[4, 16],
+            runs: 2,
+            seed: 9,
+            ..ProfileJob::new("squeezenet", &graph)
+        },
+    );
+    assert!(!ds.is_empty());
+    assert!(!ds.to_json().to_string().contains("regime"));
+    assert!(ds.to_csv().starts_with("network,strategy,level,bs,gamma_mb,phi_ms,"));
+}
+
+#[test]
+fn checkpointing_and_freezing_move_gamma_phi_in_the_right_directions() {
+    let sim = Simulator::tx2();
+    for name in ["resnet18", "mobilenetv2"] {
+        let graph = perf4sight::models::by_name(name).unwrap();
+        let plan = graph.plan().unwrap();
+        let bs = 32;
+        let vanilla = sim.train_step_plan(&plan, bs, None);
+        for segments in [2usize, 4, 8] {
+            let ckpt = sim.train_step_plan_regime(
+                &plan,
+                bs,
+                TrainRegime::Checkpointed { segments },
+                None,
+            );
+            assert!(
+                ckpt.gamma_mb < vanilla.gamma_mb,
+                "{name} ckpt:{segments}: Γ {} !< {}",
+                ckpt.gamma_mb,
+                vanilla.gamma_mb
+            );
+            assert!(
+                ckpt.phi_ms > vanilla.phi_ms,
+                "{name} ckpt:{segments}: Φ {} !> {}",
+                ckpt.phi_ms,
+                vanilla.phi_ms
+            );
+        }
+        for suffix in [1usize, 3] {
+            let frozen = sim.train_step_plan_regime(
+                &plan,
+                bs,
+                TrainRegime::Frozen {
+                    trainable_suffix: suffix,
+                },
+                None,
+            );
+            assert!(
+                frozen.gamma_mb < vanilla.gamma_mb,
+                "{name} frozen:{suffix}: Γ {} !< {}",
+                frozen.gamma_mb,
+                vanilla.gamma_mb
+            );
+            assert!(
+                frozen.phi_ms < vanilla.phi_ms,
+                "{name} frozen:{suffix}: Φ {} !< {}",
+                frozen.phi_ms,
+                vanilla.phi_ms
+            );
+        }
+    }
+}
+
+#[test]
+fn fully_trainable_frozen_suffix_degenerates_to_vanilla() {
+    let sim = Simulator::tx2();
+    let graph = perf4sight::models::by_name("squeezenet").unwrap();
+    let plan = graph.plan().unwrap();
+    let n_convs = plan.conv_infos().len();
+    for suffix in [n_convs, n_convs + 10] {
+        let v = sim.train_step_plan(&plan, 16, None);
+        let f = sim.train_step_plan_regime(
+            &plan,
+            16,
+            TrainRegime::Frozen {
+                trainable_suffix: suffix,
+            },
+            None,
+        );
+        assert_eq!(v.gamma_mb.to_bits(), f.gamma_mb.to_bits(), "suffix={suffix}");
+        assert_eq!(v.phi_ms.to_bits(), f.phi_ms.to_bits(), "suffix={suffix}");
+    }
+}
+
+#[test]
+fn v1_csv_fixture_loads_and_round_trips_bitwise() {
+    // Checked-in pre-regime dump: must parse (regime defaulting to
+    // vanilla) and re-serialise to the identical bytes — the v1 schema is
+    // frozen forever.
+    let fixture = include_str!("fixtures/dataset_v1.csv");
+    let ds = Dataset::from_csv(fixture).unwrap();
+    assert_eq!(ds.len(), 3);
+    assert!(ds.points.iter().all(|p| p.regime == "vanilla"));
+    assert_eq!(ds.points[0].network, "resnet18");
+    assert_eq!(ds.points[2].strategy, "l1norm");
+    assert_eq!(ds.to_csv(), fixture);
+    // And the JSON round of the same dataset carries no regime key.
+    assert!(!ds.to_json().to_string().contains("regime"));
+}
