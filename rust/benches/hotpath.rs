@@ -10,7 +10,7 @@
 
 use perf4sight::campaign::{self, CampaignSpec};
 use perf4sight::device::Simulator;
-use perf4sight::engine::PredictionEngine;
+use perf4sight::engine::{CompiledForestPair, PredictionEngine};
 use perf4sight::features::{forward_masked, network_features, network_features_from_plan};
 use perf4sight::forest::{Forest, TrainMatrix};
 use perf4sight::ir::{GraphArena, NetworkPlan, PlanBuffers, PlanView};
@@ -23,7 +23,7 @@ use perf4sight::profiler::{profile, ProfileJob};
 use perf4sight::pruning::{prune, prune_overlay, Strategy};
 use perf4sight::runtime::{ForestExecutor, Runtime};
 use perf4sight::serve::{PredictionService, ServeConfig, Tenant};
-use perf4sight::util::bench_harness::{bench, section};
+use perf4sight::util::bench_harness::{bench, section, HOTPATH_SCHEMA, HOTPATH_SECTIONS};
 use perf4sight::util::json::Json;
 use perf4sight::util::rng::Pcg64;
 
@@ -194,6 +194,67 @@ fn main() {
     } else {
         println!("  (artifacts not built; skipping XLA-path benches — run `make artifacts`)");
     }
+
+    section("batched inference — branch-free blocked executor vs PR 2 slab walker");
+
+    // A second forest over the same rows (the Φ latency target) gives the
+    // fused-pair executor a real two-model workload; 4096 jittered rows
+    // spread the batch across distinct leaves so traversal is not one hot
+    // path through identical cursors.
+    let train_y_phi = train.y_phi();
+    let forest_phi = Forest::fit(&train_x, &train_y_phi, &cfg).unwrap();
+    let mut jitter = Pcg64::new(31);
+    let inf_flat: Vec<f64> = (0..4096)
+        .flat_map(|_| {
+            row.iter()
+                .map(|&v| v * jitter.uniform(0.25, 1.75))
+                .collect::<Vec<f64>>()
+        })
+        .collect();
+    let blocked_g = forest.compile_blocked();
+    let blocked_p = forest_phi.compile_blocked();
+    let pair = CompiledForestPair::compile(&forest, &forest_phi);
+    // Bit-identity sanity before timing anything (full oracle suite:
+    // tests/predict_equivalence.rs).
+    {
+        let nf = row.len();
+        let walker = compiled.predict_rows_flat(&inf_flat);
+        let blocked = blocked_g.predict_rows_flat(&inf_flat);
+        let (pg, pp) = pair.predict_rows_flat(&inf_flat);
+        for (i, chunk) in inf_flat.chunks_exact(nf).enumerate() {
+            let s = forest.predict(chunk);
+            assert_eq!(s.to_bits(), walker[i].to_bits(), "walker diverged from scalar");
+            assert_eq!(s.to_bits(), blocked[i].to_bits(), "blocked diverged from scalar");
+            assert_eq!(s.to_bits(), pg[i].to_bits(), "fused Γ diverged from scalar");
+            let sp = forest_phi.predict(chunk);
+            assert_eq!(sp.to_bits(), pp[i].to_bits(), "fused Φ diverged from scalar");
+        }
+    }
+    let inf_walker = bench("CompiledForest::predict_rows_flat (4096 rows)", 1200, || {
+        std::hint::black_box(compiled.predict_rows_flat(&inf_flat));
+    });
+    let inf_blocked = bench("BlockedForest::predict_rows_flat (4096 rows)", 1200, || {
+        std::hint::black_box(blocked_g.predict_rows_flat(&inf_flat));
+    });
+    let inf_two_pass = bench("two blocked walks, Γ then Φ (4096 rows)", 1200, || {
+        std::hint::black_box((
+            blocked_g.predict_rows_flat(&inf_flat),
+            blocked_p.predict_rows_flat(&inf_flat),
+        ));
+    });
+    let inf_fused = bench("CompiledForestPair fused Γ/Φ (4096 rows)", 1200, || {
+        std::hint::black_box(pair.predict_rows_flat(&inf_flat));
+    });
+    let inf_speedup = inf_walker.mean_ns / inf_blocked.mean_ns;
+    let fused_speedup = inf_two_pass.mean_ns / inf_fused.mean_ns;
+    println!(
+        "  -> blocked speedup vs walker: {:.2}x ({:.0} vs {:.0} krows/s); \
+         fused pair vs two blocked passes: {:.2}x",
+        inf_speedup,
+        4.096 * inf_blocked.throughput_per_sec(),
+        4.096 * inf_walker.throughput_per_sec(),
+        fused_speedup
+    );
 
     section("end-to-end ES candidate evaluation");
 
@@ -413,7 +474,7 @@ fn main() {
     // regression gate and uploads it as the BENCH_hotpath artifact. To
     // refresh the checked-in repo-root seed, copy it over deliberately.
     let summary = Json::obj(vec![
-        ("schema", Json::Str("perf4sight/hotpath-bench/v3".into())),
+        ("schema", Json::Str(HOTPATH_SCHEMA.into())),
         (
             "model_fitting",
             Json::obj(vec![
@@ -460,7 +521,26 @@ fn main() {
                 ("overlapping_speedup", Json::Num(overlap_speedup)),
             ]),
         ),
+        (
+            "inference",
+            Json::obj(vec![
+                ("batch", Json::Num(4096.0)),
+                ("trees", Json::Num(cfg.n_trees as f64)),
+                ("walker_ms", Json::Num(inf_walker.mean_ms())),
+                ("blocked_ms", Json::Num(inf_blocked.mean_ms())),
+                ("blocked_speedup", Json::Num(inf_speedup)),
+                ("two_pass_ms", Json::Num(inf_two_pass.mean_ms())),
+                ("fused_ms", Json::Num(inf_fused.mean_ms())),
+                ("fused_speedup", Json::Num(fused_speedup)),
+            ]),
+        ),
     ]);
+    // The summary must carry exactly the sections the schema constant
+    // declares — the same invariant tests/bench_schema.rs pins on the
+    // checked-in placeholder.
+    for key in HOTPATH_SECTIONS {
+        assert!(summary.get(key).is_some(), "bench summary missing declared section {key:?}");
+    }
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/target/BENCH_hotpath.json");
     let mut body = summary.to_string();
     body.push('\n');

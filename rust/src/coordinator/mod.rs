@@ -13,6 +13,7 @@ use std::path::{Path, PathBuf};
 
 use crate::campaign::{self, CampaignSpec, DriverConfig, ExecMode};
 use crate::device::{DeviceSpec, Simulator, TrainRegime};
+use crate::engine::CompiledForestPair;
 use crate::experiments;
 use crate::features::network_features_from_plan_regime;
 use crate::forest::Forest;
@@ -44,10 +45,12 @@ COMMANDS:
               merges them — bit-identical to single-process profiling.
               Re-running resumes: complete shards are skipped.)
   fit        --data FILE.json[,FILE2..] --target gamma|phi --out MODEL.json
-  predict    --model MODEL.json --network N [--level 0.3,0.5,..] [--bs 2,4,..]
+  predict    --model MODEL.json [--phi-model MODEL2.json] --network N
+             [--level 0.3,0.5,..] [--bs 2,4,..]
              [--strategy random] [--regime vanilla|ckpt:N|frozen:N]
              [--device tx2] [--seed S]
-             (comma lists sweep level × bs in one batched engine call)
+             (comma lists sweep level × bs in one blocked branch-free pass;
+              --phi-model answers both targets from one fused Γ/Φ walk)
   search     [--device tx2] [--subset city|off-road|motorway|country-side]
              [--gamma-max MB] [--gamma-infer-max MB] [--phi-max MS]
              [--population 100] [--iterations 500] [--subnets 100] [--seed S]
@@ -362,11 +365,29 @@ fn cmd_predict(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
     let model_path = args.get("model").ok_or("--model required")?;
     let text = std::fs::read_to_string(model_path).map_err(|e| e.to_string())?;
     let forest = Forest::from_json(&Json::parse(&text)?)?;
+    // A second model over the same feature rows (typically the Φ latency
+    // forest next to a Γ memory one): both targets are answered from one
+    // fused blocked walk over the sweep's rows.
+    let phi_forest = match args.get("phi-model") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+            let phi = Forest::from_json(&Json::parse(&text)?)?;
+            if phi.n_features != forest.n_features {
+                return Err(format!(
+                    "--phi-model consumes {} features but --model consumes {}",
+                    phi.n_features, forest.n_features
+                ));
+            }
+            Some(phi)
+        }
+        None => None,
+    };
     let network = args.get("network").ok_or("--network required")?;
     let graph = crate::models::by_name(network).ok_or_else(|| format!("unknown network {network}"))?;
     // `--level 0.3` and `--bs 32` accept comma lists (`--levels` is an
     // alias matching the profile subcommand); the full (level × bs) sweep
-    // is answered by ONE batched call through the compiled forest.
+    // is answered by ONE pass through the blocked branch-free executor
+    // (fused over both models when --phi-model is given).
     let levels = match args.f64_list("level")? {
         Some(v) => v,
         None => args.f64_list("levels")?.unwrap_or_else(|| vec![0.0]),
@@ -398,14 +419,26 @@ fn cmd_predict(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
             rows.push(network_features_from_plan_regime(plan, bs, regime));
         }
     }
-    let preds = forest.compile().predict_rows(&rows);
+    let (preds, phi_preds) = match &phi_forest {
+        Some(phi) => {
+            let (g, p) = CompiledForestPair::compile(&forest, phi).predict_rows(&rows);
+            (g, Some(p))
+        }
+        None => (forest.compile_blocked().predict_rows(&rows), None),
+    };
     // Optional ground-truth comparison on the simulated device.
     let truth_sim = if args.get("device").is_some() || args.flag("truth") {
         Some(simulator(args, cfg)?)
     } else {
         None
     };
-    let mut header = vec!["level", "bs", "predicted"];
+    let mut header = vec!["level", "bs"];
+    if phi_preds.is_some() {
+        header.push("predicted Γ");
+        header.push("predicted Φ");
+    } else {
+        header.push("predicted");
+    }
     if truth_sim.is_some() {
         header.push("sim Γ MB");
         header.push("sim Φ ms");
@@ -413,11 +446,15 @@ fn cmd_predict(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
     let mut body = Vec::new();
     for (li, (level, plan)) in levels.iter().zip(&plans).enumerate() {
         for (bi, &bs) in batch_sizes.iter().enumerate() {
+            let i = li * batch_sizes.len() + bi;
             let mut cells = vec![
                 format!("{:.0}%", level * 100.0),
                 format!("{bs}"),
-                format!("{:.1}", preds[li * batch_sizes.len() + bi]),
+                format!("{:.1}", preds[i]),
             ];
+            if let Some(p) = &phi_preds {
+                cells.push(format!("{:.1}", p[i]));
+            }
             if let Some(sim) = &truth_sim {
                 let m = sim.train_step_plan_regime(plan, bs, regime, None);
                 cells.push(format!("{:.1}", m.gamma_mb));
@@ -427,9 +464,14 @@ fn cmd_predict(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
         }
     }
     println!(
-        "{network} ({} levels × {} batch sizes, one batched predict_rows call{}):",
+        "{network} ({} levels × {} batch sizes, one {} pass{}):",
         levels.len(),
         batch_sizes.len(),
+        if phi_preds.is_some() {
+            "fused Γ/Φ blocked"
+        } else {
+            "blocked branch-free"
+        },
         truth_sim
             .as_ref()
             .map(|s| format!("; truth on {}", s.spec.name))
@@ -460,8 +502,9 @@ fn cmd_search(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
     experiments::ofa_models::print(&models.report);
 
     // The batched, cache-backed engine serves every (Γ, γ, φ) estimate:
-    // each generation is answered in three `predict_rows` calls, repeated
-    // candidates by a fingerprint lookup.
+    // each generation is answered in two blocked branch-free passes (Γ,
+    // then the fused γ/φ pair), repeated candidates by a fingerprint
+    // lookup.
     let mut engine = models.engine();
     let cons = Constraints {
         gamma_train_mb: args.f64_or("gamma-max", f64::INFINITY)?,

@@ -13,7 +13,14 @@
 //! Accumulation order is the scalar reference's exactly (per row: tree 0,
 //! tree 1, … then one divide), so batched results are **bit-identical** to
 //! `Forest::predict` — asserted across zoo-trained models by
-//! `rust/tests/engine_equivalence.rs`.
+//! `rust/tests/engine_equivalence.rs` and `rust/tests/predict_equivalence.rs`.
+//!
+//! Since PR 9 the *hot* batched path is the branch-free blocked executor
+//! ([`crate::engine::exec`]); this walker is retained as the branchy
+//! mid-level reference (every node visit still takes a data-dependent
+//! branch) and as the one producer of the padded [`ForestTensors`] layout.
+//! Every entry point funnels into a single serial kernel
+//! (`predict_into_flat`), so the reference cannot drift from itself.
 
 use crate::forest::{Forest, ForestTensors};
 
@@ -101,14 +108,14 @@ impl CompiledForest {
             .unwrap_or(1)
     }
 
-    /// Predict one row — bit-identical to [`Forest::predict`].
+    /// Predict one row — bit-identical to [`Forest::predict`]. A 1-row
+    /// batch through the single serial kernel (`predict_into_flat`), so
+    /// the scalar entry point shares the batched path's traversal exactly.
     pub fn predict_row(&self, row: &[f64]) -> f64 {
         debug_assert_eq!(row.len(), self.n_features);
-        let mut acc = 0.0f64;
-        for t in 0..self.n_trees {
-            acc += self.traverse(self.offsets[t] as usize, row);
-        }
-        acc / self.n_trees as f64
+        let mut out = [0.0f64];
+        self.predict_into_flat(row, &mut out);
+        out[0]
     }
 
     /// Predict many rows, traversing each tree once per row *batch* (the

@@ -1,0 +1,627 @@
+//! Branch-free blocked forest inference — [`BlockedForest`] and the fused
+//! Γ/Φ [`CompiledForestPair`].
+//!
+//! The PR 2 slab walker ([`CompiledForest`](crate::engine::CompiledForest))
+//! already batches rows through cache-resident trees, but every node visit
+//! still takes a data-dependent branch (`if row[f] <= t { left } else
+//! { right }`) and chases two independent child pointers. Split decisions
+//! in a fitted forest are close to coin flips, so on deep trees the walker
+//! spends most of its time in branch-miss stalls. This module rebuilds
+//! batched inference around three ideas:
+//!
+//! 1. **Depth-interleaved tree blocks.** Trees are grouped into blocks of
+//!    [`TREE_BLOCK`] lanes; within a block, nodes are laid out level by
+//!    level (all lanes' roots, then all lanes' depth-1 nodes, …) and the
+//!    two children of every internal node occupy *adjacent* slab slots.
+//!    Each node therefore stores a single `first_child` index; a whole
+//!    block level is one contiguous, prefetchable run.
+//! 2. **Arithmetic child select.** The traversal step is
+//!    `idx = first_child[idx] + !(row[f] <= threshold[idx]) as u32` — a
+//!    compare + setcc + add, no conditional control flow. Leaves carry
+//!    `threshold = +∞` and `first_child = self`, so a cursor that reaches
+//!    a leaf early self-loops for the tree's remaining levels; every lane
+//!    runs a *fixed* per-tree step count (its depth), which is what makes
+//!    the select branch-free in the first place.
+//! 3. **(row tile × tree block) tiling.** Evaluation walks [`ROW_TILE`]
+//!    rows at a time against each block: the tile's features
+//!    (32 × 57 × 8 B ≈ 14 KB) and the block's current level stay
+//!    L1-resident across the whole pass. Tiles fan out over scoped
+//!    threads; per-thread cursor scratch ([`ExecScratch`]) is reused, so
+//!    the steady state allocates nothing (matching the PR 5/7 discipline).
+//!
+//! [`CompiledForestPair`] fuses the engine's two inference models: Γ and Φ
+//! are always predicted over the *same* feature rows, so the pair
+//! evaluates both forests tile by tile — one memory walk over the features
+//! serves two models.
+//!
+//! **Determinism contract.** Per row, leaf values accumulate in tree order
+//! (block by block, lane by lane) followed by one divide — exactly the
+//! scalar `Forest::predict` sequence — so every path here is
+//! **bit-identical** to the scalar reference. Rows containing NaN features
+//! (which a fixed step count cannot traverse meaningfully) are detected up
+//! front and answered by a reference-semantics walk over the same blocked
+//! layout, preserving bit-identity for them too. The oracle suite is
+//! `rust/tests/predict_equivalence.rs`.
+
+use crate::forest::{Forest, Tree, TreeNode};
+
+/// Trees per block — the lane dimension of the depth-interleaved slabs.
+pub const TREE_BLOCK: usize = 8;
+
+/// Rows per tile: 32 rows of 57 features ≈ 14 KB of f64s, comfortably
+/// L1-resident alongside one block level.
+pub const ROW_TILE: usize = 32;
+
+/// Below this many tiles per worker, thread spawn overhead beats the win.
+const MIN_TILES_PER_WORKER: usize = 4;
+
+/// Per-block metadata: where its depth-interleaved nodes start and how
+/// many fixed traversal steps each lane (tree) runs.
+#[derive(Clone, Debug)]
+struct BlockMeta {
+    /// Slab index of the block's level-0 region; lane `l`'s root sits at
+    /// `node_start + l`.
+    node_start: u32,
+    /// Trees in this block (≤ [`TREE_BLOCK`]).
+    lanes: u32,
+    /// Fixed step count per lane — the tree's edge depth. Cursors of
+    /// shallower lanes self-loop at their leaves.
+    steps: [u32; TREE_BLOCK],
+    /// `max(steps)` — the block's level count.
+    max_steps: u32,
+}
+
+/// A fitted forest compiled to the branch-free blocked layout (see module
+/// docs). Produced by [`BlockedForest::compile`] or
+/// [`Forest::compile_blocked`].
+#[derive(Clone, Debug)]
+pub struct BlockedForest {
+    n_features: usize,
+    n_trees: usize,
+    blocks: Vec<BlockMeta>,
+    /// Split feature per node (0 at leaves — never decides anything there
+    /// because the leaf threshold is +∞).
+    feature: Vec<u32>,
+    /// Split threshold; `+∞` at leaves keeps the arithmetic select on the
+    /// self-loop.
+    threshold: Vec<f64>,
+    /// Slab index of the left child; the right child is `first_child + 1`.
+    /// Self-referential at leaves.
+    first_child: Vec<u32>,
+    /// Leaf value (also stored for internal nodes, never read there).
+    value: Vec<f64>,
+}
+
+/// Reusable cursor scratch for the tiled traversal: one `u32` cursor per
+/// (lane, tile row). Hand one to [`BlockedForest::predict_into`] /
+/// [`CompiledForestPair::predict_into`] and the steady state allocates
+/// nothing.
+#[derive(Debug)]
+pub struct ExecScratch {
+    cur: Vec<u32>,
+}
+
+impl ExecScratch {
+    pub fn new() -> ExecScratch {
+        ExecScratch {
+            cur: vec![0; TREE_BLOCK * ROW_TILE],
+        }
+    }
+}
+
+impl Default for ExecScratch {
+    fn default() -> Self {
+        ExecScratch::new()
+    }
+}
+
+impl BlockedForest {
+    /// Compile a fitted forest into the depth-interleaved blocked layout.
+    pub fn compile(forest: &Forest) -> BlockedForest {
+        let total: usize = forest.trees.iter().map(|t| t.nodes.len()).sum();
+        let mut bf = BlockedForest {
+            n_features: forest.n_features,
+            n_trees: forest.trees.len(),
+            blocks: Vec::with_capacity(forest.trees.len().div_ceil(TREE_BLOCK)),
+            feature: Vec::with_capacity(total),
+            threshold: Vec::with_capacity(total),
+            first_child: Vec::with_capacity(total),
+            value: Vec::with_capacity(total),
+        };
+        for chunk in forest.trees.chunks(TREE_BLOCK) {
+            bf.build_block(chunk);
+        }
+        bf
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.n_trees
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    /// Total nodes across all blocks (equals the source forest's total).
+    pub fn n_nodes(&self) -> usize {
+        self.value.len()
+    }
+
+    /// Append one node to the slabs; internal nodes get their
+    /// `first_child` patched when their children are emitted one level
+    /// down.
+    fn push_node(&mut self, n: &TreeNode) -> u32 {
+        let slab = self.feature.len() as u32;
+        if n.is_leaf() {
+            self.feature.push(0);
+            self.threshold.push(f64::INFINITY);
+        } else {
+            self.feature.push(n.feature);
+            self.threshold.push(n.threshold);
+        }
+        self.first_child.push(slab);
+        self.value.push(n.value);
+        slab
+    }
+
+    /// Emit one block: a breadth-first sweep over up to [`TREE_BLOCK`]
+    /// trees at once, appending each level's nodes contiguously (lanes in
+    /// tree order within the level) and keeping every child pair adjacent.
+    fn build_block(&mut self, trees: &[Tree]) {
+        let node_start = self.feature.len() as u32;
+        // Nodes of the level being expanded: (lane, tree node, slab slot).
+        let mut level: Vec<(usize, u32, u32)> = Vec::new();
+        for (l, t) in trees.iter().enumerate() {
+            let slab = self.push_node(&t.nodes[0]);
+            level.push((l, 0, slab));
+        }
+        let mut steps = [0u32; TREE_BLOCK];
+        let mut depth = 0u32;
+        let mut next: Vec<(usize, u32, u32)> = Vec::new();
+        while !level.is_empty() {
+            next.clear();
+            depth += 1;
+            for &(l, ni, slab) in &level {
+                let node = trees[l].nodes[ni as usize];
+                if node.is_leaf() {
+                    continue;
+                }
+                let first = self.push_node(&trees[l].nodes[node.left as usize]);
+                self.push_node(&trees[l].nodes[node.right as usize]);
+                self.first_child[slab as usize] = first;
+                steps[l] = depth;
+                next.push((l, node.left, first));
+                next.push((l, node.right, first + 1));
+            }
+            std::mem::swap(&mut level, &mut next);
+        }
+        let max_steps = steps[..trees.len()].iter().copied().max().unwrap_or(0);
+        self.blocks.push(BlockMeta {
+            node_start,
+            lanes: trees.len() as u32,
+            steps,
+            max_steps,
+        });
+    }
+
+    fn check_batch(&self, flat: &[f64]) -> usize {
+        assert_eq!(
+            flat.len() % self.n_features,
+            0,
+            "flat row buffer length must be a multiple of n_features"
+        );
+        flat.len() / self.n_features
+    }
+
+    /// Predict many rows (row-major nested form) — bit-identical to
+    /// per-row `Forest::predict`. Thin flattening adapter over
+    /// [`BlockedForest::predict_rows_flat`].
+    pub fn predict_rows(&self, rows: &[Vec<f64>]) -> Vec<f64> {
+        let mut flat = Vec::with_capacity(rows.len() * self.n_features);
+        for row in rows {
+            debug_assert_eq!(row.len(), self.n_features);
+            flat.extend_from_slice(row);
+        }
+        self.predict_rows_flat(&flat)
+    }
+
+    /// Predict a flat row-major buffer (`n_features` columns per row).
+    pub fn predict_rows_flat(&self, flat: &[f64]) -> Vec<f64> {
+        let n = self.check_batch(flat);
+        let mut out = vec![0.0f64; n];
+        self.predict_into(flat, &mut ExecScratch::new(), &mut out);
+        out
+    }
+
+    /// Predict into a caller-owned output slice with caller-owned scratch:
+    /// the zero-steady-state-allocation entry the engine drives. Batches
+    /// large enough to amortize thread spawns fan tiles out over scoped
+    /// threads (each worker brings its own scratch); smaller batches run
+    /// serially on `scratch`.
+    pub fn predict_into(&self, flat: &[f64], scratch: &mut ExecScratch, out: &mut [f64]) {
+        let n = self.check_batch(flat);
+        assert_eq!(out.len(), n, "output length must match the row count");
+        if n == 0 {
+            return;
+        }
+        if flat.iter().any(|v| v.is_nan()) {
+            // A fixed step count cannot traverse NaN comparisons; fall
+            // back to the reference-semantics walk (still bit-identical
+            // to scalar `Forest::predict`, where NaN always goes right).
+            self.predict_ref_into(flat, out);
+            return;
+        }
+        let tiles = n.div_ceil(ROW_TILE);
+        let workers = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(tiles / MIN_TILES_PER_WORKER)
+            .max(1);
+        if workers == 1 {
+            self.eval_tiles(flat, scratch, out);
+            return;
+        }
+        let chunk_rows = tiles.div_ceil(workers) * ROW_TILE;
+        std::thread::scope(|scope| {
+            for (rows, outs) in flat
+                .chunks(chunk_rows * self.n_features)
+                .zip(out.chunks_mut(chunk_rows))
+            {
+                scope.spawn(move || self.eval_tiles(rows, &mut ExecScratch::new(), outs));
+            }
+        });
+    }
+
+    /// Serial tile loop over one contiguous row range.
+    fn eval_tiles(&self, flat: &[f64], scratch: &mut ExecScratch, out: &mut [f64]) {
+        scratch.cur.resize(TREE_BLOCK * ROW_TILE, 0);
+        for (tile, tile_out) in flat
+            .chunks(ROW_TILE * self.n_features)
+            .zip(out.chunks_mut(ROW_TILE))
+        {
+            self.eval_tile(tile, scratch, tile_out);
+        }
+    }
+
+    /// One (row tile × every tree block) pass. The only data-dependent
+    /// state is the cursor value itself: each level advances every
+    /// (lane, row) cursor with the arithmetic child select, and finished
+    /// lanes self-loop at their leaves. Accumulation is per row in tree
+    /// order, then one divide — the scalar reference's exact sequence.
+    fn eval_tile(&self, tile: &[f64], scratch: &mut ExecScratch, out: &mut [f64]) {
+        let nf = self.n_features;
+        let tn = out.len();
+        debug_assert_eq!(tile.len(), tn * nf);
+        debug_assert!(scratch.cur.len() >= TREE_BLOCK * ROW_TILE);
+        out.fill(0.0);
+        for block in &self.blocks {
+            let lanes = block.lanes as usize;
+            for l in 0..lanes {
+                let root = block.node_start + l as u32;
+                scratch.cur[l * ROW_TILE..l * ROW_TILE + tn].fill(root);
+            }
+            for step in 0..block.max_steps {
+                for l in 0..lanes {
+                    if block.steps[l] <= step {
+                        continue;
+                    }
+                    let cur = &mut scratch.cur[l * ROW_TILE..l * ROW_TILE + tn];
+                    for (r, c) in cur.iter_mut().enumerate() {
+                        let idx = *c as usize;
+                        let f = self.feature[idx] as usize;
+                        let go_right = !(tile[r * nf + f] <= self.threshold[idx]) as u32;
+                        *c = self.first_child[idx] + go_right;
+                    }
+                }
+            }
+            for (r, acc) in out.iter_mut().enumerate() {
+                for l in 0..lanes {
+                    *acc += self.value[scratch.cur[l * ROW_TILE + r] as usize];
+                }
+            }
+        }
+        let nt = self.n_trees as f64;
+        for acc in out.iter_mut() {
+            *acc /= nt;
+        }
+    }
+
+    /// Reference-semantics traversal over the blocked layout (explicit
+    /// leaf test, no fixed step count) for batches containing NaN
+    /// features. NaN comparisons are false, so NaN rows fall to the right
+    /// child at every split — exactly `Forest::predict`.
+    fn predict_ref_into(&self, flat: &[f64], out: &mut [f64]) {
+        out.fill(0.0);
+        for block in &self.blocks {
+            for l in 0..block.lanes as usize {
+                let root = (block.node_start + l as u32) as usize;
+                for (row, acc) in flat.chunks_exact(self.n_features).zip(out.iter_mut()) {
+                    let mut idx = root;
+                    loop {
+                        let first = self.first_child[idx] as usize;
+                        if first == idx {
+                            break;
+                        }
+                        let f = self.feature[idx] as usize;
+                        idx = first + !(row[f] <= self.threshold[idx]) as usize;
+                    }
+                    *acc += self.value[idx];
+                }
+            }
+        }
+        let nt = self.n_trees as f64;
+        for acc in out.iter_mut() {
+            *acc /= nt;
+        }
+    }
+}
+
+/// Two forests over the same feature rows, evaluated in one fused tiled
+/// pass: the engine's (γ, φ) inference models always see identical rows,
+/// so fusing them halves the feature-memory traffic (see module docs).
+#[derive(Clone, Debug)]
+pub struct CompiledForestPair {
+    gamma: BlockedForest,
+    phi: BlockedForest,
+}
+
+impl CompiledForestPair {
+    /// Compile both forests into blocked form. They must consume the same
+    /// feature layout.
+    pub fn compile(gamma: &Forest, phi: &Forest) -> CompiledForestPair {
+        assert_eq!(
+            gamma.n_features, phi.n_features,
+            "paired forests must consume the same feature rows"
+        );
+        CompiledForestPair {
+            gamma: BlockedForest::compile(gamma),
+            phi: BlockedForest::compile(phi),
+        }
+    }
+
+    pub fn gamma(&self) -> &BlockedForest {
+        &self.gamma
+    }
+
+    pub fn phi(&self) -> &BlockedForest {
+        &self.phi
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.gamma.n_features
+    }
+
+    /// Fused prediction of both targets over nested rows — returns
+    /// `(gamma, phi)`, each bit-identical to its forest's scalar path.
+    pub fn predict_rows(&self, rows: &[Vec<f64>]) -> (Vec<f64>, Vec<f64>) {
+        let mut flat = Vec::with_capacity(rows.len() * self.gamma.n_features);
+        for row in rows {
+            debug_assert_eq!(row.len(), self.gamma.n_features);
+            flat.extend_from_slice(row);
+        }
+        self.predict_rows_flat(&flat)
+    }
+
+    /// Fused prediction over a flat row-major buffer.
+    pub fn predict_rows_flat(&self, flat: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let n = self.gamma.check_batch(flat);
+        let mut out_gamma = vec![0.0f64; n];
+        let mut out_phi = vec![0.0f64; n];
+        self.predict_into(flat, &mut ExecScratch::new(), &mut out_gamma, &mut out_phi);
+        (out_gamma, out_phi)
+    }
+
+    /// Fused prediction into caller-owned outputs with caller-owned
+    /// scratch — both forests walk each row tile while it is hot, one
+    /// memory pass over the features instead of two.
+    pub fn predict_into(
+        &self,
+        flat: &[f64],
+        scratch: &mut ExecScratch,
+        out_gamma: &mut [f64],
+        out_phi: &mut [f64],
+    ) {
+        let n = self.gamma.check_batch(flat);
+        assert_eq!(out_gamma.len(), n, "gamma output length must match the row count");
+        assert_eq!(out_phi.len(), n, "phi output length must match the row count");
+        if n == 0 {
+            return;
+        }
+        if flat.iter().any(|v| v.is_nan()) {
+            self.gamma.predict_ref_into(flat, out_gamma);
+            self.phi.predict_ref_into(flat, out_phi);
+            return;
+        }
+        let tiles = n.div_ceil(ROW_TILE);
+        let workers = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(tiles / MIN_TILES_PER_WORKER)
+            .max(1);
+        if workers == 1 {
+            self.eval_tiles_pair(flat, scratch, out_gamma, out_phi);
+            return;
+        }
+        let chunk_rows = tiles.div_ceil(workers) * ROW_TILE;
+        std::thread::scope(|scope| {
+            for ((rows, g), p) in flat
+                .chunks(chunk_rows * self.gamma.n_features)
+                .zip(out_gamma.chunks_mut(chunk_rows))
+                .zip(out_phi.chunks_mut(chunk_rows))
+            {
+                scope.spawn(move || self.eval_tiles_pair(rows, &mut ExecScratch::new(), g, p));
+            }
+        });
+    }
+
+    fn eval_tiles_pair(
+        &self,
+        flat: &[f64],
+        scratch: &mut ExecScratch,
+        out_gamma: &mut [f64],
+        out_phi: &mut [f64],
+    ) {
+        scratch.cur.resize(TREE_BLOCK * ROW_TILE, 0);
+        let nf = self.gamma.n_features;
+        for ((tile, g), p) in flat
+            .chunks(ROW_TILE * nf)
+            .zip(out_gamma.chunks_mut(ROW_TILE))
+            .zip(out_phi.chunks_mut(ROW_TILE))
+        {
+            self.gamma.eval_tile(tile, scratch, g);
+            self.phi.eval_tile(tile, scratch, p);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::CompiledForest;
+    use crate::forest::ForestConfig;
+    use crate::util::rng::Pcg64;
+
+    fn synth(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Pcg64::new(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let a = rng.uniform(0.0, 10.0);
+            let b = rng.next_f64();
+            let c = rng.uniform(0.0, 2.0);
+            x.push(vec![a, b, c]);
+            y.push(2.0 * a + if b > 0.5 { 10.0 } else { 0.0 } + c * a);
+        }
+        (x, y)
+    }
+
+    fn assert_bits(a: &[f64], b: &[f64], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: row {i} diverges ({x} vs {y})");
+        }
+    }
+
+    #[test]
+    fn layout_invariants_hold() {
+        let (x, y) = synth(250, 41);
+        let f = Forest::fit(
+            &x,
+            &y,
+            &ForestConfig {
+                n_trees: 13, // a ragged final block of 5 lanes
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let b = BlockedForest::compile(&f);
+        assert_eq!(b.n_trees(), 13);
+        assert_eq!(b.n_nodes(), f.trees.iter().map(|t| t.nodes.len()).sum::<usize>());
+        assert_eq!(b.blocks.len(), 2);
+        assert_eq!(b.blocks[0].lanes, 8);
+        assert_eq!(b.blocks[1].lanes, 5);
+        for idx in 0..b.n_nodes() {
+            let fc = b.first_child[idx] as usize;
+            if fc == idx {
+                // Leaf: self-loop with an always-left threshold.
+                assert_eq!(b.threshold[idx], f64::INFINITY);
+                assert_eq!(b.feature[idx], 0);
+            } else {
+                // Internal: contiguous child pair strictly below it.
+                assert!(fc > idx, "child pair must be emitted after the parent");
+                assert!(fc + 1 < b.n_nodes(), "child pair must fit in the slab");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_bit_identical_to_scalar_and_walker() {
+        let (x, y) = synth(300, 42);
+        let f = Forest::fit(
+            &x,
+            &y,
+            &ForestConfig {
+                n_trees: 24,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let blocked = BlockedForest::compile(&f);
+        let walker = CompiledForest::compile(&f);
+        // Enough rows to force the multi-worker tiled path.
+        let rows: Vec<Vec<f64>> = (0..700).map(|i| x[i % x.len()].clone()).collect();
+        let scalar: Vec<f64> = rows.iter().map(|r| f.predict(r)).collect();
+        assert_bits(&blocked.predict_rows(&rows), &scalar, "blocked vs scalar");
+        assert_bits(&walker.predict_rows(&rows), &scalar, "walker vs scalar");
+        // Degenerate tiles: single row, and a partial final tile.
+        assert_bits(&blocked.predict_rows(&rows[..1]), &scalar[..1], "single row");
+        assert_bits(&blocked.predict_rows(&rows[..33]), &scalar[..33], "partial tile");
+    }
+
+    #[test]
+    fn fused_pair_matches_two_separate_walks() {
+        let (x, y) = synth(220, 43);
+        let y2: Vec<f64> = y.iter().map(|v| v * 3.0 + 1.0).collect();
+        let cfg = ForestConfig {
+            n_trees: 10,
+            ..Default::default()
+        };
+        let fg = Forest::fit(&x, &y, &cfg).unwrap();
+        let fp = Forest::fit(&x, &y2, &cfg).unwrap();
+        let pair = CompiledForestPair::compile(&fg, &fp);
+        let (g, p) = pair.predict_rows(&x);
+        assert_bits(&g, &BlockedForest::compile(&fg).predict_rows(&x), "fused gamma");
+        assert_bits(&p, &BlockedForest::compile(&fp).predict_rows(&x), "fused phi");
+    }
+
+    #[test]
+    fn nan_rows_fall_back_to_reference_semantics() {
+        let (x, y) = synth(120, 44);
+        let f = Forest::fit(
+            &x,
+            &y,
+            &ForestConfig {
+                n_trees: 6,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let blocked = BlockedForest::compile(&f);
+        let mut rows = x.clone();
+        rows[3][1] = f64::NAN;
+        rows[7] = vec![f64::NAN; 3];
+        let scalar: Vec<f64> = rows.iter().map(|r| f.predict(r)).collect();
+        assert_bits(&blocked.predict_rows(&rows), &scalar, "NaN fallback");
+    }
+
+    #[test]
+    fn single_leaf_trees_take_zero_steps() {
+        let (x, y) = synth(60, 45);
+        // max_depth 0 makes every tree a single root leaf (steps == 0).
+        let f = Forest::fit(
+            &x,
+            &y,
+            &ForestConfig {
+                n_trees: 3,
+                max_depth: 0,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let blocked = BlockedForest::compile(&f);
+        assert_eq!(blocked.blocks[0].max_steps, 0);
+        let scalar: Vec<f64> = x.iter().map(|r| f.predict(r)).collect();
+        assert_bits(&blocked.predict_rows(&x), &scalar, "leaf-only forest");
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let (x, y) = synth(50, 46);
+        let f = Forest::fit(&x, &y, &ForestConfig::default()).unwrap();
+        let blocked = BlockedForest::compile(&f);
+        assert!(blocked.predict_rows(&[]).is_empty());
+        let pair = CompiledForestPair::compile(&f, &f);
+        let (g, p) = pair.predict_rows_flat(&[]);
+        assert!(g.is_empty() && p.is_empty());
+    }
+}

@@ -7,10 +7,16 @@
 //! replace 20 s/sample on-device profiling. This subsystem turns the
 //! remaining per-candidate cost into a query service with three pillars:
 //!
-//! 1. [`CompiledForest`] — trees flattened into contiguous SoA node slabs
-//!    with a batched [`CompiledForest::predict_rows`] that drives many rows
-//!    through each tree (cache-resident slabs, parallel row chunks),
-//!    bit-identical to the scalar `Forest::predict` reference.
+//! 1. [`BlockedForest`] — trees compiled into the branch-free blocked
+//!    executor ([`exec`]): depth-interleaved node slabs per tree block, an
+//!    arithmetic child select instead of a per-node branch, and
+//!    (row tile × tree block) evaluation passes. The engine's two
+//!    inference models are fused into one [`CompiledForestPair`] so Γ and
+//!    Φ share a single memory walk over each feature tile. Every path is
+//!    bit-identical to the scalar `Forest::predict` reference
+//!    (`rust/tests/predict_equivalence.rs`); the PR 2 slab walker
+//!    ([`CompiledForest`]) is retained as the branchy reference and the
+//!    [`ForestTensors`](crate::forest::ForestTensors) producer.
 //! 2. [`FingerprintCache`] — a memo keyed by topology fingerprint: a
 //!    repeated ES candidate costs one hash lookup instead of graph build +
 //!    plan compile + feature extraction + three forest traversals.
@@ -18,7 +24,8 @@
 //!    miss.
 //! 3. Generation-batched evaluation — [`ofa::evolution`](crate::ofa) hands
 //!    the engine a whole generation of candidates at once; the uncached
-//!    ones are answered in exactly **three** batched traversals.
+//!    ones are answered in exactly **two** blocked passes (Γ-train plus
+//!    the fused γ/φ walk).
 //!
 //! Since PR 5 the *miss path* is zero-allocation too: candidates are
 //! evaluated through per-depth-key [`GraphArena`]s + `PruneOverlay`s with
@@ -41,9 +48,11 @@
 
 pub mod cache;
 pub mod compiled;
+pub mod exec;
 
 pub use cache::{config_fingerprint, graph_fingerprint, CacheStats, FingerprintCache};
 pub use compiled::CompiledForest;
+pub use exec::{BlockedForest, CompiledForestPair, ExecScratch};
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -90,18 +99,25 @@ struct EvalScratch {
     buffers: PlanBuffers,
     /// One-row scratch (bs=32 then masked bs=1 rows are staged here).
     row: Vec<f64>,
-    /// Flat row-major batches handed to `predict_rows_flat`.
+    /// Flat row-major batches handed to the blocked executors.
     train_flat: Vec<f64>,
     infer_flat: Vec<f64>,
+    /// Cursor scratch for the branch-free tiled traversal.
+    exec: ExecScratch,
+    /// Prediction outputs (resized per generation, reused across calls).
+    out_gamma_t: Vec<f64>,
+    out_gamma_i: Vec<f64>,
+    out_phi_i: Vec<f64>,
 }
 
 /// The `Send + Sync` core every engine handle shares: the three compiled
 /// attribute models (immutable after construction) and the fingerprint
-/// memo behind its lock.
+/// memo behind its lock. Γ-train is its own blocked executor; the γ/φ
+/// inference models — always predicted over the same masked rows — are
+/// fused into one [`CompiledForestPair`].
 struct EngineShared {
-    gamma_train: CompiledForest,
-    gamma_infer: CompiledForest,
-    phi_infer: CompiledForest,
+    gamma_train: BlockedForest,
+    infer_pair: CompiledForestPair,
     cache: Mutex<FingerprintCache>,
 }
 
@@ -130,9 +146,8 @@ impl PredictionEngine {
         }
         PredictionEngine {
             shared: Arc::new(EngineShared {
-                gamma_train: CompiledForest::compile(gamma_train),
-                gamma_infer: CompiledForest::compile(gamma_infer),
-                phi_infer: CompiledForest::compile(phi_infer),
+                gamma_train: BlockedForest::compile(gamma_train),
+                infer_pair: CompiledForestPair::compile(gamma_infer, phi_infer),
                 cache: Mutex::new(FingerprintCache::new(DEFAULT_CACHE_CAPACITY)),
             }),
             scratch: EvalScratch::default(),
@@ -178,7 +193,8 @@ impl PredictionEngine {
             .map(|(t, i)| (t.to_vec(), i.to_vec()))
     }
 
-    /// Answer Γ/γ/φ for `candidates` in three batched traversals via the
+    /// Answer Γ/γ/φ for `candidates` in two blocked branch-free passes
+    /// (Γ-train, then the fused γ/φ pair) via the
     /// zero-allocation overlay fast path: per candidate, fetch (or compile
     /// once) the depth-key arena, write the candidate's conv widths into
     /// the reusable overlay, rebuild the analysis incrementally into the
@@ -215,17 +231,33 @@ impl PredictionEngine {
             scratch.infer_flat.extend_from_slice(&scratch.row);
             capacities.push(capacity_from_convs(view.conv_infos()));
         }
-        let gamma_t = self.shared.gamma_train.predict_rows_flat(&scratch.train_flat);
-        let gamma_i = self.shared.gamma_infer.predict_rows_flat(&scratch.infer_flat);
-        let phi_i = self.shared.phi_infer.predict_rows_flat(&scratch.infer_flat);
+        // Two blocked passes answer all three models: Γ over the train
+        // rows, then the fused γ/φ pair sharing one walk over the infer
+        // rows. Outputs and cursor scratch are engine-owned, so the steady
+        // state allocates nothing here.
+        let n = candidates.len();
+        scratch.out_gamma_t.resize(n, 0.0);
+        scratch.out_gamma_i.resize(n, 0.0);
+        scratch.out_phi_i.resize(n, 0.0);
+        self.shared.gamma_train.predict_into(
+            &scratch.train_flat,
+            &mut scratch.exec,
+            &mut scratch.out_gamma_t,
+        );
+        self.shared.infer_pair.predict_into(
+            &scratch.infer_flat,
+            &mut scratch.exec,
+            &mut scratch.out_gamma_i,
+            &mut scratch.out_phi_i,
+        );
         capacities
             .iter()
             .enumerate()
             .map(|(i, &capacity)| CandidateEval {
                 attrs: Attributes {
-                    gamma_train_mb: gamma_t[i],
-                    gamma_infer_mb: gamma_i[i],
-                    phi_infer_ms: phi_i[i],
+                    gamma_train_mb: scratch.out_gamma_t[i],
+                    gamma_infer_mb: scratch.out_gamma_i[i],
+                    phi_infer_ms: scratch.out_phi_i[i],
                 },
                 capacity,
             })
@@ -319,8 +351,9 @@ impl PredictionEngine {
 
 impl GenerationOracle for PredictionEngine {
     /// Serve one generation: cache hits are answered by lookup, the unique
-    /// misses are evaluated together (three `predict_rows` calls), and
-    /// batch-local duplicates are filled from the fresh results.
+    /// misses are evaluated together (two blocked passes — Γ, then the
+    /// fused γ/φ pair), and batch-local duplicates are filled from the
+    /// fresh results.
     fn evaluate_generation(&mut self, candidates: &[SubnetConfig]) -> Vec<CandidateEval> {
         self.evaluate_generation_traced(candidates).0
     }

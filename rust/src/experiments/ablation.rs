@@ -7,6 +7,7 @@
 //! quantifying how much each family contributes.
 
 use crate::device::Simulator;
+use crate::engine::CompiledForestPair;
 use crate::features::{feature_families, Family, NUM_FEATURES};
 use crate::forest::{Forest, TrainMatrix};
 use crate::profiler::train_test_split;
@@ -64,12 +65,14 @@ pub fn run(sim: &Simulator, network: &str, seed: u64) -> AblationReport {
         let m = TrainMatrix::from_rows(&xtr).expect("finite knockout features");
         let fg = Forest::fit_matrix(&m, &train.y_gamma(), &cfg).expect("Γ fit");
         let fp = Forest::fit_matrix(&m, &train.y_phi(), &cfg).expect("Φ fit");
-        // Held-out predictions go through the engine's batched layout
-        // (bit-identical to the scalar `Forest::mape` path).
+        // Held-out predictions: one fused Γ/Φ blocked walk over the
+        // shared test rows (bit-identical to the scalar `Forest::mape`
+        // path).
+        let (gp, pp) = CompiledForestPair::compile(&fg, &fp).predict_rows(&xte);
         rows.push(AblationRow {
             knocked_out: name,
-            gamma_err_pct: stats::mape(&fg.compile().predict_rows(&xte), &test.y_gamma()),
-            phi_err_pct: stats::mape(&fp.compile().predict_rows(&xte), &test.y_phi()),
+            gamma_err_pct: stats::mape(&gp, &test.y_gamma()),
+            phi_err_pct: stats::mape(&pp, &test.y_phi()),
         });
     }
     AblationReport {

@@ -8,7 +8,7 @@
 
 use crate::campaign::{self, CampaignSpec};
 use crate::device::Simulator;
-use crate::engine::PredictionEngine;
+use crate::engine::{CompiledForestPair, PredictionEngine};
 use crate::features::{network_features_from_plan, NUM_FEATURES};
 use crate::forest::{Forest, TrainMatrix};
 use crate::ir::NetworkPlan;
@@ -88,8 +88,8 @@ pub fn run(sim: &Simulator, subnets: usize, seed: u64) -> OfaModels {
     let gamma_infer = Forest::fit_matrix(&m, &yg, &cfg).expect("γ fit");
     let phi_infer = Forest::fit_matrix(&m, &yp, &cfg).expect("φ fit");
 
-    // Test on the remaining subnets: collect every row, then answer each
-    // model with one batched traversal through its compiled form (bit-
+    // Test on the remaining subnets: collect every row, then answer BOTH
+    // models from one fused blocked walk over the shared test rows (bit-
     // identical to per-row `Forest::predict`).
     let mut test_rows = Vec::new();
     let mut gtruth = Vec::new();
@@ -102,8 +102,8 @@ pub fn run(sim: &Simulator, subnets: usize, seed: u64) -> OfaModels {
             ptruth.push(m.phi_ms);
         }
     }
-    let gpred = gamma_infer.compile().predict_rows(&test_rows);
-    let ppred = phi_infer.compile().predict_rows(&test_rows);
+    let (gpred, ppred) = CompiledForestPair::compile(&gamma_infer, &phi_infer)
+        .predict_rows(&test_rows);
 
     // ---- Γ generalisation: model trained on plain ResNet50 TX2 data ----
     // The training data comes from a merged profiling campaign — the one
@@ -135,7 +135,7 @@ pub fn run(sim: &Simulator, subnets: usize, seed: u64) -> OfaModels {
             }
         }
     }
-    let tg_pred = gamma_train.compile().predict_rows(&tg_rows);
+    let tg_pred = gamma_train.compile_blocked().predict_rows(&tg_rows);
 
     let report = OfaModelsReport {
         gamma_infer_err: stats::mape(&gpred, &gtruth),

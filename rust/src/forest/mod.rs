@@ -269,9 +269,20 @@ impl Forest {
     }
 
     /// Flatten into the contiguous SoA layout served by the
-    /// `PredictionEngine` (batched traversal, parallel row chunks).
+    /// `PredictionEngine` (batched traversal, parallel row chunks). This
+    /// is the retained branchy reference walker; batch-heavy callers use
+    /// [`Forest::compile_blocked`].
     pub fn compile(&self) -> crate::engine::CompiledForest {
         crate::engine::CompiledForest::compile(self)
+    }
+
+    /// Compile into the branch-free blocked executor
+    /// ([`BlockedForest`](crate::engine::BlockedForest)) — the batched
+    /// inference fast path behind the engine, `cmd_predict` sweeps and
+    /// the experiment oracles. Bit-identical to [`Forest::predict`]
+    /// (`rust/tests/predict_equivalence.rs`).
+    pub fn compile_blocked(&self) -> crate::engine::BlockedForest {
+        crate::engine::BlockedForest::compile(self)
     }
 
     /// Mean absolute percentage error on a labelled set (the paper's
@@ -406,13 +417,30 @@ impl Forest {
     ///
     /// Derived from the same compiled slab layout the native batched path
     /// uses (`CompiledForest::to_tensors`), so the XLA artifact and the
-    /// `PredictionEngine` serve one forest representation.
+    /// `PredictionEngine` serve one forest representation. Note the
+    /// [`ForestTensors`] quantization contract: thresholds/values downcast
+    /// to `f32`, so the artifact is *not* bit-identical to the native f64
+    /// executors.
     pub fn to_tensors(&self) -> ForestTensors {
         self.compile().to_tensors()
     }
 }
 
 /// Fixed-shape forest arrays for XLA execution (row-major `[tree, node]`).
+///
+/// **Quantization contract.** Thresholds and leaf values are stored as
+/// `f32` (the Pallas kernel's element type — see
+/// `python/compile/kernels/forest.py`), and traversal compares
+/// `row[f] as f32 <= threshold`. The `f64 → f32` cast is **lossy by
+/// design**: rows within one f32 ulp of a split threshold may take the
+/// other branch than the native `f64` paths, and leaf values round to the
+/// nearest f32. Consumers needing bit-identity to [`Forest::predict`] must
+/// use the native executors
+/// ([`CompiledForest`](crate::engine::CompiledForest),
+/// [`BlockedForest`](crate::engine::BlockedForest)) — the tensor artifact
+/// trades that for a fixed-shape fp32 kernel layout. The exact rounding
+/// behaviour is pinned by the
+/// `tensor_quantization_contract_pins_lossy_f32_cast` test below.
 #[derive(Clone, Debug)]
 pub struct ForestTensors {
     pub n_trees: usize,
@@ -681,6 +709,60 @@ mod tests {
         t.pad_nodes_to(t.n_nodes + 37);
         let after: Vec<f64> = x.iter().take(10).map(|r| t.predict(r, t.depth)).collect();
         assert_eq!(before, after);
+    }
+
+    #[test]
+    fn tensor_quantization_contract_pins_lossy_f32_cast() {
+        // A split threshold that is not representable in f32: a row one
+        // f64 ulp above it still quantizes onto the threshold's f32, so
+        // the tensor path takes the other branch than the f64 forest.
+        // This is the documented ForestTensors contract — the native
+        // executors (CompiledForest, BlockedForest) are exempt.
+        let split = TreeNode {
+            feature: 0,
+            threshold: 0.3,
+            left: 1,
+            right: 2,
+            value: 0.0,
+        };
+        let lo = TreeNode {
+            feature: u32::MAX,
+            threshold: f64::INFINITY,
+            left: 1,
+            right: 1,
+            value: 1.0 / 3.0,
+        };
+        let hi = TreeNode {
+            feature: u32::MAX,
+            threshold: f64::INFINITY,
+            left: 2,
+            right: 2,
+            value: 2.0 / 3.0,
+        };
+        let f = Forest {
+            trees: vec![Tree {
+                nodes: vec![split, lo, hi],
+            }],
+            n_features: 1,
+            config: ForestConfig::default(),
+        };
+        let t = f.to_tensors();
+        // The cast itself is pinned: nearest-f32 rounding, lossy for
+        // values with no exact f32 representation.
+        assert_eq!(t.threshold[0], 0.3f64 as f32);
+        assert_eq!(t.value[1], (1.0f64 / 3.0) as f32);
+        assert_ne!(f64::from(t.value[1]), 1.0 / 3.0);
+        // One f64 ulp above the threshold: the f64 forest goes right…
+        let row = [0.300_000_000_000_000_04_f64];
+        assert!(row[0] > 0.3);
+        assert_eq!(f.predict(&row).to_bits(), (2.0f64 / 3.0).to_bits());
+        // …but row and threshold collapse onto the same f32, so the
+        // quantized comparison `row <= threshold` sends the tensors left.
+        let quantized = t.predict(&row, t.depth);
+        assert_eq!(quantized.to_bits(), f64::from((1.0f64 / 3.0) as f32).to_bits());
+        // The native blocked path stays bit-identical to the f64 forest.
+        let blocked = f.compile_blocked().predict_rows(&[row.to_vec()]);
+        assert_eq!(blocked[0].to_bits(), f.predict(&row).to_bits());
     }
 
     #[test]

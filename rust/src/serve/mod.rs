@@ -12,7 +12,7 @@
 //!  Tenant 0 ─┐  submit(generation)            ┌──────────────────────┐
 //!  Tenant 1 ─┼─▶ BoundedQueue ─▶ serving loop │ coalesce requests    │
 //!    …       │   (admission     (one thread)  │ dedup in-flight fps  │
-//!  Tenant N ─┘    control)                    │ 3 batched traversals │
+//!  Tenant N ─┘    control)                    │ 2 blocked passes     │
 //!      ▲                                      │ shared memo cache    │
 //!      └────────── per-request reply ◀────────┴──────────────────────┘
 //! ```
@@ -25,8 +25,11 @@
 //! everything queued into one engine generation, and the engine's
 //! batch-local dedup then collapses identical in-flight candidates
 //! *across tenants* into a single evaluation before the shortfall-sized
-//! [`predict_rows_flat`](crate::engine::CompiledForest::predict_rows_flat)
-//! batches run. Results fan back out per request, and per-tenant
+//! blocked branch-free passes run — one
+//! [`BlockedForest`](crate::engine::BlockedForest) walk for Γ plus one
+//! fused [`CompiledForestPair`](crate::engine::CompiledForestPair) γ/φ
+//! walk (see [`crate::engine::exec`]). Results fan back out per request,
+//! and per-tenant
 //! hit/miss/latency counters ([`TenantStats`]) are kept from the engine's
 //! traced outcomes.
 //!

@@ -6,6 +6,23 @@
 
 use std::time::Instant;
 
+/// Schema tag of the machine-readable hot-path summary the `hotpath`
+/// bench writes (`rust/target/BENCH_hotpath.json`; seed copy at the repo
+/// root). Bump it whenever sections are added or removed, and keep
+/// [`HOTPATH_SECTIONS`] in step — `rust/tests/bench_schema.rs` pins the
+/// checked-in placeholder to both constants so the two cannot drift.
+pub const HOTPATH_SCHEMA: &str = "perf4sight/hotpath-bench/v4";
+
+/// The top-level sections of the hotpath summary (v4: the PR 9
+/// `inference` section joined the v3 set).
+pub const HOTPATH_SECTIONS: [&str; 5] = [
+    "model_fitting",
+    "cold_cache_unique_candidates",
+    "campaign_unit_prep_5_levels",
+    "serving_throughput",
+    "inference",
+];
+
 /// Result of timing a closure repeatedly.
 #[derive(Clone, Debug)]
 pub struct BenchStats {

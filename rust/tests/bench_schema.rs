@@ -1,0 +1,51 @@
+//! Shape test for the checked-in hot-path bench placeholder.
+//!
+//! `BENCH_hotpath.json` at the repo root is a seed placeholder: CI
+//! regenerates the real numbers on every push (`cargo bench --bench
+//! hotpath`) and gates on them, but the checked-in copy documents the
+//! schema the gate script parses. This test pins that copy to the
+//! constants the bench itself writes ([`HOTPATH_SCHEMA`] /
+//! [`HOTPATH_SECTIONS`]) so the placeholder, the bench and the CI gate
+//! cannot drift apart silently.
+
+use perf4sight::util::bench_harness::{HOTPATH_SCHEMA, HOTPATH_SECTIONS};
+use perf4sight::util::json::Json;
+
+fn load_placeholder() -> Json {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+    let text = std::fs::read_to_string(path).expect("checked-in BENCH_hotpath.json");
+    Json::parse(&text).expect("placeholder parses as JSON")
+}
+
+#[test]
+fn placeholder_schema_tag_matches_bench_constant() {
+    let j = load_placeholder();
+    match j.get("schema") {
+        Some(Json::Str(s)) => assert_eq!(s, HOTPATH_SCHEMA, "schema tag drifted"),
+        other => panic!("schema must be a string, got {other:?}"),
+    }
+}
+
+#[test]
+fn placeholder_carries_every_section() {
+    let j = load_placeholder();
+    for key in HOTPATH_SECTIONS {
+        match j.get(key) {
+            // Null until someone copies a measured run in; Obj afterwards.
+            Some(Json::Null) | Some(Json::Obj(_)) => {}
+            other => panic!("section {key:?} must be null or an object, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn placeholder_has_no_unknown_keys() {
+    let j = load_placeholder();
+    let Json::Obj(map) = &j else {
+        panic!("placeholder must be a JSON object");
+    };
+    for key in map.keys() {
+        let known = key == "schema" || key == "note" || HOTPATH_SECTIONS.contains(&key.as_str());
+        assert!(known, "unknown top-level key {key:?} — bump HOTPATH_SECTIONS + schema tag");
+    }
+}

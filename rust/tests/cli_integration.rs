@@ -44,6 +44,22 @@ fn profile_fit_predict_roundtrip() {
         model.display()
     ))
     .unwrap();
+    // Fused two-target prediction: fit Φ from the same profile and answer
+    // both models over a level × bs sweep in one fused Γ/Φ blocked pass.
+    let phi_model = dir.join("phi.json");
+    run(&format!(
+        "fit --data {} --target phi --out {}",
+        data.display(),
+        phi_model.display()
+    ))
+    .unwrap();
+    run(&format!(
+        "predict --model {} --phi-model {} --network squeezenet \
+         --level 0,0.5 --bs 4,16 --truth",
+        model.display(),
+        phi_model.display()
+    ))
+    .unwrap();
     std::fs::remove_dir_all(&dir).ok();
 }
 

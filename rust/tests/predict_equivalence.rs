@@ -1,0 +1,161 @@
+//! Oracle suite for the batched-inference fast paths: the blocked
+//! branch-free executor ([`perf4sight::engine::BlockedForest`]), the
+//! fused Γ/Φ pair walk ([`perf4sight::engine::CompiledForestPair`]) and
+//! the legacy slab walker (`Forest::compile`) must all stay **bitwise
+//! identical** to the scalar `Forest::predict` reference — on zoo-trained
+//! models and across a property sweep of random forest shapes, exact
+//! threshold ties, ±0.0 features, degenerate tiles and NaN rows.
+
+use perf4sight::device::Simulator;
+use perf4sight::engine::CompiledForestPair;
+use perf4sight::experiments::experiment_forest_config;
+use perf4sight::forest::{Forest, ForestConfig};
+use perf4sight::models;
+use perf4sight::profiler::train_test_split;
+use perf4sight::pruning::Strategy;
+use perf4sight::util::rng::Pcg64;
+
+fn assert_bits(a: f64, b: f64, ctx: &str) {
+    assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: {a:?} vs {b:?}");
+}
+
+/// Every batched path must agree bitwise with per-row `Forest::predict`:
+/// the blocked executor on both forests, the legacy slab walker, and
+/// both halves of the fused pair walk.
+fn assert_all_paths_scalar_identical(gamma: &Forest, phi: &Forest, rows: &[Vec<f64>], ctx: &str) {
+    let blocked_g = gamma.compile_blocked().predict_rows(rows);
+    let blocked_p = phi.compile_blocked().predict_rows(rows);
+    let walker_g = gamma.compile().predict_rows(rows);
+    let (fused_g, fused_p) = CompiledForestPair::compile(gamma, phi).predict_rows(rows);
+    assert_eq!(blocked_g.len(), rows.len(), "{ctx}: output arity");
+    for (i, row) in rows.iter().enumerate() {
+        let sg = gamma.predict(row);
+        let sp = phi.predict(row);
+        assert_bits(blocked_g[i], sg, &format!("{ctx}: blocked Γ row {i}"));
+        assert_bits(blocked_p[i], sp, &format!("{ctx}: blocked Φ row {i}"));
+        assert_bits(walker_g[i], sg, &format!("{ctx}: slab walker row {i}"));
+        assert_bits(fused_g[i], sg, &format!("{ctx}: fused Γ row {i}"));
+        assert_bits(fused_p[i], sp, &format!("{ctx}: fused Φ row {i}"));
+    }
+}
+
+#[test]
+fn zoo_models_blocked_fused_and_walker_match_scalar() {
+    let sim = Simulator::tx2();
+    for (name, strategy) in [("resnet18", Strategy::Random), ("squeezenet", Strategy::L1Norm)] {
+        let g = models::by_name(name).unwrap();
+        let (train, test) = train_test_split(&sim, name, &g, strategy, 9);
+        let cfg = experiment_forest_config();
+        let fg = Forest::fit(&train.x(), &train.y_gamma(), &cfg).expect("Γ fit");
+        let fp = Forest::fit(&train.x(), &train.y_phi(), &cfg).expect("Φ fit");
+        assert_all_paths_scalar_identical(&fg, &fp, &test.x(), name);
+    }
+}
+
+/// Training values live on a small discrete grid (including a signed
+/// zero), so split thresholds land on predictable midpoints…
+const POOL: [f64; 8] = [-2.0, -1.0, -0.0, 0.0, 0.25, 0.5, 1.0, 3.0];
+
+/// …and these are exactly those midpoints: evaluation rows carrying them
+/// sit *on* candidate thresholds, probing the `<=` tie bit-for-bit.
+const TIE_PROBES: [f64; 6] = [-1.5, -0.5, 0.125, 0.375, 0.75, 2.0];
+
+fn pool_row(rng: &mut Pcg64, n_features: usize) -> Vec<f64> {
+    (0..n_features).map(|_| POOL[rng.gen_range(POOL.len())]).collect()
+}
+
+fn probe_row(rng: &mut Pcg64, n_features: usize) -> Vec<f64> {
+    (0..n_features)
+        .map(|_| {
+            let k = rng.gen_range(POOL.len() + TIE_PROBES.len());
+            if k < POOL.len() {
+                POOL[k]
+            } else {
+                TIE_PROBES[k - POOL.len()]
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn property_sweep_random_shapes_stay_bitwise_identical() {
+    let mut rng = Pcg64::new(0x9e11);
+    // Row counts straddle the ROW_TILE=32 boundary: single-row tiles,
+    // exactly-one-tile, one-row-spills-a-second-tile, and a multi-tile
+    // batch with a ragged tail.
+    let row_counts = [1usize, 2, 31, 32, 33, 97];
+    for case in 0u64..30 {
+        let n_features = 2 + rng.gen_range(4);
+        let cfg = ForestConfig {
+            // 1..=16 trees straddles the TREE_BLOCK=8 boundary too:
+            // partial single blocks, exactly one block, and two blocks.
+            n_trees: 1 + rng.gen_range(16),
+            max_depth: 1 + rng.gen_range(13),
+            feature_fraction: if case % 3 == 0 { 1.0 } else { 0.6 },
+            bootstrap: case % 2 == 0,
+            seed: 7919 * case + 13,
+            ..ForestConfig::default()
+        };
+        let train_x: Vec<Vec<f64>> = (0..64).map(|_| pool_row(&mut rng, n_features)).collect();
+        let yg: Vec<f64> = (0..64).map(|_| rng.uniform(0.0, 10.0)).collect();
+        let yp: Vec<f64> = (0..64).map(|_| rng.uniform(0.0, 5.0)).collect();
+        let gamma = Forest::fit(&train_x, &yg, &cfg).expect("sweep Γ fit");
+        let phi = Forest::fit(&train_x, &yp, &cfg).expect("sweep Φ fit");
+        let n_rows = row_counts[case as usize % row_counts.len()];
+        let rows: Vec<Vec<f64>> = (0..n_rows).map(|_| probe_row(&mut rng, n_features)).collect();
+        assert_all_paths_scalar_identical(&gamma, &phi, &rows, &format!("case {case}"));
+    }
+}
+
+#[test]
+fn degenerate_single_leaf_and_single_tree_single_row() {
+    let mut rng = Pcg64::new(0x51e9);
+    let train_x: Vec<Vec<f64>> = (0..16).map(|_| pool_row(&mut rng, 3)).collect();
+    let y: Vec<f64> = (0..16).map(|_| rng.uniform(1.0, 2.0)).collect();
+
+    // max_depth 0 collapses every tree to a bare root leaf: zero
+    // traversal steps, pure accumulate-and-divide.
+    let leafy = ForestConfig {
+        n_trees: 3,
+        max_depth: 0,
+        ..ForestConfig::default()
+    };
+    let fg = Forest::fit(&train_x, &y, &leafy).expect("leaf-only fit");
+
+    // A single tree exercises the one-lane partial block; a single row
+    // exercises the one-row partial tile.
+    let lone = ForestConfig {
+        n_trees: 1,
+        max_depth: 6,
+        ..ForestConfig::default()
+    };
+    let fp = Forest::fit(&train_x, &y, &lone).expect("single-tree fit");
+
+    let one_row = vec![probe_row(&mut rng, 3)];
+    assert_all_paths_scalar_identical(&fg, &fp, &one_row, "degenerate single row");
+    let more: Vec<Vec<f64>> = (0..33).map(|_| probe_row(&mut rng, 3)).collect();
+    assert_all_paths_scalar_identical(&fg, &fp, &more, "degenerate multi-row");
+}
+
+#[test]
+fn nan_rows_take_the_reference_fallback_and_match_scalar() {
+    let mut rng = Pcg64::new(0xa11a);
+    let train_x: Vec<Vec<f64>> = (0..64).map(|_| pool_row(&mut rng, 3)).collect();
+    let y: Vec<f64> = (0..64).map(|_| rng.uniform(0.0, 10.0)).collect();
+    let cfg = ForestConfig {
+        n_trees: 10,
+        max_depth: 8,
+        ..ForestConfig::default()
+    };
+    let gamma = Forest::fit(&train_x, &y, &cfg).expect("Γ fit");
+    let phi = Forest::fit(&train_x, &y, &cfg).expect("Φ fit");
+    // NaN features send the whole batch down the reference-semantics
+    // walk (a fixed step count cannot traverse a NaN comparison); the
+    // scalar path sees NaN-goes-right at every split, and the fallback
+    // must reproduce it bitwise — for the NaN rows *and* the clean ones
+    // sharing the batch.
+    let mut rows: Vec<Vec<f64>> = (0..40).map(|_| probe_row(&mut rng, 3)).collect();
+    rows[7][1] = f64::NAN;
+    rows[33][0] = f64::NAN;
+    assert_all_paths_scalar_identical(&gamma, &phi, &rows, "nan batch");
+}
