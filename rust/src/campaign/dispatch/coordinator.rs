@@ -1,0 +1,191 @@
+//! The dispatch coordinator: announces the campaign into the mailbox,
+//! then polls until every shard is checkpointed — reclaiming expired
+//! leases, enforcing the per-shard retry budget, and aborting the fleet
+//! loudly when a shard is hopeless or the mailbox goes dead.
+//!
+//! The coordinator never executes shards itself and holds no state that
+//! is not in the mailbox: killing and restarting it is always safe (a
+//! restart re-validates the checkpoints, grants a fresh retry budget and
+//! resumes polling).
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use crate::campaign::driver::{ensure_spec_file, shard_complete, validate_existing_manifests};
+use crate::campaign::spec::CampaignSpec;
+use crate::util::atomic_fs::now_ms;
+use crate::util::backoff::RetryPolicy;
+
+use super::lease::{lease_path, Lease};
+use super::mailbox::{self, AttemptKind, AttemptRecord, DispatchFile};
+
+/// Coordinator-side dispatch knobs.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Partition width announced to the fleet.
+    pub shards: usize,
+    /// A lease whose heartbeat is older than this is reclaimed and its
+    /// shard re-opened. Budget for worker heartbeat cadence, shared-dir
+    /// sync latency *and* cross-machine clock skew.
+    pub lease_timeout: Duration,
+    /// Mailbox poll interval.
+    pub poll: Duration,
+    /// Per-shard budget of failures + reclaims; exhausting it aborts the
+    /// whole campaign with the shard named.
+    pub retry: RetryPolicy,
+    /// Abort when nothing progresses for this long (no completions, no
+    /// live leases); `None` waits forever.
+    pub idle_timeout: Option<Duration>,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            shards: 1,
+            lease_timeout: Duration::from_millis(10_000),
+            poll: Duration::from_millis(500),
+            retry: RetryPolicy {
+                retries: 3,
+                base_ms: 500,
+                cap_ms: 10_000,
+            },
+            idle_timeout: None,
+        }
+    }
+}
+
+/// What a coordinator run observed.
+#[derive(Clone, Debug)]
+pub struct DispatchReport {
+    /// Partition width after clamping.
+    pub shards: usize,
+    /// Shards already checkpointed when the coordinator started.
+    pub resumed: Vec<usize>,
+    /// Expired-lease reclaims, in observation order (repeats possible).
+    pub reclaimed: Vec<usize>,
+    /// Attempt records per shard at completion (failures + reclaims).
+    pub attempts: Vec<usize>,
+}
+
+/// Drive the campaign at `dir` to completion through the worker fleet.
+/// Blocks until every shard is checkpointed (`Ok`) or the run aborts
+/// (`Err`, with the abort marker posted so workers stop too).
+pub fn run_coordinator(
+    spec: &CampaignSpec,
+    dir: &Path,
+    cfg: &CoordinatorConfig,
+) -> Result<DispatchReport, String> {
+    spec.validate()?;
+    if cfg.shards == 0 {
+        return Err("dispatch coordinator: shard count must be ≥ 1".into());
+    }
+    ensure_spec_file(spec, dir)?;
+    let fingerprint = spec.fingerprint();
+    let plans = spec.shard_plans(cfg.shards);
+    validate_existing_manifests(dir, fingerprint, &plans)?;
+    // Each coordinator run grants a fresh retry budget: clear the abort
+    // marker and the attempt ledger from any previous (aborted) run.
+    mailbox::clear_abort(dir)?;
+    mailbox::clear_attempts(dir)?;
+    DispatchFile::ensure(dir, fingerprint, plans.len())?;
+    let resumed: Vec<usize> = plans
+        .iter()
+        .filter(|p| shard_complete(dir, p))
+        .map(|p| p.index)
+        .collect();
+    let mut reclaimed = Vec::new();
+    let mut last_progress = Instant::now();
+    let mut last_complete = resumed.len();
+    let poll = cfg.poll.max(Duration::from_millis(1));
+    loop {
+        let mut complete = 0;
+        let mut live = false;
+        for plan in &plans {
+            let path = lease_path(dir, plan.index);
+            if shard_complete(dir, plan) {
+                complete += 1;
+                // Orphan lease on a finished shard (worker died after the
+                // checkpoint, or a benign duplicate completion): drop it
+                // without charging an attempt.
+                if Lease::load_if_present(&path)?.is_some() {
+                    std::fs::remove_file(&path).ok();
+                }
+                continue;
+            }
+            if let Some(lease) = Lease::load_if_present(&path)? {
+                if lease.fingerprint != fingerprint {
+                    return Err(format!(
+                        "lease {} belongs to a different campaign (fingerprint {:016x}, \
+                         expected {:016x}); stale dispatch dir — use a fresh --out-dir",
+                        path.display(),
+                        lease.fingerprint,
+                        fingerprint
+                    ));
+                }
+                if lease.expired(cfg.lease_timeout, now_ms()) {
+                    mailbox::record_attempt(
+                        dir,
+                        &AttemptRecord {
+                            shard: plan.index,
+                            worker: lease.worker.clone(),
+                            kind: AttemptKind::Reclaimed,
+                            error: format!(
+                                "lease expired: no heartbeat from {:?} for over {:?}",
+                                lease.worker, cfg.lease_timeout
+                            ),
+                            at_ms: now_ms(),
+                        },
+                    )?;
+                    std::fs::remove_file(&path)
+                        .map_err(|e| format!("reclaiming lease {}: {e}", path.display()))?;
+                    reclaimed.push(plan.index);
+                }
+                // Either way someone was (or just stopped being) on it —
+                // a reclaim re-opens the shard, which is progress.
+                live = true;
+            }
+            let attempts = mailbox::shard_attempts(dir, plan.index)?;
+            if attempts.len() >= cfg.retry.max_attempts() {
+                let last_error = attempts.last().map(|a| a.error.clone()).unwrap_or_default();
+                let reason = format!(
+                    "shard {} exhausted its retry budget ({} attempt(s) recorded, {} \
+                     allowed); last: {last_error}",
+                    plan.index,
+                    attempts.len(),
+                    cfg.retry.max_attempts()
+                );
+                mailbox::write_abort(dir, &reason)?;
+                return Err(format!("campaign dispatch aborted: {reason}"));
+            }
+        }
+        if complete == plans.len() {
+            break;
+        }
+        if complete > last_complete || live {
+            last_complete = last_complete.max(complete);
+            last_progress = Instant::now();
+        }
+        if let Some(limit) = cfg.idle_timeout {
+            if last_progress.elapsed() > limit {
+                let reason = format!(
+                    "no progress for {limit:?} ({complete}/{} shards complete, no live \
+                     leases) — are any workers running?",
+                    plans.len()
+                );
+                mailbox::write_abort(dir, &reason)?;
+                return Err(format!("campaign dispatch aborted: {reason}"));
+            }
+        }
+        std::thread::sleep(poll);
+    }
+    let mut attempts = Vec::with_capacity(plans.len());
+    for plan in &plans {
+        attempts.push(mailbox::shard_attempts(dir, plan.index)?.len());
+    }
+    Ok(DispatchReport {
+        shards: plans.len(),
+        resumed,
+        reclaimed,
+        attempts,
+    })
+}

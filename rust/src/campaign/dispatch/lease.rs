@@ -1,0 +1,223 @@
+//! Shard leases: the mutual-exclusion and liveness primitive of the
+//! dispatch mailbox.
+//!
+//! A worker claims a shard by *atomically creating* its lease file
+//! (`leases/shard-<i>.lease.json`, [`publish_new`] — exactly one of N
+//! racing claimants wins and the file a reader sees is always whole).
+//! While executing, a heartbeat thread refreshes the lease's `beat_ms`
+//! on a cadence via temp-file + rename. The coordinator reclaims a lease
+//! whose heartbeat has gone stale by removing the file, which re-opens
+//! the shard for claiming.
+//!
+//! Benign race, by design: a worker that was reclaimed but is still
+//! running (stalled, then woke up) may finish its shard concurrently
+//! with the re-claimant. That is *observationally harmless* — shard
+//! bytes are a pure function of (spec, shard) under the RNG-offset
+//! contract, and every artifact write is atomic, so both writers produce
+//! identical files. The refresh path checks ownership before rewriting
+//! so a reclaimed lease is never resurrected by a slow heartbeat.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::util::atomic_fs::{now_ms, publish_new, write_atomic};
+use crate::util::fault;
+use crate::util::json::Json;
+
+/// Subdirectory of the campaign dir holding lease files.
+pub fn lease_dir(dir: &Path) -> PathBuf {
+    dir.join("leases")
+}
+
+/// Lease file path for `shard` under campaign dir `dir`.
+pub fn lease_path(dir: &Path, shard: usize) -> PathBuf {
+    lease_dir(dir).join(format!("shard-{shard}.lease.json"))
+}
+
+/// One shard claim: who holds it, for which campaign, and how fresh.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Lease {
+    /// Campaign fingerprint the claim belongs to — a lease from another
+    /// campaign in the same dir is a hard error, like a stale manifest.
+    pub fingerprint: u64,
+    pub shard: usize,
+    pub worker: String,
+    /// Failed attempts already recorded when this claim was taken.
+    pub attempt: usize,
+    /// Last heartbeat, milliseconds since the Unix epoch.
+    pub beat_ms: u64,
+}
+
+impl Lease {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            // Hex string: u64 fingerprints are not exactly representable
+            // as f64.
+            ("campaign", Json::Str(format!("{:016x}", self.fingerprint))),
+            ("shard", Json::Num(self.shard as f64)),
+            ("worker", Json::Str(self.worker.clone())),
+            ("attempt", Json::Num(self.attempt as f64)),
+            ("beat_ms", Json::Num(self.beat_ms as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Lease, String> {
+        let fp = j
+            .get("campaign")
+            .and_then(Json::as_str)
+            .ok_or("lease: missing campaign fingerprint")?;
+        Ok(Lease {
+            fingerprint: u64::from_str_radix(fp.trim_start_matches("0x"), 16)
+                .map_err(|e| format!("lease: bad campaign fingerprint {fp:?}: {e}"))?,
+            shard: j
+                .get("shard")
+                .and_then(Json::as_usize)
+                .ok_or("lease: missing shard")?,
+            worker: j
+                .get("worker")
+                .and_then(Json::as_str)
+                .ok_or("lease: missing worker")?
+                .to_string(),
+            attempt: j
+                .get("attempt")
+                .and_then(Json::as_usize)
+                .ok_or("lease: missing attempt")?,
+            beat_ms: j
+                .get("beat_ms")
+                .and_then(Json::as_f64)
+                .ok_or("lease: missing beat_ms")? as u64,
+        })
+    }
+
+    /// Load the lease at `path`; `Ok(None)` when no lease is present. A
+    /// present-but-unreadable lease is a hard error naming the file —
+    /// claims are published whole, so corruption is stale foreign state,
+    /// not a race.
+    pub fn load_if_present(path: &Path) -> Result<Option<Lease>, String> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(format!("reading lease {}: {e}", path.display())),
+        };
+        let j = Json::parse(&text).map_err(|e| {
+            format!(
+                "corrupt lease {}: {e} — delete it to re-open the shard",
+                path.display()
+            )
+        })?;
+        Self::from_json(&j)
+            .map_err(|e| format!("corrupt lease {}: {e}", path.display()))
+            .map(Some)
+    }
+
+    /// Try to claim `shard`: atomically create its lease file. `None`
+    /// when another worker holds the claim.
+    pub fn try_claim(
+        dir: &Path,
+        shard: usize,
+        fingerprint: u64,
+        worker: &str,
+        attempt: usize,
+    ) -> Result<Option<Lease>, String> {
+        let lease = Lease {
+            fingerprint,
+            shard,
+            worker: worker.to_string(),
+            attempt,
+            beat_ms: now_ms(),
+        };
+        let path = lease_path(dir, shard);
+        match publish_new(&path, &lease.to_json().to_string()) {
+            Ok(true) => Ok(Some(lease)),
+            Ok(false) => Ok(None),
+            Err(e) => Err(format!("claiming lease {}: {e}", path.display())),
+        }
+    }
+
+    /// Refresh the heartbeat on disk — only if the lease still exists and
+    /// still names this worker. `Ok(false)` means the claim was reclaimed
+    /// or released (stop beating); rewriting it would resurrect a lease
+    /// the coordinator already handed to someone else.
+    pub fn refresh(&mut self, dir: &Path) -> Result<bool, String> {
+        let path = lease_path(dir, self.shard);
+        match Lease::load_if_present(&path)? {
+            Some(current) if current.worker == self.worker => {
+                self.beat_ms = now_ms();
+                write_atomic(&path, &self.to_json().to_string())
+                    .map_err(|e| format!("refreshing lease {}: {e}", path.display()))?;
+                Ok(true)
+            }
+            _ => Ok(false),
+        }
+    }
+
+    /// Release the claim (best-effort, owner-checked): remove the lease
+    /// file iff it still names this worker. A failure here only delays
+    /// the shard until the lease times out, so callers may ignore it.
+    pub fn release(&self, dir: &Path) -> Result<(), String> {
+        let path = lease_path(dir, self.shard);
+        if let Some(current) = Lease::load_if_present(&path)? {
+            if current.worker == self.worker {
+                std::fs::remove_file(&path)
+                    .map_err(|e| format!("releasing lease {}: {e}", path.display()))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Has the heartbeat gone stale relative to `now_ms`?
+    pub fn expired(&self, timeout: Duration, now_ms: u64) -> bool {
+        now_ms.saturating_sub(self.beat_ms) > timeout.as_millis() as u64
+    }
+}
+
+/// Background heartbeat for one held lease. Dropping it stops the thread
+/// and joins it; refreshes stop on their own if the lease disappears or
+/// changes hands, or when a fault plan mutes/hangs the worker.
+pub struct Heartbeat {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Start refreshing `lease` every `every` until dropped.
+pub fn start_heartbeat(dir: &Path, lease: &Lease, every: Duration) -> Heartbeat {
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_flag = Arc::clone(&stop);
+    let dir = dir.to_path_buf();
+    let mut lease = lease.clone();
+    let handle = std::thread::spawn(move || {
+        // Short ticks between refreshes so drop() never waits a full
+        // cadence, and a hang/mute fault is observed promptly.
+        let tick = every.min(Duration::from_millis(10)).max(Duration::from_millis(1));
+        loop {
+            let next = Instant::now() + every;
+            while Instant::now() < next {
+                if stop_flag.load(Ordering::Relaxed) {
+                    return;
+                }
+                std::thread::sleep(tick);
+            }
+            if stop_flag.load(Ordering::Relaxed) || fault::heartbeat_muted(lease.shard) {
+                return;
+            }
+            if !matches!(lease.refresh(&dir), Ok(true)) {
+                return;
+            }
+        }
+    });
+    Heartbeat {
+        stop,
+        handle: Some(handle),
+    }
+}
+
+impl Drop for Heartbeat {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(handle) = self.handle.take() {
+            handle.join().ok();
+        }
+    }
+}

@@ -1,0 +1,263 @@
+//! The shared-directory mailbox: everything coordinator and workers say
+//! to each other besides leases and the shard artifacts themselves.
+//!
+//! Layout under the campaign dir (all writes crash-atomic):
+//!
+//! ```text
+//! spec.json                     campaign spec (fingerprint anchor)
+//! dispatch.json                 partition announcement {campaign, shards}
+//! dispatch-abort.json           coordinator's stop order (reason inside)
+//! leases/shard-<i>.lease.json   live claims (see lease.rs)
+//! attempts/shard-<i>-<salt>.json  one failure/reclaim record per event
+//! faults/                       :once fault-injection markers
+//! shard-<i>.json + .manifest.json the PR 3 checkpoint artifacts
+//! ```
+//!
+//! Attempt records are append-only events, one file each, so workers and
+//! coordinator count a shard's failures without any shared counter or
+//! file locking; the per-event salt keeps concurrent writers from
+//! colliding. The retry *budget* is the count of these records.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::atomic_fs::{unique_salt, write_atomic};
+use crate::util::json::Json;
+
+/// Partition announcement file name.
+pub const DISPATCH_FILE: &str = "dispatch.json";
+
+/// Abort marker file name.
+pub const ABORT_FILE: &str = "dispatch-abort.json";
+
+/// The coordinator's announcement: which campaign this mailbox serves
+/// and how many shards it was cut into. Workers wait for it, then derive
+/// the identical partition from (spec, shards).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DispatchFile {
+    pub fingerprint: u64,
+    pub shards: usize,
+}
+
+impl DispatchFile {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("campaign", Json::Str(format!("{:016x}", self.fingerprint))),
+            ("shards", Json::Num(self.shards as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<DispatchFile, String> {
+        let fp = j
+            .get("campaign")
+            .and_then(Json::as_str)
+            .ok_or("dispatch file: missing campaign fingerprint")?;
+        Ok(DispatchFile {
+            fingerprint: u64::from_str_radix(fp.trim_start_matches("0x"), 16)
+                .map_err(|e| format!("dispatch file: bad campaign fingerprint {fp:?}: {e}"))?,
+            shards: j
+                .get("shards")
+                .and_then(Json::as_usize)
+                .ok_or("dispatch file: missing shards")?,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<DispatchFile, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading dispatch file {}: {e}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| format!("corrupt dispatch file {}: {e}", path.display()))?;
+        Self::from_json(&j)
+    }
+
+    /// Write the announcement, or verify an existing one matches — a
+    /// mailbox already announced for another campaign or another
+    /// partition is a hard error, mirroring the spec/manifest checks.
+    pub fn ensure(dir: &Path, fingerprint: u64, shards: usize) -> Result<DispatchFile, String> {
+        let path = dir.join(DISPATCH_FILE);
+        let wanted = DispatchFile { fingerprint, shards };
+        if path.exists() {
+            let existing = Self::load(&path)?;
+            if existing != wanted {
+                return Err(format!(
+                    "dispatch file {} announces campaign {:016x} in {} shard(s), expected \
+                     {:016x} in {} — use a fresh --out-dir or re-run with --shards {}",
+                    path.display(),
+                    existing.fingerprint,
+                    existing.shards,
+                    fingerprint,
+                    shards,
+                    existing.shards
+                ));
+            }
+            return Ok(existing);
+        }
+        write_atomic(&path, &wanted.to_json().to_string())
+            .map_err(|e| format!("writing dispatch file {}: {e}", path.display()))?;
+        Ok(wanted)
+    }
+}
+
+/// Read the abort marker's reason, if the coordinator posted one.
+pub fn read_abort(dir: &Path) -> Option<String> {
+    let text = std::fs::read_to_string(dir.join(ABORT_FILE)).ok()?;
+    let reason = Json::parse(&text)
+        .ok()
+        .and_then(|j| j.get("reason").and_then(Json::as_str).map(str::to_string));
+    Some(reason.unwrap_or_else(|| "unreadable abort marker".to_string()))
+}
+
+/// Post the abort marker: every polling worker exits with the reason.
+pub fn write_abort(dir: &Path, reason: &str) -> Result<(), String> {
+    let path = dir.join(ABORT_FILE);
+    let j = Json::obj(vec![("reason", Json::Str(reason.to_string()))]);
+    write_atomic(&path, &j.to_string())
+        .map_err(|e| format!("writing abort marker {}: {e}", path.display()))
+}
+
+/// Clear the abort marker (coordinator startup: each coordinator run
+/// grants a fresh retry budget).
+pub fn clear_abort(dir: &Path) -> Result<(), String> {
+    match std::fs::remove_file(dir.join(ABORT_FILE)) {
+        Ok(()) => Ok(()),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+        Err(e) => Err(format!("clearing abort marker under {}: {e}", dir.display())),
+    }
+}
+
+/// Why an attempt ended without the shard completing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttemptKind {
+    /// The executing worker reported an error.
+    Failed,
+    /// The coordinator reclaimed an expired lease (worker presumed dead).
+    Reclaimed,
+}
+
+impl AttemptKind {
+    fn name(self) -> &'static str {
+        match self {
+            AttemptKind::Failed => "failed",
+            AttemptKind::Reclaimed => "reclaimed",
+        }
+    }
+
+    fn from_name(name: &str) -> Option<AttemptKind> {
+        match name {
+            "failed" => Some(AttemptKind::Failed),
+            "reclaimed" => Some(AttemptKind::Reclaimed),
+            _ => None,
+        }
+    }
+}
+
+/// One failure/reclaim event for a shard.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AttemptRecord {
+    pub shard: usize,
+    /// Worker whose attempt ended (the lease holder, for reclaims).
+    pub worker: String,
+    pub kind: AttemptKind,
+    pub error: String,
+    /// Event time, ms since the Unix epoch — the backoff anchor.
+    pub at_ms: u64,
+}
+
+fn attempts_dir(dir: &Path) -> PathBuf {
+    dir.join("attempts")
+}
+
+impl AttemptRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shard", Json::Num(self.shard as f64)),
+            ("worker", Json::Str(self.worker.clone())),
+            ("kind", Json::Str(self.kind.name().to_string())),
+            ("error", Json::Str(self.error.clone())),
+            ("at_ms", Json::Num(self.at_ms as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<AttemptRecord, String> {
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or("attempt record: missing kind")?;
+        Ok(AttemptRecord {
+            shard: j
+                .get("shard")
+                .and_then(Json::as_usize)
+                .ok_or("attempt record: missing shard")?,
+            worker: j
+                .get("worker")
+                .and_then(Json::as_str)
+                .ok_or("attempt record: missing worker")?
+                .to_string(),
+            kind: AttemptKind::from_name(kind)
+                .ok_or_else(|| format!("attempt record: unknown kind {kind:?}"))?,
+            error: j
+                .get("error")
+                .and_then(Json::as_str)
+                .ok_or("attempt record: missing error")?
+                .to_string(),
+            at_ms: j
+                .get("at_ms")
+                .and_then(Json::as_f64)
+                .ok_or("attempt record: missing at_ms")? as u64,
+        })
+    }
+}
+
+/// Append one attempt record for `record.shard` (its own salted file —
+/// no lock, no clobbering a concurrent writer).
+pub fn record_attempt(dir: &Path, record: &AttemptRecord) -> Result<(), String> {
+    let path = attempts_dir(dir).join(format!("shard-{}-{}.json", record.shard, unique_salt()));
+    write_atomic(&path, &record.to_json().to_string())
+        .map_err(|e| format!("writing attempt record {}: {e}", path.display()))
+}
+
+/// All recorded attempts for `shard`, oldest first (ties broken by file
+/// name so every process agrees on the order).
+pub fn shard_attempts(dir: &Path, shard: usize) -> Result<Vec<AttemptRecord>, String> {
+    let adir = attempts_dir(dir);
+    let entries = match std::fs::read_dir(&adir) {
+        Ok(entries) => entries,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(format!("reading attempts dir {}: {e}", adir.display())),
+    };
+    // The trailing '-' keeps shard-1 from matching shard-10's records.
+    let prefix = format!("shard-{shard}-");
+    let mut named: Vec<(String, AttemptRecord)> = Vec::new();
+    for entry in entries.filter_map(|e| e.ok()) {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if !name.starts_with(&prefix) || !name.ends_with(".json") || name.contains(".tmp-") {
+            continue;
+        }
+        let path = entry.path();
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("reading attempt record {}: {e}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| format!("corrupt attempt record {}: {e}", path.display()))?;
+        let record = AttemptRecord::from_json(&j)
+            .map_err(|e| format!("corrupt attempt record {}: {e}", path.display()))?;
+        named.push((name.to_string(), record));
+    }
+    named.sort_by(|a, b| (a.1.at_ms, &a.0).cmp(&(b.1.at_ms, &b.0)));
+    Ok(named.into_iter().map(|(_, r)| r).collect())
+}
+
+/// Remove every attempt record (coordinator startup: the retry budget is
+/// per coordinator run, so a re-run after fixing the cause starts clean).
+pub fn clear_attempts(dir: &Path) -> Result<(), String> {
+    let adir = attempts_dir(dir);
+    let entries = match std::fs::read_dir(&adir) {
+        Ok(entries) => entries,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+        Err(e) => return Err(format!("reading attempts dir {}: {e}", adir.display())),
+    };
+    for entry in entries.filter_map(|e| e.ok()) {
+        std::fs::remove_file(entry.path())
+            .map_err(|e| format!("clearing attempt record {}: {e}", entry.path().display()))?;
+    }
+    Ok(())
+}

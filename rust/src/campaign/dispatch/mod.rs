@@ -1,0 +1,42 @@
+//! Fault-tolerant distributed campaign dispatch over a shared-directory
+//! mailbox.
+//!
+//! One **coordinator** announces a campaign (spec + partition) into a
+//! directory any number of **workers** can reach — a local path, NFS, a
+//! synced folder. Workers claim shards by atomically creating lease
+//! files, execute them with the exact same checkpoint writer the local
+//! driver uses, and heartbeat while they work. The coordinator polls the
+//! mailbox: it reclaims leases whose heartbeat went stale (crashed or
+//! hung worker), re-opens those shards for the fleet, enforces a bounded
+//! per-shard retry budget with exponential backoff, and aborts the whole
+//! campaign loudly when a shard is hopeless.
+//!
+//! No sockets, no locks, no daemons: every protocol message is a small
+//! JSON file written crash-atomically ([`crate::util::atomic_fs`]), so
+//! the only infrastructure requirement is a directory with atomic rename
+//! and hard links (any POSIX filesystem). Correctness under races and
+//! re-execution rests on the RNG-offset determinism contract: a shard's
+//! bytes are a pure function of (spec, shard plan), so a duplicated or
+//! retried execution writes identical files and the merged dataset stays
+//! bit-identical to a single-process [`crate::profiler::profile`] run.
+//!
+//! Module map:
+//! - [`mailbox`] — on-disk protocol files (announcement, abort marker,
+//!   attempt ledger) and the mailbox layout.
+//! - [`lease`] — shard claims, heartbeats, expiry.
+//! - [`worker`] — the claim-execute-checkpoint worker loop.
+//! - [`coordinator`] — the poll-reclaim-abort control loop.
+//!
+//! Fault injection for tests and drills lives in [`crate::util::fault`]:
+//! set `PERF4SIGHT_FAULT` to crash, hang, or mute a worker at named
+//! points mid-shard.
+
+pub mod coordinator;
+pub mod lease;
+pub mod mailbox;
+pub mod worker;
+
+pub use coordinator::{run_coordinator, CoordinatorConfig, DispatchReport};
+pub use lease::{lease_path, Lease};
+pub use mailbox::{read_abort, shard_attempts, AttemptKind, AttemptRecord, DispatchFile};
+pub use worker::{run_worker, WorkerConfig, WorkerReport};

@@ -1,0 +1,198 @@
+//! The dispatch worker loop: poll the mailbox, claim an unleased
+//! incomplete shard, execute it under a heartbeat, checkpoint, repeat —
+//! until every shard is complete or the coordinator aborts.
+//!
+//! Workers are stateless and interchangeable: everything they need is in
+//! the mailbox (spec + partition announcement), and everything they
+//! produce is the same checkpoint artifacts the local driver writes.
+//! A worker can join late, die, or be duplicated freely — correctness
+//! rests on lease mutual exclusion plus the RNG-offset determinism
+//! contract (re-executions reproduce identical bytes).
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use crate::campaign::driver::{shard_complete, write_shard};
+use crate::campaign::spec::{CampaignSpec, SPEC_FILE};
+use crate::util::atomic_fs::{now_ms, unique_salt};
+use crate::util::backoff::{shard_salt, RetryPolicy};
+use crate::util::fault;
+
+use super::lease::{start_heartbeat, Lease};
+use super::mailbox::{self, AttemptKind, AttemptRecord, DispatchFile};
+
+/// Worker-side dispatch knobs.
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    /// Identity recorded in leases and attempt records. Must be unique
+    /// per process across the fleet; the default salts pid + time.
+    pub worker_id: String,
+    /// Lease heartbeat cadence. Keep it several times smaller than the
+    /// coordinator's lease timeout or healthy workers get reclaimed.
+    pub heartbeat: Duration,
+    /// Mailbox poll interval while waiting for claimable work.
+    pub poll: Duration,
+    /// Retry budget + backoff — must match the coordinator's so both
+    /// sides agree on when a shard is eligible and when it is exhausted.
+    pub retry: RetryPolicy,
+    /// Give up when no campaign appears / no progress happens for this
+    /// long; `None` waits forever (fleet workers parked on a mailbox).
+    pub idle_timeout: Option<Duration>,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        WorkerConfig {
+            worker_id: format!("worker-{}", unique_salt()),
+            heartbeat: Duration::from_millis(2_000),
+            poll: Duration::from_millis(500),
+            retry: RetryPolicy {
+                retries: 3,
+                base_ms: 500,
+                cap_ms: 10_000,
+            },
+            idle_timeout: None,
+        }
+    }
+}
+
+/// What one worker run did.
+#[derive(Clone, Debug)]
+pub struct WorkerReport {
+    pub worker_id: String,
+    /// Shards this worker executed to completion, in execution order.
+    pub executed: Vec<usize>,
+    /// Shards whose attempt by this worker failed (recorded for retry).
+    pub failed: Vec<usize>,
+}
+
+/// Run the worker loop against the mailbox at `dir` until the campaign
+/// completes (`Ok`) or aborts / times out idle (`Err`).
+pub fn run_worker(dir: &Path, cfg: &WorkerConfig) -> Result<WorkerReport, String> {
+    fault::set_context_dir(dir);
+    let poll = cfg.poll.max(Duration::from_millis(1));
+    let started = Instant::now();
+    // Phase 1: wait for the coordinator's announcement.
+    let (spec, dispatch) = loop {
+        if let Some(reason) = mailbox::read_abort(dir) {
+            return Err(format!("campaign aborted by coordinator: {reason}"));
+        }
+        let spec_path = dir.join(SPEC_FILE);
+        let dispatch_path = dir.join(mailbox::DISPATCH_FILE);
+        if spec_path.exists() && dispatch_path.exists() {
+            let spec = CampaignSpec::load(&spec_path)?;
+            let dispatch = DispatchFile::load(&dispatch_path)?;
+            if dispatch.fingerprint != spec.fingerprint() {
+                return Err(format!(
+                    "dispatch file {} announces campaign {:016x} but {} fingerprints to \
+                     {:016x} — torn or stale mailbox",
+                    dispatch_path.display(),
+                    dispatch.fingerprint,
+                    spec_path.display(),
+                    spec.fingerprint()
+                ));
+            }
+            break (spec, dispatch);
+        }
+        if let Some(limit) = cfg.idle_timeout {
+            if started.elapsed() > limit {
+                return Err(format!(
+                    "worker {}: no campaign announced under {} within {limit:?}",
+                    cfg.worker_id,
+                    dir.display()
+                ));
+            }
+        }
+        std::thread::sleep(poll);
+    };
+    spec.validate()?;
+    let fingerprint = spec.fingerprint();
+    let plans = spec.shard_plans(dispatch.shards);
+    let mut executed = Vec::new();
+    let mut failed = Vec::new();
+    let mut last_progress = Instant::now();
+    let mut last_complete = 0;
+    // Phase 2: claim-execute-checkpoint until the campaign drains.
+    loop {
+        if let Some(reason) = mailbox::read_abort(dir) {
+            return Err(format!("campaign aborted by coordinator: {reason}"));
+        }
+        let mut complete = 0;
+        let mut did_work = false;
+        for plan in &plans {
+            if shard_complete(dir, plan) {
+                complete += 1;
+                continue;
+            }
+            let attempts = mailbox::shard_attempts(dir, plan.index)?;
+            if attempts.len() >= cfg.retry.max_attempts() {
+                // Budget exhausted: leave it for the coordinator to abort.
+                continue;
+            }
+            if let Some(last) = attempts.last() {
+                let wait = cfg
+                    .retry
+                    .delay(attempts.len(), shard_salt(fingerprint, plan.index, attempts.len()));
+                if now_ms() < last.at_ms.saturating_add(wait.as_millis() as u64) {
+                    continue; // backing off after the last failure
+                }
+            }
+            let claim =
+                Lease::try_claim(dir, plan.index, fingerprint, &cfg.worker_id, attempts.len())?;
+            let Some(lease) = claim else { continue };
+            did_work = true;
+            let heartbeat = start_heartbeat(dir, &lease, cfg.heartbeat);
+            let result = write_shard(&spec, dir, plan);
+            drop(heartbeat);
+            match result {
+                Ok(()) => {
+                    executed.push(plan.index);
+                    complete += 1;
+                }
+                Err(error) => {
+                    failed.push(plan.index);
+                    mailbox::record_attempt(
+                        dir,
+                        &AttemptRecord {
+                            shard: plan.index,
+                            worker: cfg.worker_id.clone(),
+                            kind: AttemptKind::Failed,
+                            error,
+                            at_ms: now_ms(),
+                        },
+                    )?;
+                }
+            }
+            // Best-effort: an unreleased lease only delays the shard
+            // until the coordinator's lease timeout.
+            lease.release(dir).ok();
+        }
+        if complete == plans.len() {
+            return Ok(WorkerReport {
+                worker_id: cfg.worker_id.clone(),
+                executed,
+                failed,
+            });
+        }
+        // Peers completing shards counts as progress too — an idle
+        // worker must not give up while the fleet is healthy.
+        if did_work || complete > last_complete {
+            last_complete = last_complete.max(complete);
+            last_progress = Instant::now();
+        }
+        if !did_work {
+            if let Some(limit) = cfg.idle_timeout {
+                if last_progress.elapsed() > limit {
+                    return Err(format!(
+                        "worker {}: no claimable work and no fleet progress for {limit:?} \
+                         ({}/{} shards complete) — coordinator gone?",
+                        cfg.worker_id,
+                        complete,
+                        plans.len()
+                    ));
+                }
+            }
+            std::thread::sleep(poll);
+        }
+    }
+}

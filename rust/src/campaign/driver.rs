@@ -18,11 +18,15 @@
 //! so a crash can never leave a manifest without its full data).
 
 use std::path::{Path, PathBuf};
-use std::process::Command;
+use std::process::{Command, Stdio};
+use std::time::{Duration, Instant};
 
 use crate::ir::{GraphArena, PlanBuffers};
 use crate::profiler::{level_stream, profile_unit, Dataset, ProfilePoint};
 use crate::pruning::prune_overlay;
+use crate::util::atomic_fs::{publish_new, remove_stale_tmp};
+use crate::util::backoff::{shard_salt, RetryPolicy};
+use crate::util::fault::{self, FaultPoint};
 use crate::util::pool::drain_indexed;
 use crate::util::rng::Pcg64;
 
@@ -53,6 +57,14 @@ pub struct DriverConfig {
     /// `std::env::current_exe()` (correct when running as the perf4sight
     /// CLI; test harnesses pass their `CARGO_BIN_EXE_perf4sight`).
     pub exe: Option<PathBuf>,
+    /// Wall-clock budget per spawned worker process; a worker exceeding
+    /// it is killed and its shard charged a failed attempt. `None` waits
+    /// forever; ignored in [`ExecMode::InProcess`] (threads cannot be
+    /// killed safely).
+    pub worker_timeout: Option<Duration>,
+    /// Per-shard retry budget + backoff for failed shard executions.
+    /// `retries: 0` fails fast on the first error.
+    pub retry: RetryPolicy,
 }
 
 /// What a driver run did — which shards executed and which were resumed
@@ -63,6 +75,9 @@ pub struct CampaignRun {
     pub shards: usize,
     pub executed: Vec<usize>,
     pub skipped: Vec<usize>,
+    /// `(shard, attempts)` for every shard this run executed — attempts
+    /// above 1 mean the retry policy absorbed transient failures.
+    pub attempts: Vec<(usize, usize)>,
 }
 
 /// Execute one shard's units in canonical order. Consecutive units of the
@@ -74,6 +89,7 @@ pub struct CampaignRun {
 /// offset, so output bits match the single-process
 /// [`crate::profiler::profile`] path exactly.
 pub fn execute_shard(spec: &CampaignSpec, shard: &ShardPlan) -> Result<Vec<ProfilePoint>, String> {
+    fault::check(FaultPoint::ShardStart, Some(shard.index))?;
     spec.validate()?;
     let sim = spec.simulator()?;
     let mut points = Vec::with_capacity(shard.units.len());
@@ -116,6 +132,9 @@ pub fn execute_shard(spec: &CampaignSpec, shard: &ShardPlan) -> Result<Vec<Profi
             {
                 break;
             }
+            if i == shard.units.len() / 2 {
+                fault::check(FaultPoint::MidShard, Some(shard.index))?;
+            }
             points.push(profile_unit(
                 &sim, u.network, u.strategy, u.regime, spec.runs, &plan, u.level, &rng,
                 u.bs_index, u.bs,
@@ -135,6 +154,9 @@ pub fn write_shard(spec: &CampaignSpec, dir: &Path, shard: &ShardPlan) -> Result
     Dataset::new(points)
         .save(&dir.join(&dataset))
         .map_err(|e| e.to_string())?;
+    // Crash window under test: dataset on disk, manifest not yet — the
+    // shard must count as incomplete and re-execute to identical bytes.
+    fault::check(FaultPoint::PreManifest, Some(shard.index))?;
     let manifest = ShardManifest {
         fingerprint: spec.fingerprint(),
         shard_index: shard.index,
@@ -146,28 +168,26 @@ pub fn write_shard(spec: &CampaignSpec, dir: &Path, shard: &ShardPlan) -> Result
 }
 
 /// Write `spec.json` into the campaign dir, or verify an existing one
-/// matches. Returns the spec path. Writing goes through a temp file +
-/// rename so concurrent shard invocations never observe a torn spec.
+/// matches. Returns the spec path. Publication is crash-atomic and
+/// first-writer-wins ([`publish_new`]), then *always* verified by
+/// re-loading — concurrent invocations (racing coordinators, a worker
+/// beating the coordinator to the dir) converge or fail loudly, and no
+/// reader ever observes a torn spec.
 pub fn ensure_spec_file(spec: &CampaignSpec, dir: &Path) -> Result<PathBuf, String> {
     std::fs::create_dir_all(dir)
         .map_err(|e| format!("creating campaign dir {}: {e}", dir.display()))?;
     let path = dir.join(SPEC_FILE);
-    if path.exists() {
-        let existing = CampaignSpec::load(&path)?;
-        if existing.fingerprint() != spec.fingerprint() {
-            return Err(format!(
-                "campaign dir {} already holds a different spec (fingerprint {:016x}, \
-                 expected {:016x}); use a fresh --out-dir or delete its shard files",
-                dir.display(),
-                existing.fingerprint(),
-                spec.fingerprint()
-            ));
-        }
-    } else {
-        let tmp = dir.join(format!("{SPEC_FILE}.tmp-{}", std::process::id()));
-        spec.save(&tmp)?;
-        std::fs::rename(&tmp, &path)
-            .map_err(|e| format!("renaming campaign spec into {}: {e}", path.display()))?;
+    publish_new(&path, &spec.to_json().to_string())
+        .map_err(|e| format!("writing campaign spec {}: {e}", path.display()))?;
+    let existing = CampaignSpec::load(&path)?;
+    if existing.fingerprint() != spec.fingerprint() {
+        return Err(format!(
+            "campaign dir {} already holds a different spec (fingerprint {:016x}, \
+             expected {:016x}); use a fresh --out-dir or delete its shard files",
+            dir.display(),
+            existing.fingerprint(),
+            spec.fingerprint()
+        ));
     }
     Ok(path)
 }
@@ -191,7 +211,7 @@ pub fn existing_shard_count(dir: &Path) -> Option<usize> {
 /// `--shards`), must fail loudly here — not silently coexist with the
 /// new partition's shards and wedge the merge with duplicate-coverage
 /// errors later.
-fn validate_existing_manifests(
+pub(crate) fn validate_existing_manifests(
     dir: &Path,
     fingerprint: u64,
     plans: &[ShardPlan],
@@ -229,7 +249,7 @@ fn validate_existing_manifests(
 /// after its dataset (atomically), so completeness is just "both files
 /// present" — no dataset parse; every point is re-verified at merge time
 /// anyway.
-fn shard_complete(dir: &Path, shard: &ShardPlan) -> bool {
+pub(crate) fn shard_complete(dir: &Path, shard: &ShardPlan) -> bool {
     shard_manifest_path(dir, shard.index).exists()
         && dir.join(shard_dataset_name(shard.index)).exists()
 }
@@ -247,7 +267,11 @@ pub fn run_campaign(
     if cfg.shards == 0 {
         return Err("campaign driver: shard count must be ≥ 1".into());
     }
+    fault::set_context_dir(dir);
     let spec_path = ensure_spec_file(spec, dir)?;
+    // Leftover temp files from crashed writers are inert (never matched
+    // by manifest/dataset readers) but untidy; sweep them best-effort.
+    remove_stale_tmp(dir).ok();
     let fingerprint = spec.fingerprint();
     let plans = spec.shard_plans(cfg.shards);
     validate_existing_manifests(dir, fingerprint, &plans)?;
@@ -272,15 +296,42 @@ pub fn run_campaign(
     let workers = cfg.workers.clamp(1, pending.len().max(1));
     // Every pending shard is attempted even when a sibling fails: whatever
     // completes is checkpointed for the next resume, and all failures are
-    // reported together.
+    // reported together — each with its attempt count, so flaky-but-
+    // absorbed shards are distinguishable from first-try successes.
     let outcomes = drain_indexed(pending.len(), workers, |i| {
         let shard = &pending[i];
-        match &exe {
-            Some(exe) => spawn_worker(exe, &spec_path, dir, shard),
-            None => write_shard(spec, dir, shard),
+        let mut failures = 0usize;
+        loop {
+            let result = match &exe {
+                Some(exe) => spawn_worker(exe, &spec_path, dir, shard, cfg.worker_timeout),
+                None => write_shard(spec, dir, shard),
+            };
+            match result {
+                Ok(()) => return (failures + 1, Ok(())),
+                Err(e) => {
+                    failures += 1;
+                    if failures >= cfg.retry.max_attempts() {
+                        let err = format!(
+                            "shard {} failed after {failures} attempt(s): {e}",
+                            shard.index
+                        );
+                        return (failures, Err(err));
+                    }
+                    let salt = shard_salt(fingerprint, shard.index, failures);
+                    std::thread::sleep(cfg.retry.delay(failures, salt));
+                }
+            }
         }
     });
-    let errors: Vec<String> = outcomes.into_iter().filter_map(|(_, r)| r.err()).collect();
+    let mut attempts = Vec::with_capacity(outcomes.len());
+    let mut errors = Vec::new();
+    for (i, (tries, result)) in outcomes {
+        attempts.push((pending[i].index, tries));
+        if let Err(e) = result {
+            errors.push(e);
+        }
+    }
+    attempts.sort_unstable();
     if !errors.is_empty() {
         return Err(errors.join("\n"));
     }
@@ -288,18 +339,23 @@ pub fn run_campaign(
         shards: plans.len(),
         executed,
         skipped,
+        attempts,
     })
 }
 
 /// Run one shard in a spawned worker process via the hidden
-/// `profile-worker` CLI mode.
+/// `profile-worker` CLI mode. With a `timeout`, a worker that exceeds it
+/// (hung GPU driver, deadlocked allocator, injected hang) is killed and
+/// reported as a named failure — a hung child must never wedge the whole
+/// campaign.
 fn spawn_worker(
     exe: &Path,
     spec_path: &Path,
     dir: &Path,
     shard: &ShardPlan,
+    timeout: Option<Duration>,
 ) -> Result<(), String> {
-    let output = Command::new(exe)
+    let mut child = Command::new(exe)
         .arg("profile-worker")
         .arg("--spec")
         .arg(spec_path)
@@ -309,14 +365,52 @@ fn spawn_worker(
         .arg(shard.index.to_string())
         .arg("--out-dir")
         .arg(dir)
-        .output()
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::piped())
+        .spawn()
         .map_err(|e| format!("spawning worker for shard {}: {e}", shard.index))?;
-    if !output.status.success() {
+    // Drain stderr on its own thread: a chatty worker filling the pipe
+    // while we only poll `try_wait` would deadlock both processes.
+    let mut stderr = child.stderr.take().expect("stderr was piped above");
+    let drain = std::thread::spawn(move || {
+        use std::io::Read;
+        let mut buf = String::new();
+        stderr.read_to_string(&mut buf).ok();
+        buf
+    });
+    let started = Instant::now();
+    let status = loop {
+        match child.try_wait() {
+            Ok(Some(status)) => break status,
+            Ok(None) => {}
+            Err(e) => {
+                child.kill().ok();
+                child.wait().ok();
+                drain.join().ok();
+                return Err(format!("waiting on worker for shard {}: {e}", shard.index));
+            }
+        }
+        if let Some(limit) = timeout {
+            if started.elapsed() > limit {
+                child.kill().ok();
+                child.wait().ok();
+                drain.join().ok();
+                return Err(format!(
+                    "worker process for shard {} timed out after {limit:?} and was killed",
+                    shard.index
+                ));
+            }
+        }
+        std::thread::sleep(Duration::from_millis(15));
+    };
+    let stderr_text = drain.join().unwrap_or_default();
+    if !status.success() {
         return Err(format!(
             "worker process for shard {} failed ({}): {}",
             shard.index,
-            output.status,
-            String::from_utf8_lossy(&output.stderr).trim()
+            status,
+            stderr_text.trim()
         ));
     }
     Ok(())

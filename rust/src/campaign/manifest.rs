@@ -85,17 +85,17 @@ impl ShardManifest {
         })
     }
 
-    /// Write the manifest atomically (sibling temp file + rename): the
-    /// manifest is the shard's resume marker, so a crash mid-write must
-    /// leave either the old state or the new one, never a torn file that
-    /// would hard-error every later resume. Leftover `*.manifest.tmp-*`
-    /// files are ignored by both the driver and the merge scan.
+    /// Write the manifest atomically (salted sibling temp file + rename,
+    /// [`crate::util::atomic_fs::write_atomic`]): the manifest is the
+    /// shard's resume marker, so a crash mid-write must leave either the
+    /// old state or the new one, never a torn file that would hard-error
+    /// every later resume. The salt covers concurrent same-pid writers
+    /// (dispatch lease races re-executing a shard are benign-by-design);
+    /// leftover `*.tmp-*` files are ignored by the driver and merge
+    /// scans and swept by the next driver run.
     pub fn save(&self, path: &Path) -> Result<(), String> {
-        let tmp = path.with_extension(format!("tmp-{}", std::process::id()));
-        std::fs::write(&tmp, self.to_json().to_string())
-            .map_err(|e| format!("writing shard manifest {}: {e}", tmp.display()))?;
-        std::fs::rename(&tmp, path)
-            .map_err(|e| format!("renaming shard manifest into {}: {e}", path.display()))
+        crate::util::atomic_fs::write_atomic(path, &self.to_json().to_string())
+            .map_err(|e| format!("writing shard manifest {}: {e}", path.display()))
     }
 
     pub fn load(path: &Path) -> Result<ShardManifest, String> {

@@ -21,11 +21,16 @@
 //! any spec change ⇒ new fingerprint ⇒ stale shard files are rejected
 //! instead of merged.
 
+pub mod dispatch;
 pub mod driver;
 pub mod manifest;
 pub mod merge;
 pub mod spec;
 
+pub use crate::util::backoff::RetryPolicy;
+pub use dispatch::{
+    run_coordinator, run_worker, CoordinatorConfig, DispatchReport, WorkerConfig, WorkerReport,
+};
 pub use driver::{
     ensure_spec_file, execute_shard, existing_shard_count, run_campaign, write_shard,
     CampaignRun, DriverConfig, ExecMode,

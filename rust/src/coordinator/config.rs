@@ -90,6 +90,39 @@ pub struct ToolflowConfig {
     /// of regime names (`vanilla`, `ckpt:N`, `frozen:N`). Overridden by
     /// the CLI `--regimes`; parsed and validated at campaign start.
     pub campaign_regimes: String,
+    /// Per-shard retry budget of the local campaign driver
+    /// (`[campaign] retries`): a failed shard is re-executed up to this
+    /// many extra times (with backoff) before the run errors. 0 = fail
+    /// fast.
+    pub campaign_retries: usize,
+    /// Wall-clock budget per spawned campaign worker process in
+    /// milliseconds (`[campaign] worker_timeout_ms`); a worker exceeding
+    /// it is killed and charged a failed attempt. 0 = no timeout.
+    pub campaign_worker_timeout_ms: u64,
+    /// Dispatch-mode lease timeout (`[dispatch] lease_timeout_ms`): a
+    /// worker whose heartbeat is older than this is presumed dead and its
+    /// shard reclaimed.
+    pub dispatch_lease_timeout_ms: u64,
+    /// Dispatch-mode worker heartbeat cadence
+    /// (`[dispatch] heartbeat_ms`) — keep well under the lease timeout.
+    pub dispatch_heartbeat_ms: u64,
+    /// Dispatch-mode mailbox poll interval (`[dispatch] poll_ms`) for
+    /// both coordinator and workers.
+    pub dispatch_poll_ms: u64,
+    /// Dispatch-mode per-shard retry budget (`[dispatch] retries`):
+    /// failures + lease reclaims tolerated per shard before the
+    /// coordinator aborts the campaign.
+    pub dispatch_retries: usize,
+    /// Dispatch-mode backoff base in milliseconds
+    /// (`[dispatch] backoff_base_ms`); doubles per failure, jittered.
+    pub dispatch_backoff_base_ms: u64,
+    /// Dispatch-mode backoff cap in milliseconds
+    /// (`[dispatch] backoff_cap_ms`).
+    pub dispatch_backoff_cap_ms: u64,
+    /// Dispatch-mode idle timeout in milliseconds
+    /// (`[dispatch] idle_timeout_ms`): coordinator/worker gives up after
+    /// this long with no fleet progress. 0 = wait forever.
+    pub dispatch_idle_timeout_ms: u64,
     /// Serving-queue admission bound (`[serve] queue_capacity`):
     /// generations that may wait before tenant submits block.
     pub serve_queue_capacity: usize,
@@ -110,6 +143,15 @@ impl Default for ToolflowConfig {
             campaign_workers: 0,
             campaign_shards: 0,
             campaign_regimes: "vanilla".into(),
+            campaign_retries: 1,
+            campaign_worker_timeout_ms: 0,
+            dispatch_lease_timeout_ms: 10_000,
+            dispatch_heartbeat_ms: 2_000,
+            dispatch_poll_ms: 500,
+            dispatch_retries: 3,
+            dispatch_backoff_base_ms: 500,
+            dispatch_backoff_cap_ms: 10_000,
+            dispatch_idle_timeout_ms: 0,
             serve_queue_capacity: 64,
             serve_max_coalesce: 16,
         }
@@ -138,6 +180,19 @@ impl ToolflowConfig {
             campaign_workers: raw.usize("campaign.workers", d.campaign_workers),
             campaign_shards: raw.usize("campaign.shards", d.campaign_shards),
             campaign_regimes: raw.string("campaign.regimes", &d.campaign_regimes),
+            campaign_retries: raw.usize("campaign.retries", d.campaign_retries),
+            campaign_worker_timeout_ms: raw
+                .u64("campaign.worker_timeout_ms", d.campaign_worker_timeout_ms),
+            dispatch_lease_timeout_ms: raw
+                .u64("dispatch.lease_timeout_ms", d.dispatch_lease_timeout_ms),
+            dispatch_heartbeat_ms: raw.u64("dispatch.heartbeat_ms", d.dispatch_heartbeat_ms),
+            dispatch_poll_ms: raw.u64("dispatch.poll_ms", d.dispatch_poll_ms),
+            dispatch_retries: raw.usize("dispatch.retries", d.dispatch_retries),
+            dispatch_backoff_base_ms: raw
+                .u64("dispatch.backoff_base_ms", d.dispatch_backoff_base_ms),
+            dispatch_backoff_cap_ms: raw.u64("dispatch.backoff_cap_ms", d.dispatch_backoff_cap_ms),
+            dispatch_idle_timeout_ms: raw
+                .u64("dispatch.idle_timeout_ms", d.dispatch_idle_timeout_ms),
             serve_queue_capacity: raw.usize("serve.queue_capacity", d.serve_queue_capacity),
             serve_max_coalesce: raw.usize("serve.max_coalesce", d.serve_max_coalesce),
         }
@@ -169,6 +224,14 @@ runs = 5
 workers = 3
 shards = 6
 regimes = "vanilla,ckpt:4"
+retries = 2
+worker_timeout_ms = 60000
+
+[dispatch]
+lease_timeout_ms = 5000
+heartbeat_ms = 1000
+retries = 4
+idle_timeout_ms = 120000
 
 [serve]
 queue_capacity = 32
@@ -200,6 +263,12 @@ artifacts = "build/artifacts"
         assert_eq!(cfg.campaign_workers, 3);
         assert_eq!(cfg.campaign_shards, 6);
         assert_eq!(cfg.campaign_regimes, "vanilla,ckpt:4");
+        assert_eq!(cfg.campaign_retries, 2);
+        assert_eq!(cfg.campaign_worker_timeout_ms, 60_000);
+        assert_eq!(cfg.dispatch_lease_timeout_ms, 5_000);
+        assert_eq!(cfg.dispatch_heartbeat_ms, 1_000);
+        assert_eq!(cfg.dispatch_retries, 4);
+        assert_eq!(cfg.dispatch_idle_timeout_ms, 120_000);
         assert_eq!(cfg.serve_queue_capacity, 32);
         assert_eq!(cfg.serve_max_coalesce, 8);
         // untouched keys keep defaults
@@ -208,6 +277,12 @@ artifacts = "build/artifacts"
         assert_eq!(d.serve_queue_capacity, 64);
         assert_eq!(d.serve_max_coalesce, 16);
         assert_eq!(d.campaign_regimes, "vanilla");
+        assert_eq!(d.campaign_retries, 1);
+        assert_eq!(d.campaign_worker_timeout_ms, 0);
+        assert_eq!(d.dispatch_retries, 3);
+        assert_eq!(d.dispatch_poll_ms, 500);
+        assert_eq!(d.dispatch_backoff_base_ms, 500);
+        assert_eq!(d.dispatch_backoff_cap_ms, 10_000);
     }
 
     #[test]

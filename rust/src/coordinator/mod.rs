@@ -40,10 +40,23 @@ COMMANDS:
              [--batch-sizes 2,4,..] [--runs 3] [--seed S]
              [--device tx2] [--shards K] [--workers W] [--in-process]
              [--merge-only] [--format json|csv] [--out FILE]
+             [--retries R] [--worker-timeout-ms MS]
              (spawns W worker processes that drain K shards work-stealing
               style, checkpointing shard-*.json + manifests under DIR, then
               merges them — bit-identical to single-process profiling.
-              Re-running resumes: complete shards are skipped.)
+              Re-running resumes: complete shards are skipped. Failed
+              shards are retried R times with backoff; a worker past its
+              timeout is killed and charged a failed attempt.)
+             --dispatch coordinator|worker: fault-tolerant distributed
+              dispatch over a shared directory (NFS etc). The coordinator
+              announces the campaign under DIR, reclaims dead workers'
+              leases and merges; workers (same flags minus the grid, plus
+              [--worker-id ID]) claim shards via lease files + heartbeats.
+              Knobs: [--lease-timeout-ms MS] [--heartbeat-ms MS]
+              [--poll-ms MS] [--retries R] [--backoff-base-ms MS]
+              [--backoff-cap-ms MS] [--idle-timeout-ms MS]
+              [--local-workers N] (coordinator also spawns N local worker
+              processes — single-machine fault-tolerant mode).
   fit        --data FILE.json[,FILE2..] --target gamma|phi --out MODEL.json
   predict    --model MODEL.json [--phi-model MODEL2.json] --network N
              [--level 0.3,0.5,..] [--bs 2,4,..]
@@ -212,83 +225,82 @@ fn cmd_profile(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_campaign(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
-    let dir = PathBuf::from(args.get("out-dir").ok_or("--out-dir required")?);
-    // Validate the output format up front: a typo must fail instantly,
-    // not after a multi-hour profiling run.
-    let format = args.get_or("format", "json");
-    if format != "json" && format != "csv" {
-        return Err(format!("--format must be json|csv, got {format}"));
-    }
-    let started = std::time::Instant::now();
-    let spec = if args.flag("merge-only") {
-        CampaignSpec::load(&dir.join(campaign::SPEC_FILE))?
-    } else {
-        let networks: Vec<String> = args
-            .get("networks")
-            .ok_or("--networks required (comma list; see `zoo`)")?
+/// Build a [`CampaignSpec`] from the `campaign` subcommand's grid flags
+/// (shared by the local driver and the dispatch coordinator).
+fn campaign_spec_from_args(args: &Args, cfg: &ToolflowConfig) -> Result<CampaignSpec, String> {
+    let networks: Vec<String> = args
+        .get("networks")
+        .ok_or("--networks required (comma list; see `zoo`)")?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let strategies = match args.get("strategies") {
+        None => vec![Strategy::Random],
+        Some(list) => list
             .split(',')
-            .map(|s| s.trim().to_string())
-            .collect();
-        let strategies = match args.get("strategies") {
-            None => vec![Strategy::Random],
-            Some(list) => list
-                .split(',')
-                .map(|s| strategy_of(s.trim()))
-                .collect::<Result<Vec<_>, _>>()?,
-        };
-        let regimes = TrainRegime::parse_list(&args.get_or("regimes", &cfg.campaign_regimes))?;
-        let spec = CampaignSpec {
-            networks,
-            strategies,
-            regimes,
-            levels: args.f64_list("levels")?.unwrap_or_else(|| TRAIN_LEVELS.to_vec()),
-            batch_sizes: args
-                .usize_list("batch-sizes")?
-                .unwrap_or_else(|| PAPER_BATCH_SIZES.to_vec()),
-            runs: args.usize_or("runs", cfg.runs)?,
-            seed: args.u64_or("seed", cfg.seed)?,
-            device: args.get_or("device", &cfg.device),
-        };
-        spec.validate()?;
-        let total = spec.total_units();
-        let workers =
-            campaign::resolve_workers(args.usize_opt("workers")?, cfg.campaign_workers, total);
-        let shards = match args.usize_opt("shards")? {
-            Some(n) => n,
-            None if cfg.campaign_shards > 0 => cfg.campaign_shards,
-            // Resume-friendly auto default: adopt the partition already
-            // checkpointed under --out-dir (worker width varies across
-            // machines and must not invalidate a resumable campaign),
-            // else one shard per worker.
-            None => campaign::existing_shard_count(&dir).unwrap_or(workers),
-        };
-        let driver_cfg = DriverConfig {
-            shards,
-            workers,
-            mode: if args.flag("in-process") {
-                ExecMode::InProcess
-            } else {
-                ExecMode::Spawn
-            },
-            exe: None,
-        };
-        let run = campaign::run_campaign(&spec, &dir, &driver_cfg)?;
-        println!(
-            "campaign: {} units across {} shard(s) — {} executed, {} resumed complete — on {} {}",
-            total,
-            run.shards,
-            run.executed.len(),
-            run.skipped.len(),
-            workers,
-            match driver_cfg.mode {
-                ExecMode::Spawn => "worker process(es)",
-                ExecMode::InProcess => "in-process worker(s)",
-            }
-        );
-        spec
+            .map(|s| strategy_of(s.trim()))
+            .collect::<Result<Vec<_>, _>>()?,
     };
-    let ds = campaign::merge(&spec, &dir)?;
+    let regimes = TrainRegime::parse_list(&args.get_or("regimes", &cfg.campaign_regimes))?;
+    let spec = CampaignSpec {
+        networks,
+        strategies,
+        regimes,
+        levels: args.f64_list("levels")?.unwrap_or_else(|| TRAIN_LEVELS.to_vec()),
+        batch_sizes: args
+            .usize_list("batch-sizes")?
+            .unwrap_or_else(|| PAPER_BATCH_SIZES.to_vec()),
+        runs: args.usize_or("runs", cfg.runs)?,
+        seed: args.u64_or("seed", cfg.seed)?,
+        device: args.get_or("device", &cfg.device),
+    };
+    spec.validate()?;
+    Ok(spec)
+}
+
+/// Resolve the campaign shard count: CLI flag, then config, then the
+/// partition already checkpointed under `dir` (resume must survive a
+/// changed worker width), then one shard per worker.
+fn campaign_shard_count(
+    args: &Args,
+    cfg: &ToolflowConfig,
+    dir: &Path,
+    workers: usize,
+) -> Result<usize, String> {
+    Ok(match args.usize_opt("shards")? {
+        Some(n) => n,
+        None if cfg.campaign_shards > 0 => cfg.campaign_shards,
+        None => campaign::existing_shard_count(dir).unwrap_or(workers),
+    })
+}
+
+/// `0` means "disabled" for every millisecond knob with an optional
+/// timeout semantic.
+fn ms_opt(ms: u64) -> Option<std::time::Duration> {
+    (ms > 0).then(|| std::time::Duration::from_millis(ms))
+}
+
+/// Dispatch-side retry policy from flags + `[dispatch]` config. Both the
+/// coordinator and every worker must resolve the same values, or they
+/// disagree on when a shard is exhausted.
+fn dispatch_retry(args: &Args, cfg: &ToolflowConfig) -> Result<campaign::RetryPolicy, String> {
+    Ok(campaign::RetryPolicy {
+        retries: args.usize_or("retries", cfg.dispatch_retries)?,
+        base_ms: args.u64_or("backoff-base-ms", cfg.dispatch_backoff_base_ms)?,
+        cap_ms: args.u64_or("backoff-cap-ms", cfg.dispatch_backoff_cap_ms)?,
+    })
+}
+
+/// Merge the checkpointed shards under `dir` and save the dataset in the
+/// requested format — the shared tail of every campaign entry point.
+fn merge_and_save(
+    args: &Args,
+    spec: &CampaignSpec,
+    dir: &Path,
+    format: &str,
+    started: std::time::Instant,
+) -> Result<(), String> {
+    let ds = campaign::merge(spec, dir)?;
     let out = args.get("out").map(PathBuf::from).unwrap_or_else(|| {
         dir.join(if format == "csv" { "dataset.csv" } else { "dataset.json" })
     });
@@ -306,6 +318,184 @@ fn cmd_campaign(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_campaign(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
+    match args.get("dispatch") {
+        None => {}
+        Some("worker") => return cmd_dispatch_worker(args, cfg),
+        Some("coordinator") => return cmd_dispatch_coordinator(args, cfg),
+        Some(other) => {
+            return Err(format!("--dispatch must be coordinator|worker, got {other}"));
+        }
+    }
+    let dir = PathBuf::from(args.get("out-dir").ok_or("--out-dir required")?);
+    // Validate the output format up front: a typo must fail instantly,
+    // not after a multi-hour profiling run.
+    let format = args.get_or("format", "json");
+    if format != "json" && format != "csv" {
+        return Err(format!("--format must be json|csv, got {format}"));
+    }
+    let started = std::time::Instant::now();
+    let spec = if args.flag("merge-only") {
+        CampaignSpec::load(&dir.join(campaign::SPEC_FILE))?
+    } else {
+        let spec = campaign_spec_from_args(args, cfg)?;
+        let total = spec.total_units();
+        let workers =
+            campaign::resolve_workers(args.usize_opt("workers")?, cfg.campaign_workers, total);
+        let shards = campaign_shard_count(args, cfg, &dir, workers)?;
+        let retry_default = campaign::RetryPolicy::default();
+        let driver_cfg = DriverConfig {
+            shards,
+            workers,
+            mode: if args.flag("in-process") {
+                ExecMode::InProcess
+            } else {
+                ExecMode::Spawn
+            },
+            exe: None,
+            worker_timeout: ms_opt(
+                args.u64_or("worker-timeout-ms", cfg.campaign_worker_timeout_ms)?,
+            ),
+            retry: campaign::RetryPolicy {
+                retries: args.usize_or("retries", cfg.campaign_retries)?,
+                base_ms: args.u64_or("backoff-base-ms", retry_default.base_ms)?,
+                cap_ms: args.u64_or("backoff-cap-ms", retry_default.cap_ms)?,
+            },
+        };
+        let run = campaign::run_campaign(&spec, &dir, &driver_cfg)?;
+        let retried = run.attempts.iter().filter(|&&(_, tries)| tries > 1).count();
+        println!(
+            "campaign: {} units across {} shard(s) — {} executed ({} retried), {} resumed \
+             complete — on {} {}",
+            total,
+            run.shards,
+            run.executed.len(),
+            retried,
+            run.skipped.len(),
+            workers,
+            match driver_cfg.mode {
+                ExecMode::Spawn => "worker process(es)",
+                ExecMode::InProcess => "in-process worker(s)",
+            }
+        );
+        spec
+    };
+    merge_and_save(args, &spec, &dir, &format, started)
+}
+
+/// `campaign --dispatch coordinator`: announce the campaign into the
+/// shared mailbox under `--out-dir`, supervise the worker fleet (lease
+/// reclaim, retry budget, abort), then merge — bit-identical to the
+/// single-process path. `--local-workers N` additionally spawns N worker
+/// processes on this machine (fault-tolerant single-machine mode and the
+/// CI smoke topology).
+fn cmd_dispatch_coordinator(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
+    let dir = PathBuf::from(args.get("out-dir").ok_or("--out-dir required")?);
+    let format = args.get_or("format", "json");
+    if format != "json" && format != "csv" {
+        return Err(format!("--format must be json|csv, got {format}"));
+    }
+    let started = std::time::Instant::now();
+    let spec = campaign_spec_from_args(args, cfg)?;
+    let total = spec.total_units();
+    let workers =
+        campaign::resolve_workers(args.usize_opt("workers")?, cfg.campaign_workers, total);
+    let shards = campaign_shard_count(args, cfg, &dir, workers)?;
+    let coord_cfg = campaign::CoordinatorConfig {
+        shards,
+        lease_timeout: std::time::Duration::from_millis(
+            args.u64_or("lease-timeout-ms", cfg.dispatch_lease_timeout_ms)?.max(1),
+        ),
+        poll: std::time::Duration::from_millis(
+            args.u64_or("poll-ms", cfg.dispatch_poll_ms)?.max(1),
+        ),
+        retry: dispatch_retry(args, cfg)?,
+        idle_timeout: ms_opt(args.u64_or("idle-timeout-ms", cfg.dispatch_idle_timeout_ms)?),
+    };
+    let local = args.usize_opt("local-workers")?.unwrap_or(0);
+    let mut children = Vec::with_capacity(local);
+    if local > 0 {
+        let exe = std::env::current_exe()
+            .map_err(|e| format!("resolving current executable for --local-workers: {e}"))?;
+        for i in 0..local {
+            let child = std::process::Command::new(&exe)
+                .arg("campaign")
+                .arg("--dispatch")
+                .arg("worker")
+                .arg("--out-dir")
+                .arg(&dir)
+                .arg("--worker-id")
+                .arg(format!("local-{i}-{}", std::process::id()))
+                .arg("--heartbeat-ms")
+                .arg(args.u64_or("heartbeat-ms", cfg.dispatch_heartbeat_ms)?.to_string())
+                .arg("--poll-ms")
+                .arg(coord_cfg.poll.as_millis().to_string())
+                .arg("--retries")
+                .arg(coord_cfg.retry.retries.to_string())
+                .arg("--backoff-base-ms")
+                .arg(coord_cfg.retry.base_ms.to_string())
+                .arg("--backoff-cap-ms")
+                .arg(coord_cfg.retry.cap_ms.to_string())
+                .stdin(std::process::Stdio::null())
+                .stdout(std::process::Stdio::null())
+                .spawn()
+                .map_err(|e| format!("spawning local dispatch worker {i}: {e}"))?;
+            children.push(child);
+        }
+    }
+    let result = campaign::run_coordinator(&spec, &dir, &coord_cfg);
+    // Local workers exit on their own (campaign drained, or the abort
+    // marker the failing coordinator posted); kill covers early errors
+    // that never reached the mailbox.
+    for mut child in children {
+        if result.is_err() {
+            child.kill().ok();
+        }
+        child.wait().ok();
+    }
+    let report = result?;
+    println!(
+        "dispatch: {} units across {} shard(s) — {} resumed complete, {} lease(s) reclaimed, \
+         {} attempt record(s)",
+        total,
+        report.shards,
+        report.resumed.len(),
+        report.reclaimed.len(),
+        report.attempts.iter().sum::<usize>()
+    );
+    merge_and_save(args, &spec, &dir, &format, started)
+}
+
+/// `campaign --dispatch worker`: park on the mailbox under `--out-dir`,
+/// claim and execute shards until the campaign drains or aborts. Run any
+/// number of these, on any machines sharing the directory.
+fn cmd_dispatch_worker(args: &Args, cfg: &ToolflowConfig) -> Result<(), String> {
+    let dir = PathBuf::from(args.get("out-dir").ok_or("--out-dir required")?);
+    let mut worker_cfg = campaign::WorkerConfig {
+        heartbeat: std::time::Duration::from_millis(
+            args.u64_or("heartbeat-ms", cfg.dispatch_heartbeat_ms)?.max(1),
+        ),
+        poll: std::time::Duration::from_millis(
+            args.u64_or("poll-ms", cfg.dispatch_poll_ms)?.max(1),
+        ),
+        retry: dispatch_retry(args, cfg)?,
+        idle_timeout: ms_opt(args.u64_or("idle-timeout-ms", cfg.dispatch_idle_timeout_ms)?),
+        ..Default::default()
+    };
+    if let Some(id) = args.get("worker-id") {
+        worker_cfg.worker_id = id.to_string();
+    }
+    let report = campaign::run_worker(&dir, &worker_cfg)?;
+    println!(
+        "worker {}: executed {} shard(s) {:?}, {} failed attempt(s)",
+        report.worker_id,
+        report.executed.len(),
+        report.executed,
+        report.failed.len()
+    );
+    Ok(())
+}
+
 /// Hidden worker mode: execute one shard of a campaign spec file. Spawned
 /// by the campaign driver (self-exec); not part of the documented CLI.
 fn cmd_profile_worker(args: &Args) -> Result<(), String> {
@@ -315,6 +505,9 @@ fn cmd_profile_worker(args: &Args) -> Result<(), String> {
         .usize_opt("shard-index")?
         .ok_or("--shard-index required")?;
     let dir = PathBuf::from(args.get("out-dir").ok_or("--out-dir required")?);
+    // Anchor :once fault markers in the campaign dir so injected faults
+    // fire exactly once across worker re-spawns (retry tests and drills).
+    crate::util::fault::set_context_dir(&dir);
     let plans = spec.shard_plans(shards);
     let plan = plans
         .get(shard_index)

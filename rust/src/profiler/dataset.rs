@@ -291,7 +291,10 @@ fn write_named(path: &Path, contents: String) -> std::io::Result<()> {
             })?;
         }
     }
-    std::fs::write(path, contents).map_err(|e| {
+    // Crash-atomic (salted sibling temp file + rename): a dataset is a
+    // shard's checkpoint payload, so readers must see old bytes, new
+    // bytes, or nothing — never a torn file.
+    crate::util::atomic_fs::write_atomic(path, &contents).map_err(|e| {
         std::io::Error::new(e.kind(), format!("saving dataset to {}: {e}", path.display()))
     })
 }

@@ -267,6 +267,11 @@ pub(crate) fn profile_unit<P: PlanView>(
     bs_index: usize,
     bs: usize,
 ) -> ProfilePoint {
+    // Finest-grained fault seam: lets tests kill or stall a worker inside
+    // a unit, between the shard-level checkpoints. Unit-start faults are
+    // infallible by construction (`error` is rejected at parse time) so
+    // the measurement path stays non-Result.
+    crate::util::fault::check_infallible(crate::util::fault::FaultPoint::UnitStart, None);
     let runs = runs.max(1);
     let mut rng = base_rng.clone();
     rng.advance(bs_index as u64 * runs as u64 * NOISE_DRAWS_PER_MEASUREMENT);

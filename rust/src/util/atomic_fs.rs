@@ -1,0 +1,192 @@
+//! Crash-atomic file primitives for checkpoint artifacts and the
+//! shared-directory dispatch mailbox.
+//!
+//! Two write disciplines cover every artifact in the toolflow:
+//!
+//! * [`write_atomic`] — sibling temp file + `rename`. Readers observe the
+//!   old contents or the new contents, never a torn file. Used for every
+//!   overwrite-style artifact (datasets, manifests, heartbeat refreshes).
+//! * [`publish_new`] — temp file + `hard_link`, which fails if the target
+//!   already exists. This is the *claim* primitive: exactly one of N
+//!   concurrent publishers wins, and the winner's file is fully written
+//!   before it becomes visible (a bare `create_new` + write would expose
+//!   a partially-written claim; `rename` silently overwrites on Unix and
+//!   cannot arbitrate at all).
+//!
+//! Temp names are salted with (pid, per-process counter, wall-clock
+//! nanos) — bare `process::id()` is not unique across machines sharing a
+//! directory, and pid reuse after a crash is routine. Leftover `.tmp-*`
+//! files from killed processes are harmless (every reader matches exact
+//! names or suffixes) and are swept by [`remove_stale_tmp`] when a driver
+//! takes exclusive ownership of a directory.
+
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Milliseconds since the Unix epoch — the heartbeat clock. Wall-clock on
+/// purpose: lease timestamps are compared *across machines*, where no
+/// monotonic clock is shared. (Clock skew between writer and reader eats
+/// into the lease timeout; the dispatch docs tell operators to budget for
+/// it.)
+pub fn now_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+static SALT_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A salt unique across processes and machines for temp-file names and
+/// worker ids: pid × per-process counter × sub-second nanos.
+pub fn unique_salt() -> String {
+    let nanos = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.subsec_nanos())
+        .unwrap_or(0);
+    format!(
+        "{:x}-{:x}-{:x}",
+        std::process::id(),
+        SALT_COUNTER.fetch_add(1, Ordering::Relaxed),
+        nanos
+    )
+}
+
+/// Sibling temp path for `path`: same directory (so `rename`/`hard_link`
+/// never crosses a filesystem), name suffixed `.tmp-<salt>`.
+fn tmp_sibling(path: &Path) -> PathBuf {
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .unwrap_or("artifact");
+    path.with_file_name(format!("{name}.tmp-{}", unique_salt()))
+}
+
+fn ensure_parent(path: &Path) -> io::Result<()> {
+    if let Some(dir) = path.parent() {
+        // `parent()` of a bare filename is `Some("")` — nothing to create.
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    Ok(())
+}
+
+/// Write `contents` to `path` crash-atomically: temp sibling + `rename`.
+/// Missing parent directories are created. Concurrent readers see the old
+/// file or the new file, never a torn one; a crash leaves at worst a
+/// stray `.tmp-*` sibling that every reader ignores.
+pub fn write_atomic(path: &Path, contents: &str) -> io::Result<()> {
+    ensure_parent(path)?;
+    let tmp = tmp_sibling(path);
+    std::fs::write(&tmp, contents)?;
+    match std::fs::rename(&tmp, path) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            std::fs::remove_file(&tmp).ok();
+            Err(e)
+        }
+    }
+}
+
+/// Atomically publish `contents` at `path` *only if nothing is there yet*
+/// (temp file + `hard_link`, the shared-directory claim primitive).
+/// Returns `Ok(true)` if this call created the file, `Ok(false)` if it
+/// already existed — the loser of a claim race. Either way the file a
+/// reader observes is fully written.
+pub fn publish_new(path: &Path, contents: &str) -> io::Result<bool> {
+    ensure_parent(path)?;
+    let tmp = tmp_sibling(path);
+    std::fs::write(&tmp, contents)?;
+    let linked = std::fs::hard_link(&tmp, path);
+    std::fs::remove_file(&tmp).ok();
+    match linked {
+        Ok(()) => Ok(true),
+        Err(e) if e.kind() == io::ErrorKind::AlreadyExists => Ok(false),
+        Err(e) => Err(e),
+    }
+}
+
+/// Sweep leftover `*.tmp-*` files (from crashed or killed writers) out of
+/// `dir`, non-recursively. Returns how many were removed. Only call this
+/// from a context that owns the directory exclusively — the local
+/// campaign driver on resume; dispatch-mode processes must *not* sweep
+/// (a peer may be mid-rename) and instead rely on every reader ignoring
+/// temp names.
+pub fn remove_stale_tmp(dir: &Path) -> io::Result<usize> {
+    let mut removed = 0;
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let is_tmp = entry
+            .file_name()
+            .to_str()
+            .is_some_and(|n| n.contains(".tmp-"));
+        if is_tmp && entry.file_type()?.is_file() && std::fs::remove_file(entry.path()).is_ok() {
+            removed += 1;
+        }
+    }
+    Ok(removed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "perf4sight-atomicfs-{name}-{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn write_atomic_replaces_and_leaves_no_tmp() {
+        let dir = tmpdir("write");
+        let path = dir.join("nested").join("a.json");
+        write_atomic(&path, "one").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "one");
+        write_atomic(&path, "two").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "two");
+        let leftovers: Vec<_> = std::fs::read_dir(dir.join("nested"))
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_str().is_some_and(|n| n.contains(".tmp-")))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn publish_new_claims_exactly_once() {
+        let dir = tmpdir("claim");
+        let path = dir.join("claim.json");
+        assert!(publish_new(&path, "winner").unwrap());
+        assert!(!publish_new(&path, "loser").unwrap());
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "winner");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stale_tmp_files_are_swept_but_real_files_kept() {
+        let dir = tmpdir("sweep");
+        std::fs::write(dir.join("keep.json"), "x").unwrap();
+        std::fs::write(dir.join("keep.json.tmp-dead-1-2"), "y").unwrap();
+        std::fs::write(dir.join("other.tmp-dead-3-4"), "z").unwrap();
+        assert_eq!(remove_stale_tmp(&dir).unwrap(), 2);
+        assert!(dir.join("keep.json").exists());
+        assert_eq!(remove_stale_tmp(&dir).unwrap(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn salts_are_unique_within_a_process() {
+        let a = unique_salt();
+        let b = unique_salt();
+        assert_ne!(a, b);
+    }
+}

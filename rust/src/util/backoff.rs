@@ -1,0 +1,131 @@
+//! Bounded-retry policy with exponential backoff and deterministic
+//! jitter, shared by the local campaign driver and the distributed
+//! dispatch layer.
+//!
+//! Jitter is derived from a salt rather than an ambient RNG: every
+//! process that reasons about the same (campaign, shard, attempt) —
+//! the worker deciding whether a failed shard's backoff has elapsed,
+//! the test asserting on timing — computes the *same* delay, while
+//! different shards still de-synchronize so a burst of failures does
+//! not retry in lockstep.
+
+use std::time::Duration;
+
+use crate::util::rng::{hash_seed, Pcg64};
+
+/// Retry budget + backoff shape for one shard attempt sequence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Re-attempts after the first failure; 0 = fail fast.
+    pub retries: usize,
+    /// First backoff delay; doubles per failure. 0 disables backoff
+    /// (retry immediately — tests, or callers with their own pacing).
+    pub base_ms: u64,
+    /// Ceiling for the exponential growth.
+    pub cap_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            retries: 1,
+            base_ms: 250,
+            cap_ms: 10_000,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Total executions allowed per shard (first try + retries).
+    pub fn max_attempts(&self) -> usize {
+        self.retries.saturating_add(1)
+    }
+
+    /// Backoff to wait after `failures` failed attempts (≥ 1) before the
+    /// next one: `base · 2^(failures-1)`, capped, scaled by a
+    /// deterministic jitter in [0.5, 1.0) derived from `salt`.
+    pub fn delay(&self, failures: usize, salt: u64) -> Duration {
+        if self.base_ms == 0 || failures == 0 {
+            return Duration::ZERO;
+        }
+        let shift = (failures - 1).min(16) as u32;
+        let raw = self.base_ms.saturating_mul(1u64 << shift);
+        let capped = raw.min(self.cap_ms.max(self.base_ms));
+        let mut rng = Pcg64::with_stream(salt, 0x6261_636b_6f66_6621 ^ failures as u64);
+        let jitter = 0.5 + 0.5 * rng.next_f64();
+        Duration::from_millis((capped as f64 * jitter).round() as u64)
+    }
+}
+
+/// Canonical jitter salt for a shard's attempt sequence: every process
+/// watching the same (campaign fingerprint, shard, failure count) agrees
+/// on the delay without sharing any state.
+pub fn shard_salt(fingerprint: u64, shard: usize, failures: usize) -> u64 {
+    hash_seed(&format!("{fingerprint:016x}/shard-{shard}/failures-{failures}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delay_is_deterministic_and_bounded() {
+        let p = RetryPolicy {
+            retries: 5,
+            base_ms: 100,
+            cap_ms: 1_000,
+        };
+        for failures in 1..=8 {
+            let salt = shard_salt(0xfeed, 3, failures);
+            let a = p.delay(failures, salt);
+            let b = p.delay(failures, salt);
+            assert_eq!(a, b);
+            let ceiling = (100u64 << (failures - 1).min(16)).min(1_000);
+            assert!(a.as_millis() as u64 <= ceiling, "failures={failures}: {a:?}");
+            assert!(a.as_millis() as u64 >= ceiling / 2, "failures={failures}: {a:?}");
+        }
+    }
+
+    #[test]
+    fn zero_base_or_zero_failures_is_no_wait() {
+        let p = RetryPolicy {
+            retries: 3,
+            base_ms: 0,
+            cap_ms: 100,
+        };
+        assert_eq!(p.delay(2, 1), Duration::ZERO);
+        let p = RetryPolicy::default();
+        assert_eq!(p.delay(0, 1), Duration::ZERO);
+    }
+
+    #[test]
+    fn large_failure_counts_do_not_overflow() {
+        let p = RetryPolicy {
+            retries: 100,
+            base_ms: u64::MAX / 2,
+            cap_ms: u64::MAX,
+        };
+        // Saturates instead of shifting past 64 bits.
+        let d = p.delay(90, 7);
+        assert!(d >= Duration::ZERO);
+    }
+
+    #[test]
+    fn max_attempts_counts_the_first_try() {
+        assert_eq!(RetryPolicy { retries: 0, base_ms: 0, cap_ms: 0 }.max_attempts(), 1);
+        assert_eq!(RetryPolicy::default().max_attempts(), 2);
+    }
+
+    #[test]
+    fn different_shards_jitter_differently() {
+        let p = RetryPolicy {
+            retries: 3,
+            base_ms: 10_000,
+            cap_ms: 60_000,
+        };
+        // Not a hard guarantee per pair, but across a few shards at least
+        // one delay must differ — lockstep retries are the failure mode.
+        let delays: Vec<_> = (0..4).map(|s| p.delay(1, shard_salt(1, s, 1))).collect();
+        assert!(delays.iter().any(|d| *d != delays[0]), "{delays:?}");
+    }
+}

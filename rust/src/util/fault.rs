@@ -1,0 +1,353 @@
+//! Deterministic fault injection for the dispatch recovery paths.
+//!
+//! The `PERF4SIGHT_FAULT` env var plants faults at named execution points
+//! so tests and CI exercise recovery with *real* killed/hung processes
+//! instead of trusting the lease protocol by inspection. Grammar (comma
+//! list of plans, parsed strictly — a malformed value panics loudly, it
+//! never silently disables the fault a test depends on):
+//!
+//! ```text
+//! PERF4SIGHT_FAULT = plan[,plan…]
+//! plan             = <point>:<action>[:once][:shard=<i>]
+//! point            = shard-start | mid-shard | pre-manifest
+//!                  | heartbeat | unit-start
+//! action           = exit | error | hang | stall=<ms> | mute
+//! ```
+//!
+//! * `exit` terminates the process (exit code [`FAULT_EXIT_CODE`]),
+//!   `error` returns an injected `Err` through the normal failure path,
+//!   `hang` freezes execution forever (heartbeating stops too — the
+//!   frozen-process model), `stall=<ms>` sleeps then continues (a slow
+//!   worker that outlives its lease), and `mute` stops heartbeat
+//!   refreshes while execution continues (the network-partitioned model).
+//! * `mute` only applies to the `heartbeat` point; `unit-start` sits in
+//!   infallible profiler code, so it accepts only the abortive actions
+//!   (`exit`, `hang`, `stall`).
+//! * `:once` arms the plan across *every process sharing the campaign
+//!   dir*: the first process to reach the point claims a marker file
+//!   (atomic create) under `<dir>/faults/` and fires; all later arrivals
+//!   — including the retry of the shard the fault killed — pass through.
+//! * `:shard=<i>` restricts the plan to one shard.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+/// Env var holding the fault plans.
+pub const FAULT_ENV: &str = "PERF4SIGHT_FAULT";
+
+/// Exit code used by the `exit` action — distinct from panic (101) and
+/// CLI errors (1), so tests can tell an injected death from a real bug.
+pub const FAULT_EXIT_CODE: i32 = 86;
+
+/// Named execution points where a fault can fire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// Entry of a shard's execution, before any unit runs.
+    ShardStart,
+    /// Halfway through a shard's unit list (units already computed are
+    /// lost with the process — the recovery path must recompute them).
+    MidShard,
+    /// After the shard dataset is written, before its manifest — the
+    /// window where a crash leaves data without a completeness marker.
+    PreManifest,
+    /// Observed by the lease heartbeat thread on every refresh tick.
+    Heartbeat,
+    /// Entry of one profiling unit (infallible profiler code).
+    UnitStart,
+}
+
+impl FaultPoint {
+    fn name(self) -> &'static str {
+        match self {
+            FaultPoint::ShardStart => "shard-start",
+            FaultPoint::MidShard => "mid-shard",
+            FaultPoint::PreManifest => "pre-manifest",
+            FaultPoint::Heartbeat => "heartbeat",
+            FaultPoint::UnitStart => "unit-start",
+        }
+    }
+
+    fn from_name(name: &str) -> Option<FaultPoint> {
+        match name {
+            "shard-start" => Some(FaultPoint::ShardStart),
+            "mid-shard" => Some(FaultPoint::MidShard),
+            "pre-manifest" => Some(FaultPoint::PreManifest),
+            "heartbeat" => Some(FaultPoint::Heartbeat),
+            "unit-start" => Some(FaultPoint::UnitStart),
+            _ => None,
+        }
+    }
+}
+
+/// What happens when a plan fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    Exit,
+    Error,
+    Hang,
+    Stall { ms: u64 },
+    Mute,
+}
+
+/// One parsed fault plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub point: FaultPoint,
+    pub action: FaultAction,
+    pub once: bool,
+    pub shard: Option<usize>,
+}
+
+/// Parse a `PERF4SIGHT_FAULT` value. Strict: anything unrecognized is a
+/// named error, never a silently-ignored plan.
+pub fn parse_plans(raw: &str) -> Result<Vec<FaultPlan>, String> {
+    let mut plans = Vec::new();
+    for part in raw.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        plans.push(parse_plan(part).map_err(|e| format!("{FAULT_ENV}: bad plan {part:?}: {e}"))?);
+    }
+    Ok(plans)
+}
+
+fn parse_plan(text: &str) -> Result<FaultPlan, String> {
+    let mut fields = text.split(':');
+    let point = fields.next().unwrap_or("");
+    let point = FaultPoint::from_name(point).ok_or_else(|| {
+        format!(
+            "unknown point {point:?} (shard-start, mid-shard, pre-manifest, heartbeat, unit-start)"
+        )
+    })?;
+    let action = fields.next().ok_or("missing action")?;
+    let action = match action.split_once('=') {
+        Some(("stall", ms)) => FaultAction::Stall {
+            ms: ms
+                .parse()
+                .map_err(|_| format!("stall wants integer millis, got {ms:?}"))?,
+        },
+        None if action == "exit" => FaultAction::Exit,
+        None if action == "error" => FaultAction::Error,
+        None if action == "hang" => FaultAction::Hang,
+        None if action == "mute" => FaultAction::Mute,
+        _ => {
+            return Err(format!(
+                "unknown action {action:?} (exit, error, hang, stall=<ms>, mute)"
+            ))
+        }
+    };
+    let mut once = false;
+    let mut shard = None;
+    for modifier in fields {
+        match modifier.split_once('=') {
+            None if modifier == "once" => once = true,
+            Some(("shard", i)) => {
+                shard = Some(
+                    i.parse()
+                        .map_err(|_| format!("shard wants an index, got {i:?}"))?,
+                )
+            }
+            _ => return Err(format!("unknown modifier {modifier:?} (once, shard=<i>)")),
+        }
+    }
+    if (action == FaultAction::Mute) != (point == FaultPoint::Heartbeat) {
+        return Err("mute and the heartbeat point only combine with each other".into());
+    }
+    if once && action == FaultAction::Mute {
+        return Err("mute is a continuous condition; :once does not apply".into());
+    }
+    if point == FaultPoint::UnitStart && matches!(action, FaultAction::Error) {
+        return Err("unit-start sits in infallible code; use exit, hang or stall".into());
+    }
+    Ok(FaultPlan {
+        point,
+        action,
+        once,
+        shard,
+    })
+}
+
+static PLANS: OnceLock<Vec<FaultPlan>> = OnceLock::new();
+
+/// The process's armed plans (parsed once from the env). Panics on a
+/// malformed value: a fault harness that quietly does nothing would let
+/// every recovery test pass vacuously.
+fn plans() -> &'static [FaultPlan] {
+    PLANS.get_or_init(|| match std::env::var(FAULT_ENV) {
+        Err(_) => Vec::new(),
+        Ok(raw) => match parse_plans(&raw) {
+            Ok(p) => p,
+            Err(e) => panic!("{e}"),
+        },
+    })
+}
+
+static CONTEXT_DIR: OnceLock<PathBuf> = OnceLock::new();
+
+/// Set the campaign directory used for cross-process `:once` markers.
+/// First caller wins (one campaign per process); entry points that own a
+/// campaign dir (driver, dispatch worker/coordinator, the hidden
+/// profile-worker mode) call this before any fault point is reached.
+pub fn set_context_dir(dir: &Path) {
+    let _ = CONTEXT_DIR.set(dir.to_path_buf());
+}
+
+fn marker_name(plan: &FaultPlan) -> String {
+    match plan.shard {
+        Some(s) => format!("{}-shard-{s}.fired", plan.point.name()),
+        None => format!("{}.fired", plan.point.name()),
+    }
+}
+
+/// Claim the right to fire a `:once` plan. Cross-process when a context
+/// dir is set (atomic marker-file create under `<dir>/faults/`);
+/// process-local otherwise.
+fn claim_once(plan: &FaultPlan) -> bool {
+    let name = marker_name(plan);
+    match CONTEXT_DIR.get() {
+        Some(dir) => crate::util::atomic_fs::publish_new(
+            &dir.join("faults").join(&name),
+            &format!("pid {}\n", std::process::id()),
+        )
+        .unwrap_or(false),
+        None => {
+            static FIRED: Mutex<Vec<String>> = Mutex::new(Vec::new());
+            let mut fired = FIRED.lock().expect("fault marker lock");
+            if fired.iter().any(|f| *f == name) {
+                false
+            } else {
+                fired.push(name);
+                true
+            }
+        }
+    }
+}
+
+static HANG_ENGAGED: AtomicBool = AtomicBool::new(false);
+
+/// Has a `hang` fault frozen this process? The heartbeat thread polls
+/// this so a hung worker also stops beating — the frozen-process model,
+/// not a zombie that hangs while looking alive.
+pub fn hang_engaged() -> bool {
+    HANG_ENGAGED.load(Ordering::Relaxed)
+}
+
+/// Should the heartbeat for `shard` stop refreshing? True under an armed
+/// `heartbeat:mute` plan matching the shard, or once a hang engaged.
+pub fn heartbeat_muted(shard: usize) -> bool {
+    hang_engaged()
+        || plans().iter().any(|p| {
+            p.point == FaultPoint::Heartbeat
+                && p.action == FaultAction::Mute
+                && p.shard.is_none_or(|s| s == shard)
+        })
+}
+
+/// Fire any armed plan matching (`point`, `shard`). `Err` carries the
+/// injected failure for the `error` action; `exit` and `hang` never
+/// return.
+pub fn check(point: FaultPoint, shard: Option<usize>) -> Result<(), String> {
+    for plan in plans() {
+        if plan.point != point || (plan.shard.is_some() && plan.shard != shard) {
+            continue;
+        }
+        if plan.once && !claim_once(plan) {
+            continue;
+        }
+        let at = point.name();
+        let shard_tag = shard.map(|s| format!(" shard {s}")).unwrap_or_default();
+        match plan.action {
+            FaultAction::Exit => {
+                eprintln!("injected fault: exiting at {at}{shard_tag}");
+                std::process::exit(FAULT_EXIT_CODE);
+            }
+            FaultAction::Hang => {
+                eprintln!("injected fault: hanging at {at}{shard_tag}");
+                HANG_ENGAGED.store(true, Ordering::Relaxed);
+                loop {
+                    std::thread::sleep(Duration::from_secs(3600));
+                }
+            }
+            FaultAction::Stall { ms } => {
+                eprintln!("injected fault: stalling {ms}ms at {at}{shard_tag}");
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            FaultAction::Error => {
+                return Err(format!("injected fault: error at {at}{shard_tag}"));
+            }
+            // Continuous condition, observed via `heartbeat_muted`.
+            FaultAction::Mute => {}
+        }
+    }
+    Ok(())
+}
+
+/// [`check`] for infallible call sites (the profiler's unit entry): only
+/// abortive actions can be planted there, so the `Err` arm is
+/// unreachable by construction (the parser rejects `unit-start:error`).
+pub fn check_infallible(point: FaultPoint, shard: Option<usize>) {
+    let _ignored_by_grammar = check(point, shard);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_round_trips() {
+        let plans = parse_plans(
+            "mid-shard:exit:once:shard=0, heartbeat:mute:shard=1 ,pre-manifest:error,\
+             shard-start:stall=250,unit-start:hang",
+        )
+        .unwrap();
+        assert_eq!(plans.len(), 5);
+        assert_eq!(
+            plans[0],
+            FaultPlan {
+                point: FaultPoint::MidShard,
+                action: FaultAction::Exit,
+                once: true,
+                shard: Some(0),
+            }
+        );
+        assert_eq!(plans[1].action, FaultAction::Mute);
+        assert_eq!(plans[3].action, FaultAction::Stall { ms: 250 });
+        assert_eq!(parse_plans("").unwrap(), Vec::new());
+    }
+
+    #[test]
+    fn malformed_plans_are_named_errors() {
+        for bad in [
+            "mid-shard",                 // missing action
+            "nowhere:exit",              // unknown point
+            "mid-shard:explode",         // unknown action
+            "mid-shard:stall=soon",      // non-integer stall
+            "mid-shard:exit:often",      // unknown modifier
+            "mid-shard:exit:shard=x",    // non-integer shard
+            "mid-shard:mute",            // mute off the heartbeat point
+            "heartbeat:exit",            // heartbeat only mutes
+            "heartbeat:mute:once",       // once does not apply to mute
+            "unit-start:error",          // no Err channel at unit entry
+        ] {
+            let err = parse_plans(bad).unwrap_err();
+            assert!(err.contains(FAULT_ENV), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn stall_and_error_fire_through_check() {
+        // Exercise the firing machinery without env vars (racy across the
+        // parallel test runner): drive `check`-equivalent logic via a
+        // local plan list is impossible through the static, so only the
+        // env-free default is asserted here — no plans, no effect. The
+        // full exit/hang/mute paths run as real killed processes in
+        // tests/dispatch_recovery.rs.
+        assert_eq!(check(FaultPoint::MidShard, Some(0)), Ok(()));
+        check_infallible(FaultPoint::UnitStart, None);
+        assert!(!heartbeat_muted(0));
+        assert!(!hang_engaged());
+    }
+}

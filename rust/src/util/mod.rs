@@ -3,7 +3,10 @@
 //! crates (`rand`, `serde`, `proptest`, `criterion`) that are unavailable
 //! in the offline build environment — see DESIGN.md §1.
 
+pub mod atomic_fs;
+pub mod backoff;
 pub mod bench_harness;
+pub mod fault;
 pub mod fingerprint;
 pub mod json;
 pub mod pool;

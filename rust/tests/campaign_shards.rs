@@ -6,7 +6,7 @@
 
 use std::path::PathBuf;
 
-use perf4sight::campaign::{self, CampaignSpec, DriverConfig, ExecMode};
+use perf4sight::campaign::{self, CampaignSpec, DriverConfig, ExecMode, RetryPolicy};
 use perf4sight::device::Simulator;
 use perf4sight::profiler::{profile_sequential, Dataset, ProfileJob};
 use perf4sight::pruning::Strategy;
@@ -38,12 +38,23 @@ fn json_of(ds: &Dataset) -> String {
     ds.to_json().to_string()
 }
 
+/// Fail-fast retry policy: these tests assert on first-error behaviour.
+fn no_retry() -> RetryPolicy {
+    RetryPolicy {
+        retries: 0,
+        base_ms: 0,
+        cap_ms: 0,
+    }
+}
+
 fn in_process(shards: usize) -> DriverConfig {
     DriverConfig {
         shards,
         workers: 2,
         mode: ExecMode::InProcess,
         exe: None,
+        worker_timeout: None,
+        retry: no_retry(),
     }
 }
 
@@ -101,6 +112,8 @@ fn multi_process_campaign_matches_single_process() {
         workers: 2,
         mode: ExecMode::Spawn,
         exe: Some(PathBuf::from(env!("CARGO_BIN_EXE_perf4sight"))),
+        worker_timeout: None,
+        retry: no_retry(),
     };
     let run = campaign::run_campaign(&spec, &dir, &cfg).unwrap();
     assert_eq!(run.executed, vec![0, 1, 2, 3]);

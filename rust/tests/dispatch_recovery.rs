@@ -1,0 +1,409 @@
+//! Distributed dispatch recovery suite: real worker processes killed,
+//! hung and muted mid-shard via the `PERF4SIGHT_FAULT` harness must not
+//! cost a campaign — leases expire, shards are reclaimed and retried,
+//! and the merged dataset stays bit-identical to the single-process
+//! `profile()` path. Plus the local-driver robustness satellites (shard
+//! retry with backoff, hung-worker wall-clock timeout).
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use perf4sight::campaign::dispatch::{lease_path, DispatchFile, Lease};
+use perf4sight::campaign::{self, CampaignSpec, CoordinatorConfig, RetryPolicy, WorkerConfig};
+use perf4sight::pruning::Strategy;
+use perf4sight::util::fault::{FAULT_ENV, FAULT_EXIT_CODE};
+
+const EXE: &str = env!("CARGO_BIN_EXE_perf4sight");
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "perf4sight-dispatch-{name}-{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn small_spec(seed: u64) -> CampaignSpec {
+    CampaignSpec {
+        networks: vec!["squeezenet".into()],
+        strategies: vec![Strategy::Random],
+        regimes: vec![perf4sight::device::TrainRegime::Vanilla],
+        levels: vec![0.0, 0.4],
+        batch_sizes: vec![4, 16],
+        runs: 1,
+        seed,
+        device: "tx2".into(),
+    }
+}
+
+/// Fast test-scale dispatch policy: tight heartbeats and lease timeouts
+/// so reclaim paths exercise in milliseconds, with a generous retry
+/// budget and idle guard so a slow CI box never flakes.
+fn fast_retry() -> RetryPolicy {
+    RetryPolicy {
+        retries: 3,
+        base_ms: 20,
+        cap_ms: 200,
+    }
+}
+
+fn fast_coordinator(shards: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        shards,
+        lease_timeout: Duration::from_millis(300),
+        poll: Duration::from_millis(25),
+        retry: fast_retry(),
+        idle_timeout: Some(Duration::from_secs(60)),
+    }
+}
+
+/// Spawn a real `campaign --dispatch worker` process against `dir`, with
+/// an optional fault-injection env. Never inherits a fault plan from the
+/// test environment.
+fn spawn_worker_cli(dir: &Path, id: &str, fault: Option<&str>) -> Child {
+    let mut cmd = Command::new(EXE);
+    cmd.arg("campaign")
+        .arg("--dispatch")
+        .arg("worker")
+        .arg("--out-dir")
+        .arg(dir)
+        .arg("--worker-id")
+        .arg(id)
+        .arg("--heartbeat-ms")
+        .arg("50")
+        .arg("--poll-ms")
+        .arg("25")
+        .arg("--retries")
+        .arg("3")
+        .arg("--backoff-base-ms")
+        .arg("20")
+        .arg("--backoff-cap-ms")
+        .arg("200")
+        .arg("--idle-timeout-ms")
+        .arg("60000")
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .env_remove(FAULT_ENV);
+    if let Some(plans) = fault {
+        cmd.env(FAULT_ENV, plans);
+    }
+    cmd.spawn().expect("spawning dispatch worker")
+}
+
+#[test]
+fn lease_claim_is_exclusive_and_owner_checked() {
+    let dir = tmpdir("lease");
+    let fp = 0xfeed_beef_u64;
+    let a = Lease::try_claim(&dir, 0, fp, "alice", 0).unwrap();
+    assert!(a.is_some(), "first claim wins");
+    let b = Lease::try_claim(&dir, 0, fp, "bob", 0).unwrap();
+    assert!(b.is_none(), "second claim loses");
+
+    // Refresh bumps the heartbeat for the owner …
+    let mut a = a.unwrap();
+    let before = a.beat_ms;
+    std::thread::sleep(Duration::from_millis(5));
+    assert!(a.refresh(&dir).unwrap());
+    assert!(a.beat_ms >= before);
+    assert!(!a.expired(Duration::from_secs(60), before + 10));
+    assert!(a.expired(Duration::from_millis(1), a.beat_ms + 100));
+
+    // … but a reclaimed lease is never resurrected by a slow heartbeat.
+    std::fs::remove_file(lease_path(&dir, 0)).unwrap();
+    assert!(!a.refresh(&dir).unwrap(), "reclaimed lease must not refresh");
+    let c = Lease::try_claim(&dir, 0, fp, "carol", 1).unwrap().unwrap();
+    // Alice's release is owner-checked: it must not evict Carol.
+    a.release(&dir).unwrap();
+    assert_eq!(
+        Lease::load_if_present(&lease_path(&dir, 0)).unwrap(),
+        Some(c)
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// THE acceptance scenario: one worker is killed mid-shard, the other
+/// stops heartbeating (and stalls past its lease) — the campaign still
+/// completes without manual intervention and the merged dataset is
+/// byte-identical to single-process profiling.
+#[test]
+fn killed_and_muted_workers_recover_to_bit_identical_merge() {
+    let spec = small_spec(21);
+    let dir = tmpdir("acceptance");
+    // Whoever first executes shard 0 dies mid-shard (once: its retry
+    // passes). Whoever executes shard 1 goes silent and outlives its
+    // lease, exercising reclaim of a live-but-unresponsive worker.
+    let fault = "mid-shard:exit:once:shard=0,heartbeat:mute:shard=1,mid-shard:stall=700:shard=1";
+    let mut workers = vec![
+        spawn_worker_cli(&dir, "w0", Some(fault)),
+        spawn_worker_cli(&dir, "w1", Some(fault)),
+    ];
+    let report = campaign::run_coordinator(&spec, &dir, &fast_coordinator(2)).unwrap();
+    let statuses: Vec<_> = workers
+        .iter_mut()
+        .map(|w| w.wait().expect("waiting on worker"))
+        .collect();
+
+    assert!(!report.reclaimed.is_empty(), "{report:?}");
+    assert!(
+        statuses.iter().any(|s| s.code() == Some(FAULT_EXIT_CODE)),
+        "one worker must have died of the injected fault: {statuses:?}"
+    );
+    assert!(
+        dir.join("faults").join("mid-shard-shard-0.fired").exists(),
+        "the :once marker records the injected kill"
+    );
+    let merged = campaign::merge(&spec, &dir).unwrap();
+    let reference = campaign::profile_campaign(&spec).unwrap();
+    assert_eq!(
+        merged.to_json().to_string(),
+        reference.to_json().to_string(),
+        "recovered campaign must be bit-identical to single-process profiling"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Crash in the checkpoint gap (dataset written, manifest not): the shard
+/// counts as incomplete, is reclaimed, and re-executes to identical bytes.
+#[test]
+fn pre_manifest_crash_is_reclaimed_and_reexecuted() {
+    let spec = small_spec(23);
+    let dir = tmpdir("premanifest");
+    let mut workers = vec![
+        spawn_worker_cli(&dir, "w0", Some("pre-manifest:exit:once")),
+        spawn_worker_cli(&dir, "w1", Some("pre-manifest:exit:once")),
+    ];
+    let report = campaign::run_coordinator(&spec, &dir, &fast_coordinator(1)).unwrap();
+    for w in &mut workers {
+        w.wait().expect("waiting on worker");
+    }
+    assert_eq!(report.reclaimed, vec![0], "{report:?}");
+    let merged = campaign::merge(&spec, &dir).unwrap();
+    let reference = campaign::profile_campaign(&spec).unwrap();
+    assert_eq!(merged.to_json().to_string(), reference.to_json().to_string());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn stale_fingerprint_lease_is_a_hard_error() {
+    let spec = small_spec(25);
+    let dir = tmpdir("stale-lease");
+    // A lease left behind by a *different* campaign in the same dir.
+    Lease::try_claim(&dir, 0, spec.fingerprint() ^ 1, "ghost", 0)
+        .unwrap()
+        .unwrap();
+    let err = campaign::run_coordinator(&spec, &dir, &fast_coordinator(1)).unwrap_err();
+    assert!(err.contains("different campaign"), "{err}");
+    assert!(err.contains("shard-0.lease.json"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A deterministically-failing shard exhausts its retry budget: the
+/// coordinator aborts loudly (naming the shard and the budget) and the
+/// abort marker stops the worker fleet too.
+#[test]
+fn exhausted_retry_budget_aborts_campaign_and_fleet() {
+    let spec = small_spec(27);
+    let dir = tmpdir("budget");
+    let mut cfg = fast_coordinator(1);
+    cfg.retry.retries = 1; // 2 attempts, both doomed
+    let mut worker = {
+        let mut cmd = Command::new(EXE);
+        cmd.arg("campaign")
+            .arg("--dispatch")
+            .arg("worker")
+            .arg("--out-dir")
+            .arg(&dir)
+            .arg("--heartbeat-ms")
+            .arg("50")
+            .arg("--poll-ms")
+            .arg("25")
+            .arg("--retries")
+            .arg("1")
+            .arg("--backoff-base-ms")
+            .arg("20")
+            .arg("--backoff-cap-ms")
+            .arg("200")
+            .arg("--idle-timeout-ms")
+            .arg("60000")
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .env(FAULT_ENV, "mid-shard:error:shard=0");
+        cmd.spawn().expect("spawning doomed worker")
+    };
+    let err = campaign::run_coordinator(&spec, &dir, &cfg).unwrap_err();
+    assert!(err.contains("retry budget"), "{err}");
+    assert!(err.contains("shard 0"), "{err}");
+    assert!(err.contains("injected fault"), "{err}");
+    assert!(dir.join("dispatch-abort.json").exists());
+    let status = worker.wait().expect("waiting on worker");
+    assert!(!status.success(), "abort marker must stop the worker: {status}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Two in-process workers race a one-shard campaign: the lease arbitrates
+/// — exactly one executes, both exit cleanly once the campaign drains.
+#[test]
+fn racing_workers_execute_each_shard_exactly_once() {
+    let spec = small_spec(29);
+    let dir = tmpdir("race");
+    // Pre-announce the mailbox so both workers start claiming instantly.
+    campaign::ensure_spec_file(&spec, &dir).unwrap();
+    DispatchFile::ensure(&dir, spec.fingerprint(), 1).unwrap();
+    let cfg = |id: &str| WorkerConfig {
+        worker_id: id.to_string(),
+        heartbeat: Duration::from_millis(50),
+        poll: Duration::from_millis(5),
+        retry: fast_retry(),
+        idle_timeout: Some(Duration::from_secs(30)),
+    };
+    let (ra, rb) = std::thread::scope(|s| {
+        let a = s.spawn(|| campaign::run_worker(&dir, &cfg("a")));
+        let b = s.spawn(|| campaign::run_worker(&dir, &cfg("b")));
+        (a.join().unwrap().unwrap(), b.join().unwrap().unwrap())
+    });
+    assert_eq!(
+        ra.executed.len() + rb.executed.len(),
+        1,
+        "exactly one claimant executes: {ra:?} {rb:?}"
+    );
+    assert!(ra.failed.is_empty() && rb.failed.is_empty());
+    let merged = campaign::merge(&spec, &dir).unwrap();
+    assert_eq!(merged.len(), spec.total_units());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Resuming a fully-checkpointed campaign through the coordinator is a
+/// no-op: no workers needed, every shard reported as resumed.
+#[test]
+fn coordinator_resume_of_complete_campaign_needs_no_workers() {
+    let spec = small_spec(31);
+    let dir = tmpdir("resume");
+    let driver = campaign::DriverConfig {
+        shards: 2,
+        workers: 2,
+        mode: campaign::ExecMode::InProcess,
+        exe: None,
+        worker_timeout: None,
+        retry: RetryPolicy::default(),
+    };
+    campaign::run_campaign(&spec, &dir, &driver).unwrap();
+    let mut cfg = fast_coordinator(2);
+    cfg.idle_timeout = Some(Duration::from_secs(5));
+    let report = campaign::run_coordinator(&spec, &dir, &cfg).unwrap();
+    assert_eq!(report.resumed, vec![0, 1]);
+    assert!(report.reclaimed.is_empty());
+    assert_eq!(report.attempts, vec![0, 0]);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Local-driver satellite: `--retries` re-runs a transiently-failing
+/// shard with backoff, and the result is still bit-identical.
+#[test]
+fn local_driver_retries_transient_shard_failure() {
+    let spec = small_spec(33);
+    let dir = tmpdir("driver-retry");
+    let out = Command::new(EXE)
+        .arg("campaign")
+        .arg("--networks")
+        .arg("squeezenet")
+        .arg("--levels")
+        .arg("0,0.4")
+        .arg("--batch-sizes")
+        .arg("4,16")
+        .arg("--runs")
+        .arg("1")
+        .arg("--seed")
+        .arg("33")
+        .arg("--out-dir")
+        .arg(&dir)
+        .arg("--shards")
+        .arg("2")
+        .arg("--workers")
+        .arg("2")
+        .arg("--retries")
+        .arg("2")
+        .arg("--backoff-base-ms")
+        .arg("10")
+        .env(FAULT_ENV, "mid-shard:error:once:shard=0")
+        .output()
+        .expect("running campaign CLI");
+    assert!(
+        out.status.success(),
+        "stdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("(1 retried)"), "{stdout}");
+    let saved = std::fs::read_to_string(dir.join("dataset.json")).unwrap();
+    let reference = campaign::profile_campaign(&spec).unwrap();
+    assert_eq!(saved, reference.to_json().to_string());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Local-driver satellite: a hung worker process is killed at the
+/// wall-clock timeout. With retries the campaign still completes; with a
+/// permanent hang and no retries the error names the timeout.
+#[test]
+fn hung_worker_is_killed_at_wall_clock_timeout() {
+    let dir = tmpdir("hang-recover");
+    let grid = |dir: &Path| {
+        let mut cmd = Command::new(EXE);
+        cmd.arg("campaign")
+            .arg("--networks")
+            .arg("squeezenet")
+            .arg("--levels")
+            .arg("0,0.4")
+            .arg("--batch-sizes")
+            .arg("4")
+            .arg("--runs")
+            .arg("1")
+            .arg("--seed")
+            .arg("35")
+            .arg("--out-dir")
+            .arg(dir)
+            .arg("--shards")
+            .arg("2")
+            .arg("--workers")
+            .arg("2");
+        cmd
+    };
+    // Transient hang (once): killed at 1.5 s, the retry completes.
+    let out = grid(&dir)
+        .arg("--worker-timeout-ms")
+        .arg("1500")
+        .arg("--retries")
+        .arg("1")
+        .arg("--backoff-base-ms")
+        .arg("10")
+        .env(FAULT_ENV, "shard-start:hang:once:shard=1")
+        .output()
+        .expect("running campaign CLI");
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(dir.join("dataset.json").exists());
+    std::fs::remove_dir_all(&dir).ok();
+
+    // Permanent hang, no retries: the failure names the kill.
+    let dir = tmpdir("hang-fatal");
+    let out = grid(&dir)
+        .arg("--worker-timeout-ms")
+        .arg("400")
+        .arg("--retries")
+        .arg("0")
+        .env(FAULT_ENV, "shard-start:hang:shard=1")
+        .output()
+        .expect("running campaign CLI");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("timed out"), "{stderr}");
+    assert!(stderr.contains("killed"), "{stderr}");
+    std::fs::remove_dir_all(&dir).ok();
+}
